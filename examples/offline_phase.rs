@@ -1,0 +1,93 @@
+//! The paper's offline phase, end to end (§IV-A): analytically-guided
+//! sampling of the design space, "on-board" measurement of ~6000
+//! designs across the 18 training workloads, GBDT training with the
+//! 80/20 + 5-fold protocol, and a model-quality summary.
+//!
+//! Run with: `cargo run --release --example offline_phase`
+
+use versal_gemm::config::Config;
+use versal_gemm::dataset::Dataset;
+use versal_gemm::features::FeatureSet;
+use versal_gemm::gbdt::cv::cross_validate;
+use versal_gemm::metrics::{mape, pearson};
+use versal_gemm::models::Predictors;
+use versal_gemm::workloads::training_workloads;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = Config::default();
+
+    // 1. Design-space coverage + on-board profiling (simulated board).
+    let t0 = std::time::Instant::now();
+    let ds = Dataset::generate(&cfg, &training_workloads());
+    println!(
+        "offline phase: {} designs across {} workloads in {:.2}s \
+         (the real flow took 40+ days of board time)",
+        ds.len(),
+        ds.workload_ids().len(),
+        t0.elapsed().as_secs_f64()
+    );
+    std::fs::create_dir_all("data")?;
+    ds.save(&cfg, std::path::Path::new("data/dataset.csv"))?;
+
+    // 2. 5-fold CV on the latency model (log target), both feature sets.
+    let y = ds.targets(&cfg).latency_s;
+    for set in [FeatureSet::SetI, FeatureSet::SetIAndII] {
+        let x = ds.feature_matrix(cfg.board.micro_tile, set);
+        let score = cross_validate(&x, &y, &cfg.train, true, 5);
+        println!(
+            "5-fold CV latency model [{}]: R2 {:.4}, MAPE {:.2}%",
+            set.label(),
+            score.mean_r2,
+            score.mean_mape
+        );
+    }
+
+    // 3. Train the full bundle and hold out 20% for the headline check.
+    let (train, test) = ds.split_random(cfg.train.test_fraction, 7);
+    let model = Predictors::train(&train, &cfg, FeatureSet::SetIAndII);
+    model.save(std::path::Path::new("data/predictors.json"))?;
+
+    let lat_truth: Vec<f64> = test.points.iter().map(|p| p.measurement.latency_s).collect();
+    let lat_pred: Vec<f64> = test
+        .points
+        .iter()
+        .map(|p| model.predict(&p.gemm, &p.tiling).latency_s)
+        .collect();
+    let pow_truth: Vec<f64> = test.points.iter().map(|p| p.measurement.power_w).collect();
+    let pow_pred: Vec<f64> = test
+        .points
+        .iter()
+        .map(|p| model.predict(&p.gemm, &p.tiling).power_w)
+        .collect();
+    println!("held-out latency MAPE: {:.2}%", mape(&lat_truth, &lat_pred));
+    println!("held-out power MAPE:   {:.2}% (paper: 7.05%)", mape(&pow_truth, &pow_pred));
+
+    // 4. The paper's rho correlation claim (§IV-A.3, r = 0.81).
+    let rho: Vec<f64> = ds
+        .points
+        .iter()
+        .map(|p| (p.gemm.flops() / p.tiling.n_aie() as f64).ln())
+        .collect();
+    let lat: Vec<f64> = ds.points.iter().map(|p| p.measurement.latency_s.ln()).collect();
+    println!("Pearson r(ln rho, ln latency): {:.3} (paper: 0.81)", pearson(&rho, &lat));
+
+    // 5. BEAM-style telemetry for one measured design (paper section V:
+    //    60 s power capture via the System Controller).
+    use versal_gemm::versal::telemetry::BeamSession;
+    let sample = &ds.points[ds.len() / 2];
+    let trace = BeamSession::default().trace(&sample.measurement, 42);
+    println!(
+        "BEAM trace for {} {}: {} samples over {:.0} s — steady {:.2} W \
+         (measurement {:.2} W), peak {:.2} W, energy {:.1} J",
+        sample.workload_id,
+        sample.tiling.label(),
+        trace.samples.len(),
+        trace.duration_s(),
+        trace.steady_mean(),
+        sample.measurement.power_w,
+        trace.max(),
+        trace.energy_j()
+    );
+    println!("\nwrote data/dataset.csv and data/predictors.json");
+    Ok(())
+}

@@ -1,0 +1,100 @@
+//! §Perf profiling driver: the measurements behind EXPERIMENTS.md §Perf.
+//!
+//! * `dse`    — enumeration vs prediction split of the DSE hot path;
+//! * `kernel` — L1 block-shape comparison (blocked 32³ grid vs fused
+//!   MXU-edge blocks) on pre-staged device buffers;
+//! * `decode` — executor variant head-to-head on the decode GEMM shape.
+//!
+//! Run with: `cargo run --release --example perf_profile [-- dse|kernel|decode|all]`
+
+use std::time::Instant;
+
+use versal_gemm::config::Config;
+use versal_gemm::report::Lab;
+use versal_gemm::runtime::GemmEngine;
+use versal_gemm::tiling::{enumerate_candidates, TilingLimits};
+use versal_gemm::util::rng::Rng;
+use versal_gemm::workloads::Gemm;
+
+fn profile_dse() -> anyhow::Result<()> {
+    let cfg = Config::default();
+    let lab = Lab::prepare(cfg.clone(), "data".into())?;
+    let engine = lab.engine();
+    let g = Gemm::new(1576, 3072, 768); // worst eval workload (G8)
+    let limits = TilingLimits::from_board(&cfg.board);
+    let t0 = Instant::now();
+    let cands = enumerate_candidates(&g, 32, &limits);
+    println!("dse: enumerate {:?} for {} candidates", t0.elapsed(), cands.len());
+    let mut best = f64::INFINITY;
+    for _ in 0..3 {
+        let t1 = Instant::now();
+        let r = engine.explore(&g)?;
+        best = best.min(t1.elapsed().as_secs_f64());
+        std::hint::black_box(r.n_feasible);
+    }
+    println!("dse: explore best-of-3 {:.1} ms (predict+filter+pareto)", best * 1e3);
+    Ok(())
+}
+
+fn profile_kernel() -> anyhow::Result<()> {
+    let engine = GemmEngine::load(std::path::Path::new("artifacts"))?;
+    let mut rng = Rng::new(5);
+    let a: Vec<f32> = (0..128 * 128).map(|_| rng.normal() as f32).collect();
+    let b: Vec<f32> = (0..128 * 128).map(|_| rng.normal() as f32).collect();
+    for name in ["tile_128", "tile_128_fused"] {
+        let idx = engine.variant_index(name).unwrap();
+        let la = engine.tile_buffer(&a, 128, 128)?;
+        let lb = engine.tile_buffer(&b, 128, 128)?;
+        let _ = engine.execute_buffers(idx, &la, &lb)?;
+        let t = Instant::now();
+        let iters = 200;
+        for _ in 0..iters {
+            std::hint::black_box(engine.execute_buffers(idx, &la, &lb)?);
+        }
+        let per = t.elapsed().as_secs_f64() / iters as f64;
+        println!(
+            "kernel: {name:<16} {:>9.1} us/call  {:>6.2} GFLOP/s",
+            per * 1e6,
+            2.0 * 128f64.powi(3) / per / 1e9
+        );
+    }
+    Ok(())
+}
+
+fn profile_decode() -> anyhow::Result<()> {
+    let engine = GemmEngine::load(std::path::Path::new("artifacts"))?;
+    let (m, n, k) = (32usize, 896usize, 896usize);
+    let mut rng = Rng::new(5);
+    let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+    let b: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+    for name in ["tile_32x128x128", "tile_32x512x512_fused", "tile_128_fused"] {
+        let idx = engine.variant_index(name).unwrap();
+        let _ = engine.gemm_with(idx, &a, &b, m, n, k)?;
+        let mut best = f64::INFINITY;
+        for _ in 0..5 {
+            let t = Instant::now();
+            std::hint::black_box(engine.gemm_with(idx, &a, &b, m, n, k)?);
+            best = best.min(t.elapsed().as_secs_f64());
+        }
+        println!(
+            "decode: {name:<24} best {:>8.2} ms  {:>6.2} GFLOP/s",
+            best * 1e3,
+            2.0 * (m * n * k) as f64 / best / 1e9
+        );
+    }
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let which = std::env::args().nth(1).unwrap_or_else(|| "all".into());
+    if which == "dse" || which == "all" {
+        profile_dse()?;
+    }
+    if which == "kernel" || which == "all" {
+        profile_kernel()?;
+    }
+    if which == "decode" || which == "all" {
+        profile_decode()?;
+    }
+    Ok(())
+}

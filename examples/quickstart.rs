@@ -1,0 +1,54 @@
+//! Quickstart: train (or load) the models, then ask the framework for
+//! both a throughput-optimal and an energy-optimal mapping of one GEMM,
+//! and check the predictions against the simulated board.
+//!
+//! Run with: `cargo run --release --example quickstart [-- MxNxK]`
+
+use versal_gemm::config::Config;
+use versal_gemm::dse::{best_buildable, Objective};
+use versal_gemm::report::Lab;
+use versal_gemm::versal::VersalSim;
+use versal_gemm::workloads::Gemm;
+
+fn main() -> anyhow::Result<()> {
+    let arg = std::env::args().nth(1).unwrap_or_else(|| "512x3072x768".into());
+    let dims: Vec<usize> = arg.split('x').map(|d| d.parse().unwrap()).collect();
+    anyhow::ensure!(dims.len() == 3, "expected MxNxK, got {arg}");
+    let g = Gemm::new(dims[0], dims[1], dims[2]);
+
+    // Offline phase (cached in data/): ~6000-design dataset + GBDT models.
+    let cfg = Config::default();
+    let lab = Lab::prepare(cfg.clone(), "data".into())?;
+    let engine = lab.engine();
+    let sim = VersalSim::new(&cfg);
+
+    println!("== versal-gemm quickstart: GEMM {} ==", g.label());
+    let result = engine.explore(&g)?;
+    println!(
+        "design space: {} candidates, {} feasible, Pareto front of {} ({} ms DSE)\n",
+        result.n_candidates,
+        result.n_feasible,
+        result.pareto.len(),
+        result.elapsed.as_millis()
+    );
+
+    for objective in [Objective::Throughput, Objective::EnergyEfficiency] {
+        let (sel, m) = best_buildable(&result, &sim, &g, objective)
+            .ok_or_else(|| anyhow::anyhow!("no buildable design"))?;
+        println!("objective {}:", objective.label());
+        println!("  mapping   {}  (#AIE = {})", sel.tiling.label(), sel.tiling.n_aie());
+        println!(
+            "  predicted {:>8.1} GFLOP/s  {:>6.1} W  {:>6.2} GFLOP/s/W",
+            sel.gflops, sel.prediction.power_w, sel.energy_eff
+        );
+        println!(
+            "  measured  {:>8.1} GFLOP/s  {:>6.1} W  {:>6.2} GFLOP/s/W  ({:.3} ms)",
+            m.gflops,
+            m.power_w,
+            m.energy_eff,
+            m.latency_s * 1e3
+        );
+        println!();
+    }
+    Ok(())
+}

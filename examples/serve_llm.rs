@@ -1,0 +1,115 @@
+//! END-TO-END driver (DESIGN.md §5): serve the GEMM working set of a
+//! real small-transformer inference trace through the full stack.
+//!
+//! All three layers compose here:
+//! * L1/L2 — the AOT-compiled Pallas tiled-GEMM artifacts (`make
+//!   artifacts`) execute every job's actual numerics via PJRT;
+//! * L3 — the coordinator plans each job with the ML-driven DSE (cached
+//!   per shape/objective), batches execution, validates results against
+//!   the Rust reference, and accounts simulated-VCK190 energy for the
+//!   selected mappings.
+//!
+//! The trace is Qwen2.5-0.5B-shaped (hidden 896, FFN 4864): one prefill
+//! pass (batched sequence) and a run of decode steps — exactly the
+//! workloads the paper's G1/G4/G9 come from. Results are recorded in
+//! EXPERIMENTS.md.
+//!
+//! Run with: `make artifacts && cargo run --release --example serve_llm`
+
+use std::time::Instant;
+
+use versal_gemm::config::Config;
+use versal_gemm::coordinator::{Coordinator, GemmJob};
+use versal_gemm::dse::Objective;
+use versal_gemm::report::Lab;
+use versal_gemm::util::rng::Rng;
+use versal_gemm::workloads::Gemm;
+
+/// The per-layer GEMMs of a Qwen2.5-0.5B-like transformer block.
+fn block_gemms(seq: usize) -> Vec<(&'static str, Gemm)> {
+    let hidden = 896;
+    let ffn = 4864;
+    vec![
+        ("qkv_proj", Gemm::new(seq, 3 * hidden / 2, hidden)), // fused qkv (GQA)
+        ("attn_out", Gemm::new(seq, hidden, hidden)),
+        ("ffn_gate_up", Gemm::new(seq, 2 * ffn / 2, hidden)),
+        ("ffn_down", Gemm::new(seq, hidden, ffn / 2)),
+    ]
+}
+
+fn main() -> anyhow::Result<()> {
+    let cfg = Config::default();
+    let lab = Lab::prepare(cfg.clone(), "data".into())?;
+    let mut coord = Coordinator::start(&cfg, lab.engine(), Some("artifacts".into()), 2);
+
+    let mut rng = Rng::new(0x57EE1);
+    let mut jobs = Vec::new();
+    let mut id = 0u64;
+    let mut push = |name: &str, g: Gemm, objective: Objective, jobs: &mut Vec<(String, GemmJob)>, rng: &mut Rng| {
+        let a: Vec<f32> = (0..g.m * g.k).map(|_| rng.normal() as f32 * 0.1).collect();
+        let b: Vec<f32> = (0..g.k * g.n).map(|_| rng.normal() as f32 * 0.1).collect();
+        let mut job = GemmJob::with_data(id, g, objective, a, b);
+        job.validate = true;
+        jobs.push((name.to_string(), job));
+        id += 1;
+    };
+
+    // Prefill (seq = 64, throughput objective) + 8 decode steps
+    // (seq = 32 batch of token positions, energy objective: the paper's
+    // edge scenario).
+    for (name, g) in block_gemms(64) {
+        push(&format!("prefill/{name}"), g, Objective::Throughput, &mut jobs, &mut rng);
+    }
+    for step in 0..8 {
+        for (name, g) in block_gemms(32) {
+            push(
+                &format!("decode{step}/{name}"),
+                g,
+                Objective::EnergyEfficiency,
+                &mut jobs,
+                &mut rng,
+            );
+        }
+    }
+
+    println!("== serve_llm: {} GEMM jobs (Qwen2.5-0.5B-shaped) ==", jobs.len());
+    let names: Vec<String> = jobs.iter().map(|(n, _)| n.clone()).collect();
+    let started = Instant::now();
+    let results = coord.run_batch(jobs.into_iter().map(|(_, j)| j).collect());
+    let wall = started.elapsed();
+
+    let mut total_flops = 0.0;
+    let mut validated = 0usize;
+    println!(
+        "{:<22} {:>16} {:>10} {:>10} {:>12} {:>10}",
+        "job", "gemm", "plan ms", "exec ms", "GFLOP/s", "max err"
+    );
+    for r in &results {
+        anyhow::ensure!(r.error.is_none(), "job {} failed: {:?}", names[r.id as usize], r.error);
+        let exec = r.exec_time.expect("executed");
+        let err = r.validation_err.expect("validated");
+        anyhow::ensure!(err < 1e-2, "numerics drift on {}: {err}", names[r.id as usize]);
+        validated += 1;
+        total_flops += r.gemm.flops();
+        println!(
+            "{:<22} {:>16} {:>10.2} {:>10.2} {:>12.2} {:>10.2e}",
+            names[r.id as usize],
+            r.gemm.label(),
+            r.plan_time.as_secs_f64() * 1e3,
+            exec.as_secs_f64() * 1e3,
+            r.executed_gflops().unwrap(),
+            err
+        );
+    }
+
+    let stats = coord.stats();
+    println!("\n== summary ==");
+    println!("jobs served:            {} ({} validated against reference)", results.len(), validated);
+    println!("wall clock:             {:.2} s", wall.as_secs_f64());
+    println!("aggregate exec rate:    {:.2} GFLOP/s (PJRT CPU, interpret-mode Pallas)", total_flops / stats.exec_time_s / 1e9);
+    println!("DSE cache:              {} hits / {} misses", stats.cache_hits, stats.cache_misses);
+    println!("simulated VCK190 cost:  {:.3} J across selected mappings", stats.simulated_energy_j);
+    let per_tok = stats.simulated_energy_j / 8.0;
+    println!("  -> {:.3} J per decode step (energy-optimal mappings)", per_tok);
+    Ok(())
+}

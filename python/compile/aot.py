@@ -1,0 +1,83 @@
+"""AOT bridge: lower every GEMM variant to HLO **text** + manifest.
+
+HLO text (NOT ``lowered.compile().serialize()``) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids that
+the xla crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly.  See
+/opt/xla-example/gen_hlo.py.
+
+Usage:  python -m compile.aot --out-dir ../artifacts
+Writes one ``<name>.hlo.txt`` per variant plus ``manifest.json`` with the
+shape/dtype contract the Rust runtime validates against.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile.model import ARTIFACT_VARIANTS, lower_variant
+
+MANIFEST_VERSION = 1
+
+
+def to_hlo_text(lowered: jax.stages.Lowered) -> str:
+    """stablehlo MLIR -> XlaComputation -> HLO text (id-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build_all(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+    for variant in ARTIFACT_VARIANTS:
+        text = to_hlo_text(lower_variant(variant))
+        fname = f"{variant.name}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        entries.append(
+            {
+                "name": variant.name,
+                "file": fname,
+                "m": variant.m,
+                "n": variant.n,
+                "k": variant.k,
+                "block_m": variant.block_m,
+                "block_n": variant.block_n,
+                "block_k": variant.block_k,
+                "dtype": "f32",
+                "flops": variant.flops,
+                "sha256": hashlib.sha256(text.encode()).hexdigest(),
+                "bytes": len(text),
+            }
+        )
+        print(f"  wrote {fname}: {len(text)} chars")
+    manifest = {
+        "version": MANIFEST_VERSION,
+        "jax_version": jax.__version__,
+        "variants": entries,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"  wrote manifest.json ({len(entries)} variants)")
+    return manifest
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    args = parser.parse_args()
+    build_all(args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

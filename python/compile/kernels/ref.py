@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the Pallas tiled GEMM kernel.
+
+The CORE build-time correctness signal: every kernel variant must be
+allclose to this reference before it is AOT-lowered into an artifact.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gemm_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """C = A @ B with f32 accumulation, matching the kernel's contract."""
+    return jnp.dot(a, b, preferred_element_type=a.dtype)
+
+
+def tiled_gemm_ref(a: jax.Array, b: jax.Array, block_k: int) -> jax.Array:
+    """Reference that mimics the kernel's K-blocked accumulation order.
+
+    Useful for tight tolerance checks: floating-point GEMM is not
+    associative, so accumulating in the same K-block order as the kernel
+    gives bit-closer results than one fused dot.
+    """
+    m, k = a.shape
+    _, n = b.shape
+    acc = jnp.zeros((m, n), dtype=a.dtype)
+    for k0 in range(0, k, block_k):
+        acc = acc + jnp.dot(
+            a[:, k0 : k0 + block_k],
+            b[k0 : k0 + block_k, :],
+            preferred_element_type=a.dtype,
+        )
+    return acc

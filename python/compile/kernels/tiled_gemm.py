@@ -1,0 +1,141 @@
+"""L1 — Pallas tiled GEMM kernel: the AIE micro-kernel analogue.
+
+The paper fixes a 32x32x32 FP32 micro-kernel per AI Engine (~90% of peak)
+and parallelizes it via tiling factors ``P_d`` (AIE array) and ``B_d``
+(PL reuse buffers).  On the TPU-idiom side this becomes a Pallas kernel:
+
+* the 32x32x32 micro-kernel is a Pallas *block* computing
+  ``acc += A_blk @ B_blk`` (an MXU-shaped tile),
+* AIE local scratchpads map to VMEM block refs sized by ``BlockSpec``,
+* the PL's HBM(DDR)->PL->AIE streaming schedule maps to the BlockSpec
+  index maps over the grid, and
+* the PL partial-sum collection maps to output revisiting over the K grid
+  axis (zero-init at k==0, accumulate in place).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and correctness (vs ``ref.py``) is the build-time signal.
+Real-TPU performance is *estimated* from the VMEM footprint / MXU
+utilization helpers at the bottom (see DESIGN.md section 6).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# The paper's fixed per-AIE workload (section IV-A.1): each AI Engine
+# processes a 32x32x32 tile, chosen for high micro-kernel efficiency.
+MICRO_M = 32
+MICRO_N = 32
+MICRO_K = 32
+
+
+def _gemm_kernel(a_ref, b_ref, o_ref, *, n_k: int):
+    """Grid step: one micro-kernel invocation (one AIE tile).
+
+    Accumulates into ``o_ref`` across the K grid axis — the Pallas
+    realization of the PL partial-sum collection path.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...]
+    b = b_ref[...]
+    o_ref[...] += jnp.dot(a, b, preferred_element_type=o_ref.dtype)
+
+
+def tiled_gemm(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    block_m: int = MICRO_M,
+    block_n: int = MICRO_N,
+    block_k: int = MICRO_K,
+    interpret: bool = True,
+) -> jax.Array:
+    """Tiled GEMM ``C = A @ B`` via a Pallas grid of micro-kernel blocks.
+
+    Dimensions must be multiples of the block sizes (the coordinator pads
+    to 32-aligned tiles before dispatch, exactly as the paper pads
+    workloads to the AIE tile).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: A is {a.shape}, B is {b.shape}")
+    if m % block_m or n % block_n or k % block_k:
+        raise ValueError(
+            f"GEMM {m}x{n}x{k} not divisible by blocks "
+            f"({block_m},{block_n},{block_k})"
+        )
+    grid = (m // block_m, n // block_n, k // block_k)
+    kernel = functools.partial(_gemm_kernel, n_k=grid[2])
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        interpret=interpret,
+    )(a, b)
+
+
+def micro_gemm(a: jax.Array, b: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """The bare 32x32x32 AIE micro-kernel (single grid step)."""
+    if a.shape != (MICRO_M, MICRO_K) or b.shape != (MICRO_K, MICRO_N):
+        raise ValueError(f"micro_gemm expects 32x32x32, got {a.shape} @ {b.shape}")
+    return tiled_gemm(a, b, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# Static performance estimators (no hardware timing under interpret=True).
+# ---------------------------------------------------------------------------
+
+
+def vmem_footprint_bytes(
+    block_m: int, block_n: int, block_k: int, dtype_bytes: int = 4
+) -> int:
+    """Resident VMEM bytes for one grid step: A-block + B-block + C-block.
+
+    The TPU analogue of the AIE's 32 KB local scratchpad budget; used by
+    the perf pass to pick block shapes that stay inside VMEM while
+    maximizing arithmetic intensity.
+    """
+    return dtype_bytes * (
+        block_m * block_k + block_k * block_n + block_m * block_n
+    )
+
+
+def mxu_utilization(block_m: int, block_n: int, block_k: int, mxu: int = 128) -> float:
+    """Fraction of MXU lanes a block matmul keeps busy (128x128 systolic
+    array): blocks below the MXU edge waste lanes, multiples use them fully."""
+
+    def frac(d: int) -> float:
+        return min(d, mxu) / mxu if d % mxu else 1.0
+
+    return frac(block_m) * frac(block_n)
+
+
+def arithmetic_intensity(
+    block_m: int, block_n: int, block_k: int, dtype_bytes: int = 4
+) -> float:
+    """FLOPs per HBM byte moved for one grid step (C revisited in VMEM)."""
+    flops = 2.0 * block_m * block_n * block_k
+    bytes_moved = dtype_bytes * (block_m * block_k + block_k * block_n)
+    return flops / bytes_moved
+
+
+def grid_shape(m: int, n: int, k: int, bm: int, bn: int, bk: int) -> Tuple[int, int, int]:
+    if m % bm or n % bn or k % bk:
+        raise ValueError("dims must divide blocks")
+    return (m // bm, n // bn, k // bk)

@@ -1,0 +1,95 @@
+"""L2 — JAX compute graphs around the Pallas micro-kernel.
+
+The paper's "model" is the tiled GEMM itself: the AIE array + PL dataflow
+computes ``C = A @ B`` one tile at a time.  This module defines the
+AOT-lowered GEMM *tile executables* the Rust coordinator composes at run
+time (mirroring how the PL composes AIE micro-kernel invocations), plus
+shape-variant metadata for the artifact manifest.
+
+Every function here is lowered ONCE by ``aot.py``; Python never runs on
+the request path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.tiled_gemm import (
+    MICRO_K,
+    MICRO_M,
+    MICRO_N,
+    tiled_gemm,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmVariant:
+    """One AOT artifact: a fixed-shape tiled GEMM executable.
+
+    The Rust runtime picks, per workload dimension, the largest variant
+    tile that fits, pads the operands to tile multiples, and accumulates
+    partial C tiles — the same role the PL plays for the AIE array.
+    """
+
+    name: str
+    m: int
+    n: int
+    k: int
+    block_m: int = MICRO_M
+    block_n: int = MICRO_N
+    block_k: int = MICRO_K
+
+    @property
+    def flops(self) -> int:
+        return 2 * self.m * self.n * self.k
+
+    def arg_specs(self) -> Tuple[jax.ShapeDtypeStruct, jax.ShapeDtypeStruct]:
+        return (
+            jax.ShapeDtypeStruct((self.m, self.k), jnp.float32),
+            jax.ShapeDtypeStruct((self.k, self.n), jnp.float32),
+        )
+
+    def fn(self) -> Callable:
+        bm, bn, bk = self.block_m, self.block_n, self.block_k
+
+        def gemm(a, b):
+            # 1-tuple return: lowered with return_tuple=True and unwrapped
+            # with to_tuple1() on the Rust side (see aot_recipe gotchas).
+            return (tiled_gemm(a, b, block_m=bm, block_n=bn, block_k=bk),)
+
+        return gemm
+
+
+# Artifact set.  The micro tile is the paper's fixed 32x32x32 AIE
+# workload; the larger square/skinny tiles let the Rust executor amortize
+# PJRT invocation overhead on bigger workloads (decode-shaped GEMMs have
+# tiny M, hence the 32xN and 64xN variants).
+ARTIFACT_VARIANTS: List[GemmVariant] = [
+    GemmVariant("micro_32", 32, 32, 32),
+    GemmVariant("tile_64", 64, 64, 64),
+    GemmVariant("tile_128", 128, 128, 128),
+    GemmVariant("tile_32x128x128", 32, 128, 128),
+    GemmVariant("tile_64x128x128", 64, 128, 128),
+    # Perf-pass variants: MXU-edge fused blocks (a single grid step per
+    # invocation) — the L1 block-shape iteration showed the blocked 32^3
+    # grid pays ~10us of interpret-mode loop overhead per step, so fused
+    # tiles run ~9x faster on the CPU substrate while staying inside a
+    # TPU VMEM budget (3*512^2*4 B = 3.1 MB; see DESIGN.md section 8).
+    GemmVariant("tile_128_fused", 128, 128, 128, block_m=128, block_n=128, block_k=128),
+    GemmVariant("tile_256_fused", 256, 256, 256, block_m=256, block_n=256, block_k=256),
+    GemmVariant("tile_512_fused", 512, 512, 512, block_m=512, block_n=512, block_k=512),
+    GemmVariant(
+        "tile_32x512x512_fused", 32, 512, 512, block_m=32, block_n=512, block_k=512
+    ),
+]
+
+VARIANTS_BY_NAME: Dict[str, GemmVariant] = {v.name: v for v in ARTIFACT_VARIANTS}
+
+
+def lower_variant(variant: GemmVariant) -> jax.stages.Lowered:
+    """Lower one variant with fixed example shapes (AOT contract)."""
+    return jax.jit(variant.fn()).lower(*variant.arg_specs())

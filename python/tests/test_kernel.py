@@ -1,0 +1,191 @@
+"""Kernel-vs-oracle correctness: the CORE build-time signal.
+
+``hypothesis`` sweeps the Pallas kernel's shape/block/dtype space and
+asserts allclose against the pure-jnp oracle in ``ref.py``; nothing is
+AOT-lowered unless these pass.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import gemm_ref, tiled_gemm_ref
+from compile.kernels.tiled_gemm import (
+    MICRO_K,
+    MICRO_M,
+    MICRO_N,
+    arithmetic_intensity,
+    grid_shape,
+    micro_gemm,
+    mxu_utilization,
+    tiled_gemm,
+    vmem_footprint_bytes,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(shape, dtype=jnp.float32, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape), dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# Micro-kernel (the paper's fixed 32x32x32 AIE workload)
+# ---------------------------------------------------------------------------
+
+
+def test_micro_gemm_matches_ref():
+    a = _rand((MICRO_M, MICRO_K), seed=1)
+    b = _rand((MICRO_K, MICRO_N), seed=2)
+    np.testing.assert_allclose(micro_gemm(a, b), gemm_ref(a, b), rtol=1e-5, atol=1e-5)
+
+
+def test_micro_gemm_identity():
+    a = jnp.eye(32, dtype=jnp.float32)
+    b = _rand((32, 32), seed=3)
+    np.testing.assert_allclose(micro_gemm(a, b), b, rtol=1e-6, atol=1e-6)
+
+
+def test_micro_gemm_zeros():
+    a = jnp.zeros((32, 32), jnp.float32)
+    b = _rand((32, 32), seed=4)
+    assert jnp.all(micro_gemm(a, b) == 0.0)
+
+
+def test_micro_gemm_rejects_bad_shape():
+    with pytest.raises(ValueError):
+        micro_gemm(_rand((16, 32)), _rand((32, 32)))
+
+
+# ---------------------------------------------------------------------------
+# Tiled GEMM: fixed-case grid coverage
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "m,n,k",
+    [
+        (32, 32, 32),
+        (64, 32, 32),
+        (32, 64, 32),
+        (32, 32, 64),
+        (64, 64, 64),
+        (96, 64, 128),
+        (128, 128, 128),
+        (32, 256, 96),
+    ],
+)
+def test_tiled_gemm_matches_ref(m, n, k):
+    a = _rand((m, k), seed=m + n)
+    b = _rand((k, n), seed=k + n)
+    got = tiled_gemm(a, b)
+    np.testing.assert_allclose(got, gemm_ref(a, b), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(32, 32, 32), (64, 64, 32), (32, 128, 64), (128, 128, 128)])
+def test_tiled_gemm_block_shapes(bm, bn, bk):
+    m, n, k = 128, 128, 128
+    a = _rand((m, k), seed=7)
+    b = _rand((k, n), seed=8)
+    got = tiled_gemm(a, b, block_m=bm, block_n=bn, block_k=bk)
+    np.testing.assert_allclose(got, gemm_ref(a, b), rtol=1e-4, atol=1e-4)
+
+
+def test_tiled_gemm_k_accumulation_order():
+    # Matches the blocked-accumulation oracle bit-for-bit-ish (same order).
+    m, n, k = 64, 64, 128
+    a = _rand((m, k), seed=9)
+    b = _rand((k, n), seed=10)
+    got = tiled_gemm(a, b)
+    want = tiled_gemm_ref(a, b, block_k=MICRO_K)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_tiled_gemm_rejects_indivisible():
+    with pytest.raises(ValueError):
+        tiled_gemm(_rand((48, 32)), _rand((32, 32)))
+    with pytest.raises(ValueError):
+        tiled_gemm(_rand((32, 40)), _rand((40, 32)))
+
+
+def test_tiled_gemm_rejects_contraction_mismatch():
+    with pytest.raises(ValueError):
+        tiled_gemm(_rand((32, 64)), _rand((32, 32)))
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweep over shapes / blocks / dtypes
+# ---------------------------------------------------------------------------
+
+dims = st.integers(min_value=1, max_value=4).map(lambda x: 32 * x)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=dims, n=dims, k=dims, seed=st.integers(0, 2**16))
+def test_hypothesis_shapes_f32(m, n, k, seed):
+    a = _rand((m, k), seed=seed)
+    b = _rand((k, n), seed=seed + 1)
+    np.testing.assert_allclose(
+        tiled_gemm(a, b), gemm_ref(a, b), rtol=1e-4, atol=1e-4
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    mult=st.tuples(st.integers(1, 2), st.integers(1, 2), st.integers(1, 2)),
+    blocks=st.sampled_from([(32, 32, 32), (64, 32, 32), (32, 64, 64)]),
+    seed=st.integers(0, 2**16),
+)
+def test_hypothesis_block_shapes(mult, blocks, seed):
+    bm, bn, bk = blocks
+    m, n, k = bm * mult[0], bn * mult[1], bk * mult[2]
+    a = _rand((m, k), seed=seed)
+    b = _rand((k, n), seed=seed + 1)
+    got = tiled_gemm(a, b, block_m=bm, block_n=bn, block_k=bk)
+    np.testing.assert_allclose(got, gemm_ref(a, b), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(dtype=st.sampled_from([jnp.float32, jnp.bfloat16]), seed=st.integers(0, 2**16))
+def test_hypothesis_dtypes(dtype, seed):
+    # Paper is FP32-only (VCK190 constraint); bfloat16 covers the
+    # "newer formats" the paper cites as future targets.
+    a = _rand((64, 64), dtype=dtype, seed=seed)
+    b = _rand((64, 64), dtype=dtype, seed=seed + 1)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(
+        np.asarray(tiled_gemm(a, b), dtype=np.float32),
+        np.asarray(gemm_ref(a, b), dtype=np.float32),
+        rtol=tol,
+        atol=tol,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Static estimator sanity (used by the perf pass)
+# ---------------------------------------------------------------------------
+
+
+def test_vmem_footprint():
+    # 32^3 f32: 3 * 32*32*4 bytes = 12 KiB — fits the AIE's 32 KB analogue.
+    assert vmem_footprint_bytes(32, 32, 32) == 3 * 32 * 32 * 4
+    assert vmem_footprint_bytes(128, 128, 128) == 3 * 128 * 128 * 4
+
+
+def test_mxu_utilization_monotone():
+    assert mxu_utilization(128, 128, 128) == 1.0
+    assert mxu_utilization(32, 32, 32) == pytest.approx((32 / 128) ** 2)
+    assert mxu_utilization(32, 32, 32) < mxu_utilization(64, 64, 64)
+
+
+def test_arithmetic_intensity_grows_with_block():
+    assert arithmetic_intensity(64, 64, 64) > arithmetic_intensity(32, 32, 32)
+
+
+def test_grid_shape():
+    assert grid_shape(128, 64, 96, 32, 32, 32) == (4, 2, 3)
+    with pytest.raises(ValueError):
+        grid_shape(100, 64, 96, 32, 32, 32)

@@ -1,0 +1,76 @@
+"""L2/AOT tests: variant contracts, lowering, HLO-text round-trip shape."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.aot import build_all, to_hlo_text
+from compile.kernels.ref import gemm_ref
+from compile.model import ARTIFACT_VARIANTS, VARIANTS_BY_NAME, GemmVariant, lower_variant
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_variant_catalog_is_consistent():
+    names = [v.name for v in ARTIFACT_VARIANTS]
+    assert len(names) == len(set(names)), "duplicate variant names"
+    assert "micro_32" in VARIANTS_BY_NAME
+    micro = VARIANTS_BY_NAME["micro_32"]
+    assert (micro.m, micro.n, micro.k) == (32, 32, 32)
+    for v in ARTIFACT_VARIANTS:
+        assert v.m % v.block_m == 0 and v.n % v.block_n == 0 and v.k % v.block_k == 0
+        assert v.flops == 2 * v.m * v.n * v.k
+
+
+@pytest.mark.parametrize("name", ["micro_32", "tile_64", "tile_32x128x128"])
+def test_variant_fn_matches_ref(name):
+    v = VARIANTS_BY_NAME[name]
+    rng = np.random.default_rng(42)
+    a = jnp.asarray(rng.standard_normal((v.m, v.k)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((v.k, v.n)), jnp.float32)
+    (got,) = v.fn()(a, b)
+    np.testing.assert_allclose(got, gemm_ref(a, b), rtol=1e-4, atol=1e-4)
+
+
+def test_fused_variant_matches_blocked_variant():
+    v_blocked = VARIANTS_BY_NAME["tile_128"]
+    v_fused = VARIANTS_BY_NAME["tile_128_fused"]
+    rng = np.random.default_rng(7)
+    a = jnp.asarray(rng.standard_normal((128, 128)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((128, 128)), jnp.float32)
+    (x,) = v_blocked.fn()(a, b)
+    (y,) = v_fused.fn()(a, b)
+    np.testing.assert_allclose(x, y, rtol=1e-4, atol=1e-4)
+
+
+def test_lower_and_hlo_text_smoke():
+    v = VARIANTS_BY_NAME["micro_32"]
+    text = to_hlo_text(lower_variant(v))
+    assert "ENTRY" in text and "f32[32,32]" in text
+    # Tuple return contract for the Rust side's to_tuple1().
+    assert "->(f32[32,32]{1,0})" in text
+
+
+def test_build_all_writes_manifest(tmp_path):
+    out = str(tmp_path / "artifacts")
+    manifest = build_all(out)
+    assert manifest["version"] == 1
+    files = os.listdir(out)
+    assert "manifest.json" in files
+    for entry in manifest["variants"]:
+        assert entry["file"] in files
+        path = os.path.join(out, entry["file"])
+        assert os.path.getsize(path) == entry["bytes"]
+    with open(os.path.join(out, "manifest.json")) as f:
+        reloaded = json.load(f)
+    assert reloaded == manifest
+
+
+def test_custom_variant_lowering():
+    v = GemmVariant("tmp_96", 96, 64, 32)
+    text = to_hlo_text(lower_variant(v))
+    assert "f32[96,32]" in text and "f32[32,64]" in text

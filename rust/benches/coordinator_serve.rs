@@ -1,0 +1,45 @@
+//! Bench: coordinator serving throughput (plan-only path: DSE + cache +
+//! channels), the L3 router hot path.
+use versal_gemm::config::Config;
+use versal_gemm::coordinator::{Coordinator, GemmJob};
+use versal_gemm::dse::Objective;
+use versal_gemm::report::Lab;
+use versal_gemm::util::bench::once;
+use versal_gemm::workloads::Gemm;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = Config::default();
+    let lab = Lab::prepare(cfg.clone(), "data".into())?;
+    println!("== bench: coordinator plan-only serving ==");
+    let mut coord = Coordinator::start(&cfg, lab.engine(), None, 4);
+    let shapes = [
+        Gemm::new(512, 1024, 512),
+        Gemm::new(224, 3072, 768),
+        Gemm::new(32, 4864, 896),
+        Gemm::new(2048, 2048, 2048),
+    ];
+    // Cold: 8 distinct (shape, objective) plans; warm: 192 cached jobs.
+    let jobs: Vec<GemmJob> = (0..200u64)
+        .map(|i| {
+            GemmJob::plan_only(
+                i,
+                shapes[(i % 4) as usize],
+                if i % 2 == 0 { Objective::Throughput } else { Objective::EnergyEfficiency },
+            )
+        })
+        .collect();
+    let results = once("serve 200 plan jobs (8 unique plans)", || coord.run_batch(jobs));
+    assert_eq!(results.len(), 200);
+    let stats = coord.stats();
+    println!(
+        "cache: {} hits / {} misses; failed {}",
+        stats.cache_hits, stats.cache_misses, stats.jobs_failed
+    );
+    let warm: Vec<f64> = results.iter().filter(|r| r.cache_hit).map(|r| r.plan_time.as_secs_f64()).collect();
+    println!(
+        "warm plan latency: median {:.1} us over {} jobs",
+        versal_gemm::metrics::median(&warm) * 1e6,
+        warm.len()
+    );
+    Ok(())
+}

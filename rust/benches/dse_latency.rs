@@ -1,0 +1,26 @@
+//! Bench: online-phase DSE wall-clock per workload (paper §V-A: the
+//! ML-driven DSE completes in < 2 s per workload).
+use versal_gemm::config::Config;
+use versal_gemm::report::Lab;
+use versal_gemm::util::bench::{bench, report, report_throughput};
+use versal_gemm::workloads::eval_workloads;
+
+fn main() -> anyhow::Result<()> {
+    let lab = Lab::prepare(Config::default(), "data".into())?;
+    let engine = lab.engine();
+    println!("== bench: DSE latency per eval workload (paper: < 2 s) ==");
+    let mut worst = 0.0f64;
+    for w in eval_workloads() {
+        let stats = bench(1, 5, || {
+            let r = engine.explore(&w.gemm).unwrap();
+            std::hint::black_box(r.n_feasible);
+        });
+        let r = engine.explore(&w.gemm)?;
+        report(&format!("{} {} ({} cands)", w.id, w.gemm.label(), r.n_candidates), &stats);
+        report_throughput("  prediction rate", &stats, r.n_candidates as f64, "candidates");
+        worst = worst.max(stats.median.as_secs_f64());
+        assert!(stats.median.as_secs_f64() < 2.0, "{} DSE exceeded 2 s", w.id);
+    }
+    println!("worst-case median DSE: {:.3} s — within the paper's 2 s budget", worst);
+    Ok(())
+}

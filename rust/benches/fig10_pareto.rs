@@ -1,0 +1,13 @@
+//! Bench: Fig. 10 — Pareto-front generation quality and hypervolume.
+use versal_gemm::config::Config;
+use versal_gemm::report::{figures, Lab};
+use versal_gemm::util::bench::once;
+
+fn main() -> anyhow::Result<()> {
+    let lab = Lab::prepare(Config::default(), "data".into())?;
+    let fig = once("fig10: ARIES vs Ours vs actual fronts (5 workloads)", || {
+        figures::fig10_pareto_fronts(&lab)
+    });
+    println!("{fig}");
+    Ok(())
+}

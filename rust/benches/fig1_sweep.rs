@@ -1,0 +1,24 @@
+//! Bench: Fig. 1 exhaustive tiling sweep — simulator evaluation
+//! throughput over the full candidate space of one medium GEMM.
+use versal_gemm::config::Config;
+use versal_gemm::dse::ExhaustiveExplorer;
+use versal_gemm::report::{figures, Lab};
+use versal_gemm::util::bench::{bench, once, report_throughput};
+use versal_gemm::versal::VersalSim;
+use versal_gemm::workloads::Gemm;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = Config::default();
+    let g = Gemm::new(224, 3072, 768);
+    let ex = ExhaustiveExplorer::new(VersalSim::new(&cfg));
+    let n = ex.explore(&g).len();
+    println!("== bench: Fig. 1 exhaustive sweep ({n} buildable designs) ==");
+    let stats = bench(1, 5, || {
+        std::hint::black_box(ex.explore(&g).len());
+    });
+    report_throughput("exhaustive sweep (enumerate+simulate)", &stats, n as f64, "designs");
+    let lab = Lab::prepare(cfg, "data".into())?;
+    let fig = once("render fig1", || figures::fig1_tiling_impact(&lab));
+    println!("{fig}");
+    Ok(())
+}

@@ -1,0 +1,28 @@
+//! Bench: Fig. 3 power-model machinery — per-design power evaluation
+//! rate and full offline dataset regeneration time.
+use versal_gemm::config::Config;
+use versal_gemm::dataset::Dataset;
+use versal_gemm::report::{figures, Lab};
+use versal_gemm::util::bench::{bench, once, report_throughput};
+use versal_gemm::versal::{BufferPlacement, VersalSim};
+use versal_gemm::workloads::{training_workloads, Gemm};
+use versal_gemm::tiling::Tiling;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = Config::default();
+    let sim = VersalSim::new(&cfg);
+    let g = Gemm::new(1024, 1024, 1024);
+    let t = Tiling::new((8, 8, 4), (2, 2, 2));
+    println!("== bench: Fig. 3 power profile machinery ==");
+    let stats = bench(100, 10_000, || {
+        std::hint::black_box(sim.evaluate(&g, &t, BufferPlacement::UramFirst).unwrap());
+    });
+    report_throughput("simulator evaluate()", &stats, 1.0, "designs");
+    let ds = once("full offline dataset generation", || {
+        Dataset::generate(&cfg, &training_workloads())
+    });
+    println!("  ({} designs)", ds.len());
+    let lab = Lab::prepare(cfg, "data".into())?;
+    println!("{}", figures::fig3_power_vs_aies(&lab));
+    Ok(())
+}

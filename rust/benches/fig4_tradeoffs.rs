@@ -1,0 +1,12 @@
+//! Bench: Fig. 4 — exhaustive energy/throughput trade-off analysis
+//! across all 13 eval workloads.
+use versal_gemm::config::Config;
+use versal_gemm::report::{figures, Lab};
+use versal_gemm::util::bench::once;
+
+fn main() -> anyhow::Result<()> {
+    let lab = Lab::prepare(Config::default(), "data".into())?;
+    let fig = once("fig4: exhaustive tradeoffs G1..G13", || figures::fig4_tradeoffs(&lab));
+    println!("{fig}");
+    Ok(())
+}

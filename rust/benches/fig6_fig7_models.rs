@@ -1,0 +1,24 @@
+//! Bench: Fig. 6 / Fig. 7 machinery — GBDT training time, single-row
+//! prediction latency, and the rendered accuracy tables.
+use versal_gemm::config::Config;
+use versal_gemm::features::FeatureSet;
+use versal_gemm::models::Predictors;
+use versal_gemm::report::{figures, Lab};
+use versal_gemm::util::bench::{bench, once, report, report_throughput};
+
+fn main() -> anyhow::Result<()> {
+    let lab = Lab::prepare(Config::default(), "data".into())?;
+    println!("== bench: model training / prediction (Fig. 6 / Fig. 7) ==");
+    let model = once("train L/P/R bundle (full dataset)", || {
+        Predictors::train(&lab.dataset, &lab.cfg, FeatureSet::SetIAndII)
+    });
+    let p = &lab.dataset.points[0];
+    let stats = bench(1000, 100_000, || {
+        std::hint::black_box(model.predict(&p.gemm, &p.tiling));
+    });
+    report("predict one candidate (L+P+R)", &stats);
+    report_throughput("prediction throughput", &stats, 1.0, "candidates");
+    println!("{}", once("render fig6", || figures::fig6_r2_vs_training_size(&lab)));
+    println!("{}", once("render fig7", || figures::fig7_prediction_error(&lab)));
+    Ok(())
+}

@@ -1,0 +1,18 @@
+//! Bench: Fig. 8 + Table III — full framework comparison (CHARM, ARIES,
+//! Ours) across G1..G13, end to end.
+use versal_gemm::config::Config;
+use versal_gemm::report::{figures, render, Lab};
+use versal_gemm::util::bench::once;
+
+fn main() -> anyhow::Result<()> {
+    let lab = Lab::prepare(Config::default(), "data".into())?;
+    let fig8 = once("fig8: CHARM/ARIES/Ours on G1..G13", || {
+        figures::fig8_sota_comparison(&lab)
+    });
+    println!("{fig8}");
+    let t3 = once("table3: resource utilization (cached comparisons)", || {
+        render(&lab, "table3").unwrap()
+    });
+    println!("{t3}");
+    Ok(())
+}

@@ -1,0 +1,24 @@
+//! Bench: Fig. 9 — Jetson GPU roofline models vs the VCK190 mappings.
+use versal_gemm::config::Config;
+use versal_gemm::gpu::jetson_devices;
+use versal_gemm::report::{figures, Lab};
+use versal_gemm::util::bench::{bench, once, report_throughput};
+use versal_gemm::workloads::eval_workloads;
+
+fn main() -> anyhow::Result<()> {
+    let devices = jetson_devices();
+    let wl = eval_workloads();
+    println!("== bench: Fig. 9 GPU comparison ==");
+    let stats = bench(10, 1000, || {
+        for d in &devices {
+            for w in &wl {
+                std::hint::black_box(d.throughput(&w.gemm));
+                std::hint::black_box(d.energy_eff(&w.gemm));
+            }
+        }
+    });
+    report_throughput("roofline eval (3 devices x 13 workloads)", &stats, 39.0, "evals");
+    let lab = Lab::prepare(Config::default(), "data".into())?;
+    println!("{}", once("render fig9", || figures::fig9_gpu_comparison(&lab)));
+    Ok(())
+}

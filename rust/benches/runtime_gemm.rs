@@ -1,0 +1,27 @@
+//! Bench: L3 hot path — the PJRT tiled-GEMM executor over the AOT
+//! Pallas artifacts (requires `make artifacts`).
+use versal_gemm::runtime::{matmul_ref, GemmEngine};
+use versal_gemm::util::bench::{bench, report, report_throughput};
+use versal_gemm::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let engine = GemmEngine::load(std::path::Path::new("artifacts"))?;
+    println!("== bench: PJRT tiled GEMM executor (platform {}) ==", engine.platform());
+    let mut rng = Rng::new(3);
+    for &(m, n, k) in &[(128usize, 128usize, 128usize), (256, 256, 256), (32, 896, 896), (512, 512, 512)] {
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let flops = 2.0 * (m * n * k) as f64;
+        let stats = bench(2, 8, || {
+            std::hint::black_box(engine.gemm(&a, &b, m, n, k).unwrap());
+        });
+        report(&format!("pjrt gemm {m}x{n}x{k}"), &stats);
+        report_throughput("  throughput", &stats, flops / 1e9, "GFLOP");
+        let ref_stats = bench(1, 3, || {
+            std::hint::black_box(matmul_ref(&a, &b, m, n, k));
+        });
+        report(&format!("rust ref  {m}x{n}x{k}"), &ref_stats);
+    }
+    println!("total kernel invocations: {}", engine.invocations.get());
+    Ok(())
+}

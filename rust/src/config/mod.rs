@@ -1,0 +1,352 @@
+//! Configuration system: board spec, simulator calibration, training and
+//! DSE parameters. Defaults reproduce the paper's VCK190 setup (Table II
+//! and §V); every field can be overridden from a TOML file or the CLI.
+
+use crate::util::toml::TomlDoc;
+use std::path::Path;
+
+/// VCK190 / XCVC1902 device specification (paper Table II footnote).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BoardConfig {
+    pub name: String,
+    /// Total AI Engines (50 columns x 8 rows on the VCK190).
+    pub aie_total: usize,
+    pub aie_rows: usize,
+    pub aie_cols: usize,
+    /// AIE clock (Hz) — 1.25 GHz.
+    pub aie_clock_hz: f64,
+    /// FP32 MACs per cycle per AIE: 8 => 400 AIEs * 1.25 GHz * 8 * 2 = 8 TFLOPS peak.
+    pub macs_per_cycle: f64,
+    /// PL kernel clock (Hz) — 230 MHz.
+    pub pl_clock_hz: f64,
+    /// DDR peak bandwidth (bytes/s) — 25.6 GB/s.
+    pub ddr_peak_bps: f64,
+    /// PL resource pools.
+    pub bram_total: usize,
+    pub uram_total: usize,
+    pub lut_total: usize,
+    pub ff_total: usize,
+    pub dsp_total: usize,
+    /// Bytes per BRAM36 (4 KB data) and per URAM (32 KB data).
+    pub bram_bytes: usize,
+    pub uram_bytes: usize,
+    /// Max cascade / accumulation chain depth (P_K cap).
+    pub max_cascade: usize,
+    /// Fixed micro-kernel tile per AIE (paper: 32x32x32).
+    pub micro_tile: usize,
+}
+
+impl Default for BoardConfig {
+    fn default() -> Self {
+        BoardConfig {
+            name: "vck190".into(),
+            aie_total: 400,
+            aie_rows: 8,
+            aie_cols: 50,
+            aie_clock_hz: 1.25e9,
+            macs_per_cycle: 8.0,
+            pl_clock_hz: 230.0e6,
+            ddr_peak_bps: 25.6e9,
+            bram_total: 963,
+            uram_total: 463,
+            lut_total: 900_000,
+            ff_total: 1_800_000,
+            dsp_total: 1_968,
+            bram_bytes: 4 * 1024,
+            uram_bytes: 32 * 1024,
+            max_cascade: 8,
+            micro_tile: 32,
+        }
+    }
+}
+
+impl BoardConfig {
+    /// Peak FP32 throughput in GFLOP/s (Table II: 8000).
+    pub fn peak_gflops(&self) -> f64 {
+        self.aie_total as f64 * self.aie_clock_hz * self.macs_per_cycle * 2.0 / 1e9
+    }
+}
+
+/// Calibration constants of the VCK190 simulator (ground-truth model).
+/// Values are fitted to the measurements the paper reports: Fig. 3 power
+/// medians, ~90% micro-kernel efficiency, launch overheads typical of
+/// XRT, and the DDR burst-efficiency behaviour motivating PL reuse.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimConfig {
+    /// Single-AIE micro-kernel efficiency (paper: ~90% of peak).
+    pub kernel_efficiency: f64,
+    /// Per-extra-cascade-stage efficiency loss (partial-sum sync).
+    pub cascade_penalty: f64,
+    /// Placement/routing congestion: throughput derate per AIE beyond
+    /// `congestion_knee` AIEs.
+    pub congestion_knee: usize,
+    pub congestion_slope: f64,
+    /// DDR burst model: efficiency = run / (run + overhead_bytes).
+    pub ddr_overhead_bytes: f64,
+    /// Extra DDR derate when K reuse is minimal (B_K == 1): short bursts
+    /// thrash the row buffer.
+    pub ddr_rowbuf_penalty: f64,
+    /// PL<->AIE stream bandwidth per AIE column (bytes/s) and NoC cap.
+    pub plio_bps_per_stream: f64,
+    pub noc_total_bps: f64,
+    /// Fixed per-L3-iteration sync overhead (s) and one-time launch (s).
+    pub iter_overhead_s: f64,
+    pub launch_overhead_s: f64,
+    /// Pipeline fill fraction of one iteration.
+    pub ramp_fraction: f64,
+    /// Static board power (W) — PS + fabric idle + board rails.
+    pub p_static_w: f64,
+    /// AIE dynamic power: p = alpha * n^beta (fit to Fig. 3 medians).
+    pub p_aie_alpha: f64,
+    pub p_aie_beta: f64,
+    /// How much an AIE stalled on memory still draws vs busy (0..1).
+    pub p_aie_stall_factor: f64,
+    /// PL memory power (W per BRAM / per URAM active).
+    pub p_bram_w: f64,
+    pub p_uram_w: f64,
+    /// PL logic power per allocated kLUT (W).
+    pub p_klut_w: f64,
+    /// DDR + NoC power per GB/s of achieved traffic (W).
+    pub p_ddr_w_per_gbps: f64,
+    pub p_noc_w_per_gbps: f64,
+    /// Multiplicative lognormal measurement noise (sigma of log).
+    pub noise_sigma: f64,
+    /// Simulated "build failure" rate for near-capacity designs, mirroring
+    /// the paper's "retain only successful builds".
+    pub build_fail_util_threshold: f64,
+    pub seed: u64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            kernel_efficiency: 0.90,
+            cascade_penalty: 0.010,
+            congestion_knee: 256,
+            congestion_slope: 0.12,
+            ddr_overhead_bytes: 640.0,
+            ddr_rowbuf_penalty: 0.86,
+            plio_bps_per_stream: 16.0 * 230.0e6, // 128-bit PLIO @ PL clock
+            noc_total_bps: 64.0e9,
+            iter_overhead_s: 2.0e-6,
+            launch_overhead_s: 0.9e-3,
+            ramp_fraction: 0.35,
+            p_static_w: 11.5,
+            p_aie_alpha: 0.95,
+            p_aie_beta: 0.556,
+            p_aie_stall_factor: 0.55,
+            p_bram_w: 0.0035,
+            p_uram_w: 0.0085,
+            p_klut_w: 0.012,
+            p_ddr_w_per_gbps: 0.115,
+            p_noc_w_per_gbps: 0.035,
+            noise_sigma: 0.03,
+            build_fail_util_threshold: 0.92,
+            seed: 0xC0FFEE,
+        }
+    }
+}
+
+/// GBDT training hyper-parameters (paper §IV-A.3: Optuna-tuned XGBoost;
+/// here a from-scratch GBDT with a deterministic random search).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainConfig {
+    pub n_trees: usize,
+    pub max_depth: usize,
+    pub learning_rate: f64,
+    pub min_samples_leaf: usize,
+    pub subsample: f64,
+    pub colsample: f64,
+    /// L2 regularization on leaf values.
+    pub lambda: f64,
+    pub seed: u64,
+    /// 80/20 split + 5-fold CV as in the paper.
+    pub test_fraction: f64,
+    pub cv_folds: usize,
+    /// Budget for the random hyper-parameter search (0 = use fields as-is).
+    pub search_trials: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            n_trees: 300,
+            max_depth: 6,
+            learning_rate: 0.08,
+            min_samples_leaf: 4,
+            subsample: 0.85,
+            colsample: 0.9,
+            lambda: 1.0,
+            seed: 17,
+            test_fraction: 0.2,
+            cv_folds: 5,
+            search_trials: 0,
+        }
+    }
+}
+
+/// Offline-phase dataset generation parameters (paper: ~6000 designs
+/// across 18 workloads, sampled by analytical guidance).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DatasetConfig {
+    /// Per-workload sample budget split: analytically top-k, bottom-k,
+    /// and random intermediate configs.
+    pub top_k: usize,
+    pub bottom_k: usize,
+    pub random_k: usize,
+    /// Relaxation factor on resource constraints during sampling
+    /// (paper: "relaxed resource constraints" to keep near-optimal
+    /// designs that the analytical model mis-ranks).
+    pub resource_relaxation: f64,
+    pub seed: u64,
+}
+
+impl Default for DatasetConfig {
+    fn default() -> Self {
+        DatasetConfig {
+            top_k: 60,
+            bottom_k: 40,
+            random_k: 240,
+            resource_relaxation: 1.15,
+            seed: 99,
+        }
+    }
+}
+
+/// Everything together.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Config {
+    pub board: BoardConfig,
+    pub sim: SimConfig,
+    pub train: TrainConfig,
+    pub dataset: DatasetConfig,
+}
+
+impl Config {
+    pub fn from_toml(doc: &TomlDoc) -> Config {
+        let d = Config::default();
+        Config {
+            board: BoardConfig {
+                name: doc.str_or("board.name", &d.board.name).to_string(),
+                aie_total: doc.usize_or("board.aie_total", d.board.aie_total),
+                aie_rows: doc.usize_or("board.aie_rows", d.board.aie_rows),
+                aie_cols: doc.usize_or("board.aie_cols", d.board.aie_cols),
+                aie_clock_hz: doc.f64_or("board.aie_clock_hz", d.board.aie_clock_hz),
+                macs_per_cycle: doc.f64_or("board.macs_per_cycle", d.board.macs_per_cycle),
+                pl_clock_hz: doc.f64_or("board.pl_clock_hz", d.board.pl_clock_hz),
+                ddr_peak_bps: doc.f64_or("board.ddr_peak_bps", d.board.ddr_peak_bps),
+                bram_total: doc.usize_or("board.bram_total", d.board.bram_total),
+                uram_total: doc.usize_or("board.uram_total", d.board.uram_total),
+                lut_total: doc.usize_or("board.lut_total", d.board.lut_total),
+                ff_total: doc.usize_or("board.ff_total", d.board.ff_total),
+                dsp_total: doc.usize_or("board.dsp_total", d.board.dsp_total),
+                bram_bytes: doc.usize_or("board.bram_bytes", d.board.bram_bytes),
+                uram_bytes: doc.usize_or("board.uram_bytes", d.board.uram_bytes),
+                max_cascade: doc.usize_or("board.max_cascade", d.board.max_cascade),
+                micro_tile: doc.usize_or("board.micro_tile", d.board.micro_tile),
+            },
+            sim: SimConfig {
+                kernel_efficiency: doc.f64_or("sim.kernel_efficiency", d.sim.kernel_efficiency),
+                cascade_penalty: doc.f64_or("sim.cascade_penalty", d.sim.cascade_penalty),
+                congestion_knee: doc.usize_or("sim.congestion_knee", d.sim.congestion_knee),
+                congestion_slope: doc.f64_or("sim.congestion_slope", d.sim.congestion_slope),
+                ddr_overhead_bytes: doc.f64_or("sim.ddr_overhead_bytes", d.sim.ddr_overhead_bytes),
+                ddr_rowbuf_penalty: doc.f64_or("sim.ddr_rowbuf_penalty", d.sim.ddr_rowbuf_penalty),
+                plio_bps_per_stream: doc
+                    .f64_or("sim.plio_bps_per_stream", d.sim.plio_bps_per_stream),
+                noc_total_bps: doc.f64_or("sim.noc_total_bps", d.sim.noc_total_bps),
+                iter_overhead_s: doc.f64_or("sim.iter_overhead_s", d.sim.iter_overhead_s),
+                launch_overhead_s: doc.f64_or("sim.launch_overhead_s", d.sim.launch_overhead_s),
+                ramp_fraction: doc.f64_or("sim.ramp_fraction", d.sim.ramp_fraction),
+                p_static_w: doc.f64_or("sim.p_static_w", d.sim.p_static_w),
+                p_aie_alpha: doc.f64_or("sim.p_aie_alpha", d.sim.p_aie_alpha),
+                p_aie_beta: doc.f64_or("sim.p_aie_beta", d.sim.p_aie_beta),
+                p_aie_stall_factor: doc.f64_or("sim.p_aie_stall_factor", d.sim.p_aie_stall_factor),
+                p_bram_w: doc.f64_or("sim.p_bram_w", d.sim.p_bram_w),
+                p_uram_w: doc.f64_or("sim.p_uram_w", d.sim.p_uram_w),
+                p_klut_w: doc.f64_or("sim.p_klut_w", d.sim.p_klut_w),
+                p_ddr_w_per_gbps: doc.f64_or("sim.p_ddr_w_per_gbps", d.sim.p_ddr_w_per_gbps),
+                p_noc_w_per_gbps: doc.f64_or("sim.p_noc_w_per_gbps", d.sim.p_noc_w_per_gbps),
+                noise_sigma: doc.f64_or("sim.noise_sigma", d.sim.noise_sigma),
+                build_fail_util_threshold: doc.f64_or(
+                    "sim.build_fail_util_threshold",
+                    d.sim.build_fail_util_threshold,
+                ),
+                seed: doc.u64_or("sim.seed", d.sim.seed),
+            },
+            train: TrainConfig {
+                n_trees: doc.usize_or("train.n_trees", d.train.n_trees),
+                max_depth: doc.usize_or("train.max_depth", d.train.max_depth),
+                learning_rate: doc.f64_or("train.learning_rate", d.train.learning_rate),
+                min_samples_leaf: doc.usize_or("train.min_samples_leaf", d.train.min_samples_leaf),
+                subsample: doc.f64_or("train.subsample", d.train.subsample),
+                colsample: doc.f64_or("train.colsample", d.train.colsample),
+                lambda: doc.f64_or("train.lambda", d.train.lambda),
+                seed: doc.u64_or("train.seed", d.train.seed),
+                test_fraction: doc.f64_or("train.test_fraction", d.train.test_fraction),
+                cv_folds: doc.usize_or("train.cv_folds", d.train.cv_folds),
+                search_trials: doc.usize_or("train.search_trials", d.train.search_trials),
+            },
+            dataset: DatasetConfig {
+                top_k: doc.usize_or("dataset.top_k", d.dataset.top_k),
+                bottom_k: doc.usize_or("dataset.bottom_k", d.dataset.bottom_k),
+                random_k: doc.usize_or("dataset.random_k", d.dataset.random_k),
+                resource_relaxation: doc
+                    .f64_or("dataset.resource_relaxation", d.dataset.resource_relaxation),
+                seed: doc.u64_or("dataset.seed", d.dataset.seed),
+            },
+        }
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading config {}: {e}", path.display()))?;
+        let doc = TomlDoc::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        Ok(Config::from_toml(&doc))
+    }
+
+    /// Load from `--config path` if given, else defaults.
+    pub fn from_args(args: &crate::util::cli::Args) -> anyhow::Result<Config> {
+        match args.opt("config") {
+            Some(path) => Config::load(Path::new(path)),
+            None => Ok(Config::default()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_table2() {
+        let b = BoardConfig::default();
+        assert_eq!(b.aie_total, 400);
+        assert!((b.peak_gflops() - 8000.0).abs() < 1e-6);
+        assert!((b.ddr_peak_bps - 25.6e9).abs() < 1.0);
+        assert_eq!(b.bram_total, 963);
+        assert_eq!(b.uram_total, 463);
+        assert_eq!(b.dsp_total, 1968);
+    }
+
+    #[test]
+    fn toml_overrides_apply() {
+        let doc = TomlDoc::parse(
+            "[board]\naie_total = 128\n[sim]\nnoise_sigma = 0.0\n[train]\nn_trees = 10\n",
+        )
+        .unwrap();
+        let cfg = Config::from_toml(&doc);
+        assert_eq!(cfg.board.aie_total, 128);
+        assert_eq!(cfg.sim.noise_sigma, 0.0);
+        assert_eq!(cfg.train.n_trees, 10);
+        // Untouched fields keep defaults.
+        assert_eq!(cfg.board.uram_total, 463);
+        assert_eq!(cfg.train.max_depth, 6);
+    }
+
+    #[test]
+    fn empty_doc_is_default() {
+        let doc = TomlDoc::parse("").unwrap();
+        assert_eq!(Config::from_toml(&doc), Config::default());
+    }
+}

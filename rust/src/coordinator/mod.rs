@@ -1,0 +1,588 @@
+//! L3 serving coordinator — the run-time face of the framework.
+//!
+//! The paper's online phase emits one mapping per workload; a deployed
+//! system must serve *streams* of GEMM jobs (the LLM/ViT working sets of
+//! §V-A). This module is that service:
+//!
+//! ```text
+//!   submit(GemmJob) ──► planner pool (DSE, cached per (gemm, objective))
+//!                         │ plan-only jobs return here
+//!                         ▼
+//!                     executor thread (owns the PJRT GemmEngine)
+//!                         │ dynamic batching: drains the queue, groups
+//!                         │ jobs by artifact variant to reuse compiled
+//!                         │ executables and tile buffers
+//!                         ▼
+//!                     JobResult (mapping + predicted + simulated Versal
+//!                     metrics + real execution time + validation)
+//! ```
+//!
+//! Planners are pure-CPU and run in parallel; the executor is a single
+//! thread because PJRT handles are not `Send`-safe across arbitrary
+//! threads (it is created *inside* its thread). Python never appears.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::config::Config;
+use crate::dse::{DseEngine, Objective};
+use crate::models::Prediction;
+use crate::runtime::{matmul_ref, max_abs_diff, GemmEngine};
+use crate::tiling::Tiling;
+use crate::versal::reconfig::ReconfigModel;
+use crate::versal::{BufferPlacement, Measurement, VersalSim};
+use crate::workloads::Gemm;
+
+/// One GEMM request. Data-less jobs are "plan-only" (mapping + predicted
+/// + simulated metrics, no execution).
+#[derive(Debug, Clone)]
+pub struct GemmJob {
+    pub id: u64,
+    pub gemm: Gemm,
+    pub objective: Objective,
+    pub a: Option<Vec<f32>>,
+    pub b: Option<Vec<f32>>,
+    /// Validate the PJRT result against the Rust reference GEMM.
+    pub validate: bool,
+}
+
+impl GemmJob {
+    pub fn plan_only(id: u64, gemm: Gemm, objective: Objective) -> GemmJob {
+        GemmJob {
+            id,
+            gemm,
+            objective,
+            a: None,
+            b: None,
+            validate: false,
+        }
+    }
+
+    pub fn with_data(
+        id: u64,
+        gemm: Gemm,
+        objective: Objective,
+        a: Vec<f32>,
+        b: Vec<f32>,
+    ) -> GemmJob {
+        GemmJob {
+            id,
+            gemm,
+            objective,
+            a: Some(a),
+            b: Some(b),
+            validate: false,
+        }
+    }
+}
+
+/// The chosen mapping with its predicted and simulated-board metrics.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Plan {
+    pub tiling: Tiling,
+    pub predicted: Prediction,
+    pub simulated: Measurement,
+}
+
+/// Completed job.
+#[derive(Debug, Clone)]
+pub struct JobResult {
+    pub id: u64,
+    pub gemm: Gemm,
+    pub objective: Objective,
+    pub plan: Option<Plan>,
+    pub plan_time: Duration,
+    pub cache_hit: bool,
+    /// Wall-clock of the PJRT execution (None for plan-only jobs or when
+    /// no artifact engine is available).
+    pub exec_time: Option<Duration>,
+    /// max|c - c_ref| when validation was requested.
+    pub validation_err: Option<f32>,
+    pub c: Option<Vec<f32>>,
+    pub error: Option<String>,
+}
+
+impl JobResult {
+    pub fn executed_gflops(&self) -> Option<f64> {
+        self.exec_time
+            .map(|t| self.gemm.flops() / t.as_secs_f64() / 1e9)
+    }
+}
+
+/// Aggregate service counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CoordinatorStats {
+    pub jobs_completed: u64,
+    pub jobs_failed: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub executed_jobs: u64,
+    pub executed_flops: f64,
+    pub exec_time_s: f64,
+    /// Energy the selected mappings would draw on the VCK190 (J).
+    pub simulated_energy_j: f64,
+    /// Mapping switches the batch order incurred, and their simulated
+    /// partial-reconfiguration cost on the VCK190.
+    pub reconfigs: u64,
+    pub simulated_reconfig_s: f64,
+}
+
+impl CoordinatorStats {
+    pub fn executed_gflops(&self) -> f64 {
+        if self.exec_time_s > 0.0 {
+            self.executed_flops / self.exec_time_s / 1e9
+        } else {
+            0.0
+        }
+    }
+}
+
+struct PlannedJob {
+    job: GemmJob,
+    result: JobResult,
+}
+
+enum ExecMsg {
+    Job(Box<PlannedJob>),
+}
+
+/// The serving coordinator.
+pub struct Coordinator {
+    job_tx: Option<Sender<GemmJob>>,
+    result_rx: Receiver<JobResult>,
+    planners: Vec<std::thread::JoinHandle<()>>,
+    executor: Option<std::thread::JoinHandle<()>>,
+    stats: Arc<Mutex<CoordinatorStats>>,
+    pending: u64,
+}
+
+impl Coordinator {
+    /// Start the service. `artifacts_dir = None` runs in plan-only mode
+    /// (jobs with data are refused politely in the result).
+    pub fn start(
+        cfg: &Config,
+        engine: DseEngine,
+        artifacts_dir: Option<PathBuf>,
+        n_planners: usize,
+    ) -> Coordinator {
+        let (job_tx, job_rx) = channel::<GemmJob>();
+        let (exec_tx, exec_rx) = channel::<ExecMsg>();
+        let (result_tx, result_rx) = channel::<JobResult>();
+        let job_rx = Arc::new(Mutex::new(job_rx));
+        let stats = Arc::new(Mutex::new(CoordinatorStats::default()));
+
+        let dse = Arc::new(engine);
+        let sim = Arc::new(VersalSim::new(cfg));
+        let cache: Arc<Mutex<HashMap<(Gemm, u8), Plan>>> = Arc::new(Mutex::new(HashMap::new()));
+
+        // --- planner pool -------------------------------------------------
+        let mut planners = Vec::new();
+        for _ in 0..n_planners.max(1) {
+            let job_rx = Arc::clone(&job_rx);
+            let exec_tx = exec_tx.clone();
+            let result_tx = result_tx.clone();
+            let dse = Arc::clone(&dse);
+            let sim = Arc::clone(&sim);
+            let cache = Arc::clone(&cache);
+            let stats = Arc::clone(&stats);
+            planners.push(std::thread::spawn(move || loop {
+                let job = {
+                    let guard = job_rx.lock().unwrap();
+                    guard.recv()
+                };
+                let job = match job {
+                    Ok(j) => j,
+                    Err(_) => break, // all senders dropped: shutdown
+                };
+                let planned = plan_job(&dse, &sim, &cache, &stats, job);
+                let has_data = planned.job.a.is_some() && planned.job.b.is_some();
+                if has_data && planned.result.error.is_none() {
+                    let _ = exec_tx.send(ExecMsg::Job(Box::new(planned)));
+                } else {
+                    let _ = result_tx.send(planned.result);
+                }
+            }));
+        }
+        drop(exec_tx); // executor sees Shutdown or channel close
+
+        // --- executor thread ----------------------------------------------
+        let exec_stats = Arc::clone(&stats);
+        let board = cfg.board.clone();
+        let executor = std::thread::spawn(move || {
+            let reconfig = ReconfigModel::default();
+            let mut current_mapping: Option<Tiling> = None;
+            // The PJRT engine lives entirely inside this thread.
+            let engine = artifacts_dir.and_then(|dir| match GemmEngine::load(&dir) {
+                Ok(e) => Some(e),
+                Err(err) => {
+                    eprintln!("coordinator: no artifact engine ({err}); executing is disabled");
+                    None
+                }
+            });
+            // Dynamic batching: drain whatever is queued, group by the
+            // artifact variant the picker selects, then execute.
+            let mut queue: Vec<Box<PlannedJob>> = Vec::new();
+            loop {
+                if queue.is_empty() {
+                    match exec_rx.recv() {
+                        Ok(ExecMsg::Job(j)) => queue.push(j),
+                        Err(_) => break, // planners gone: shutdown
+                    }
+                }
+                while let Ok(ExecMsg::Job(j)) = exec_rx.try_recv() {
+                    queue.push(j);
+                }
+                // Reconfiguration-aware batching: order the drained batch
+                // so jobs sharing a VCK190 mapping run back-to-back (free
+                // switches), then by artifact variant for executable reuse.
+                queue.sort_by_key(|p| {
+                    let tiling = p.result.plan.map(|pl| pl.tiling);
+                    let variant = engine.as_ref().map(|eng| {
+                        crate::runtime::pick_variant(
+                            &eng.manifest.variants,
+                            p.job.gemm.m,
+                            p.job.gemm.n,
+                            p.job.gemm.k,
+                        )
+                    });
+                    (tiling.map(|t| (t.p_m, t.p_n, t.p_k, t.b_m, t.b_n, t.b_k)), variant)
+                });
+                for mut planned in queue.drain(..) {
+                    // Account the simulated board-side mapping switch.
+                    if let Some(plan) = planned.result.plan {
+                        if current_mapping != Some(plan.tiling) {
+                            let cost = reconfig.switch_time(
+                                current_mapping.as_ref(),
+                                &plan.tiling,
+                                &board,
+                            );
+                            let mut s = exec_stats.lock().unwrap();
+                            s.reconfigs += 1;
+                            s.simulated_reconfig_s += cost;
+                            drop(s);
+                            current_mapping = Some(plan.tiling);
+                        }
+                    }
+                    execute_job(engine.as_ref(), &exec_stats, &mut planned);
+                    let _ = result_tx.send(planned.result);
+                }
+            }
+        });
+
+        Coordinator {
+            job_tx: Some(job_tx),
+            result_rx,
+            planners,
+            executor: Some(executor),
+            stats,
+            pending: 0,
+        }
+    }
+
+    /// Enqueue a job.
+    pub fn submit(&mut self, job: GemmJob) {
+        self.job_tx
+            .as_ref()
+            .expect("coordinator already shut down")
+            .send(job)
+            .expect("planner pool gone");
+        self.pending += 1;
+    }
+
+    /// Wait for the next completed job.
+    pub fn next_result(&mut self) -> Option<JobResult> {
+        if self.pending == 0 {
+            return None;
+        }
+        match self.result_rx.recv() {
+            Ok(r) => {
+                self.pending -= 1;
+                Some(r)
+            }
+            Err(_) => None,
+        }
+    }
+
+    /// Submit a batch and wait for all results (ordered by job id).
+    pub fn run_batch(&mut self, jobs: Vec<GemmJob>) -> Vec<JobResult> {
+        let n = jobs.len();
+        for j in jobs {
+            self.submit(j);
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            match self.next_result() {
+                Some(r) => out.push(r),
+                None => break,
+            }
+        }
+        out.sort_by_key(|r| r.id);
+        out
+    }
+
+    pub fn stats(&self) -> CoordinatorStats {
+        *self.stats.lock().unwrap()
+    }
+
+    /// Graceful shutdown: waits for in-flight work.
+    pub fn shutdown(&mut self) {
+        if let Some(tx) = self.job_tx.take() {
+            drop(tx);
+        }
+        for h in self.planners.drain(..) {
+            let _ = h.join();
+        }
+        if let Some(h) = self.executor.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn objective_tag(o: Objective) -> u8 {
+    match o {
+        Objective::Throughput => 0,
+        Objective::EnergyEfficiency => 1,
+    }
+}
+
+fn plan_job(
+    dse: &DseEngine,
+    sim: &VersalSim,
+    cache: &Mutex<HashMap<(Gemm, u8), Plan>>,
+    stats: &Mutex<CoordinatorStats>,
+    job: GemmJob,
+) -> PlannedJob {
+    let started = Instant::now();
+    let key = (job.gemm, objective_tag(job.objective));
+    let cached = cache.lock().unwrap().get(&key).copied();
+    let (plan, cache_hit, error) = match cached {
+        Some(p) => (Some(p), true, None),
+        None => match dse.explore(&job.gemm) {
+            Err(e) => (None, false, Some(e.to_string())),
+            Ok(r) => {
+                // Walk the ranked list until a design actually builds
+                // (absorbs resource-model error, like re-running codegen).
+                let built = r.ranked(job.objective).into_iter().take(64).find_map(|c| {
+                    sim.evaluate(&job.gemm, &c.tiling, BufferPlacement::UramFirst)
+                        .ok()
+                        .map(|m| Plan {
+                            tiling: c.tiling,
+                            predicted: c.prediction,
+                            simulated: m,
+                        })
+                });
+                match built {
+                    None => (None, false, Some("no buildable design".to_string())),
+                    Some(plan) => {
+                        cache.lock().unwrap().insert(key, plan);
+                        (Some(plan), false, None)
+                    }
+                }
+            }
+        },
+    };
+    {
+        let mut s = stats.lock().unwrap();
+        if cache_hit {
+            s.cache_hits += 1;
+        } else {
+            s.cache_misses += 1;
+        }
+        if error.is_some() {
+            s.jobs_failed += 1;
+        } else {
+            s.jobs_completed += 1;
+            if let Some(p) = plan {
+                s.simulated_energy_j += p.simulated.latency_s * p.simulated.power_w;
+            }
+        }
+    }
+    let result = JobResult {
+        id: job.id,
+        gemm: job.gemm,
+        objective: job.objective,
+        plan,
+        plan_time: started.elapsed(),
+        cache_hit,
+        exec_time: None,
+        validation_err: None,
+        c: None,
+        error,
+    };
+    PlannedJob { job, result }
+}
+
+fn execute_job(engine: Option<&GemmEngine>, stats: &Mutex<CoordinatorStats>, planned: &mut PlannedJob) {
+    let job = &planned.job;
+    let (a, b) = match (&job.a, &job.b) {
+        (Some(a), Some(b)) => (a, b),
+        _ => return,
+    };
+    let g = job.gemm;
+    let Some(engine) = engine else {
+        planned.result.error = Some("no artifact engine (run `make artifacts`)".into());
+        return;
+    };
+    if a.len() != g.m * g.k || b.len() != g.k * g.n {
+        planned.result.error = Some("operand size mismatch".into());
+        return;
+    }
+    let started = Instant::now();
+    match engine.gemm(a, b, g.m, g.n, g.k) {
+        Err(e) => planned.result.error = Some(e.to_string()),
+        Ok(c) => {
+            let elapsed = started.elapsed();
+            planned.result.exec_time = Some(elapsed);
+            if job.validate {
+                let want = matmul_ref(a, b, g.m, g.n, g.k);
+                planned.result.validation_err = Some(max_abs_diff(&c, &want));
+            }
+            planned.result.c = Some(c);
+            let mut s = stats.lock().unwrap();
+            s.executed_jobs += 1;
+            s.executed_flops += g.flops();
+            s.exec_time_s += elapsed.as_secs_f64();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::Dataset;
+    use crate::features::FeatureSet;
+    use crate::models::Predictors;
+    use crate::workloads::training_workloads;
+
+    fn quick_cfg() -> Config {
+        let mut cfg = Config::default();
+        cfg.dataset.top_k = 10;
+        cfg.dataset.bottom_k = 6;
+        cfg.dataset.random_k = 30;
+        cfg.train.n_trees = 60;
+        cfg.train.learning_rate = 0.2;
+        cfg
+    }
+
+    fn coordinator(cfg: &Config) -> Coordinator {
+        let wl: Vec<_> = training_workloads().into_iter().take(4).collect();
+        let ds = Dataset::generate(cfg, &wl);
+        let engine = DseEngine::new(Predictors::train(&ds, cfg, FeatureSet::SetIAndII), &cfg.board);
+        Coordinator::start(cfg, engine, None, 2)
+    }
+
+    #[test]
+    fn plan_only_jobs_complete() {
+        let cfg = quick_cfg();
+        let mut coord = coordinator(&cfg);
+        let jobs: Vec<GemmJob> = (0..6)
+            .map(|i| {
+                GemmJob::plan_only(
+                    i,
+                    Gemm::new(256 * (1 + (i as usize % 3)), 1024, 512),
+                    if i % 2 == 0 {
+                        Objective::Throughput
+                    } else {
+                        Objective::EnergyEfficiency
+                    },
+                )
+            })
+            .collect();
+        let results = coord.run_batch(jobs);
+        assert_eq!(results.len(), 6);
+        for r in &results {
+            assert!(r.error.is_none(), "job {} failed: {:?}", r.id, r.error);
+            let plan = r.plan.expect("plan");
+            assert!(plan.simulated.gflops > 0.0);
+            assert!(r.exec_time.is_none());
+        }
+        // Ids are returned sorted by run_batch.
+        let ids: Vec<u64> = results.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn dse_cache_hits_on_repeat_jobs() {
+        let cfg = quick_cfg();
+        let mut coord = coordinator(&cfg);
+        let g = Gemm::new(512, 1024, 512);
+        let jobs: Vec<GemmJob> = (0..8)
+            .map(|i| GemmJob::plan_only(i, g, Objective::Throughput))
+            .collect();
+        let results = coord.run_batch(jobs);
+        assert_eq!(results.len(), 8);
+        let stats = coord.stats();
+        assert!(stats.cache_hits >= 6, "cache hits {}", stats.cache_hits);
+        assert!(stats.cache_misses >= 1);
+        // Cached plans are identical.
+        let t0 = results[0].plan.unwrap().tiling;
+        assert!(results.iter().all(|r| r.plan.unwrap().tiling == t0));
+    }
+
+    #[test]
+    fn objectives_produce_potentially_different_plans() {
+        let cfg = quick_cfg();
+        let mut coord = coordinator(&cfg);
+        let g = Gemm::new(224, 3072, 768);
+        let results = coord.run_batch(vec![
+            GemmJob::plan_only(0, g, Objective::Throughput),
+            GemmJob::plan_only(1, g, Objective::EnergyEfficiency),
+        ]);
+        let p0 = results[0].plan.unwrap();
+        let p1 = results[1].plan.unwrap();
+        // Energy plan must not use more AIEs than 2x throughput plan
+        // (typically fewer; equality allowed).
+        assert!(p1.tiling.n_aie() <= p0.tiling.n_aie().max(1) * 2);
+        assert_eq!(coord.stats().cache_misses, 2);
+    }
+
+    #[test]
+    fn data_jobs_without_engine_report_error() {
+        let cfg = quick_cfg();
+        let mut coord = coordinator(&cfg);
+        let g = Gemm::new(64, 64, 64);
+        let a = vec![1f32; 64 * 64];
+        let b = vec![1f32; 64 * 64];
+        let results = coord.run_batch(vec![GemmJob::with_data(
+            0,
+            g,
+            Objective::Throughput,
+            a,
+            b,
+        )]);
+        assert_eq!(results.len(), 1);
+        assert!(results[0].error.as_deref().unwrap_or("").contains("artifact"));
+    }
+
+    #[test]
+    fn shutdown_is_idempotent() {
+        let cfg = quick_cfg();
+        let mut coord = coordinator(&cfg);
+        coord.shutdown();
+        coord.shutdown();
+        assert_eq!(coord.next_result().is_none(), true);
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let cfg = quick_cfg();
+        let mut coord = coordinator(&cfg);
+        let g = Gemm::new(256, 512, 512);
+        let _ = coord.run_batch(vec![
+            GemmJob::plan_only(0, g, Objective::Throughput),
+            GemmJob::plan_only(1, g, Objective::Throughput),
+        ]);
+        let s = coord.stats();
+        assert_eq!(s.jobs_completed, 2);
+        assert!(s.simulated_energy_j > 0.0);
+    }
+}

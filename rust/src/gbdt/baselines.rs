@@ -1,0 +1,264 @@
+//! Baseline regressors for the model-choice ablation.
+//!
+//! The paper picks Gradient Boosted Decision Trees "well-suited for
+//! accurate prediction on bounded datasets" [30], [31]. The `ablation`
+//! report quantifies that choice by comparing the GBDT against:
+//! * ridge regression on standardized (log-)features — the strongest
+//!   *linear* alternative;
+//! * k-nearest-neighbours in standardized feature space — the strongest
+//!   *memorizing* alternative (interpolates known workloads well,
+//!   extrapolates to unseen ones poorly).
+
+use crate::gbdt::tree::FeatureMatrix;
+
+/// Column-wise standardization parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scaler {
+    pub mean: Vec<f64>,
+    pub std: Vec<f64>,
+}
+
+impl Scaler {
+    pub fn fit(x: &FeatureMatrix) -> Scaler {
+        let n = x.n_rows as f64;
+        let mut mean = vec![0.0; x.n_cols];
+        for i in 0..x.n_rows {
+            for (j, v) in x.row(i).iter().enumerate() {
+                mean[j] += v;
+            }
+        }
+        for m in &mut mean {
+            *m /= n;
+        }
+        let mut std = vec![0.0; x.n_cols];
+        for i in 0..x.n_rows {
+            for (j, v) in x.row(i).iter().enumerate() {
+                std[j] += (v - mean[j]) * (v - mean[j]);
+            }
+        }
+        for s in &mut std {
+            *s = (*s / n).sqrt().max(1e-12);
+        }
+        Scaler { mean, std }
+    }
+
+    pub fn transform_row(&self, row: &[f64], out: &mut Vec<f64>) {
+        out.clear();
+        for (j, v) in row.iter().enumerate() {
+            out.push((v - self.mean[j]) / self.std[j]);
+        }
+    }
+}
+
+/// Ridge regression fit by solving the regularized normal equations with
+/// Cholesky decomposition (the feature count is tiny: 9 or 17).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Ridge {
+    pub scaler: Scaler,
+    pub weights: Vec<f64>,
+    pub bias: f64,
+}
+
+impl Ridge {
+    pub fn fit(x: &FeatureMatrix, y: &[f64], lambda: f64) -> Ridge {
+        assert_eq!(x.n_rows, y.len());
+        let scaler = Scaler::fit(x);
+        let d = x.n_cols;
+        let y_mean = y.iter().sum::<f64>() / y.len() as f64;
+
+        // Gram matrix and rhs over standardized, centred data.
+        let mut gram = vec![0.0; d * d];
+        let mut rhs = vec![0.0; d];
+        let mut z = Vec::with_capacity(d);
+        for i in 0..x.n_rows {
+            scaler.transform_row(x.row(i), &mut z);
+            let yc = y[i] - y_mean;
+            for a in 0..d {
+                rhs[a] += z[a] * yc;
+                for b in a..d {
+                    gram[a * d + b] += z[a] * z[b];
+                }
+            }
+        }
+        for a in 0..d {
+            for b in 0..a {
+                gram[a * d + b] = gram[b * d + a];
+            }
+            gram[a * d + a] += lambda;
+        }
+        let weights = cholesky_solve(&gram, &rhs, d);
+        Ridge {
+            scaler,
+            weights,
+            bias: y_mean,
+        }
+    }
+
+    pub fn predict_one(&self, row: &[f64]) -> f64 {
+        let mut z = Vec::with_capacity(row.len());
+        self.scaler.transform_row(row, &mut z);
+        self.bias + z.iter().zip(&self.weights).map(|(a, b)| a * b).sum::<f64>()
+    }
+}
+
+/// Solve `A w = b` for symmetric positive-definite `A` (row-major d x d).
+fn cholesky_solve(a: &[f64], b: &[f64], d: usize) -> Vec<f64> {
+    // L L^T = A.
+    let mut l = vec![0.0; d * d];
+    for i in 0..d {
+        for j in 0..=i {
+            let mut sum = a[i * d + j];
+            for k in 0..j {
+                sum -= l[i * d + k] * l[j * d + k];
+            }
+            if i == j {
+                l[i * d + i] = sum.max(1e-12).sqrt();
+            } else {
+                l[i * d + j] = sum / l[j * d + j];
+            }
+        }
+    }
+    // Forward then backward substitution.
+    let mut y = vec![0.0; d];
+    for i in 0..d {
+        let mut sum = b[i];
+        for k in 0..i {
+            sum -= l[i * d + k] * y[k];
+        }
+        y[i] = sum / l[i * d + i];
+    }
+    let mut w = vec![0.0; d];
+    for i in (0..d).rev() {
+        let mut sum = y[i];
+        for k in i + 1..d {
+            sum -= l[k * d + i] * w[k];
+        }
+        w[i] = sum / l[i * d + i];
+    }
+    w
+}
+
+/// Brute-force k-NN regressor in standardized feature space.
+#[derive(Debug, Clone)]
+pub struct Knn {
+    pub scaler: Scaler,
+    pub k: usize,
+    points: Vec<Vec<f64>>,
+    targets: Vec<f64>,
+}
+
+impl Knn {
+    pub fn fit(x: &FeatureMatrix, y: &[f64], k: usize) -> Knn {
+        assert_eq!(x.n_rows, y.len());
+        let scaler = Scaler::fit(x);
+        let mut points = Vec::with_capacity(x.n_rows);
+        let mut z = Vec::new();
+        for i in 0..x.n_rows {
+            scaler.transform_row(x.row(i), &mut z);
+            points.push(z.clone());
+        }
+        Knn {
+            scaler,
+            k: k.max(1),
+            points,
+            targets: y.to_vec(),
+        }
+    }
+
+    pub fn predict_one(&self, row: &[f64]) -> f64 {
+        let mut z = Vec::with_capacity(row.len());
+        self.scaler.transform_row(row, &mut z);
+        // Partial selection of the k smallest distances.
+        let mut best: Vec<(f64, f64)> = Vec::with_capacity(self.k + 1);
+        for (p, &t) in self.points.iter().zip(&self.targets) {
+            let d2: f64 = p.iter().zip(&z).map(|(a, b)| (a - b) * (a - b)).sum();
+            if best.len() < self.k {
+                best.push((d2, t));
+                best.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            } else if d2 < best[self.k - 1].0 {
+                best[self.k - 1] = (d2, t);
+                best.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            }
+        }
+        best.iter().map(|(_, t)| t).sum::<f64>() / best.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::r2;
+    use crate::util::rng::Rng;
+
+    fn linear_data(n: usize, seed: u64) -> (FeatureMatrix, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let mut rows = Vec::new();
+        let mut y = Vec::new();
+        for _ in 0..n {
+            let a = rng.range_f64(0.0, 10.0);
+            let b = rng.range_f64(0.0, 10.0);
+            rows.push(vec![a, b]);
+            y.push(3.0 * a - 2.0 * b + 5.0);
+        }
+        (FeatureMatrix::from_rows(&rows), y)
+    }
+
+    #[test]
+    fn ridge_recovers_linear_function() {
+        let (x, y) = linear_data(200, 1);
+        let model = Ridge::fit(&x, &y, 1e-6);
+        let (xt, yt) = linear_data(50, 2);
+        let pred: Vec<f64> = (0..xt.n_rows).map(|i| model.predict_one(xt.row(i))).collect();
+        assert!(r2(&yt, &pred) > 0.999);
+    }
+
+    #[test]
+    fn ridge_regularization_shrinks_weights() {
+        let (x, y) = linear_data(100, 3);
+        let loose = Ridge::fit(&x, &y, 1e-6);
+        let tight = Ridge::fit(&x, &y, 1e4);
+        let norm = |w: &[f64]| w.iter().map(|v| v * v).sum::<f64>();
+        assert!(norm(&tight.weights) < norm(&loose.weights));
+    }
+
+    #[test]
+    fn cholesky_solves_known_system() {
+        // A = [[4,2],[2,3]], b = [10, 8] -> w = [1.75, 1.5]
+        let a = vec![4.0, 2.0, 2.0, 3.0];
+        let b = vec![10.0, 8.0];
+        let w = cholesky_solve(&a, &b, 2);
+        assert!((w[0] - 1.75).abs() < 1e-9);
+        assert!((w[1] - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn knn_interpolates_but_needs_neighbours() {
+        let (x, y) = linear_data(400, 4);
+        let model = Knn::fit(&x, &y, 5);
+        // In-distribution: good.
+        let (xt, yt) = linear_data(50, 5);
+        let pred: Vec<f64> = (0..xt.n_rows).map(|i| model.predict_one(xt.row(i))).collect();
+        assert!(r2(&yt, &pred) > 0.95);
+        // Far out of distribution: poor (memorizer, not extrapolator).
+        let far = model.predict_one(&[100.0, 100.0]);
+        let truth = 3.0 * 100.0 - 2.0 * 100.0 + 5.0;
+        assert!((far - truth).abs() > 20.0);
+    }
+
+    #[test]
+    fn scaler_standardizes() {
+        let (x, _) = linear_data(500, 6);
+        let s = Scaler::fit(&x);
+        let mut z = Vec::new();
+        let mut sums = vec![0.0; x.n_cols];
+        for i in 0..x.n_rows {
+            s.transform_row(x.row(i), &mut z);
+            for (j, v) in z.iter().enumerate() {
+                sums[j] += v;
+            }
+        }
+        for v in sums {
+            assert!((v / x.n_rows as f64).abs() < 1e-9);
+        }
+    }
+}

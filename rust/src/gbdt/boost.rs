@@ -1,0 +1,245 @@
+//! Gradient boosting over regression trees (squared loss).
+//!
+//! Equivalent in spirit to the paper's XGBoost setup: shrinkage, row
+//! subsampling, column subsampling per split, L2 leaf regularization,
+//! and optional early stopping on a validation split.
+
+use crate::config::TrainConfig;
+use crate::gbdt::tree::{FeatureMatrix, RegressionTree, TreeParams};
+use crate::util::json::{arr, num, obj, Json};
+use crate::util::rng::Rng;
+
+/// A fitted GBDT regressor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Gbdt {
+    pub base: f64,
+    pub learning_rate: f64,
+    pub trees: Vec<RegressionTree>,
+}
+
+impl Gbdt {
+    /// Fit with the given hyper-parameters. If `valid` is provided,
+    /// training stops once validation MSE fails to improve for
+    /// `patience` rounds (keeping the best prefix).
+    pub fn fit(
+        x: &FeatureMatrix,
+        y: &[f64],
+        cfg: &TrainConfig,
+        valid: Option<(&FeatureMatrix, &[f64])>,
+        rng: &mut Rng,
+    ) -> Gbdt {
+        assert_eq!(x.n_rows, y.len());
+        assert!(x.n_rows > 0);
+        let base = y.iter().sum::<f64>() / y.len() as f64;
+        let params = TreeParams {
+            max_depth: cfg.max_depth,
+            min_samples_leaf: cfg.min_samples_leaf,
+            lambda: cfg.lambda,
+            colsample: cfg.colsample,
+        };
+        let mut model = Gbdt {
+            base,
+            learning_rate: cfg.learning_rate,
+            trees: Vec::with_capacity(cfg.n_trees),
+        };
+
+        // Current predictions on train (and optional validation) set.
+        let mut pred: Vec<f64> = vec![base; x.n_rows];
+        let mut vpred: Vec<f64> = valid.map(|(vx, _)| vec![base; vx.n_rows]).unwrap_or_default();
+        let mut best_vmse = f64::INFINITY;
+        let mut best_len = 0usize;
+        let patience = 25usize;
+
+        let n_sub = ((x.n_rows as f64 * cfg.subsample).round() as usize).clamp(1, x.n_rows);
+        let mut residuals = vec![0.0; x.n_rows];
+        for round in 0..cfg.n_trees {
+            for i in 0..x.n_rows {
+                residuals[i] = y[i] - pred[i];
+            }
+            let indices = if n_sub == x.n_rows {
+                (0..x.n_rows).collect::<Vec<_>>()
+            } else {
+                rng.sample_indices(x.n_rows, n_sub)
+            };
+            let tree = RegressionTree::fit(x, &residuals, &indices, &params, rng);
+            for i in 0..x.n_rows {
+                pred[i] += cfg.learning_rate * tree.predict_one(x.row(i));
+            }
+            model.trees.push(tree);
+
+            if let Some((vx, vy)) = valid {
+                let tree = model.trees.last().unwrap();
+                let mut vmse = 0.0;
+                for i in 0..vx.n_rows {
+                    vpred[i] += cfg.learning_rate * tree.predict_one(vx.row(i));
+                    let e = vy[i] - vpred[i];
+                    vmse += e * e;
+                }
+                vmse /= vx.n_rows as f64;
+                if vmse < best_vmse - 1e-12 {
+                    best_vmse = vmse;
+                    best_len = model.trees.len();
+                } else if model.trees.len() - best_len >= patience {
+                    model.trees.truncate(best_len);
+                    break;
+                }
+            }
+            let _ = round;
+        }
+        if valid.is_some() && best_len > 0 {
+            model.trees.truncate(best_len);
+        }
+        model
+    }
+
+    #[inline]
+    pub fn predict_one(&self, row: &[f64]) -> f64 {
+        let mut acc = self.base;
+        for t in &self.trees {
+            acc += self.learning_rate * t.predict_one(row);
+        }
+        acc
+    }
+
+    pub fn predict(&self, x: &FeatureMatrix) -> Vec<f64> {
+        (0..x.n_rows).map(|i| self.predict_one(x.row(i))).collect()
+    }
+
+    pub fn n_trees(&self) -> usize {
+        self.trees.len()
+    }
+
+    // -- persistence ---------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("base", num(self.base)),
+            ("learning_rate", num(self.learning_rate)),
+            ("trees", arr(self.trees.iter().map(|t| t.to_json()))),
+        ])
+    }
+
+    pub fn from_json(json: &Json) -> anyhow::Result<Gbdt> {
+        let trees = json
+            .get("trees")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("missing trees"))?
+            .iter()
+            .map(RegressionTree::from_json)
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(Gbdt {
+            base: json.req_f64("base")?,
+            learning_rate: json.req_f64("learning_rate")?,
+            trees,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::r2;
+
+    fn synth(n: usize, f: impl Fn(f64, f64, f64) -> f64, seed: u64) -> (FeatureMatrix, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let mut rows = Vec::new();
+        let mut y = Vec::new();
+        for _ in 0..n {
+            let a = rng.range_f64(0.0, 10.0);
+            let b = rng.range_f64(0.0, 10.0);
+            let c = rng.range_f64(0.0, 10.0);
+            rows.push(vec![a, b, c]);
+            y.push(f(a, b, c));
+        }
+        (FeatureMatrix::from_rows(&rows), y)
+    }
+
+    fn quick_cfg() -> TrainConfig {
+        TrainConfig {
+            n_trees: 80,
+            max_depth: 4,
+            learning_rate: 0.15,
+            min_samples_leaf: 2,
+            subsample: 0.9,
+            colsample: 1.0,
+            lambda: 1.0,
+            ..TrainConfig::default()
+        }
+    }
+
+    #[test]
+    fn learns_nonlinear_function() {
+        let (x, y) = synth(800, |a, b, c| a * b + (c * 1.3).sin() * 5.0, 11);
+        let (xt, yt) = synth(200, |a, b, c| a * b + (c * 1.3).sin() * 5.0, 12);
+        let mut rng = Rng::new(0);
+        let model = Gbdt::fit(&x, &y, &quick_cfg(), None, &mut rng);
+        let pred = model.predict(&xt);
+        let score = r2(&yt, &pred);
+        assert!(score > 0.9, "r2 {score}");
+    }
+
+    #[test]
+    fn boosting_improves_over_single_tree() {
+        let (x, y) = synth(500, |a, b, _| (a - 5.0) * (b - 5.0), 21);
+        let (xt, yt) = synth(200, |a, b, _| (a - 5.0) * (b - 5.0), 22);
+        let mut rng = Rng::new(1);
+        let one = Gbdt::fit(
+            &x,
+            &y,
+            &TrainConfig {
+                n_trees: 1,
+                learning_rate: 1.0,
+                ..quick_cfg()
+            },
+            None,
+            &mut rng,
+        );
+        let mut rng2 = Rng::new(1);
+        let many = Gbdt::fit(&x, &y, &quick_cfg(), None, &mut rng2);
+        let r_one = r2(&yt, &one.predict(&xt));
+        let r_many = r2(&yt, &many.predict(&xt));
+        assert!(r_many > r_one, "{r_many} <= {r_one}");
+    }
+
+    #[test]
+    fn constant_target_predicts_constant() {
+        let (x, _) = synth(50, |_, _, _| 0.0, 31);
+        let y = vec![7.5; 50];
+        let mut rng = Rng::new(2);
+        let model = Gbdt::fit(&x, &y, &quick_cfg(), None, &mut rng);
+        for i in 0..x.n_rows {
+            assert!((model.predict_one(x.row(i)) - 7.5).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn early_stopping_truncates() {
+        let (x, y) = synth(400, |a, _, _| a, 41);
+        let (vx, vy) = synth(100, |a, _, _| a, 42);
+        let mut rng = Rng::new(3);
+        let cfg = TrainConfig {
+            n_trees: 400,
+            ..quick_cfg()
+        };
+        let model = Gbdt::fit(&x, &y, &cfg, Some((&vx, &vy)), &mut rng);
+        assert!(model.n_trees() < 400, "early stopping never triggered");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (x, y) = synth(200, |a, b, c| a + b * c, 51);
+        let m1 = Gbdt::fit(&x, &y, &quick_cfg(), None, &mut Rng::new(9));
+        let m2 = Gbdt::fit(&x, &y, &quick_cfg(), None, &mut Rng::new(9));
+        assert_eq!(m1, m2);
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_predictions() {
+        let (x, y) = synth(150, |a, b, _| a * 2.0 + b, 61);
+        let model = Gbdt::fit(&x, &y, &quick_cfg(), None, &mut Rng::new(4));
+        let back = Gbdt::from_json(&model.to_json()).unwrap();
+        for i in 0..x.n_rows {
+            assert_eq!(model.predict_one(x.row(i)), back.predict_one(x.row(i)));
+        }
+    }
+}

@@ -1,0 +1,202 @@
+//! Cross-validation and hyper-parameter search (paper §IV-A.3: 80/20
+//! split, 5-fold CV, Bayesian optimization via Optuna — here a
+//! deterministic random search over the same space, which is what
+//! Optuna's TPE degenerates to at small trial counts).
+
+use crate::config::TrainConfig;
+use crate::gbdt::boost::Gbdt;
+use crate::gbdt::tree::FeatureMatrix;
+use crate::metrics::{mape, r2};
+use crate::util::rng::Rng;
+
+/// Deterministic k-fold index split.
+pub fn kfold_indices(n: usize, folds: usize, rng: &mut Rng) -> Vec<Vec<usize>> {
+    assert!(folds >= 2 && n >= folds);
+    let mut idx: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut idx);
+    let mut out = vec![Vec::new(); folds];
+    for (i, v) in idx.into_iter().enumerate() {
+        out[i % folds].push(v);
+    }
+    out
+}
+
+/// Gather rows by index into a new matrix/target pair.
+pub fn gather(x: &FeatureMatrix, y: &[f64], idx: &[usize]) -> (FeatureMatrix, Vec<f64>) {
+    let rows: Vec<Vec<f64>> = idx.iter().map(|&i| x.row(i).to_vec()).collect();
+    let targets: Vec<f64> = idx.iter().map(|&i| y[i]).collect();
+    (FeatureMatrix::from_rows(&rows), targets)
+}
+
+/// CV result for one hyper-parameter setting.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CvScore {
+    pub mean_r2: f64,
+    pub mean_mape: f64,
+}
+
+/// k-fold CV of a GBDT on `(x, y)`. If `log_target` the model is fit on
+/// `ln(y)` and evaluated after `exp` (the paper's latency transform).
+pub fn cross_validate(
+    x: &FeatureMatrix,
+    y: &[f64],
+    cfg: &TrainConfig,
+    log_target: bool,
+    seed: u64,
+) -> CvScore {
+    let folds = kfold_indices(x.n_rows, cfg.cv_folds, &mut Rng::new(seed));
+    let mut r2s = Vec::new();
+    let mut mapes = Vec::new();
+    for f in 0..folds.len() {
+        let test_idx = &folds[f];
+        let train_idx: Vec<usize> = folds
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| *i != f)
+            .flat_map(|(_, v)| v.iter().copied())
+            .collect();
+        let (xt, yt_raw) = gather(x, y, &train_idx);
+        let (xv, yv) = gather(x, y, test_idx);
+        let yt: Vec<f64> = if log_target {
+            yt_raw.iter().map(|v| v.ln()).collect()
+        } else {
+            yt_raw
+        };
+        let model = Gbdt::fit(&xt, &yt, cfg, None, &mut Rng::new(cfg.seed ^ f as u64));
+        let pred: Vec<f64> = (0..xv.n_rows)
+            .map(|i| {
+                let p = model.predict_one(xv.row(i));
+                if log_target {
+                    p.exp()
+                } else {
+                    p
+                }
+            })
+            .collect();
+        r2s.push(r2(&yv, &pred));
+        mapes.push(mape(&yv, &pred));
+    }
+    CvScore {
+        mean_r2: r2s.iter().sum::<f64>() / r2s.len() as f64,
+        mean_mape: mapes.iter().sum::<f64>() / mapes.len() as f64,
+    }
+}
+
+/// Random hyper-parameter search minimizing CV MAPE; returns the best
+/// config (search space mirrors the paper's Optuna ranges).
+pub fn search_hyperparams(
+    x: &FeatureMatrix,
+    y: &[f64],
+    base: &TrainConfig,
+    log_target: bool,
+) -> (TrainConfig, CvScore) {
+    let mut rng = Rng::new(base.seed ^ 0x5EA5C);
+    let mut best_cfg = base.clone();
+    let mut best = cross_validate(x, y, base, log_target, base.seed);
+    for trial in 0..base.search_trials {
+        let cand = TrainConfig {
+            n_trees: rng.range_usize(100, 400),
+            max_depth: rng.range_usize(4, 9),
+            learning_rate: rng.range_f64(0.03, 0.2),
+            min_samples_leaf: rng.range_usize(2, 10),
+            subsample: rng.range_f64(0.6, 1.0),
+            colsample: rng.range_f64(0.6, 1.0),
+            lambda: rng.range_f64(0.1, 5.0),
+            seed: base.seed ^ (trial as u64 + 1),
+            ..base.clone()
+        };
+        let score = cross_validate(x, y, &cand, log_target, base.seed);
+        if score.mean_mape < best.mean_mape {
+            best = score;
+            best_cfg = cand;
+        }
+    }
+    (best_cfg, best)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn synth(n: usize, seed: u64) -> (FeatureMatrix, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let mut rows = Vec::new();
+        let mut y = Vec::new();
+        for _ in 0..n {
+            let a = rng.range_f64(1.0, 10.0);
+            let b = rng.range_f64(1.0, 10.0);
+            rows.push(vec![a, b]);
+            y.push(a * b + 1.0);
+        }
+        (FeatureMatrix::from_rows(&rows), y)
+    }
+
+    #[test]
+    fn kfold_partitions_everything() {
+        let folds = kfold_indices(103, 5, &mut Rng::new(1));
+        assert_eq!(folds.len(), 5);
+        let mut all: Vec<usize> = folds.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..103).collect::<Vec<_>>());
+        // Balanced within 1.
+        let sizes: Vec<usize> = folds.iter().map(Vec::len).collect();
+        assert!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1);
+    }
+
+    #[test]
+    fn cv_scores_reasonable_model() {
+        let (x, y) = synth(400, 7);
+        let cfg = TrainConfig {
+            n_trees: 60,
+            learning_rate: 0.2,
+            cv_folds: 4,
+            ..TrainConfig::default()
+        };
+        let score = cross_validate(&x, &y, &cfg, false, 3);
+        assert!(score.mean_r2 > 0.9, "r2 {}", score.mean_r2);
+        assert!(score.mean_mape < 15.0, "mape {}", score.mean_mape);
+    }
+
+    #[test]
+    fn log_target_helps_multiplicative_data() {
+        let mut rng = Rng::new(9);
+        let mut rows = Vec::new();
+        let mut y = Vec::new();
+        for _ in 0..400 {
+            let a = rng.range_f64(0.0, 8.0);
+            rows.push(vec![a]);
+            y.push((a * 1.5).exp()); // spans many decades
+        }
+        let x = FeatureMatrix::from_rows(&rows);
+        let cfg = TrainConfig {
+            n_trees: 80,
+            learning_rate: 0.2,
+            cv_folds: 4,
+            ..TrainConfig::default()
+        };
+        let raw = cross_validate(&x, &y, &cfg, false, 1);
+        let logd = cross_validate(&x, &y, &cfg, true, 1);
+        assert!(
+            logd.mean_mape < raw.mean_mape,
+            "log {} raw {}",
+            logd.mean_mape,
+            raw.mean_mape
+        );
+    }
+
+    #[test]
+    fn search_improves_or_keeps_baseline() {
+        let (x, y) = synth(200, 13);
+        let base = TrainConfig {
+            n_trees: 20,
+            max_depth: 2,
+            learning_rate: 0.05,
+            search_trials: 4,
+            cv_folds: 3,
+            ..TrainConfig::default()
+        };
+        let baseline = cross_validate(&x, &y, &base, false, base.seed);
+        let (_, best) = search_hyperparams(&x, &y, &base, false);
+        assert!(best.mean_mape <= baseline.mean_mape + 1e-9);
+    }
+}

@@ -1,0 +1,14 @@
+//! From-scratch Gradient Boosted Decision Trees (the paper's model class,
+//! §IV-A.3): exact-split regression trees, squared-loss boosting with
+//! shrinkage and row/column subsampling, a multi-output wrapper for the
+//! resource model, and k-fold CV + hyper-parameter search.
+
+pub mod baselines;
+pub mod boost;
+pub mod cv;
+pub mod multi;
+pub mod tree;
+
+pub use boost::Gbdt;
+pub use multi::MultiGbdt;
+pub use tree::{FeatureMatrix, RegressionTree, TreeParams};

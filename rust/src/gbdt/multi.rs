@@ -1,0 +1,114 @@
+//! Multi-output GBDT: one boosted ensemble per target, sharing the
+//! feature matrix. Used for the 5-output PL resource model 𝓡
+//! (BRAM/URAM/LUT/FF/DSP %, paper §IV-A.3: "a multi-output model for PL
+//! resource utilization").
+
+use crate::config::TrainConfig;
+use crate::gbdt::boost::Gbdt;
+use crate::gbdt::tree::FeatureMatrix;
+use crate::util::json::{arr, Json};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct MultiGbdt {
+    pub models: Vec<Gbdt>,
+}
+
+impl MultiGbdt {
+    /// `targets[j]` is the j-th output column (each length `x.n_rows`).
+    pub fn fit(x: &FeatureMatrix, targets: &[Vec<f64>], cfg: &TrainConfig, rng: &mut Rng) -> MultiGbdt {
+        assert!(!targets.is_empty());
+        let models = targets
+            .iter()
+            .enumerate()
+            .map(|(j, y)| {
+                let mut child = rng.fork(j as u64);
+                Gbdt::fit(x, y, cfg, None, &mut child)
+            })
+            .collect();
+        MultiGbdt { models }
+    }
+
+    pub fn predict_one(&self, row: &[f64]) -> Vec<f64> {
+        self.models.iter().map(|m| m.predict_one(row)).collect()
+    }
+
+    /// Allocation-free variant for the DSE hot path.
+    pub fn predict_into(&self, row: &[f64], out: &mut [f64]) {
+        for (m, slot) in self.models.iter().zip(out.iter_mut()) {
+            *slot = m.predict_one(row);
+        }
+    }
+
+    pub fn n_outputs(&self) -> usize {
+        self.models.len()
+    }
+
+    pub fn to_json(&self) -> Json {
+        arr(self.models.iter().map(|m| m.to_json()))
+    }
+
+    pub fn from_json(json: &Json) -> anyhow::Result<MultiGbdt> {
+        let models = json
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("multi-gbdt json must be an array"))?
+            .iter()
+            .map(Gbdt::from_json)
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        if models.is_empty() {
+            anyhow::bail!("empty multi-gbdt");
+        }
+        Ok(MultiGbdt { models })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::r2;
+
+    #[test]
+    fn fits_independent_outputs() {
+        let mut rng = Rng::new(5);
+        let mut rows = Vec::new();
+        let mut y0 = Vec::new();
+        let mut y1 = Vec::new();
+        for _ in 0..500 {
+            let a = rng.range_f64(0.0, 10.0);
+            let b = rng.range_f64(0.0, 10.0);
+            rows.push(vec![a, b]);
+            y0.push(a * 3.0);
+            y1.push(b * b);
+        }
+        let x = FeatureMatrix::from_rows(&rows);
+        let cfg = TrainConfig {
+            n_trees: 60,
+            learning_rate: 0.2,
+            ..TrainConfig::default()
+        };
+        let model = MultiGbdt::fit(&x, &[y0.clone(), y1.clone()], &cfg, &mut Rng::new(1));
+        assert_eq!(model.n_outputs(), 2);
+        let preds: Vec<Vec<f64>> = (0..x.n_rows).map(|i| model.predict_one(x.row(i))).collect();
+        let p0: Vec<f64> = preds.iter().map(|p| p[0]).collect();
+        let p1: Vec<f64> = preds.iter().map(|p| p[1]).collect();
+        assert!(r2(&y0, &p0) > 0.95);
+        assert!(r2(&y1, &p1) > 0.95);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let x = FeatureMatrix::from_rows(&[vec![0.0], vec![1.0], vec![2.0], vec![3.0]]);
+        let cfg = TrainConfig {
+            n_trees: 5,
+            ..TrainConfig::default()
+        };
+        let model = MultiGbdt::fit(
+            &x,
+            &[vec![1.0, 2.0, 3.0, 4.0], vec![4.0, 3.0, 2.0, 1.0]],
+            &cfg,
+            &mut Rng::new(2),
+        );
+        let back = MultiGbdt::from_json(&model.to_json()).unwrap();
+        assert_eq!(model, back);
+    }
+}

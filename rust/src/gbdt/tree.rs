@@ -1,0 +1,494 @@
+//! Regression trees with exact greedy split search — the weak learner of
+//! the gradient-boosted ensemble (paper §IV-A.3: GBDT chosen because the
+//! features are bounded by the tiling-parameter ranges [30], [31]).
+
+use crate::util::json::{arr, num, obj, Json};
+use crate::util::rng::Rng;
+
+/// Row-major feature matrix view used across the GBDT stack.
+#[derive(Debug, Clone, Default)]
+pub struct FeatureMatrix {
+    pub data: Vec<f64>,
+    pub n_rows: usize,
+    pub n_cols: usize,
+}
+
+impl FeatureMatrix {
+    pub fn from_rows(rows: &[Vec<f64>]) -> FeatureMatrix {
+        if rows.is_empty() {
+            return FeatureMatrix::default();
+        }
+        let n_cols = rows[0].len();
+        let mut data = Vec::with_capacity(rows.len() * n_cols);
+        for r in rows {
+            assert_eq!(r.len(), n_cols, "ragged feature rows");
+            data.extend_from_slice(r);
+        }
+        FeatureMatrix {
+            data,
+            n_rows: rows.len(),
+            n_cols,
+        }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.n_cols..(i + 1) * self.n_cols]
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.data[i * self.n_cols + j]
+    }
+}
+
+/// Hyper-parameters for a single tree fit.
+#[derive(Debug, Clone, Copy)]
+pub struct TreeParams {
+    pub max_depth: usize,
+    pub min_samples_leaf: usize,
+    /// L2 regularization added to the denominator of leaf values.
+    pub lambda: f64,
+    /// Fraction of features considered per split.
+    pub colsample: f64,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+enum Node {
+    Leaf {
+        value: f64,
+    },
+    Split {
+        feature: usize,
+        threshold: f64,
+        left: usize,
+        right: usize,
+    },
+}
+
+/// Compact traversal node (24 bytes, contiguous): `feature == u32::MAX`
+/// marks a leaf whose value is in `threshold`. Built once after fitting;
+/// gives ~1.5-2x faster prediction than matching on the boxed enum
+/// (see EXPERIMENTS.md §Perf).
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct FlatNode {
+    feature: u32,
+    left: u32,
+    right: u32,
+    threshold: f64,
+}
+
+const LEAF: u32 = u32::MAX;
+
+/// A fitted regression tree (flat node arena, root at index 0).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RegressionTree {
+    nodes: Vec<Node>,
+    flat: Vec<FlatNode>,
+}
+
+impl RegressionTree {
+    /// Fit on the sample subset `indices` against `targets` (residuals).
+    pub fn fit(
+        x: &FeatureMatrix,
+        targets: &[f64],
+        indices: &[usize],
+        params: &TreeParams,
+        rng: &mut Rng,
+    ) -> RegressionTree {
+        assert_eq!(x.n_rows, targets.len());
+        assert!(!indices.is_empty());
+        let mut tree = RegressionTree {
+            nodes: Vec::new(),
+            flat: Vec::new(),
+        };
+        let mut idx = indices.to_vec();
+        tree.build(x, targets, &mut idx, 0, params, rng);
+        tree.rebuild_flat();
+        tree
+    }
+
+    fn rebuild_flat(&mut self) {
+        self.flat = self
+            .nodes
+            .iter()
+            .map(|n| match n {
+                Node::Leaf { value } => FlatNode {
+                    feature: LEAF,
+                    left: 0,
+                    right: 0,
+                    threshold: *value,
+                },
+                Node::Split {
+                    feature,
+                    threshold,
+                    left,
+                    right,
+                } => FlatNode {
+                    feature: *feature as u32,
+                    left: *left as u32,
+                    right: *right as u32,
+                    threshold: *threshold,
+                },
+            })
+            .collect();
+    }
+
+    /// Recursively build; `indices` is reordered in place so children see
+    /// contiguous slices (no per-node allocation of index vectors).
+    fn build(
+        &mut self,
+        x: &FeatureMatrix,
+        y: &[f64],
+        indices: &mut [usize],
+        depth: usize,
+        params: &TreeParams,
+        rng: &mut Rng,
+    ) -> usize {
+        let node_id = self.nodes.len();
+        let n = indices.len();
+        let sum: f64 = indices.iter().map(|&i| y[i]).sum();
+        let leaf_value = sum / (n as f64 + params.lambda);
+
+        if depth >= params.max_depth || n < 2 * params.min_samples_leaf {
+            self.nodes.push(Node::Leaf { value: leaf_value });
+            return node_id;
+        }
+
+        match best_split(x, y, indices, params, rng) {
+            None => {
+                self.nodes.push(Node::Leaf { value: leaf_value });
+                node_id
+            }
+            Some(split) => {
+                // Partition indices by the split predicate.
+                let mid = partition(x, indices, split.feature, split.threshold);
+                debug_assert!(mid >= params.min_samples_leaf);
+                debug_assert!(n - mid >= params.min_samples_leaf);
+                self.nodes.push(Node::Split {
+                    feature: split.feature,
+                    threshold: split.threshold,
+                    left: 0,
+                    right: 0,
+                });
+                // Split borrows end here; recurse then patch child ids.
+                let (left_slice, right_slice) = indices.split_at_mut(mid);
+                let left_id = self.build(x, y, left_slice, depth + 1, params, rng);
+                let right_id = self.build(x, y, right_slice, depth + 1, params, rng);
+                if let Node::Split { left, right, .. } = &mut self.nodes[node_id] {
+                    *left = left_id;
+                    *right = right_id;
+                }
+                node_id
+            }
+        }
+    }
+
+    #[inline]
+    pub fn predict_one(&self, row: &[f64]) -> f64 {
+        let mut node = 0usize;
+        loop {
+            // SAFETY-free fast path over the compact arena.
+            let n = &self.flat[node];
+            if n.feature == LEAF {
+                return n.threshold;
+            }
+            node = if row[n.feature as usize] <= n.threshold {
+                n.left as usize
+            } else {
+                n.right as usize
+            };
+        }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn depth(&self) -> usize {
+        fn rec(nodes: &[Node], id: usize) -> usize {
+            match &nodes[id] {
+                Node::Leaf { .. } => 0,
+                Node::Split { left, right, .. } => 1 + rec(nodes, *left).max(rec(nodes, *right)),
+            }
+        }
+        rec(&self.nodes, 0)
+    }
+
+    // -- persistence ---------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        arr(self.nodes.iter().map(|n| match n {
+            Node::Leaf { value } => obj(vec![("v", num(*value))]),
+            Node::Split {
+                feature,
+                threshold,
+                left,
+                right,
+            } => obj(vec![
+                ("f", num(*feature as f64)),
+                ("t", num(*threshold)),
+                ("l", num(*left as f64)),
+                ("r", num(*right as f64)),
+            ]),
+        }))
+    }
+
+    pub fn from_json(json: &Json) -> anyhow::Result<RegressionTree> {
+        let items = json
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("tree json must be an array"))?;
+        let mut nodes = Vec::with_capacity(items.len());
+        for it in items {
+            if let Some(v) = it.get("v") {
+                nodes.push(Node::Leaf {
+                    value: v.as_f64().ok_or_else(|| anyhow::anyhow!("bad leaf"))?,
+                });
+            } else {
+                nodes.push(Node::Split {
+                    feature: it.req_usize("f")?,
+                    threshold: it.req_f64("t")?,
+                    left: it.req_usize("l")?,
+                    right: it.req_usize("r")?,
+                });
+            }
+        }
+        if nodes.is_empty() {
+            anyhow::bail!("empty tree");
+        }
+        let mut tree = RegressionTree {
+            nodes,
+            flat: Vec::new(),
+        };
+        tree.rebuild_flat();
+        Ok(tree)
+    }
+}
+
+struct SplitCandidate {
+    feature: usize,
+    threshold: f64,
+}
+
+/// Exact greedy split: for each (sampled) feature, sort the node's values
+/// and scan prefix sums for the maximal SSE reduction.
+fn best_split(
+    x: &FeatureMatrix,
+    y: &[f64],
+    indices: &[usize],
+    params: &TreeParams,
+    rng: &mut Rng,
+) -> Option<SplitCandidate> {
+    let n = indices.len();
+    let total_sum: f64 = indices.iter().map(|&i| y[i]).sum();
+    let total_sq: f64 = indices.iter().map(|&i| y[i] * y[i]).sum();
+    let parent_sse = total_sq - total_sum * total_sum / n as f64;
+    if parent_sse <= 1e-12 {
+        return None; // node is pure
+    }
+
+    let n_feat = x.n_cols;
+    let n_try = ((n_feat as f64 * params.colsample).ceil() as usize).clamp(1, n_feat);
+    let feat_order = rng.sample_indices(n_feat, n_try);
+
+    let mut best: Option<(f64, SplitCandidate)> = None;
+    // (value, target) pairs, reused across features.
+    let mut pairs: Vec<(f64, f64)> = Vec::with_capacity(n);
+    for feature in feat_order {
+        pairs.clear();
+        pairs.extend(indices.iter().map(|&i| (x.get(i, feature), y[i])));
+        pairs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let mut left_sum = 0.0;
+        let mut left_n = 0usize;
+        for w in 0..n - 1 {
+            left_sum += pairs[w].1;
+            left_n += 1;
+            // Can't split between equal feature values.
+            if pairs[w].0 == pairs[w + 1].0 {
+                continue;
+            }
+            let right_n = n - left_n;
+            if left_n < params.min_samples_leaf || right_n < params.min_samples_leaf {
+                continue;
+            }
+            let right_sum = total_sum - left_sum;
+            // SSE reduction = sum_l^2/n_l + sum_r^2/n_r - sum^2/n.
+            let gain = left_sum * left_sum / left_n as f64
+                + right_sum * right_sum / right_n as f64
+                - total_sum * total_sum / n as f64;
+            if gain > best.as_ref().map(|(g, _)| *g).unwrap_or(1e-12) {
+                let threshold = 0.5 * (pairs[w].0 + pairs[w + 1].0);
+                best = Some((
+                    gain,
+                    SplitCandidate {
+                        feature,
+                        threshold,
+                    },
+                ));
+            }
+        }
+    }
+    best.map(|(_, c)| c)
+}
+
+/// In-place partition of `indices` by `x[., feature] <= threshold`;
+/// returns the boundary.
+fn partition(x: &FeatureMatrix, indices: &mut [usize], feature: usize, threshold: f64) -> usize {
+    let mut lo = 0usize;
+    let mut hi = indices.len();
+    while lo < hi {
+        if x.get(indices[lo], feature) <= threshold {
+            lo += 1;
+        } else {
+            hi -= 1;
+            indices.swap(lo, hi);
+        }
+    }
+    lo
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params() -> TreeParams {
+        TreeParams {
+            max_depth: 6,
+            min_samples_leaf: 1,
+            lambda: 0.0,
+            colsample: 1.0,
+        }
+    }
+
+    fn grid_xy(f: impl Fn(f64, f64) -> f64) -> (FeatureMatrix, Vec<f64>) {
+        let mut rows = Vec::new();
+        let mut y = Vec::new();
+        for i in 0..20 {
+            for j in 0..20 {
+                let (a, b) = (i as f64, j as f64);
+                rows.push(vec![a, b]);
+                y.push(f(a, b));
+            }
+        }
+        (FeatureMatrix::from_rows(&rows), y)
+    }
+
+    #[test]
+    fn fits_step_function_exactly() {
+        let (x, y) = grid_xy(|a, _| if a < 10.0 { -1.0 } else { 1.0 });
+        let idx: Vec<usize> = (0..x.n_rows).collect();
+        let mut rng = Rng::new(1);
+        let tree = RegressionTree::fit(&x, &y, &idx, &params(), &mut rng);
+        for i in 0..x.n_rows {
+            assert!((tree.predict_one(x.row(i)) - y[i]).abs() < 1e-9);
+        }
+        assert!(tree.depth() <= 2);
+    }
+
+    #[test]
+    fn fits_axis_aligned_interaction() {
+        let (x, y) = grid_xy(|a, b| {
+            if a < 10.0 && b < 5.0 {
+                3.0
+            } else if a < 10.0 {
+                1.0
+            } else {
+                -2.0
+            }
+        });
+        let idx: Vec<usize> = (0..x.n_rows).collect();
+        let mut rng = Rng::new(2);
+        let tree = RegressionTree::fit(&x, &y, &idx, &params(), &mut rng);
+        let sse: f64 = (0..x.n_rows)
+            .map(|i| (tree.predict_one(x.row(i)) - y[i]).powi(2))
+            .sum();
+        assert!(sse < 1e-9, "sse {sse}");
+    }
+
+    #[test]
+    fn pure_node_becomes_leaf() {
+        let x = FeatureMatrix::from_rows(&[vec![1.0], vec![2.0], vec![3.0]]);
+        let y = vec![5.0, 5.0, 5.0];
+        let idx = vec![0, 1, 2];
+        let mut rng = Rng::new(3);
+        let tree = RegressionTree::fit(&x, &y, &idx, &params(), &mut rng);
+        assert_eq!(tree.n_nodes(), 1);
+        assert!((tree.predict_one(&[9.0]) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn respects_min_samples_leaf() {
+        let (x, y) = grid_xy(|a, b| a + b);
+        let idx: Vec<usize> = (0..x.n_rows).collect();
+        let p = TreeParams {
+            min_samples_leaf: 50,
+            ..params()
+        };
+        let mut rng = Rng::new(4);
+        let tree = RegressionTree::fit(&x, &y, &idx, &p, &mut rng);
+        // With 400 samples and min leaf 50, at most 8 leaves.
+        assert!(tree.n_nodes() <= 15);
+    }
+
+    #[test]
+    fn respects_max_depth() {
+        let (x, y) = grid_xy(|a, b| (a * 7.0 + b * 13.0).sin());
+        let idx: Vec<usize> = (0..x.n_rows).collect();
+        let p = TreeParams {
+            max_depth: 3,
+            ..params()
+        };
+        let mut rng = Rng::new(5);
+        let tree = RegressionTree::fit(&x, &y, &idx, &p, &mut rng);
+        assert!(tree.depth() <= 3);
+    }
+
+    #[test]
+    fn lambda_shrinks_leaves() {
+        let x = FeatureMatrix::from_rows(&[vec![0.0], vec![1.0]]);
+        let y = vec![10.0, 10.0];
+        let idx = vec![0, 1];
+        let mut rng = Rng::new(6);
+        let p = TreeParams {
+            lambda: 2.0,
+            ..params()
+        };
+        let tree = RegressionTree::fit(&x, &y, &idx, &p, &mut rng);
+        // Leaf value = 20 / (2 + 2) = 5 (shrunk from the mean of 10).
+        assert!((tree.predict_one(&[0.5]) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let (x, y) = grid_xy(|a, b| a * 2.0 - b);
+        let idx: Vec<usize> = (0..x.n_rows).collect();
+        let mut rng = Rng::new(7);
+        let tree = RegressionTree::fit(&x, &y, &idx, &params(), &mut rng);
+        let json = tree.to_json();
+        let back = RegressionTree::from_json(&json).unwrap();
+        assert_eq!(tree, back);
+        for i in (0..x.n_rows).step_by(17) {
+            assert_eq!(tree.predict_one(x.row(i)), back.predict_one(x.row(i)));
+        }
+    }
+
+    #[test]
+    fn partition_is_stable_under_predicate() {
+        let x = FeatureMatrix::from_rows(&[
+            vec![5.0],
+            vec![1.0],
+            vec![3.0],
+            vec![8.0],
+            vec![2.0],
+        ]);
+        let mut idx = vec![0, 1, 2, 3, 4];
+        let mid = partition(&x, &mut idx, 0, 3.0);
+        assert_eq!(mid, 3);
+        for &i in &idx[..mid] {
+            assert!(x.get(i, 0) <= 3.0);
+        }
+        for &i in &idx[mid..] {
+            assert!(x.get(i, 0) > 3.0);
+        }
+    }
+}

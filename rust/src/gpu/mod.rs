@@ -1,0 +1,200 @@
+//! Embedded-GPU comparators (paper §V-A.2, Fig. 9, Table II).
+//!
+//! The paper measures PyTorch/CUDA GEMMs on three NVIDIA Jetson boards
+//! with Tegrastats power sampling. Those boards are not available here;
+//! each is modeled as a roofline with empirically-shaped efficiency
+//! terms (DESIGN.md §1):
+//!
+//! * compute roof `peak · eff_c(shape)` — cuBLAS-like efficiency with
+//!   tensor-tile quantization (dims off the 64/128 tile grid waste
+//!   lanes), a small-M occupancy penalty, and a skinny-M/huge-N
+//!   streaming penalty (weights stream from DRAM with almost no reuse
+//!   per SM tile — the paper's G12 case where the VCK190 overtakes
+//!   AGX Orin);
+//! * memory roof `AI · BW · eff_m` — the term that makes Jetsons win
+//!   big on the small, memory-bound `G1..G8` (their DDR bandwidth is
+//!   2.33–8x the VCK190's, Table II).
+
+use crate::workloads::Gemm;
+
+/// One embedded GPU device model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuDevice {
+    pub name: String,
+    /// Peak FP32-path throughput (GFLOP/s, Table II).
+    pub peak_gflops: f64,
+    /// Memory bandwidth (GB/s, Table II).
+    pub mem_bw_gbps: f64,
+    pub idle_w: f64,
+    pub max_w: f64,
+    /// cuBLAS baseline compute efficiency on well-shaped GEMMs.
+    pub base_eff: f64,
+    /// Achievable fraction of peak DRAM bandwidth.
+    pub mem_eff: f64,
+    /// Tensor/warp tile the kernel quantizes M and N to.
+    pub tile: usize,
+    /// Fixed kernel-launch + framework overhead per GEMM (s).
+    pub launch_s: f64,
+}
+
+/// The three Jetson boards of Table II.
+pub fn jetson_devices() -> Vec<GpuDevice> {
+    vec![
+        GpuDevice {
+            name: "AGX Xavier".into(),
+            peak_gflops: 1410.0,
+            mem_bw_gbps: 136.5,
+            idle_w: 9.0,
+            max_w: 30.0,
+            base_eff: 0.62,
+            mem_eff: 0.75,
+            tile: 64,
+            launch_s: 12e-6,
+        },
+        GpuDevice {
+            name: "Xavier NX".into(),
+            peak_gflops: 844.8,
+            mem_bw_gbps: 59.71,
+            idle_w: 5.0,
+            max_w: 15.0,
+            base_eff: 0.60,
+            mem_eff: 0.72,
+            tile: 64,
+            launch_s: 12e-6,
+        },
+        GpuDevice {
+            name: "AGX Orin".into(),
+            peak_gflops: 5325.0,
+            mem_bw_gbps: 204.8,
+            idle_w: 12.0,
+            max_w: 50.0,
+            base_eff: 0.64,
+            mem_eff: 0.78,
+            tile: 128,
+            launch_s: 10e-6,
+        },
+    ]
+}
+
+impl GpuDevice {
+    /// Shape-dependent compute efficiency multiplier.
+    pub fn shape_efficiency(&self, g: &Gemm) -> f64 {
+        let quant = |d: usize| {
+            let padded = d.div_ceil(self.tile) * self.tile;
+            d as f64 / padded as f64
+        };
+        // Tile quantization on the output dims.
+        let mut eff = quant(g.m) * quant(g.n);
+        // Small-M occupancy: too few thread-block rows to fill the SMs.
+        if g.m < 256 {
+            eff *= (g.m as f64 / 256.0).powf(0.3);
+        }
+        // Skinny-M / huge-N weight streaming: each weight tile is used by
+        // very few output rows, so the kernel degenerates to DRAM-bound
+        // streaming with poor L2 reuse (bigger tile => bigger waste).
+        if g.n >= 16 * g.m && (g.n * g.k) as f64 * 4.0 > 64e6 {
+            eff *= 0.30;
+        }
+        eff.clamp(0.02, 1.0)
+    }
+
+    /// Attained throughput (GFLOP/s) on the roofline.
+    pub fn throughput(&self, g: &Gemm) -> f64 {
+        let compute_roof = self.peak_gflops * self.base_eff * self.shape_efficiency(g);
+        let ai = g.arithmetic_intensity();
+        let mem_roof = ai * self.mem_bw_gbps * self.mem_eff;
+        let roof = compute_roof.min(mem_roof);
+        // Launch overhead matters for the tiny decode GEMMs.
+        let t = g.flops() / (roof * 1e9) + self.launch_s;
+        g.flops() / t / 1e9
+    }
+
+    pub fn latency_s(&self, g: &Gemm) -> f64 {
+        g.flops() / (self.throughput(g) * 1e9)
+    }
+
+    /// Board power while running `g`: idle + utilization-scaled dynamic
+    /// (memory-bound kernels hold the GPU at high clocks too, hence the
+    /// floor on the duty term).
+    pub fn power_w(&self, g: &Gemm) -> f64 {
+        let util = self.throughput(g) / (self.peak_gflops * self.base_eff);
+        let duty = 0.35 + 0.65 * util.clamp(0.0, 1.0);
+        self.idle_w + duty * (self.max_w - self.idle_w)
+    }
+
+    pub fn energy_eff(&self, g: &Gemm) -> f64 {
+        self.throughput(g) / self.power_w(g)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::eval_workloads;
+
+    fn devices() -> Vec<GpuDevice> {
+        jetson_devices()
+    }
+
+    #[test]
+    fn table2_specs() {
+        let d = devices();
+        assert_eq!(d.len(), 3);
+        assert_eq!(d[0].name, "AGX Xavier");
+        assert!((d[1].peak_gflops - 844.8).abs() < 1e-9);
+        assert!((d[2].mem_bw_gbps - 204.8).abs() < 1e-9);
+    }
+
+    #[test]
+    fn throughput_below_effective_peak() {
+        for dev in devices() {
+            for w in eval_workloads() {
+                let t = dev.throughput(&w.gemm);
+                assert!(t > 0.0);
+                assert!(t <= dev.peak_gflops * dev.base_eff + 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn orin_fastest_on_large_square() {
+        let d = devices();
+        let g = Gemm::new(2048, 2048, 2048);
+        let thr: Vec<f64> = d.iter().map(|x| x.throughput(&g)).collect();
+        assert!(thr[2] > thr[0] && thr[0] > thr[1]);
+    }
+
+    #[test]
+    fn quantization_hurts_odd_shapes() {
+        let d = &devices()[2];
+        let aligned = Gemm::new(2048, 2048, 2048);
+        let odd = Gemm::new(2048 + 1, 2048 + 1, 2048);
+        assert!(d.shape_efficiency(&odd) < d.shape_efficiency(&aligned));
+    }
+
+    #[test]
+    fn skinny_huge_n_penalized() {
+        let d = &devices()[2];
+        let lm_head = Gemm::new(256, 128256, 2048);
+        let square = Gemm::new(2048, 2048, 2048);
+        assert!(d.shape_efficiency(&lm_head) < 0.35 * d.shape_efficiency(&square));
+    }
+
+    #[test]
+    fn power_within_board_envelope() {
+        for dev in devices() {
+            for w in eval_workloads() {
+                let p = dev.power_w(&w.gemm);
+                assert!(p >= dev.idle_w && p <= dev.max_w + 1e-9, "{p} on {}", dev.name);
+            }
+        }
+    }
+
+    #[test]
+    fn memory_bound_small_workloads_run_below_compute_roof() {
+        let d = &devices()[1]; // Xavier NX, weakest memory
+        let g = Gemm::new(32, 896, 896);
+        let compute_roof = d.peak_gflops * d.base_eff * d.shape_efficiency(&g);
+        assert!(d.throughput(&g) < compute_roof);
+    }
+}

@@ -1,0 +1,38 @@
+//! # versal-gemm
+//!
+//! Reproduction of *"Optimizing GEMM for Energy and Performance on
+//! Versal ACAP Architectures"* (Papalamprou et al., CS.AR 2025) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L1** (`python/compile/kernels/`) — Pallas 32×32×32 GEMM
+//!   micro-kernel, the AIE kernel analogue, AOT-lowered to HLO text;
+//! * **L2** (`python/compile/model.py`) — JAX tiled-GEMM graphs around
+//!   the kernel, one artifact per tile variant;
+//! * **L3** (this crate) — the paper's framework: VCK190 simulator
+//!   substrate, feature engineering, from-scratch GBDT models,
+//!   analytical baselines (CHARM/ARIES), ML-driven DSE with Pareto
+//!   selection, Jetson GPU comparators, a PJRT runtime that executes the
+//!   chosen mappings through the AOT kernels, and a serving coordinator.
+//!
+//! See `DESIGN.md` for the system inventory and the per-figure/table
+//! experiment index, and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod analytical;
+pub mod coordinator;
+pub mod config;
+pub mod dataset;
+pub mod dse;
+pub mod features;
+pub mod gbdt;
+pub mod gpu;
+pub mod metrics;
+pub mod models;
+pub mod report;
+pub mod runtime;
+pub mod tiling;
+pub mod util;
+pub mod versal;
+pub mod workloads;
+
+/// Library version (mirrors Cargo.toml).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

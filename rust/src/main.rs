@@ -1,0 +1,359 @@
+//! `versal-gemm` CLI — leader entrypoint for the framework.
+//!
+//! Subcommands mirror the paper's workflow:
+//! * `dataset`  — offline phase: generate the ~6000-design dataset;
+//! * `train`    — fit the L/P/R GBDT models (optionally with search);
+//! * `dse`      — online phase: Pareto-optimal mapping for one GEMM;
+//! * `report`   — regenerate any paper figure/table (see DESIGN.md §4);
+//! * `serve`    — boot the coordinator and stream GEMM jobs through the
+//!   AOT Pallas kernels (requires `make artifacts`);
+//! * `validate` — numerics check of the PJRT runtime vs the reference.
+
+use std::path::PathBuf;
+
+use versal_gemm::config::Config;
+use versal_gemm::coordinator::{Coordinator, GemmJob};
+use versal_gemm::dataset::Dataset;
+use versal_gemm::dse::Objective;
+use versal_gemm::features::FeatureSet;
+use versal_gemm::models::Predictors;
+use versal_gemm::report::{render, Lab};
+use versal_gemm::runtime::{matmul_ref, max_abs_diff, GemmEngine};
+use versal_gemm::util::cli::Args;
+use versal_gemm::util::rng::Rng;
+use versal_gemm::versal::{BufferPlacement, VersalSim};
+use versal_gemm::workloads::{eval_workloads, training_workloads, Gemm};
+
+const USAGE: &str = "\
+versal-gemm — energy/performance-optimal GEMM mapping for Versal ACAP
+
+USAGE:
+  versal-gemm <subcommand> [options]
+
+SUBCOMMANDS:
+  dataset   --out data/dataset.csv             generate the offline-phase dataset
+  train     --data-dir data [--search N]       train the L/P/R predictors
+  dse       --gemm MxNxK [--objective throughput|energy] [--data-dir data]
+  report    <fig1|fig3|fig4|fig6|fig7|fig8|fig9|fig10|table2|table3|model-quality|all>
+            [--data-dir data] [--out file]
+  serve     [--jobs N] [--artifacts artifacts] [--data-dir data]
+  validate  [--artifacts artifacts]            PJRT runtime vs reference GEMM
+  sweep     --model qwen|llama|deit [--seqs 32,64,..] per-layer mapping sweep
+  info                                         board + workload summary
+
+COMMON OPTIONS:
+  --config path.toml     override defaults (board/sim/train/dataset sections)
+  --data-dir DIR         dataset + model cache directory (default: data)
+";
+
+fn main() {
+    let args = Args::from_env();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> anyhow::Result<()> {
+    let cfg = Config::from_args(args)?;
+    let data_dir = PathBuf::from(args.opt_or("data-dir", "data"));
+    match args.subcommand.as_deref() {
+        Some("dataset") => cmd_dataset(args, &cfg),
+        Some("train") => cmd_train(args, &cfg, data_dir),
+        Some("dse") => cmd_dse(args, &cfg, data_dir),
+        Some("report") => cmd_report(args, cfg, data_dir),
+        Some("serve") => cmd_serve(args, cfg, data_dir),
+        Some("validate") => cmd_validate(args),
+        Some("sweep") => cmd_sweep(args, cfg, data_dir),
+        Some("info") => cmd_info(&cfg),
+        _ => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn cmd_dataset(args: &Args, cfg: &Config) -> anyhow::Result<()> {
+    let out = PathBuf::from(args.opt_or("out", "data/dataset.csv"));
+    eprintln!("generating offline-phase dataset (18 workloads)...");
+    let started = std::time::Instant::now();
+    let ds = Dataset::generate(cfg, &training_workloads());
+    ds.save(cfg, &out)?;
+    println!(
+        "wrote {} designs across {} workloads to {} in {:.1}s",
+        ds.len(),
+        ds.workload_ids().len(),
+        out.display(),
+        started.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+fn cmd_train(args: &Args, cfg: &Config, data_dir: PathBuf) -> anyhow::Result<()> {
+    let ds_path = data_dir.join("dataset.csv");
+    let ds = if ds_path.exists() {
+        Dataset::load(cfg, &ds_path)?
+    } else {
+        eprintln!("no dataset at {}; generating...", ds_path.display());
+        let ds = Dataset::generate(cfg, &training_workloads());
+        ds.save(cfg, &ds_path)?;
+        ds
+    };
+    let mut cfg = cfg.clone();
+    cfg.train.search_trials = args.opt_usize("search", cfg.train.search_trials)?;
+    if cfg.train.search_trials > 0 {
+        eprintln!(
+            "hyper-parameter search: {} trials (5-fold CV)...",
+            cfg.train.search_trials
+        );
+        let x = ds.feature_matrix(cfg.board.micro_tile, FeatureSet::SetIAndII);
+        let y = ds.targets(&cfg).latency_s;
+        let (best, score) = versal_gemm::gbdt::cv::search_hyperparams(&x, &y, &cfg.train, true);
+        println!(
+            "best hyper-params: trees={} depth={} lr={:.3} (CV MAPE {:.2}%, R2 {:.4})",
+            best.n_trees, best.max_depth, best.learning_rate, score.mean_mape, score.mean_r2
+        );
+        cfg.train = best;
+    }
+    let started = std::time::Instant::now();
+    let model = Predictors::train(&ds, &cfg, FeatureSet::SetIAndII);
+    let out = data_dir.join("predictors.json");
+    model.save(&out)?;
+    println!(
+        "trained L/P/R models on {} designs in {:.1}s -> {}",
+        ds.len(),
+        started.elapsed().as_secs_f64(),
+        out.display()
+    );
+    Ok(())
+}
+
+fn cmd_dse(args: &Args, cfg: &Config, data_dir: PathBuf) -> anyhow::Result<()> {
+    let (m, n, k) = args
+        .opt_gemm_dims("gemm")?
+        .ok_or_else(|| anyhow::anyhow!("--gemm MxNxK is required"))?;
+    let g = Gemm::new(m, n, k);
+    let objective = Objective::parse(args.opt_or("objective", "throughput"))?;
+    let lab = Lab::prepare(cfg.clone(), data_dir)?;
+    let engine = lab.engine();
+    let r = engine.explore(&g)?;
+    let sel = r.select(objective);
+    println!(
+        "GEMM {} — {} candidates, {} feasible, Pareto front of {} ({} ms)",
+        g.label(),
+        r.n_candidates,
+        r.n_feasible,
+        r.pareto.len(),
+        r.elapsed.as_millis()
+    );
+    println!(
+        "selected ({}): {}  #AIE={}",
+        objective.label(),
+        sel.tiling.label(),
+        sel.tiling.n_aie()
+    );
+    println!(
+        "predicted: {:.1} GFLOP/s, {:.1} W, {:.2} GFLOP/s/W",
+        sel.gflops, sel.prediction.power_w, sel.energy_eff
+    );
+    let sim = VersalSim::new(cfg);
+    match sim.evaluate(&g, &sel.tiling, BufferPlacement::UramFirst) {
+        Ok(mea) => println!(
+            "simulated: {:.1} GFLOP/s, {:.1} W, {:.2} GFLOP/s/W (latency {:.3} ms)",
+            mea.gflops,
+            mea.power_w,
+            mea.energy_eff,
+            mea.latency_s * 1e3
+        ),
+        Err(e) => println!("simulated: design failed ({e})"),
+    }
+    println!("\nPareto front (predicted):");
+    for c in &r.pareto {
+        println!(
+            "  {:<28} #AIE={:<4} {:.1} GFLOP/s  {:.2} GFLOP/s/W",
+            c.tiling.label(),
+            c.tiling.n_aie(),
+            c.gflops,
+            c.energy_eff
+        );
+    }
+    Ok(())
+}
+
+fn cmd_report(args: &Args, cfg: Config, data_dir: PathBuf) -> anyhow::Result<()> {
+    let id = args.positional.first().map(String::as_str).unwrap_or("all");
+    let lab = Lab::prepare(cfg, data_dir)?;
+    let text = render(&lab, id)?;
+    match args.opt("out") {
+        Some(path) => {
+            std::fs::write(path, &text)?;
+            eprintln!("wrote report to {path}");
+        }
+        None => print!("{text}"),
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args, cfg: Config, data_dir: PathBuf) -> anyhow::Result<()> {
+    let n_jobs = args.opt_usize("jobs", 24)?;
+    let artifacts = PathBuf::from(args.opt_or("artifacts", "artifacts"));
+    let lab = Lab::prepare(cfg.clone(), data_dir)?;
+    let engine = lab.engine();
+    let mut coord = Coordinator::start(&cfg, engine, Some(artifacts), 2);
+
+    // A small LLM-inference-like job stream over the eval workloads.
+    let wl = eval_workloads();
+    let mut rng = Rng::new(2025);
+    let mut jobs = Vec::new();
+    for i in 0..n_jobs {
+        let w = &wl[rng.below(6)]; // small/medium layers for quick serving
+        let g = w.gemm;
+        let a: Vec<f32> = (0..g.m * g.k).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..g.k * g.n).map(|_| rng.normal() as f32).collect();
+        let mut job = GemmJob::with_data(
+            i as u64,
+            g,
+            if i % 2 == 0 {
+                Objective::Throughput
+            } else {
+                Objective::EnergyEfficiency
+            },
+            a,
+            b,
+        );
+        job.validate = i % 5 == 0;
+        jobs.push(job);
+    }
+    let started = std::time::Instant::now();
+    let results = coord.run_batch(jobs);
+    let wall = started.elapsed();
+    let mut ok = 0usize;
+    for r in &results {
+        if r.error.is_none() {
+            ok += 1;
+        } else {
+            eprintln!("job {} failed: {:?}", r.id, r.error);
+        }
+        if let Some(err) = r.validation_err {
+            anyhow::ensure!(err < 1e-2, "validation failed on job {}: {err}", r.id);
+        }
+    }
+    let stats = coord.stats();
+    println!(
+        "served {ok}/{} jobs in {:.2}s — exec throughput {:.2} GFLOP/s, \
+         cache {} hits / {} misses, simulated VCK190 energy {:.1} J",
+        results.len(),
+        wall.as_secs_f64(),
+        stats.executed_gflops(),
+        stats.cache_hits,
+        stats.cache_misses,
+        stats.simulated_energy_j
+    );
+    Ok(())
+}
+
+fn cmd_validate(args: &Args) -> anyhow::Result<()> {
+    let artifacts = PathBuf::from(args.opt_or("artifacts", "artifacts"));
+    let engine = GemmEngine::load(&artifacts)?;
+    println!("platform: {}", engine.platform());
+    let mut rng = Rng::new(7);
+    for (m, n, k) in [
+        (32, 32, 32),
+        (64, 64, 64),
+        (128, 128, 128),
+        (100, 200, 96),
+        (32, 896, 896),
+    ] {
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let got = engine.gemm(&a, &b, m, n, k)?;
+        let want = matmul_ref(&a, &b, m, n, k);
+        let err = max_abs_diff(&got, &want);
+        println!("gemm {m}x{n}x{k}: max abs err {err:.2e}");
+        anyhow::ensure!(err < 1e-2, "numerics check failed for {m}x{n}x{k}");
+    }
+    println!(
+        "runtime validation OK ({} kernel invocations)",
+        engine.invocations.get()
+    );
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args, cfg: Config, data_dir: PathBuf) -> anyhow::Result<()> {
+    use versal_gemm::workloads::models::{deit_base, llama3_1b, qwen25_05b};
+    let spec = match args.opt_or("model", "qwen") {
+        "qwen" => qwen25_05b(),
+        "llama" => llama3_1b(),
+        "deit" => deit_base(),
+        other => anyhow::bail!("unknown model `{other}` (qwen|llama|deit)"),
+    };
+    let seqs: Vec<usize> = args
+        .opt_or("seqs", "32,64,128,512")
+        .split(',')
+        .map(|v| v.parse().map_err(|_| anyhow::anyhow!("bad seq `{v}`")))
+        .collect::<anyhow::Result<_>>()?;
+    let lab = Lab::prepare(cfg.clone(), data_dir)?;
+    let engine = lab.engine();
+    let sim = VersalSim::new(&cfg);
+    println!(
+        "== {}: per-layer mappings across sequence lengths ==",
+        spec.name
+    );
+    println!(
+        "{:<14} {:>5} {:>18} {:>26} {:>10} {:>9} {:>9}",
+        "layer", "seq", "gemm", "mapping", "GFLOP/s", "W", "GF/s/W"
+    );
+    for &seq in &seqs {
+        for (name, g) in spec.working_set(seq, false) {
+            let r = engine.explore(&g)?;
+            let Some((sel, m)) =
+                versal_gemm::dse::best_buildable(&r, &sim, &g, Objective::EnergyEfficiency)
+            else {
+                println!("{name:<14} {seq:>5} {:>18} (no buildable design)", g.label());
+                continue;
+            };
+            println!(
+                "{:<14} {:>5} {:>18} {:>26} {:>10.1} {:>9.1} {:>9.2}",
+                name,
+                seq,
+                g.label(),
+                sel.tiling.label(),
+                m.gflops,
+                m.power_w,
+                m.energy_eff
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_info(cfg: &Config) -> anyhow::Result<()> {
+    println!(
+        "board: {} — {} AIEs @ {:.2} GHz ({} GFLOP/s peak), DDR {:.1} GB/s",
+        cfg.board.name,
+        cfg.board.aie_total,
+        cfg.board.aie_clock_hz / 1e9,
+        cfg.board.peak_gflops(),
+        cfg.board.ddr_peak_bps / 1e9
+    );
+    println!("\ntraining workloads (offline phase):");
+    for w in training_workloads() {
+        println!("  {:<14} {:<12} {}", w.id, w.source, w.gemm.label());
+    }
+    println!("\nevaluation workloads G1..G13 (by increasing FLOPs):");
+    for w in eval_workloads() {
+        println!(
+            "  {:<4} {:<22} {:<18} {:.2} GFLOP, AI {:.1}",
+            w.id,
+            w.source,
+            w.gemm.label(),
+            w.gemm.flops() / 1e9,
+            w.gemm.arithmetic_intensity()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,271 @@
+//! Statistical metrics used across evaluation: MAPE, R², Pearson r,
+//! geometric mean, quantiles, and the 2-D hypervolume indicator for
+//! Pareto-front quality (Fig. 10).
+
+/// Mean absolute percentage error (%), as in Fig. 7.
+pub fn mape(truth: &[f64], pred: &[f64]) -> f64 {
+    assert_eq!(truth.len(), pred.len());
+    assert!(!truth.is_empty());
+    let mut acc = 0.0;
+    for (t, p) in truth.iter().zip(pred) {
+        assert!(*t != 0.0, "MAPE undefined for zero truth");
+        acc += ((t - p) / t).abs();
+    }
+    100.0 * acc / truth.len() as f64
+}
+
+/// Coefficient of determination R² (Fig. 6).
+pub fn r2(truth: &[f64], pred: &[f64]) -> f64 {
+    assert_eq!(truth.len(), pred.len());
+    assert!(!truth.is_empty());
+    let mean = truth.iter().sum::<f64>() / truth.len() as f64;
+    let ss_res: f64 = truth
+        .iter()
+        .zip(pred)
+        .map(|(t, p)| (t - p) * (t - p))
+        .sum();
+    let ss_tot: f64 = truth.iter().map(|t| (t - mean) * (t - mean)).sum();
+    if ss_tot == 0.0 {
+        if ss_res == 0.0 {
+            1.0
+        } else {
+            f64::NEG_INFINITY
+        }
+    } else {
+        1.0 - ss_res / ss_tot
+    }
+}
+
+/// Pearson correlation coefficient (paper: r = 0.81 between ρ and latency).
+pub fn pearson(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    assert!(x.len() > 1);
+    let n = x.len() as f64;
+    let mx = x.iter().sum::<f64>() / n;
+    let my = y.iter().sum::<f64>() / n;
+    let mut cov = 0.0;
+    let mut vx = 0.0;
+    let mut vy = 0.0;
+    for (a, b) in x.iter().zip(y) {
+        cov += (a - mx) * (b - my);
+        vx += (a - mx) * (a - mx);
+        vy += (b - my) * (b - my);
+    }
+    if vx == 0.0 || vy == 0.0 {
+        return 0.0;
+    }
+    cov / (vx * vy).sqrt()
+}
+
+/// Geometric mean (the paper's headline aggregation).
+pub fn geomean(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty());
+    let log_sum: f64 = xs
+        .iter()
+        .map(|x| {
+            assert!(*x > 0.0, "geomean requires positive values, got {x}");
+            x.ln()
+        })
+        .sum();
+    (log_sum / xs.len() as f64).exp()
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty());
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Quantile with linear interpolation, `q ∈ [0,1]`.
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    assert!(!xs.is_empty());
+    assert!((0.0..=1.0).contains(&q));
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = pos - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    quantile(xs, 0.5)
+}
+
+/// 2-D hypervolume dominated by a maximization Pareto front, with respect
+/// to reference point `(0, 0)` after normalizing both axes by `scale`.
+/// Points are `(throughput, energy_efficiency)`; larger is better on both
+/// axes. This is the indicator behind the paper's "2.18× higher
+/// hypervolume area on geomean".
+pub fn hypervolume_2d(points: &[(f64, f64)], scale: (f64, f64)) -> f64 {
+    if points.is_empty() {
+        return 0.0;
+    }
+    assert!(scale.0 > 0.0 && scale.1 > 0.0);
+    // Normalize, keep only the non-dominated set, sweep by x descending.
+    let norm: Vec<(f64, f64)> = points
+        .iter()
+        .map(|&(x, y)| (x / scale.0, y / scale.1))
+        .collect();
+    let front = pareto_front_max(&norm);
+    let mut sorted = front;
+    sorted.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    let mut hv = 0.0;
+    let mut prev_y = 0.0;
+    for (x, y) in sorted {
+        if y > prev_y {
+            hv += x * (y - prev_y);
+            prev_y = y;
+        }
+    }
+    hv
+}
+
+/// Non-dominated subset for 2-D maximization.
+pub fn pareto_front_max(points: &[(f64, f64)]) -> Vec<(f64, f64)> {
+    let mut idx: Vec<usize> = (0..points.len()).collect();
+    // Sort by x desc, then y desc; sweep keeping strictly increasing y.
+    idx.sort_by(|&a, &b| {
+        points[b]
+            .0
+            .partial_cmp(&points[a].0)
+            .unwrap()
+            .then(points[b].1.partial_cmp(&points[a].1).unwrap())
+    });
+    let mut front = Vec::new();
+    let mut best_y = f64::NEG_INFINITY;
+    for i in idx {
+        let (x, y) = points[i];
+        if y > best_y {
+            front.push((x, y));
+            best_y = y;
+        }
+    }
+    front
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::forall;
+
+    #[test]
+    fn mape_basic() {
+        assert_eq!(mape(&[100.0, 200.0], &[110.0, 180.0]), 10.0);
+        assert_eq!(mape(&[50.0], &[50.0]), 0.0);
+    }
+
+    #[test]
+    fn r2_perfect_and_mean_predictor() {
+        let t = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(r2(&t, &t), 1.0);
+        let mean_pred = [2.5; 4];
+        assert!(r2(&t, &mean_pred).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pearson_signs() {
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let y_pos = [2.0, 4.0, 6.0, 8.0];
+        let y_neg = [8.0, 6.0, 4.0, 2.0];
+        assert!((pearson(&x, &y_pos) - 1.0).abs() < 1e-12);
+        assert!((pearson(&x, &y_neg) + 1.0).abs() < 1e-12);
+        let y_const = [3.0; 4];
+        assert_eq!(pearson(&x, &y_const), 0.0);
+    }
+
+    #[test]
+    fn geomean_basic() {
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+        assert!((geomean(&[2.0, 2.0, 2.0]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn geomean_rejects_nonpositive() {
+        geomean(&[1.0, 0.0]);
+    }
+
+    #[test]
+    fn quantiles() {
+        let xs = [4.0, 1.0, 3.0, 2.0];
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 1.0), 4.0);
+        assert_eq!(median(&xs), 2.5);
+        assert_eq!(median(&[1.0, 2.0, 9.0]), 2.0);
+    }
+
+    #[test]
+    fn pareto_front_filters_dominated() {
+        let pts = [(1.0, 5.0), (2.0, 4.0), (1.5, 3.0), (3.0, 1.0), (0.5, 0.5)];
+        let front = pareto_front_max(&pts);
+        assert_eq!(front.len(), 3);
+        assert!(front.contains(&(3.0, 1.0)));
+        assert!(front.contains(&(2.0, 4.0)));
+        assert!(front.contains(&(1.0, 5.0)));
+        assert!(!front.contains(&(1.5, 3.0)));
+    }
+
+    #[test]
+    fn hypervolume_rectangles() {
+        // Single point (1,1) normalized: hv = 1.
+        assert!((hypervolume_2d(&[(2.0, 3.0)], (2.0, 3.0)) - 1.0).abs() < 1e-12);
+        // Two points forming a staircase.
+        let hv = hypervolume_2d(&[(1.0, 0.5), (0.5, 1.0)], (1.0, 1.0));
+        assert!((hv - 0.75).abs() < 1e-12);
+        // Dominated point adds nothing.
+        let hv2 = hypervolume_2d(&[(1.0, 0.5), (0.5, 1.0), (0.4, 0.4)], (1.0, 1.0));
+        assert!((hv2 - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn property_hypervolume_monotone_under_point_addition() {
+        forall(
+            0xBEEF,
+            60,
+            |r| {
+                let n = r.range_usize(1, 12);
+                let pts: Vec<(f64, f64)> = (0..n)
+                    .map(|_| (r.range_f64(0.1, 10.0), r.range_f64(0.1, 10.0)))
+                    .collect();
+                let extra = (r.range_f64(0.1, 10.0), r.range_f64(0.1, 10.0));
+                (pts, extra)
+            },
+            |(pts, extra)| {
+                let scale = (10.0, 10.0);
+                let base = hypervolume_2d(pts, scale);
+                let mut bigger = pts.clone();
+                bigger.push(*extra);
+                let after = hypervolume_2d(&bigger, scale);
+                assert!(after + 1e-12 >= base, "hv shrank: {base} -> {after}");
+            },
+        );
+    }
+
+    #[test]
+    fn property_front_members_not_dominated() {
+        forall(
+            0xF00D,
+            40,
+            |r| {
+                let n = r.range_usize(2, 30);
+                (0..n)
+                    .map(|_| (r.range_f64(0.0, 1.0), r.range_f64(0.0, 1.0)))
+                    .collect::<Vec<_>>()
+            },
+            |pts| {
+                let front = pareto_front_max(pts);
+                for &(fx, fy) in &front {
+                    for &(px, py) in pts.iter() {
+                        let dominates = px >= fx && py >= fy && (px > fx || py > fy);
+                        assert!(!dominates, "({px},{py}) dominates front point ({fx},{fy})");
+                    }
+                }
+            },
+        );
+    }
+}

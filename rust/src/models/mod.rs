@@ -1,0 +1,270 @@
+//! The trained predictor bundle: separate 𝓛 (log-latency) and 𝓟 models
+//! plus the 5-output 𝓡 model (paper §IV-A.3), with JSON persistence so
+//! the online phase never retrains.
+
+use crate::config::{Config, TrainConfig};
+use crate::dataset::Dataset;
+use crate::features::{featurize_set, FeatureSet};
+use crate::gbdt::{FeatureMatrix, Gbdt, MultiGbdt};
+use crate::tiling::Tiling;
+use crate::util::json::{num, obj, s, Json};
+use crate::util::rng::Rng;
+use crate::workloads::Gemm;
+
+/// Predicted metrics for one candidate design.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Prediction {
+    pub latency_s: f64,
+    pub power_w: f64,
+    /// BRAM/URAM/LUT/FF/DSP utilization (percent).
+    pub resources_pct: [f64; 5],
+}
+
+impl Prediction {
+    pub fn gflops(&self, g: &Gemm) -> f64 {
+        g.flops() / self.latency_s / 1e9
+    }
+
+    pub fn energy_eff(&self, g: &Gemm) -> f64 {
+        self.gflops(g) / self.power_w
+    }
+
+    /// True iff the predicted utilization fits the PL (with margin).
+    pub fn fits(&self, margin_pct: f64) -> bool {
+        self.resources_pct.iter().all(|&u| u <= 100.0 - margin_pct)
+    }
+}
+
+/// The paper's model bundle.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Predictors {
+    pub feature_set: FeatureSet,
+    pub micro: usize,
+    pub latency: Gbdt,
+    pub power: Gbdt,
+    pub resources: MultiGbdt,
+}
+
+impl Predictors {
+    /// Train all three models on a dataset.
+    pub fn train(ds: &Dataset, cfg: &Config, set: FeatureSet) -> Predictors {
+        assert!(!ds.is_empty(), "cannot train on an empty dataset");
+        let micro = cfg.board.micro_tile;
+        let x = ds.feature_matrix(micro, set);
+        let t = ds.targets(cfg);
+        let log_latency: Vec<f64> = t.latency_s.iter().map(|v| v.ln()).collect();
+        let mut rng = Rng::new(cfg.train.seed);
+        let latency = Gbdt::fit(&x, &log_latency, &cfg.train, None, &mut rng.fork(1));
+        let power = Gbdt::fit(&x, &t.power_w, &cfg.train, None, &mut rng.fork(2));
+        // The resource model learns near-deterministic packing arithmetic;
+        // far fewer (but stronger-stepped) trees suffice, which also cuts
+        // the DSE hot path from ~1350 to ~900 traversals per candidate
+        // (EXPERIMENTS.md SPerf).
+        let res_cfg = TrainConfig {
+            n_trees: (cfg.train.n_trees / 4).max(40),
+            learning_rate: (cfg.train.learning_rate * 2.0).min(0.3),
+            ..cfg.train.clone()
+        };
+        let resources = MultiGbdt::fit(&x, &t.resources_pct, &res_cfg, &mut rng.fork(3));
+        Predictors {
+            feature_set: set,
+            micro,
+            latency,
+            power,
+            resources,
+        }
+    }
+
+    /// Predict all metrics for one candidate.
+    pub fn predict(&self, g: &Gemm, t: &Tiling) -> Prediction {
+        let row = featurize_set(g, t, self.micro, self.feature_set);
+        self.predict_row(&row)
+    }
+
+    /// Predict from a pre-computed feature row (hot path of the DSE:
+    /// no allocation, ~900 flat-tree traversals).
+    pub fn predict_row(&self, row: &[f64]) -> Prediction {
+        let latency_s = self.latency.predict_one(row).exp();
+        let power_w = self.power.predict_one(row).max(1.0);
+        let mut resources_pct = [0.0; 5];
+        self.resources.predict_into(row, &mut resources_pct);
+        for v in &mut resources_pct {
+            *v = v.max(0.0);
+        }
+        Prediction {
+            latency_s,
+            power_w,
+            resources_pct,
+        }
+    }
+
+    /// Batch latency prediction (for metrics computation).
+    pub fn predict_latency_batch(&self, x: &FeatureMatrix) -> Vec<f64> {
+        (0..x.n_rows)
+            .map(|i| self.latency.predict_one(x.row(i)).exp())
+            .collect()
+    }
+
+    pub fn predict_power_batch(&self, x: &FeatureMatrix) -> Vec<f64> {
+        (0..x.n_rows)
+            .map(|i| self.power.predict_one(x.row(i)).max(1.0))
+            .collect()
+    }
+
+    // -- persistence -----------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            (
+                "feature_set",
+                s(match self.feature_set {
+                    FeatureSet::SetI => "set1",
+                    FeatureSet::SetIAndII => "set12",
+                }),
+            ),
+            ("micro", num(self.micro as f64)),
+            ("latency", self.latency.to_json()),
+            ("power", self.power.to_json()),
+            ("resources", self.resources.to_json()),
+        ])
+    }
+
+    pub fn from_json(json: &Json) -> anyhow::Result<Predictors> {
+        let feature_set = match json.req_str("feature_set")? {
+            "set1" => FeatureSet::SetI,
+            "set12" => FeatureSet::SetIAndII,
+            other => anyhow::bail!("unknown feature set `{other}`"),
+        };
+        Ok(Predictors {
+            feature_set,
+            micro: json.req_usize("micro")?,
+            latency: Gbdt::from_json(
+                json.get("latency").ok_or_else(|| anyhow::anyhow!("no latency model"))?,
+            )?,
+            power: Gbdt::from_json(
+                json.get("power").ok_or_else(|| anyhow::anyhow!("no power model"))?,
+            )?,
+            resources: MultiGbdt::from_json(
+                json.get("resources")
+                    .ok_or_else(|| anyhow::anyhow!("no resource model"))?,
+            )?,
+        })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_json().to_string_compact())?;
+        Ok(())
+    }
+
+    pub fn load(path: &std::path::Path) -> anyhow::Result<Predictors> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        Predictors::from_json(&Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::mape;
+    use crate::workloads::training_workloads;
+
+    fn quick_cfg() -> Config {
+        let mut cfg = Config::default();
+        cfg.dataset.top_k = 10;
+        cfg.dataset.bottom_k = 8;
+        cfg.dataset.random_k = 40;
+        cfg.train.n_trees = 80;
+        cfg.train.learning_rate = 0.15;
+        cfg
+    }
+
+    fn quick_dataset(cfg: &Config, n_wl: usize) -> Dataset {
+        let wl: Vec<_> = training_workloads().into_iter().take(n_wl).collect();
+        Dataset::generate(cfg, &wl)
+    }
+
+    #[test]
+    fn trains_and_predicts_in_range() {
+        let cfg = quick_cfg();
+        let ds = quick_dataset(&cfg, 4);
+        let model = Predictors::train(&ds, &cfg, FeatureSet::SetIAndII);
+        for p in ds.points.iter().step_by(10) {
+            let pred = model.predict(&p.gemm, &p.tiling);
+            assert!(pred.latency_s > 0.0);
+            assert!(pred.power_w >= 1.0);
+            assert!(pred.resources_pct.iter().all(|&u| (0.0..=110.0).contains(&u)));
+        }
+    }
+
+    #[test]
+    fn in_sample_accuracy_is_high() {
+        let cfg = quick_cfg();
+        let ds = quick_dataset(&cfg, 4);
+        let model = Predictors::train(&ds, &cfg, FeatureSet::SetIAndII);
+        let truth: Vec<f64> = ds.points.iter().map(|p| p.measurement.latency_s).collect();
+        let pred: Vec<f64> = ds
+            .points
+            .iter()
+            .map(|p| model.predict(&p.gemm, &p.tiling).latency_s)
+            .collect();
+        let err = mape(&truth, &pred);
+        assert!(err < 12.0, "in-sample latency MAPE {err}");
+        let ptruth: Vec<f64> = ds.points.iter().map(|p| p.measurement.power_w).collect();
+        let ppred: Vec<f64> = ds
+            .points
+            .iter()
+            .map(|p| model.predict(&p.gemm, &p.tiling).power_w)
+            .collect();
+        assert!(mape(&ptruth, &ppred) < 8.0);
+    }
+
+    #[test]
+    fn held_out_workload_set12_generalizes_better_than_set1() {
+        // The core claim behind Fig. 7b: Set-II features generalize to
+        // unseen workloads far better than raw Set-I.
+        let cfg = quick_cfg();
+        let ds = quick_dataset(&cfg, 6);
+        let held = [ds.workload_ids()[0].clone()];
+        let held_refs: Vec<&str> = held.iter().map(String::as_str).collect();
+        let (train, test) = ds.split_by_workload(&held_refs);
+        assert!(!test.is_empty());
+        let truth: Vec<f64> = test.points.iter().map(|p| p.measurement.latency_s).collect();
+        let m1 = Predictors::train(&train, &cfg, FeatureSet::SetI);
+        let m2 = Predictors::train(&train, &cfg, FeatureSet::SetIAndII);
+        let p1: Vec<f64> = test
+            .points
+            .iter()
+            .map(|p| m1.predict(&p.gemm, &p.tiling).latency_s)
+            .collect();
+        let p2: Vec<f64> = test
+            .points
+            .iter()
+            .map(|p| m2.predict(&p.gemm, &p.tiling).latency_s)
+            .collect();
+        let e1 = mape(&truth, &p1);
+        let e2 = mape(&truth, &p2);
+        assert!(e2 < e1, "Set-I&II {e2} should beat Set-I {e1} on unseen workload");
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let cfg = quick_cfg();
+        let ds = quick_dataset(&cfg, 2);
+        let model = Predictors::train(&ds, &cfg, FeatureSet::SetIAndII);
+        let dir = std::env::temp_dir().join("versal_gemm_model_test");
+        let path = dir.join("predictors.json");
+        model.save(&path).unwrap();
+        let back = Predictors::load(&path).unwrap();
+        assert_eq!(model, back);
+        let p = &ds.points[0];
+        assert_eq!(
+            model.predict(&p.gemm, &p.tiling),
+            back.predict(&p.gemm, &p.tiling)
+        );
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

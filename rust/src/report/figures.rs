@@ -1,0 +1,717 @@
+//! One renderer per paper figure/table (DESIGN.md §4 experiment index).
+
+use crate::analytical::AriesPolicy;
+use crate::dse::compare::tradeoff_stats;
+use crate::dse::{measured_hypervolume, ExhaustiveExplorer};
+use crate::features::FeatureSet;
+use crate::gpu::jetson_devices;
+use crate::metrics::{geomean, mape, median, pareto_front_max, pearson, quantile, r2};
+use crate::models::Predictors;
+use crate::report::Lab;
+use crate::util::table::{fnum, scatter_plot, Table};
+use crate::versal::{BufferPlacement, VersalSim};
+use crate::workloads::{eval_workloads, Gemm};
+
+/// Fig. 1 — impact of tiling on throughput/energy-efficiency for one
+/// GEMM: full design sweep on the simulator, highlighting the
+/// highest-throughput, most-energy-efficient and analytical picks.
+pub fn fig1_tiling_impact(lab: &Lab) -> String {
+    let g = Gemm::new(224, 3072, 768); // medium ViT-style workload
+    let ex = ExhaustiveExplorer::new(VersalSim::new(&lab.cfg));
+    let all = ex.explore(&g);
+    let best_thr = all
+        .iter()
+        .max_by(|a, b| a.1.gflops.partial_cmp(&b.1.gflops).unwrap())
+        .unwrap();
+    let best_eff = all
+        .iter()
+        .max_by(|a, b| a.1.energy_eff.partial_cmp(&b.1.energy_eff).unwrap())
+        .unwrap();
+    let aries_pick = AriesPolicy::new(&lab.cfg.board)
+        .select(&g)
+        .and_then(|d| ex.sim.evaluate(&g, &d.tiling, d.placement).ok());
+
+    let mut pts: Vec<(f64, f64, char)> = all
+        .iter()
+        .map(|(_, m)| (m.gflops, m.energy_eff, '.'))
+        .collect();
+    pts.push((best_thr.1.gflops, best_thr.1.energy_eff, 'x'));
+    pts.push((best_eff.1.gflops, best_eff.1.energy_eff, '*'));
+    if let Some(a) = &aries_pick {
+        pts.push((a.gflops, a.energy_eff, 'A'));
+    }
+
+    let eff_gap = 100.0 * (1.0 - best_thr.1.energy_eff / best_eff.1.energy_eff);
+    let power_gap = best_thr.1.power_w - best_eff.1.power_w;
+    let mut out = String::new();
+    out.push_str(&format!(
+        "== Fig. 1: impact of tiling on GEMM performance and power ({} designs, GEMM {}) ==\n",
+        all.len(),
+        g.label()
+    ));
+    out.push_str(&scatter_plot(
+        "(a) throughput vs energy efficiency   x=best-thr  *=best-eff  A=analytical pick",
+        &pts,
+        72,
+        18,
+        "throughput GFLOP/s",
+        "GFLOP/s/W",
+    ));
+    out.push_str(&format!(
+        "best-throughput design: {:>9} GFLOP/s @ {:>5} W  {}\n",
+        fnum(best_thr.1.gflops),
+        fnum(best_thr.1.power_w),
+        best_thr.0.label()
+    ));
+    out.push_str(&format!(
+        "best-energy design:     {:>9} GFLOP/s @ {:>5} W  {}\n",
+        fnum(best_eff.1.gflops),
+        fnum(best_eff.1.power_w),
+        best_eff.0.label()
+    ));
+    out.push_str(&format!(
+        "highest-throughput design is {:.1}% less energy-efficient than the most \
+         energy-efficient one (paper: 22.4%); power delta {:.1} W (paper: ~11 W)\n",
+        eff_gap, power_gap
+    ));
+    if let Some(a) = &aries_pick {
+        let thr_loss = 100.0 * (1.0 - a.gflops / best_thr.1.gflops);
+        out.push_str(&format!(
+            "analytical-model pick loses {:.1}% throughput vs actual best (paper: 17%)\n",
+            thr_loss
+        ));
+    }
+    out
+}
+
+/// Fig. 3 — system power vs number of active AIEs across the dataset.
+pub fn fig3_power_vs_aies(lab: &Lab) -> String {
+    let buckets: [usize; 10] = [1, 2, 4, 8, 16, 32, 64, 128, 256, 400];
+    let mut table = Table::new(
+        "== Fig. 3: system power for varying AIE utilization (dataset designs) ==",
+        &["#AIEs (<=)", "designs", "P min [W]", "P median [W]", "P max [W]"],
+    );
+    let mut prev = 0usize;
+    for &b in &buckets {
+        let powers: Vec<f64> = lab
+            .dataset
+            .points
+            .iter()
+            .filter(|p| {
+                let n = p.tiling.n_aie();
+                n > prev && n <= b
+            })
+            .map(|p| p.measurement.power_w)
+            .collect();
+        if !powers.is_empty() {
+            table.row(vec![
+                b.to_string(),
+                powers.len().to_string(),
+                fnum(quantile(&powers, 0.0)),
+                fnum(median(&powers)),
+                fnum(quantile(&powers, 1.0)),
+            ]);
+        }
+        prev = b;
+    }
+    let all: Vec<f64> = lab.dataset.points.iter().map(|p| p.measurement.power_w).collect();
+    format!(
+        "{}paper: medians 12->18 W for 1..32 AIEs, 19-38 W beyond, outliers to ~49 W\n\
+         dataset span: {:.1}..{:.1} W over {} designs\n",
+        table.render(),
+        quantile(&all, 0.0),
+        quantile(&all, 1.0),
+        all.len()
+    )
+}
+
+/// Fig. 4 — energy/throughput trade-offs across the eval workloads
+/// (exhaustive ground truth).
+pub fn fig4_tradeoffs(lab: &Lab) -> String {
+    let mut table = Table::new(
+        "== Fig. 4: trade-offs between energy- and throughput-oriented mappings ==",
+        &[
+            "G_n",
+            "GEMM",
+            "(a) thr loss of energy-opt [%]",
+            "(b) eff loss of thr-opt [%]",
+            "(c) #AIE thr-opt",
+            "#AIE energy-opt",
+        ],
+    );
+    for w in eval_workloads() {
+        if let Some(t) = tradeoff_stats(&lab.cfg, &w.gemm) {
+            table.row(vec![
+                w.id.clone(),
+                w.gemm.label(),
+                format!("{:.1}", t.throughput_loss_pct),
+                format!("{:.1}", t.energy_loss_pct),
+                t.aie_throughput.to_string(),
+                t.aie_energy.to_string(),
+            ]);
+        }
+    }
+    format!(
+        "{}paper: low-FLOP G1-G3 lose 1.6-3.1% thr for large eff gains; mid-FLOP \
+         G4-G10 show the largest trade-offs (up to ~20%); high-FLOP G11-G13 converge (0.1-2.1%)\n",
+        table.render()
+    )
+}
+
+/// Fig. 6 — R^2 of the latency model vs training-set size, Set-I vs
+/// Set-I&II.
+pub fn fig6_r2_vs_training_size(lab: &Lab) -> String {
+    let fractions = [0.1, 0.2, 0.3, 0.5, 0.7, 0.9, 1.0];
+    let (train_full, test) = lab.dataset.split_random(lab.cfg.train.test_fraction, 41);
+    let mut cfg = lab.cfg.clone();
+    cfg.train.n_trees = cfg.train.n_trees.min(200);
+
+    let mut table = Table::new(
+        "== Fig. 6: R^2 score of the latency model vs training-set fraction ==",
+        &["fraction", "train designs", "R^2 Set-I", "R^2 Set-I&II"],
+    );
+    let truth: Vec<f64> = test.points.iter().map(|p| p.measurement.latency_s).collect();
+    let mut final_r2 = (0.0, 0.0);
+    for &f in &fractions {
+        let n = ((train_full.len() as f64) * f).round() as usize;
+        let idx: Vec<usize> = (0..n).collect();
+        let sub = train_full.subset(&idx);
+        let mut row = vec![format!("{:.0}%", f * 100.0), n.to_string()];
+        let mut scores = (0.0, 0.0);
+        for (slot, set) in [FeatureSet::SetI, FeatureSet::SetIAndII].iter().enumerate() {
+            let model = Predictors::train(&sub, &cfg, *set);
+            let pred: Vec<f64> = test
+                .points
+                .iter()
+                .map(|p| model.predict(&p.gemm, &p.tiling).latency_s)
+                .collect();
+            let score = r2(&truth, &pred);
+            row.push(format!("{score:.4}"));
+            if slot == 0 {
+                scores.0 = score;
+            } else {
+                scores.1 = score;
+            }
+        }
+        final_r2 = scores;
+        table.row(row);
+    }
+    format!(
+        "{}paper: Set-I&II reaches R^2 = 0.986 with ~30% of the data; ours at 100%: \
+         Set-I {:.3}, Set-I&II {:.3}\n",
+        table.render(),
+        final_r2.0,
+        final_r2.1
+    )
+}
+
+/// Fig. 7 — latency MAPE of the ML model vs the analytical model, for
+/// known (random split) and unknown (held-out workloads) GEMMs.
+pub fn fig7_prediction_error(lab: &Lab) -> String {
+    let cfg = &lab.cfg;
+    let analytical = crate::analytical::AnalyticalModel::new(&cfg.board);
+
+    let mape_of = |test: &crate::dataset::Dataset, model: &Predictors| -> f64 {
+        let truth: Vec<f64> = test.points.iter().map(|p| p.measurement.latency_s).collect();
+        let pred: Vec<f64> = test
+            .points
+            .iter()
+            .map(|p| model.predict(&p.gemm, &p.tiling).latency_s)
+            .collect();
+        mape(&truth, &pred)
+    };
+    let mape_analytical = |test: &crate::dataset::Dataset| -> f64 {
+        let pairs: Vec<(f64, f64)> = test
+            .points
+            .iter()
+            .filter_map(|p| {
+                analytical
+                    .latency(&p.gemm, &p.tiling)
+                    .map(|est| (p.measurement.latency_s, est))
+            })
+            .collect();
+        let truth: Vec<f64> = pairs.iter().map(|x| x.0).collect();
+        let pred: Vec<f64> = pairs.iter().map(|x| x.1).collect();
+        mape(&truth, &pred)
+    };
+
+    // (a) known workloads: random 80/20 over all designs.
+    let (train_known, test_known) = lab.dataset.split_random(cfg.train.test_fraction, 77);
+    let m1_known = Predictors::train(&train_known, cfg, FeatureSet::SetI);
+    let m2_known = Predictors::train(&train_known, cfg, FeatureSet::SetIAndII);
+
+    // (b) unknown workloads: hold out 4 of the 18 training GEMMs.
+    let ids = lab.dataset.workload_ids();
+    let held: Vec<&str> = ids.iter().step_by(5).map(String::as_str).collect();
+    let (train_unk, test_unk) = lab.dataset.split_by_workload(&held);
+    let m1_unk = Predictors::train(&train_unk, cfg, FeatureSet::SetI);
+    let m2_unk = Predictors::train(&train_unk, cfg, FeatureSet::SetIAndII);
+
+    let rows = [
+        (
+            "known (80/20 split)",
+            mape_analytical(&test_known),
+            mape_of(&test_known, &m1_known),
+            mape_of(&test_known, &m2_known),
+        ),
+        (
+            "unknown (held-out workloads)",
+            mape_analytical(&test_unk),
+            mape_of(&test_unk, &m1_unk),
+            mape_of(&test_unk, &m2_unk),
+        ),
+    ];
+    let mut table = Table::new(
+        "== Fig. 7: latency prediction error (MAPE %, lower is better) ==",
+        &["split", "analytical [19]", "ML Set-I", "ML Set-I&II"],
+    );
+    for (name, a, s1, s12) in rows {
+        table.row(vec![
+            name.to_string(),
+            format!("{a:.2}"),
+            format!("{s1:.2}"),
+            format!("{s12:.2}"),
+        ]);
+    }
+    let overall_gain = 100.0 * (1.0 - rows[1].3 / rows[1].1.max(1e-9));
+    format!(
+        "{}held-out workloads: {:?}\n\
+         paper: analytical median 26.67%, ML Set-I 34.16%, Set-I&II 13.09% (50.9% better);\n\
+         unknown-workload Set-II gain here: {:.1}% vs analytical\n",
+        table.render(),
+        held,
+        overall_gain
+    )
+}
+
+/// Fig. 8 — throughput and energy efficiency vs CHARM and ARIES on
+/// G1..G13, normalized to CHARM.
+pub fn fig8_sota_comparison(lab: &Lab) -> String {
+    let comps = lab.comparisons();
+    let mut table = Table::new(
+        "== Fig. 8: throughput / energy-efficiency on VCK190, normalized to CHARM ==",
+        &[
+            "G_n", "GEMM", "thr CHARM", "thr ARIES", "thr Ours", "eff CHARM", "eff ARIES",
+            "eff Ours",
+        ],
+    );
+    let mut thr_vs_charm = Vec::new();
+    let mut thr_vs_aries = Vec::new();
+    let mut eff_vs_charm = Vec::new();
+    let mut eff_vs_aries = Vec::new();
+    for (w, c) in &comps {
+        let (Some(ch), Some(ar), Some(ot), Some(oe)) =
+            (&c.charm, &c.aries, &c.ours_throughput, &c.ours_energy)
+        else {
+            continue;
+        };
+        let base_t = ch.gflops;
+        let base_e = ch.energy_eff;
+        table.row(vec![
+            w.id.clone(),
+            w.gemm.label(),
+            "1.00".into(),
+            format!("{:.2}", ar.gflops / base_t),
+            format!("{:.2}", ot.gflops / base_t),
+            "1.00".into(),
+            format!("{:.2}", ar.energy_eff / base_e),
+            format!("{:.2}", oe.energy_eff / base_e),
+        ]);
+        thr_vs_charm.push(ot.gflops / ch.gflops);
+        thr_vs_aries.push(ot.gflops / ar.gflops);
+        eff_vs_charm.push(oe.energy_eff / ch.energy_eff);
+        eff_vs_aries.push(oe.energy_eff / ar.energy_eff);
+    }
+    format!(
+        "{}geomean speedup of Ours: {:.2}x vs CHARM (paper 1.73x), {:.2}x vs ARIES (paper 1.23x)\n\
+         geomean energy-eff gain:  {:.2}x vs CHARM (paper 1.73x), {:.2}x vs ARIES (paper 1.25x)\n\
+         ranges: thr vs ARIES {:.2}x..{:.2}x (paper 0.67-2.52), eff vs ARIES {:.2}x..{:.2}x (paper 0.84-2.69)\n",
+        table.render(),
+        geomean(&thr_vs_charm),
+        geomean(&thr_vs_aries),
+        geomean(&eff_vs_charm),
+        geomean(&eff_vs_aries),
+        thr_vs_aries.iter().copied().fold(f64::INFINITY, f64::min),
+        thr_vs_aries.iter().copied().fold(0.0, f64::max),
+        eff_vs_aries.iter().copied().fold(f64::INFINITY, f64::min),
+        eff_vs_aries.iter().copied().fold(0.0, f64::max),
+    )
+}
+
+/// Table II — evaluation platforms.
+pub fn table2_devices() -> String {
+    let board = crate::config::BoardConfig::default();
+    let mut table = Table::new(
+        "== Table II: evaluation setup ==",
+        &["device", "compute", "peak GFLOP/s", "mem BW GB/s"],
+    );
+    for d in jetson_devices() {
+        table.row(vec![
+            d.name.clone(),
+            "tensor cores".into(),
+            fnum(d.peak_gflops),
+            fnum(d.mem_bw_gbps),
+        ]);
+    }
+    table.row(vec![
+        "Versal VCK190".into(),
+        format!("{} AIEs + PL", board.aie_total),
+        fnum(board.peak_gflops()),
+        fnum(board.ddr_peak_bps / 1e9),
+    ]);
+    table.render()
+}
+
+/// Table III — resource utilization of the generated designs.
+pub fn table3_resources(lab: &Lab) -> String {
+    let comps = lab.comparisons();
+    let mut table = Table::new(
+        "== Table III: resource utilization by workload ==",
+        &[
+            "G_n", "framework", "#AIE", "BRAM %", "URAM %", "LUT %", "FF %", "DSP %",
+        ],
+    );
+    for (w, c) in &comps {
+        let mut push = |name: &str, d: &Option<crate::dse::compare::MeasuredDesign>| {
+            if let Some(d) = d {
+                table.row(vec![
+                    w.id.clone(),
+                    name.to_string(),
+                    d.n_aie.to_string(),
+                    format!("{:.1}", d.resources_pct[0]),
+                    format!("{:.1}", d.resources_pct[1]),
+                    format!("{:.1}", d.resources_pct[2]),
+                    format!("{:.1}", d.resources_pct[3]),
+                    format!("{:.1}", d.resources_pct[4]),
+                ]);
+            }
+        };
+        push("CHARM", &c.charm);
+        push("ARIES", &c.aries);
+        push("Ours (Thr)", &c.ours_throughput);
+        push("Ours (Eff)", &c.ours_energy);
+    }
+    // Paper headline: for the small/medium workloads our energy designs
+    // use ~2.95x fewer AIEs than CHARM/ARIES.
+    let mut ratios = Vec::new();
+    for (w, c) in comps.iter().take(7) {
+        if let (Some(ch), Some(oe)) = (&c.charm, &c.ours_energy) {
+            if oe.n_aie > 0 {
+                ratios.push(ch.n_aie as f64 / oe.n_aie as f64);
+            }
+        }
+        let _ = w;
+    }
+    format!(
+        "{}avg CHARM/Ours(Eff) AIE ratio on G1-G7: {:.2}x (paper: 2.95x fewer AIEs)\n",
+        table.render(),
+        if ratios.is_empty() { 0.0 } else { ratios.iter().sum::<f64>() / ratios.len() as f64 }
+    )
+}
+
+/// Fig. 9 — VCK190 vs the three Jetsons, normalized to Xavier NX.
+pub fn fig9_gpu_comparison(lab: &Lab) -> String {
+    let comps = lab.comparisons();
+    let gpus = jetson_devices();
+    let mut table = Table::new(
+        "== Fig. 9: throughput / energy efficiency vs Jetson GPUs (normalized to Xavier NX) ==",
+        &[
+            "G_n", "thr Xavier", "thr NX", "thr Orin", "thr VCK190", "eff Xavier", "eff NX",
+            "eff Orin", "eff VCK190",
+        ],
+    );
+    let mut orin_wins = Vec::new();
+    for (w, c) in &comps {
+        let Some(ours) = &c.ours_throughput else { continue };
+        let nx_thr = gpus[1].throughput(&w.gemm);
+        let nx_eff = gpus[1].energy_eff(&w.gemm);
+        let row_thr: Vec<f64> = vec![
+            gpus[0].throughput(&w.gemm) / nx_thr,
+            1.0,
+            gpus[2].throughput(&w.gemm) / nx_thr,
+            ours.gflops / nx_thr,
+        ];
+        let eff_ours = c.ours_energy.as_ref().map(|d| d.energy_eff).unwrap_or(ours.energy_eff);
+        let row_eff: Vec<f64> = vec![
+            gpus[0].energy_eff(&w.gemm) / nx_eff,
+            1.0,
+            gpus[2].energy_eff(&w.gemm) / nx_eff,
+            eff_ours / nx_eff,
+        ];
+        orin_wins.push((w.id.clone(), ours.gflops / gpus[2].throughput(&w.gemm)));
+        table.row(vec![
+            w.id.clone(),
+            format!("{:.2}", row_thr[0]),
+            "1.00".into(),
+            format!("{:.2}", row_thr[2]),
+            format!("{:.2}", row_thr[3]),
+            format!("{:.2}", row_eff[0]),
+            "1.00".into(),
+            format!("{:.2}", row_eff[2]),
+            format!("{:.2}", row_eff[3]),
+        ]);
+    }
+    let best = orin_wins
+        .iter()
+        .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .cloned()
+        .unwrap_or(("-".into(), 0.0));
+    format!(
+        "{}paper: Jetsons win on memory-bound G1-G8 (BW 2.33-8x), gap closes for \
+         compute-bound G9-G13; G12 VCK190 beats AGX Orin by 2.3x.\n\
+         here: best VCK190-vs-Orin throughput ratio = {:.2}x on {}\n",
+        table.render(),
+        best.1,
+        best.0
+    )
+}
+
+/// Fig. 10 — Pareto fronts: ARIES vs Ours vs actual, with hypervolume.
+pub fn fig10_pareto_fronts(lab: &Lab) -> String {
+    let picks = ["G2", "G4", "G6", "G8", "G10"];
+    let engine = lab.engine();
+    let sim = VersalSim::new(&lab.cfg);
+    let ex = ExhaustiveExplorer::new(sim.clone());
+    let mut out = String::new();
+    out.push_str("== Fig. 10: Pareto fronts (measured GFLOP/s x GFLOP/s/W) ==\n");
+    let mut hv_ratios = Vec::new();
+    for id in picks {
+        let w = crate::workloads::eval_workload(id).unwrap();
+        let g = w.gemm;
+        let actual = ex.true_front(&g);
+        // Ours: predicted Pareto front, then measured.
+        let ours_pts: Vec<(f64, f64)> = match engine.explore(&g) {
+            Err(_) => vec![],
+            Ok(r) => {
+                let pts: Vec<(f64, f64)> =
+                    crate::dse::epsilon_pareto(&r.feasible, 0.04, 60)
+                        .iter()
+                        .filter_map(|c| {
+                            sim.evaluate(&g, &c.tiling, BufferPlacement::UramFirst)
+                                .ok()
+                                .map(|m| (m.gflops, m.energy_eff))
+                        })
+                        .collect();
+                pareto_front_max(&pts)
+            }
+        };
+        // ARIES: per-AIE-count analytically-best designs, measured.
+        let aries_pts = aries_front(lab, &g);
+
+        let scale = (
+            actual.iter().map(|p| p.0).fold(1e-9, f64::max),
+            actual.iter().map(|p| p.1).fold(1e-9, f64::max),
+        );
+        let hv_actual = measured_hypervolume(&actual, scale);
+        let hv_ours = measured_hypervolume(&ours_pts, scale);
+        let hv_aries = measured_hypervolume(&aries_pts, scale);
+        if hv_aries > 0.0 && hv_ours > 0.0 {
+            hv_ratios.push(hv_ours / hv_aries);
+        }
+        let mut pts: Vec<(f64, f64, char)> =
+            actual.iter().map(|&(x, y)| (x, y, '.')).collect();
+        pts.extend(aries_pts.iter().map(|&(x, y)| (x, y, 'a')));
+        pts.extend(ours_pts.iter().map(|&(x, y)| (x, y, 'o')));
+        out.push_str(&scatter_plot(
+            &format!(
+                "{id} {}   .=actual front  a=ARIES  o=Ours   HV: actual {:.3} ours {:.3} aries {:.3}",
+                g.label(),
+                hv_actual,
+                hv_ours,
+                hv_aries
+            ),
+            &pts,
+            64,
+            12,
+            "GFLOP/s",
+            "GFLOP/s/W",
+        ));
+    }
+    if hv_ratios.is_empty() {
+        out.push_str("hypervolume ratio: n/a (no comparable fronts)\n");
+    } else {
+        out.push_str(&format!(
+            "geomean hypervolume ratio Ours/ARIES: {:.2}x (paper: 2.18x, up to 3.84x); max {:.2}x\n",
+            geomean(&hv_ratios),
+            hv_ratios.iter().copied().fold(0.0, f64::max)
+        ));
+    }
+    out
+}
+
+/// ARIES's "front": its analytically-best design per distinct AIE count,
+/// measured on the simulator, reduced to the non-dominated set.
+pub fn aries_front(lab: &Lab, g: &Gemm) -> Vec<(f64, f64)> {
+    use std::collections::HashMap;
+    let policy = AriesPolicy::new(&lab.cfg.board);
+    let limits = crate::tiling::TilingLimits::from_board(&lab.cfg.board);
+    let sim = VersalSim::new(&lab.cfg);
+    let cands = crate::tiling::enumerate_candidates(g, lab.cfg.board.micro_tile, &limits);
+    let mut best_per_aie: HashMap<usize, (f64, crate::tiling::Tiling)> = HashMap::new();
+    for t in cands {
+        let res = policy.model.resources(&t, BufferPlacement::UramFirst);
+        if res.max_utilization(&lab.cfg.board) > policy.util_cap {
+            continue;
+        }
+        if let Some(thr) = policy.model.throughput(g, &t) {
+            let e = best_per_aie.entry(t.n_aie()).or_insert((0.0, t));
+            if thr > e.0 {
+                *e = (thr, t);
+            }
+        }
+    }
+    let pts: Vec<(f64, f64)> = best_per_aie
+        .values()
+        .filter_map(|(_, t)| {
+            sim.evaluate(g, t, BufferPlacement::UramFirst)
+                .ok()
+                .map(|m| (m.gflops, m.energy_eff))
+        })
+        .collect();
+    pareto_front_max(&pts)
+}
+
+/// Model-quality summary: 𝓟/𝓡 MAPEs, ρ-latency correlation, DSE cost.
+pub fn model_quality(lab: &Lab) -> String {
+    let cfg = &lab.cfg;
+    let (train, test) = lab.dataset.split_random(cfg.train.test_fraction, 123);
+    let model = Predictors::train(&train, cfg, FeatureSet::SetIAndII);
+
+    let p_truth: Vec<f64> = test.points.iter().map(|p| p.measurement.power_w).collect();
+    let p_pred: Vec<f64> = test
+        .points
+        .iter()
+        .map(|p| model.predict(&p.gemm, &p.tiling).power_w)
+        .collect();
+
+    // Resource MAPE over the 5 outputs (skip zero-truth entries).
+    let mut r_truth = Vec::new();
+    let mut r_pred = Vec::new();
+    for p in &test.points {
+        let truth = p.measurement.resources.as_percent_vec(&cfg.board);
+        let pred = model.predict(&p.gemm, &p.tiling).resources_pct;
+        for j in 0..5 {
+            if truth[j] > 0.5 {
+                r_truth.push(truth[j]);
+                r_pred.push(pred[j]);
+            }
+        }
+    }
+
+    let rho: Vec<f64> = lab
+        .dataset
+        .points
+        .iter()
+        .map(|p| (p.gemm.flops() / p.tiling.n_aie() as f64).ln())
+        .collect();
+    let lat: Vec<f64> = lab
+        .dataset
+        .points
+        .iter()
+        .map(|p| p.measurement.latency_s.ln())
+        .collect();
+
+    // DSE wall-clock on the largest eval workload.
+    let engine = lab.engine();
+    let g = eval_workloads().last().unwrap().gemm;
+    let start = std::time::Instant::now();
+    let dse = engine.explore(&g).ok();
+    let dse_s = start.elapsed().as_secs_f64();
+
+    format!(
+        "== Model quality summary ==\n\
+         dataset: {} designs, {} workloads\n\
+         power model MAPE:    {:.2}%   (paper: 7.05%)\n\
+         resource model MAPE: {:.2}%   (paper: 6.05%)\n\
+         Pearson r (ln rho, ln latency): {:.3}   (paper: 0.81)\n\
+         DSE wall-clock on {}: {:.3} s over {} candidates (paper: < 2 s)\n",
+        lab.dataset.len(),
+        lab.dataset.workload_ids().len(),
+        mape(&p_truth, &p_pred),
+        mape(&r_truth, &r_pred),
+        pearson(&rho, &lat),
+        g.label(),
+        dse_s,
+        dse.map(|r| r.n_candidates).unwrap_or(0)
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::dataset::Dataset;
+    use crate::workloads::training_workloads;
+
+    fn quick_lab() -> Lab {
+        let mut cfg = Config::default();
+        cfg.dataset.top_k = 10;
+        cfg.dataset.bottom_k = 6;
+        cfg.dataset.random_k = 40;
+        cfg.train.n_trees = 60;
+        cfg.train.learning_rate = 0.2;
+        let wl: Vec<_> = training_workloads().into_iter().take(5).collect();
+        let ds = Dataset::generate(&cfg, &wl);
+        let predictors = Predictors::train(&ds, &cfg, FeatureSet::SetIAndII);
+        Lab::in_memory(cfg, ds, predictors)
+    }
+
+    #[test]
+    fn fig1_renders_with_gaps() {
+        let lab = quick_lab();
+        let s = fig1_tiling_impact(&lab);
+        assert!(s.contains("Fig. 1"));
+        assert!(s.contains("best-throughput design"));
+        assert!(s.contains("less energy-efficient"));
+    }
+
+    #[test]
+    fn fig3_renders_buckets() {
+        let lab = quick_lab();
+        let s = fig3_power_vs_aies(&lab);
+        assert!(s.contains("Fig. 3"));
+        assert!(s.contains("P median"));
+        // At least 4 populated buckets.
+        assert!(s.lines().filter(|l| l.starts_with('|')).count() >= 5);
+    }
+
+    #[test]
+    fn table2_contains_all_devices() {
+        let s = table2_devices();
+        for name in ["AGX Xavier", "Xavier NX", "AGX Orin", "Versal VCK190"] {
+            assert!(s.contains(name), "missing {name}");
+        }
+        assert!(s.contains("8000"));
+    }
+
+    #[test]
+    fn fig7_reports_three_models() {
+        let lab = quick_lab();
+        let s = fig7_prediction_error(&lab);
+        assert!(s.contains("analytical"));
+        assert!(s.contains("Set-I&II"));
+        assert!(s.contains("unknown"));
+    }
+
+    #[test]
+    fn model_quality_renders() {
+        let lab = quick_lab();
+        let s = model_quality(&lab);
+        assert!(s.contains("power model MAPE"));
+        assert!(s.contains("DSE wall-clock"));
+    }
+
+    #[test]
+    fn aries_front_nonempty_and_nondominated() {
+        let lab = quick_lab();
+        let front = aries_front(&lab, &Gemm::new(224, 768, 768));
+        assert!(!front.is_empty());
+        for (i, &(x1, y1)) in front.iter().enumerate() {
+            for (j, &(x2, y2)) in front.iter().enumerate() {
+                if i != j {
+                    assert!(!(x2 >= x1 && y2 >= y1 && (x2 > x1 || y2 > y1)));
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,133 @@
+//! Report generation: regenerates every table and figure of the paper's
+//! evaluation as ASCII tables/plots (see DESIGN.md §4 for the index).
+//!
+//! [`Lab`] is the shared experiment context: it loads (or generates and
+//! caches) the offline-phase dataset and the trained predictors, so
+//! every figure starts from the same artifacts the real framework would.
+
+pub mod ablation;
+pub mod figures;
+
+use std::cell::RefCell;
+use std::path::PathBuf;
+
+use crate::config::Config;
+use crate::dataset::Dataset;
+use crate::dse::compare::{compare_frameworks, WorkloadComparison};
+use crate::dse::DseEngine;
+use crate::features::FeatureSet;
+use crate::models::Predictors;
+use crate::workloads::{eval_workloads, training_workloads, Workload};
+
+/// Shared experiment context for all reports.
+pub struct Lab {
+    pub cfg: Config,
+    pub data_dir: PathBuf,
+    pub dataset: Dataset,
+    pub predictors: Predictors,
+    comparisons: RefCell<Option<Vec<(Workload, WorkloadComparison)>>>,
+}
+
+impl Lab {
+    /// Load the dataset + models from `data_dir`, generating and caching
+    /// them on first use (the offline phase).
+    pub fn prepare(cfg: Config, data_dir: PathBuf) -> anyhow::Result<Lab> {
+        std::fs::create_dir_all(&data_dir)?;
+        let ds_path = data_dir.join("dataset.csv");
+        let dataset = if ds_path.exists() {
+            let ds = Dataset::load(&cfg, &ds_path)?;
+            eprintln!("[lab] loaded dataset: {} designs from {}", ds.len(), ds_path.display());
+            ds
+        } else {
+            eprintln!("[lab] generating offline-phase dataset (~6000 designs)...");
+            let ds = Dataset::generate(&cfg, &training_workloads());
+            ds.save(&cfg, &ds_path)?;
+            eprintln!("[lab] saved {} designs to {}", ds.len(), ds_path.display());
+            ds
+        };
+        let model_path = data_dir.join("predictors.json");
+        let predictors = if model_path.exists() {
+            let p = Predictors::load(&model_path)?;
+            eprintln!("[lab] loaded predictors from {}", model_path.display());
+            p
+        } else {
+            eprintln!("[lab] training predictors (L, P, R models)...");
+            let p = Predictors::train(&dataset, &cfg, FeatureSet::SetIAndII);
+            p.save(&model_path)?;
+            eprintln!("[lab] saved predictors to {}", model_path.display());
+            p
+        };
+        Ok(Lab {
+            cfg,
+            data_dir,
+            dataset,
+            predictors,
+            comparisons: RefCell::new(None),
+        })
+    }
+
+    /// In-memory lab for tests/benches (no disk caching).
+    pub fn in_memory(cfg: Config, dataset: Dataset, predictors: Predictors) -> Lab {
+        Lab {
+            cfg,
+            data_dir: PathBuf::new(),
+            dataset,
+            predictors,
+            comparisons: RefCell::new(None),
+        }
+    }
+
+    pub fn engine(&self) -> DseEngine {
+        DseEngine::new(self.predictors.clone(), &self.cfg.board)
+    }
+
+    /// CHARM/ARIES/Ours on all 13 eval workloads, computed once.
+    pub fn comparisons(&self) -> Vec<(Workload, WorkloadComparison)> {
+        if let Some(c) = self.comparisons.borrow().as_ref() {
+            return c.clone();
+        }
+        let engine = self.engine();
+        let out: Vec<(Workload, WorkloadComparison)> = eval_workloads()
+            .into_iter()
+            .map(|w| {
+                let c = compare_frameworks(&self.cfg, &engine, &w.gemm);
+                (w, c)
+            })
+            .collect();
+        *self.comparisons.borrow_mut() = Some(out.clone());
+        out
+    }
+}
+
+/// Render a report by its id (`fig1`, ..., `table3`, `model-quality`).
+pub fn render(lab: &Lab, id: &str) -> anyhow::Result<String> {
+    Ok(match id {
+        "fig1" => figures::fig1_tiling_impact(lab),
+        "fig3" => figures::fig3_power_vs_aies(lab),
+        "fig4" => figures::fig4_tradeoffs(lab),
+        "fig6" => figures::fig6_r2_vs_training_size(lab),
+        "fig7" => figures::fig7_prediction_error(lab),
+        "fig8" => figures::fig8_sota_comparison(lab),
+        "fig9" => figures::fig9_gpu_comparison(lab),
+        "fig10" => figures::fig10_pareto_fronts(lab),
+        "table2" => figures::table2_devices(),
+        "table3" => figures::table3_resources(lab),
+        "model-quality" => figures::model_quality(lab),
+        "ablation" => ablation::ablation(lab),
+        "all" => {
+            let ids = [
+                "table2", "fig1", "fig3", "fig4", "fig6", "fig7", "fig8", "table3", "fig9",
+                "fig10", "model-quality", "ablation",
+            ];
+            let mut out = String::new();
+            for i in ids {
+                out.push_str(&render(lab, i)?);
+                out.push('\n');
+            }
+            out
+        }
+        other => anyhow::bail!(
+            "unknown report `{other}` (fig1|fig3|fig4|fig6|fig7|fig8|fig9|fig10|table2|table3|model-quality|ablation|all)"
+        ),
+    })
+}

@@ -1,0 +1,72 @@
+//! Minimal benchmark harness (criterion is not in the offline crate
+//! set). Used by every `benches/*.rs` target via `harness = false`.
+//!
+//! Reports min / median / mean / p95 over timed iterations after a
+//! warm-up phase, plus derived throughput when the caller supplies a
+//! work unit.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark's timing summary.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchStats {
+    pub iters: usize,
+    pub min: Duration,
+    pub median: Duration,
+    pub mean: Duration,
+    pub p95: Duration,
+}
+
+impl BenchStats {
+    pub fn per_sec(&self) -> f64 {
+        1.0 / self.mean.as_secs_f64()
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` unmeasured runs.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> BenchStats {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed());
+    }
+    samples.sort();
+    let total: Duration = samples.iter().sum();
+    BenchStats {
+        iters,
+        min: samples[0],
+        median: samples[samples.len() / 2],
+        mean: total / iters as u32,
+        p95: samples[((samples.len() as f64 * 0.95) as usize).min(samples.len() - 1)],
+    }
+}
+
+/// Pretty-print a named result row.
+pub fn report(name: &str, stats: &BenchStats) {
+    println!(
+        "{name:<44} {:>10.3?} min  {:>10.3?} med  {:>10.3?} mean  {:>10.3?} p95  ({} iters)",
+        stats.min, stats.median, stats.mean, stats.p95, stats.iters
+    );
+}
+
+/// Pretty-print with a throughput figure (`units` processed per call).
+pub fn report_throughput(name: &str, stats: &BenchStats, units: f64, unit_name: &str) {
+    println!(
+        "{name:<44} {:>10.3?} med   {:>12.1} {unit_name}/s",
+        stats.median,
+        units / stats.median.as_secs_f64()
+    );
+}
+
+/// Wall-clock one closure once (for end-to-end phases).
+pub fn once<T>(name: &str, f: impl FnOnce() -> T) -> T {
+    let t = Instant::now();
+    let out = f();
+    println!("{name:<44} {:>10.3?} (single run)", t.elapsed());
+    out
+}

@@ -1,0 +1,156 @@
+//! Tiny CLI argument parser (no clap in the offline crate set).
+//!
+//! Grammar: `versal-gemm <subcommand> [--flag] [--key value] [positional...]`.
+//! Flags may also be written `--key=value`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut args = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|nxt| !nxt.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    args.options.insert(name.to_string(), v);
+                } else {
+                    args.flags.push(name.to_string());
+                }
+            } else if args.subcommand.is_none() {
+                args.subcommand = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        args
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(String::as_str)
+    }
+
+    pub fn opt_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt(name).unwrap_or(default)
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> anyhow::Result<usize> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got `{v}`")),
+        }
+    }
+
+    pub fn opt_u64(&self, name: &str, default: u64) -> anyhow::Result<u64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got `{v}`")),
+        }
+    }
+
+    pub fn opt_f64(&self, name: &str, default: f64) -> anyhow::Result<f64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects a number, got `{v}`")),
+        }
+    }
+
+    /// Parse `MxNxK` GEMM dims, e.g. `--gemm 512x2048x2048`.
+    pub fn opt_gemm_dims(&self, name: &str) -> anyhow::Result<Option<(usize, usize, usize)>> {
+        match self.opt(name) {
+            None => Ok(None),
+            Some(v) => {
+                let parts: Vec<&str> = v.split('x').collect();
+                if parts.len() != 3 {
+                    anyhow::bail!("--{name} expects MxNxK, got `{v}`");
+                }
+                let m = parts[0].parse()?;
+                let n = parts[1].parse()?;
+                let k = parts[2].parse()?;
+                Ok(Some((m, n, k)))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(tokens: &[&str]) -> Args {
+        Args::parse(tokens.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_positional() {
+        let a = parse(&["dse", "pos1", "pos2"]);
+        assert_eq!(a.subcommand.as_deref(), Some("dse"));
+        assert_eq!(a.positional, vec!["pos1", "pos2"]);
+    }
+
+    #[test]
+    fn options_both_styles() {
+        let a = parse(&["train", "--seed", "7", "--out=models.json"]);
+        assert_eq!(a.opt("seed"), Some("7"));
+        assert_eq!(a.opt("out"), Some("models.json"));
+        assert_eq!(a.opt_u64("seed", 0).unwrap(), 7);
+    }
+
+    #[test]
+    fn bare_flags() {
+        let a = parse(&["report", "fig8", "--verbose"]);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        assert_eq!(a.positional, vec!["fig8"]);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse(&["x", "--a", "--b", "v"]);
+        assert!(a.flag("a"));
+        assert_eq!(a.opt("b"), Some("v"));
+    }
+
+    #[test]
+    fn gemm_dims() {
+        let a = parse(&["dse", "--gemm", "512x2048x1024"]);
+        assert_eq!(a.opt_gemm_dims("gemm").unwrap(), Some((512, 2048, 1024)));
+        let bad = parse(&["dse", "--gemm", "512x2048"]);
+        assert!(bad.opt_gemm_dims("gemm").is_err());
+    }
+
+    #[test]
+    fn bad_numeric_is_error() {
+        let a = parse(&["x", "--n", "abc"]);
+        assert!(a.opt_usize("n", 1).is_err());
+    }
+}

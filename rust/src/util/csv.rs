@@ -1,0 +1,179 @@
+//! Minimal CSV reader/writer for dataset persistence.
+//!
+//! The dataset schema is numeric-heavy and never contains embedded commas
+//! or newlines, but quoting is still handled for robustness.
+
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Csv {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Csv {
+    pub fn new(header: &[&str]) -> Csv {
+        Csv {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, row: Vec<String>) {
+        assert_eq!(row.len(), self.header.len(), "csv row width mismatch");
+        self.rows.push(row);
+    }
+
+    pub fn col_index(&self, name: &str) -> Option<usize> {
+        self.header.iter().position(|h| h == name)
+    }
+
+    /// Typed column accessor.
+    pub fn f64_col(&self, name: &str) -> anyhow::Result<Vec<f64>> {
+        let idx = self
+            .col_index(name)
+            .ok_or_else(|| anyhow::anyhow!("no csv column `{name}`"))?;
+        self.rows
+            .iter()
+            .map(|r| {
+                r[idx]
+                    .parse::<f64>()
+                    .map_err(|_| anyhow::anyhow!("bad f64 `{}` in column `{name}`", r[idx]))
+            })
+            .collect()
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&encode_row(&self.header));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&encode_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn parse(text: &str) -> anyhow::Result<Csv> {
+        let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+        let header = match lines.next() {
+            Some(h) => decode_row(h)?,
+            None => anyhow::bail!("empty csv"),
+        };
+        let mut rows = Vec::new();
+        for line in lines {
+            let row = decode_row(line)?;
+            if row.len() != header.len() {
+                anyhow::bail!(
+                    "csv row has {} fields, header has {}",
+                    row.len(),
+                    header.len()
+                );
+            }
+            rows.push(row);
+        }
+        Ok(Csv { header, rows })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_string())?;
+        Ok(())
+    }
+
+    pub fn load(path: &std::path::Path) -> anyhow::Result<Csv> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        Csv::parse(&text)
+    }
+}
+
+fn encode_row(cells: &[String]) -> String {
+    cells
+        .iter()
+        .map(|c| {
+            if c.contains(',') || c.contains('"') || c.contains('\n') {
+                format!("\"{}\"", c.replace('"', "\"\""))
+            } else {
+                c.clone()
+            }
+        })
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+fn decode_row(line: &str) -> anyhow::Result<Vec<String>> {
+    let mut cells = Vec::new();
+    let mut cur = String::new();
+    let mut chars = line.chars().peekable();
+    let mut in_quotes = false;
+    while let Some(c) = chars.next() {
+        match c {
+            '"' if in_quotes => {
+                if chars.peek() == Some(&'"') {
+                    chars.next();
+                    cur.push('"');
+                } else {
+                    in_quotes = false;
+                }
+            }
+            '"' if cur.is_empty() => in_quotes = true,
+            ',' if !in_quotes => {
+                cells.push(std::mem::take(&mut cur));
+            }
+            c => cur.push(c),
+        }
+    }
+    if in_quotes {
+        anyhow::bail!("unterminated quote in csv row");
+    }
+    cells.push(cur);
+    Ok(cells)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_plain() {
+        let mut csv = Csv::new(&["a", "b"]);
+        csv.push(vec!["1".into(), "2.5".into()]);
+        csv.push(vec!["x".into(), "y".into()]);
+        let parsed = Csv::parse(&csv.to_string()).unwrap();
+        assert_eq!(parsed, csv);
+    }
+
+    #[test]
+    fn roundtrip_quoted() {
+        let mut csv = Csv::new(&["name"]);
+        csv.push(vec!["has,comma".into()]);
+        csv.push(vec!["has\"quote".into()]);
+        let parsed = Csv::parse(&csv.to_string()).unwrap();
+        assert_eq!(parsed, csv);
+    }
+
+    #[test]
+    fn typed_column() {
+        let csv = Csv::parse("x,y\n1,2\n3,4.5\n").unwrap();
+        assert_eq!(csv.f64_col("y").unwrap(), vec![2.0, 4.5]);
+        assert!(csv.f64_col("z").is_err());
+    }
+
+    #[test]
+    fn width_mismatch_rejected() {
+        assert!(Csv::parse("a,b\n1\n").is_err());
+    }
+
+    #[test]
+    fn save_load(
+    ) {
+        let dir = std::env::temp_dir().join("versal_gemm_csv_test");
+        let path = dir.join("d.csv");
+        let mut csv = Csv::new(&["k"]);
+        csv.push(vec!["v".into()]);
+        csv.save(&path).unwrap();
+        assert_eq!(Csv::load(&path).unwrap(), csv);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

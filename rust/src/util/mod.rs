@@ -1,0 +1,63 @@
+//! Foundation utilities: deterministic PRNG, JSON/TOML/CSV codecs, CLI
+//! parsing, ASCII table rendering, and a tiny property-testing helper.
+//!
+//! All hand-rolled: the offline crate set has no serde facade, clap,
+//! rand, or proptest (see DESIGN.md §2 note on vendored dependencies).
+
+pub mod bench;
+pub mod cli;
+pub mod csv;
+pub mod json;
+pub mod rng;
+pub mod table;
+pub mod toml;
+
+/// Property-testing helper: run `check` against `cases` randomly
+/// generated inputs, reporting the failing seed on panic. A lightweight
+/// stand-in for proptest in the offline environment — used by the L3
+/// invariant tests (routing, batching, tiling, Pareto).
+pub fn forall<G, T, C>(seed: u64, cases: usize, mut generate: G, mut check: C)
+where
+    G: FnMut(&mut rng::Rng) -> T,
+    T: std::fmt::Debug,
+    C: FnMut(&T),
+{
+    let mut root = rng::Rng::new(seed);
+    for case in 0..cases {
+        let mut case_rng = root.fork(case as u64);
+        let input = generate(&mut case_rng);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| check(&input)));
+        if let Err(panic) = result {
+            eprintln!(
+                "property failed on case {case} (seed {seed}): input = {input:?}"
+            );
+            std::panic::resume_unwind(panic);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_runs_all_cases() {
+        let mut count = 0;
+        forall(
+            1,
+            25,
+            |r| r.below(10),
+            |x| {
+                assert!(*x < 10);
+                count += 1;
+            },
+        );
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    #[should_panic]
+    fn forall_propagates_failure() {
+        forall(2, 50, |r| r.below(100), |x| assert!(*x < 50));
+    }
+}

@@ -1,0 +1,205 @@
+//! ASCII table / series rendering for the `report` module.
+//!
+//! Every paper figure and table is regenerated as text: tables render with
+//! aligned columns, figures render as labeled series (and, where useful,
+//! a coarse scatter plot) so the *shape* of each result is visible in a
+//! terminal and diffable in EXPERIMENTS.md.
+
+/// A simple column-aligned table.
+#[derive(Debug, Default, Clone)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width mismatch in table `{}`",
+            self.title
+        );
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.chars().count());
+            }
+        }
+        let sep: String = {
+            let mut s = String::from("+");
+            for w in &widths {
+                s.push_str(&"-".repeat(w + 2));
+                s.push('+');
+            }
+            s
+        };
+        let fmt_row = |cells: &[String]| -> String {
+            let mut s = String::from("|");
+            for i in 0..ncol {
+                let cell = cells.get(i).map(String::as_str).unwrap_or("");
+                let pad = widths[i] - cell.chars().count();
+                s.push(' ');
+                s.push_str(cell);
+                s.push_str(&" ".repeat(pad + 1));
+                s.push('|');
+            }
+            s
+        };
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("{}\n", self.title));
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out
+    }
+}
+
+/// Format a float with a sensible number of digits for report cells.
+pub fn fnum(x: f64) -> String {
+    if !x.is_finite() {
+        return format!("{x}");
+    }
+    let a = x.abs();
+    if a >= 1000.0 {
+        format!("{x:.0}")
+    } else if a >= 100.0 {
+        format!("{x:.1}")
+    } else if a >= 1.0 {
+        format!("{x:.2}")
+    } else if a == 0.0 {
+        "0".to_string()
+    } else {
+        format!("{x:.4}")
+    }
+}
+
+/// Render an xy scatter as a coarse character grid (for Fig. 1 / Fig. 10
+/// style frontier plots). Points are given as (x, y, glyph).
+pub fn scatter_plot(
+    title: &str,
+    points: &[(f64, f64, char)],
+    width: usize,
+    height: usize,
+    xlabel: &str,
+    ylabel: &str,
+) -> String {
+    let mut out = format!("{title}\n");
+    if points.is_empty() {
+        out.push_str("  (no points)\n");
+        return out;
+    }
+    let (mut xmin, mut xmax) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut ymin, mut ymax) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &(x, y, _) in points {
+        xmin = xmin.min(x);
+        xmax = xmax.max(x);
+        ymin = ymin.min(y);
+        ymax = ymax.max(y);
+    }
+    if (xmax - xmin).abs() < 1e-12 {
+        xmax = xmin + 1.0;
+    }
+    if (ymax - ymin).abs() < 1e-12 {
+        ymax = ymin + 1.0;
+    }
+    let mut grid = vec![vec![' '; width]; height];
+    for &(x, y, glyph) in points {
+        let cx = (((x - xmin) / (xmax - xmin)) * (width - 1) as f64).round() as usize;
+        let cy = (((y - ymin) / (ymax - ymin)) * (height - 1) as f64).round() as usize;
+        let row = height - 1 - cy.min(height - 1);
+        let col = cx.min(width - 1);
+        // Later points overwrite earlier ones only if the cell is blank or
+        // a "background" dot, so highlighted glyphs stay visible.
+        if grid[row][col] == ' ' || glyph != '.' {
+            grid[row][col] = glyph;
+        }
+    }
+    out.push_str(&format!("  {ylabel} ({:.3} .. {:.3})\n", ymin, ymax));
+    for row in grid {
+        out.push_str("  |");
+        out.push_str(&row.into_iter().collect::<String>());
+        out.push('\n');
+    }
+    out.push_str("  +");
+    out.push_str(&"-".repeat(width));
+    out.push('\n');
+    out.push_str(&format!("   {xlabel} ({:.3} .. {:.3})\n", xmin, xmax));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["name", "value"]);
+        t.row(vec!["a".into(), "1".into()]);
+        t.row(vec!["long-name".into(), "2.5".into()]);
+        let s = t.render();
+        assert!(s.contains("| name      | value |"));
+        assert!(s.contains("| long-name | 2.5   |"));
+        // All separator lines are identical.
+        let seps: Vec<&str> = s.lines().filter(|l| l.starts_with('+')).collect();
+        assert_eq!(seps.len(), 3);
+        assert!(seps.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_mismatch_panics() {
+        let mut t = Table::new("demo", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn fnum_ranges() {
+        assert_eq!(fnum(12345.6), "12346");
+        assert_eq!(fnum(123.45), "123.5");
+        assert_eq!(fnum(1.234), "1.23");
+        assert_eq!(fnum(0.01234), "0.0123");
+        assert_eq!(fnum(0.0), "0");
+    }
+
+    #[test]
+    fn scatter_contains_glyphs() {
+        let pts = vec![(0.0, 0.0, '.'), (1.0, 1.0, '*'), (0.5, 0.5, 'o')];
+        let s = scatter_plot("t", &pts, 20, 8, "x", "y");
+        assert!(s.contains('*'));
+        assert!(s.contains('o'));
+        assert!(s.contains("x (0.000 .. 1.000)"));
+    }
+
+    #[test]
+    fn scatter_empty() {
+        let s = scatter_plot("t", &[], 10, 4, "x", "y");
+        assert!(s.contains("no points"));
+    }
+}

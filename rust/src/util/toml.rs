@@ -1,0 +1,277 @@
+//! Minimal TOML-subset parser for the config system.
+//!
+//! Supports what our configs need: `[section]` and `[section.sub]`
+//! headers, `key = value` with string / integer / float / bool / array
+//! values, `#` comments, and blank lines. Keys flatten to dotted paths
+//! (`"sim.ddr_peak_gbps"`). No multi-line strings, dates, or table
+//! arrays — config files stay within this subset by construction.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Int(x) => Some(*x as f64),
+            TomlValue::Float(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_i64().and_then(|x| usize::try_from(x).ok())
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// A flat map of dotted keys to values.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TomlDoc {
+    pub entries: BTreeMap<String, TomlValue>,
+}
+
+#[derive(Debug, thiserror::Error)]
+#[error("toml parse error on line {line}: {msg}")]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<TomlDoc, TomlError> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            let err = |msg: &str| TomlError {
+                line: lineno + 1,
+                msg: msg.to_string(),
+            };
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest.strip_suffix(']').ok_or_else(|| err("unterminated section"))?;
+                let name = name.trim();
+                if name.is_empty() {
+                    return Err(err("empty section name"));
+                }
+                section = name.to_string();
+            } else {
+                let eq = line.find('=').ok_or_else(|| err("expected `key = value`"))?;
+                let key = line[..eq].trim();
+                if key.is_empty() {
+                    return Err(err("empty key"));
+                }
+                let value = parse_value(line[eq + 1..].trim()).map_err(|m| err(&m))?;
+                let full = if section.is_empty() {
+                    key.to_string()
+                } else {
+                    format!("{section}.{key}")
+                };
+                doc.entries.insert(full, value);
+            }
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&TomlValue> {
+        self.entries.get(key)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(TomlValue::as_f64).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(TomlValue::as_usize).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .and_then(TomlValue::as_i64)
+            .and_then(|x| u64::try_from(x).ok())
+            .unwrap_or(default)
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).and_then(TomlValue::as_str).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(TomlValue::as_bool).unwrap_or(default)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // `#` starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(text: &str) -> Result<TomlValue, String> {
+    let text = text.trim();
+    if text.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(inner) = text.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| "unterminated string".to_string())?;
+        return Ok(TomlValue::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if let Some(inner) = text.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| "unterminated array".to_string())?;
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            let part = part.trim();
+            if !part.is_empty() {
+                items.push(parse_value(part)?);
+            }
+        }
+        return Ok(TomlValue::Array(items));
+    }
+    match text {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    let clean = text.replace('_', "");
+    if let Ok(i) = clean.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("unrecognized value `{text}`"))
+}
+
+/// Split on commas that are not nested inside brackets or strings.
+fn split_top_level(text: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in text.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                parts.push(&text[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&text[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = TomlDoc::parse(
+            r#"
+# board spec
+seed = 42
+[board]
+name = "vck190"           # device
+aie_total = 400
+aie_clock_ghz = 1.25
+uram_banks = 463
+flag = true
+dims = [32, 64, 128]
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.u64_or("seed", 0), 42);
+        assert_eq!(doc.str_or("board.name", ""), "vck190");
+        assert_eq!(doc.usize_or("board.aie_total", 0), 400);
+        assert!((doc.f64_or("board.aie_clock_ghz", 0.0) - 1.25).abs() < 1e-12);
+        assert!(doc.bool_or("board.flag", false));
+        let arr = doc.get("board.dims").unwrap();
+        assert_eq!(
+            arr,
+            &TomlValue::Array(vec![
+                TomlValue::Int(32),
+                TomlValue::Int(64),
+                TomlValue::Int(128)
+            ])
+        );
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let doc = TomlDoc::parse("").unwrap();
+        assert_eq!(doc.usize_or("missing", 7), 7);
+        assert_eq!(doc.str_or("missing", "x"), "x");
+    }
+
+    #[test]
+    fn comments_inside_strings() {
+        let doc = TomlDoc::parse("k = \"a#b\"").unwrap();
+        assert_eq!(doc.str_or("k", ""), "a#b");
+    }
+
+    #[test]
+    fn underscored_numbers() {
+        let doc = TomlDoc::parse("bw = 25_600_000_000").unwrap();
+        assert_eq!(doc.get("bw").unwrap().as_i64(), Some(25_600_000_000));
+    }
+
+    #[test]
+    fn error_reports_line() {
+        let err = TomlDoc::parse("ok = 1\nbroken").unwrap_err();
+        assert_eq!(err.line, 2);
+    }
+
+    #[test]
+    fn nested_arrays() {
+        let doc = TomlDoc::parse("x = [[1, 2], [3]]").unwrap();
+        match doc.get("x").unwrap() {
+            TomlValue::Array(items) => assert_eq!(items.len(), 2),
+            _ => panic!("expected array"),
+        }
+    }
+}

@@ -1,0 +1,121 @@
+//! AIE array timing model.
+//!
+//! Each AI Engine runs the fixed 32x32x32 FP32 micro-kernel at ~90% of
+//! its 8-MAC/cycle peak (paper §III-A). Two effects degrade the array
+//! beyond what analytical models capture:
+//!
+//! * **cascade sync** — partial sums flow along `P_K`-deep cascade
+//!   chains; each extra stage adds pipeline stalls at tile boundaries;
+//! * **placement congestion** — beyond ~256 AIEs the mapper struggles to
+//!   place/route the PL-side stream infrastructure, degrading achieved
+//!   throughput (observed on-board as the non-uniform scaling of Fig. 3).
+
+use crate::config::{BoardConfig, SimConfig};
+use crate::tiling::Tiling;
+
+/// Ideal cycles for one 32x32x32 micro-kernel at 100% MAC efficiency.
+pub fn micro_kernel_ideal_cycles(board: &BoardConfig) -> f64 {
+    let t = board.micro_tile as f64;
+    t * t * t / board.macs_per_cycle
+}
+
+/// Achieved cycles for one micro-kernel including kernel inefficiency.
+pub fn micro_kernel_cycles(board: &BoardConfig, sim: &SimConfig) -> f64 {
+    micro_kernel_ideal_cycles(board) / sim.kernel_efficiency
+}
+
+/// Cascade efficiency for a `P_K`-deep partial-sum chain.
+pub fn cascade_efficiency(t: &Tiling, sim: &SimConfig) -> f64 {
+    (1.0 - sim.cascade_penalty * (t.p_k as f64 - 1.0)).max(0.5)
+}
+
+/// Placement/routing congestion derate: 1.0 up to the knee, growing
+/// linearly to `1 + congestion_slope` at the full array.
+pub fn congestion_factor(n_aie: usize, board: &BoardConfig, sim: &SimConfig) -> f64 {
+    if n_aie <= sim.congestion_knee {
+        1.0
+    } else {
+        let span = (board.aie_total - sim.congestion_knee).max(1) as f64;
+        1.0 + sim.congestion_slope * (n_aie - sim.congestion_knee) as f64 / span
+    }
+}
+
+/// Seconds of pure AIE compute for ONE level-2 (PL-buffer) iteration:
+/// each of the `P_M·P_N·P_K` AIEs executes `B_M·B_N·B_K` micro-kernels.
+pub fn compute_time_per_l2_iter(t: &Tiling, board: &BoardConfig, sim: &SimConfig) -> f64 {
+    let micros_per_aie = (t.b_m * t.b_n * t.b_k) as f64;
+    let cycles = micros_per_aie * micro_kernel_cycles(board, sim)
+        / cascade_efficiency(t, sim)
+        * congestion_factor(t.n_aie(), board, sim);
+    cycles / board.aie_clock_hz
+}
+
+/// Peak-relative efficiency of the array for this tiling, ignoring
+/// memory (used by tests and the report's roofline annotations).
+pub fn array_compute_efficiency(t: &Tiling, board: &BoardConfig, sim: &SimConfig) -> f64 {
+    sim.kernel_efficiency * cascade_efficiency(t, sim)
+        / congestion_factor(t.n_aie(), board, sim)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn defaults() -> (BoardConfig, SimConfig) {
+        (BoardConfig::default(), SimConfig::default())
+    }
+
+    #[test]
+    fn micro_kernel_is_4096_ideal_cycles() {
+        let (b, s) = defaults();
+        assert_eq!(micro_kernel_ideal_cycles(&b), 4096.0);
+        // ~90% efficiency => ~4551 cycles.
+        assert!((micro_kernel_cycles(&b, &s) - 4096.0 / 0.9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_aie_hits_90_percent_of_peak() {
+        // Paper §III-A: each AIE achieves ~90% of peak on the micro-kernel.
+        let (b, s) = defaults();
+        let t = Tiling::new((1, 1, 1), (1, 1, 1));
+        let secs = compute_time_per_l2_iter(&t, &b, &s);
+        let flops = 2.0 * 32.0f64.powi(3);
+        let gflops = flops / secs / 1e9;
+        let peak_per_aie = b.peak_gflops() / b.aie_total as f64;
+        let eff = gflops / peak_per_aie;
+        assert!((eff - 0.9).abs() < 1e-6, "eff {eff}");
+    }
+
+    #[test]
+    fn cascade_costs_throughput() {
+        let (b, s) = defaults();
+        let shallow = Tiling::new((8, 8, 1), (1, 1, 1));
+        let deep = Tiling::new((8, 8, 8), (1, 1, 1));
+        assert!(cascade_efficiency(&deep, &s) < cascade_efficiency(&shallow, &s));
+        assert!(array_compute_efficiency(&deep, &b, &s) < 0.9);
+    }
+
+    #[test]
+    fn congestion_kicks_in_past_knee() {
+        let (b, s) = defaults();
+        assert_eq!(congestion_factor(1, &b, &s), 1.0);
+        assert_eq!(congestion_factor(256, &b, &s), 1.0);
+        let at_400 = congestion_factor(400, &b, &s);
+        assert!((at_400 - (1.0 + s.congestion_slope)).abs() < 1e-12);
+        assert!(congestion_factor(300, &b, &s) < at_400);
+    }
+
+    #[test]
+    fn more_aies_do_not_slow_one_iteration() {
+        // Per-iteration time depends on B (work per AIE), not on P —
+        // parallel AIEs each still run B_M*B_N*B_K micro-kernels.
+        let (b, s) = defaults();
+        let small = Tiling::new((1, 1, 1), (2, 2, 2));
+        let big = Tiling::new((8, 8, 4), (2, 2, 2));
+        let ts = compute_time_per_l2_iter(&small, &b, &s);
+        let tb = compute_time_per_l2_iter(&big, &b, &s);
+        // big has cascade + congestion penalties but same per-AIE work.
+        assert!(tb >= ts);
+        assert!(tb < ts * 1.25);
+    }
+}

@@ -1,0 +1,129 @@
+//! DDR traffic and bandwidth-efficiency model.
+//!
+//! The VCK190's single DDR4 channel peaks at 25.6 GB/s (Table II), but
+//! achieved bandwidth depends strongly on the access pattern the tiling
+//! induces: short row segments mean short bursts, and `B_K == 1`
+//! (no K-reuse) thrashes the DRAM row buffer. These effects are the
+//! physical reason PL reuse buffers matter, and a major source of the
+//! analytical models' error (they assume a fixed efficiency).
+
+use crate::config::{BoardConfig, SimConfig};
+use crate::tiling::Tiling;
+use crate::workloads::Gemm;
+
+/// Total DDR traffic (bytes) for the whole GEMM under tiling `t`:
+/// A and B tiles stream once per level-3 iteration; each C tile is
+/// written back once after its K-loop completes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DdrTraffic {
+    pub a_bytes: f64,
+    pub b_bytes: f64,
+    pub c_bytes: f64,
+}
+
+impl DdrTraffic {
+    pub fn total(&self) -> f64 {
+        self.a_bytes + self.b_bytes + self.c_bytes
+    }
+}
+
+pub fn traffic(g: &Gemm, t: &Tiling, micro: usize) -> Option<DdrTraffic> {
+    let (t_m, t_n, t_k) = t.l3_iters(g, micro)?;
+    let (l2m, l2n, l2k) = t.l2_tile(micro);
+    let iters = (t_m * t_n * t_k) as f64;
+    Some(DdrTraffic {
+        a_bytes: iters * (4 * l2m * l2k) as f64,
+        b_bytes: iters * (4 * l2k * l2n) as f64,
+        c_bytes: (t_m * t_n) as f64 * (4 * l2m * l2n) as f64,
+    })
+}
+
+/// Burst efficiency for reads whose innermost contiguous run is
+/// `run_bytes`: `run / (run + overhead)`, floored — DMA engines coalesce
+/// strided rows to some degree.
+pub fn burst_efficiency(run_bytes: f64, sim: &SimConfig) -> f64 {
+    (run_bytes / (run_bytes + sim.ddr_overhead_bytes)).max(0.30)
+}
+
+/// Seconds of DDR time for the whole GEMM. Row-major layouts: A is MxK
+/// (runs of the K-tile), B is KxN (runs of the N-tile), C is MxN.
+pub fn ddr_time(g: &Gemm, t: &Tiling, board: &BoardConfig, sim: &SimConfig) -> Option<f64> {
+    let micro = board.micro_tile;
+    let traf = traffic(g, t, micro)?;
+    let (l2m, l2n, l2k) = t.l2_tile(micro);
+    let _ = l2m;
+    let eff_a = burst_efficiency((4 * l2k) as f64, sim);
+    let eff_b = burst_efficiency((4 * l2n) as f64, sim);
+    let eff_c = burst_efficiency((4 * l2n) as f64, sim);
+    // Row-buffer thrash when there is no K reuse at all.
+    let rowbuf = if t.b_k == 1 { sim.ddr_rowbuf_penalty } else { 1.0 };
+    let secs = (traf.a_bytes / eff_a + traf.b_bytes / eff_b + traf.c_bytes / eff_c)
+        / (board.ddr_peak_bps * rowbuf);
+    Some(secs)
+}
+
+/// Average achieved DDR bandwidth (bytes/s) if the GEMM runs in
+/// `latency_s` — feeds the power model.
+pub fn achieved_bandwidth(g: &Gemm, t: &Tiling, micro: usize, latency_s: f64) -> f64 {
+    traffic(g, t, micro).map(|tr| tr.total() / latency_s).unwrap_or(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn defaults() -> (BoardConfig, SimConfig) {
+        (BoardConfig::default(), SimConfig::default())
+    }
+
+    #[test]
+    fn traffic_counts_reuse() {
+        let g = Gemm::new(1024, 1024, 1024); // tiles 32^3
+        // No reuse: every tile streams for every iteration.
+        let none = Tiling::new((1, 1, 1), (1, 1, 1));
+        let tr_none = traffic(&g, &none, 32).unwrap();
+        // Full K in buffer: A and B each stream once per (i,j).
+        let k_reuse = Tiling::new((1, 1, 1), (1, 1, 32));
+        let tr_k = traffic(&g, &k_reuse, 32).unwrap();
+        assert!(tr_none.a_bytes > tr_k.a_bytes * 0.9);
+        assert_eq!(tr_none.c_bytes, tr_k.c_bytes); // C written once either way
+        // More B_N reuse cuts A traffic (A tile reused across N).
+        let n_reuse = Tiling::new((1, 1, 1), (1, 32, 1));
+        let tr_n = traffic(&g, &n_reuse, 32).unwrap();
+        assert!(tr_n.a_bytes < tr_none.a_bytes);
+    }
+
+    #[test]
+    fn burst_efficiency_monotone() {
+        let (_, s) = defaults();
+        let e_small = burst_efficiency(128.0, &s);
+        let e_big = burst_efficiency(8192.0, &s);
+        assert!(e_small < e_big);
+        assert!(e_big <= 1.0);
+        assert!(e_small >= 0.30);
+    }
+
+    #[test]
+    fn reuse_reduces_ddr_time() {
+        let (b, s) = defaults();
+        let g = Gemm::new(1024, 1024, 1024);
+        let none = ddr_time(&g, &Tiling::new((2, 2, 2), (1, 1, 1)), &b, &s).unwrap();
+        let reuse = ddr_time(&g, &Tiling::new((2, 2, 2), (2, 4, 4)), &b, &s).unwrap();
+        assert!(reuse < none, "reuse {reuse} none {none}");
+    }
+
+    #[test]
+    fn invalid_tiling_is_none() {
+        let (b, s) = defaults();
+        let g = Gemm::new(96, 96, 96); // tiles 3,3,3
+        assert!(ddr_time(&g, &Tiling::new((2, 1, 1), (1, 1, 1)), &b, &s).is_none());
+    }
+
+    #[test]
+    fn achieved_bw_bounded_by_traffic() {
+        let g = Gemm::new(512, 512, 512);
+        let t = Tiling::new((2, 2, 2), (2, 2, 2));
+        let bw = achieved_bandwidth(&g, &t, 32, 1.0);
+        assert!((bw - traffic(&g, &t, 32).unwrap().total()).abs() < 1e-6);
+    }
+}

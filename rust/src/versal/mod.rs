@@ -1,0 +1,31 @@
+//! VCK190 simulator — the "board" substrate.
+//!
+//! The paper's ground truth is 40+ days of on-board measurements
+//! (latency via XRT, power via the BEAM tool on the System Controller).
+//! This module replaces the board with a cycle-approximate model
+//! `(G, tiling) → (latency, power, resources)` calibrated to every
+//! number the paper reports, **including the nonlinear interaction
+//! effects that analytical models miss** — those effects are precisely
+//! what makes the paper's ML-driven DSE outperform analytical DSE, so
+//! the substitution preserves the phenomenon under study (DESIGN.md §1).
+//!
+//! Components:
+//! * [`aie`]    — micro-kernel cycles, cascade sync, placement congestion;
+//! * [`noc`]    — PL→AIE stream feed and broadcast serialization;
+//! * [`ddr`]    — burst-efficiency bandwidth model for tile streaming;
+//! * [`pl`]     — BRAM/URAM packing and LUT/FF/DSP allocation;
+//! * [`power`]  — component-wise power (static, AIE, PL, NoC, DDR);
+//! * [`sim`]    — composition into a [`sim::Measurement`], with
+//!   deterministic per-design measurement noise and build-failure gating.
+
+pub mod aie;
+pub mod ddr;
+pub mod noc;
+pub mod pl;
+pub mod power;
+pub mod reconfig;
+pub mod sim;
+pub mod telemetry;
+
+pub use pl::{BufferPlacement, Resources, ResourceUtil};
+pub use sim::{Measurement, SimError, VersalSim};

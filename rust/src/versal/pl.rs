@@ -1,0 +1,242 @@
+//! PL resource model: BRAM/URAM packing for the reuse buffers plus
+//! LUT/FF/DSP for the stream/dataflow infrastructure.
+//!
+//! Buffer placement differs by framework (visible in Table III): CHARM's
+//! generated designs keep operand buffers in BRAM (URAM column is 0 for
+//! most workloads), while ARIES and our framework pack the deep operand
+//! tiles URAM-first. The placement policy is therefore a parameter.
+
+use crate::config::BoardConfig;
+use crate::tiling::Tiling;
+
+/// Absolute PL resource counts for one design.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Resources {
+    pub bram: usize,
+    pub uram: usize,
+    pub lut: usize,
+    pub ff: usize,
+    pub dsp: usize,
+}
+
+/// Utilization as a fraction of the board totals (Table III reports %).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct ResourceUtil {
+    pub bram: f64,
+    pub uram: f64,
+    pub lut: f64,
+    pub ff: f64,
+    pub dsp: f64,
+}
+
+impl Resources {
+    pub fn utilization(&self, board: &BoardConfig) -> ResourceUtil {
+        ResourceUtil {
+            bram: self.bram as f64 / board.bram_total as f64,
+            uram: self.uram as f64 / board.uram_total as f64,
+            lut: self.lut as f64 / board.lut_total as f64,
+            ff: self.ff as f64 / board.ff_total as f64,
+            dsp: self.dsp as f64 / board.dsp_total as f64,
+        }
+    }
+
+    pub fn fits(&self, board: &BoardConfig) -> bool {
+        self.bram <= board.bram_total
+            && self.uram <= board.uram_total
+            && self.lut <= board.lut_total
+            && self.ff <= board.ff_total
+            && self.dsp <= board.dsp_total
+    }
+
+    /// Worst-dimension utilization (drives the build-failure model).
+    pub fn max_utilization(&self, board: &BoardConfig) -> f64 {
+        let u = self.utilization(board);
+        u.bram.max(u.uram).max(u.lut).max(u.ff).max(u.dsp)
+    }
+
+    /// Vector view for the multi-output resource model
+    /// (order: BRAM, URAM, LUT, FF, DSP — as percentages 0..100).
+    pub fn as_percent_vec(&self, board: &BoardConfig) -> [f64; 5] {
+        let u = self.utilization(board);
+        [
+            100.0 * u.bram,
+            100.0 * u.uram,
+            100.0 * u.lut,
+            100.0 * u.ff,
+            100.0 * u.dsp,
+        ]
+    }
+}
+
+/// Buffer placement policy of the generating framework.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BufferPlacement {
+    /// Operand tiles in BRAM only (CHARM-style codegen).
+    BramOnly,
+    /// Deep operand tiles URAM-first, spill to BRAM (ARIES / ours).
+    UramFirst,
+}
+
+/// Compute the full resource allocation of a design.
+pub fn resources(t: &Tiling, board: &BoardConfig, placement: BufferPlacement) -> Resources {
+    let buf = t.buffer_bytes(board.micro_tile);
+    let n_aie = t.n_aie();
+
+    // --- memory packing -------------------------------------------------
+    // C tiles need read-modify-write ports => BRAM. A/B operand tiles are
+    // streamed sequentially => URAM candidates under UramFirst.
+    let (mut bram_bytes, mut uram_bytes) = match placement {
+        BufferPlacement::BramOnly => (buf.a + buf.b + buf.c, 0usize),
+        BufferPlacement::UramFirst => (buf.c, buf.a + buf.b),
+    };
+    // Tiny operand tiles are not worth a URAM bank: keep them in BRAM.
+    if placement == BufferPlacement::UramFirst && uram_bytes < board.uram_bytes {
+        bram_bytes += uram_bytes;
+        uram_bytes = 0;
+    }
+    let mut uram = uram_bytes.div_ceil(board.uram_bytes);
+    // Each buffer bank also needs minimum-width allocation per parallel
+    // stream: one BRAM per AIE row/column port group.
+    let mut bram = bram_bytes.div_ceil(board.bram_bytes) + (t.p_m * t.p_k + t.p_k * t.p_n).div_ceil(4);
+    // Spill URAM overflow into BRAM (and vice versa) so big designs still
+    // place if one pool is exhausted.
+    if uram > board.uram_total {
+        let spill = (uram - board.uram_total) * board.uram_bytes;
+        uram = board.uram_total;
+        bram += spill.div_ceil(board.bram_bytes);
+    }
+    if bram > board.bram_total && uram < board.uram_total {
+        let spill = (bram - board.bram_total) * board.bram_bytes;
+        bram = board.bram_total;
+        uram += spill.div_ceil(board.uram_bytes);
+    }
+
+    // --- logic / dataflow infrastructure ---------------------------------
+    // Stream splitters/mergers, DMA descriptors, address generators: a
+    // fixed base plus per-AIE and per-buffer-bank terms (fit to the scale
+    // of Table III).
+    let lut = 9_000 + 420 * n_aie + 16 * (bram + uram);
+    let ff = 11_000 + 540 * n_aie + 22 * (bram + uram);
+    // Partial-sum adders on the PL when the cascade is cut (P_K chains),
+    // plus per-stream address math.
+    let dsp = 6 + t.p_m * t.p_n * t.p_k.saturating_sub(1) + n_aie / 2;
+
+    Resources {
+        bram,
+        uram,
+        lut,
+        ff,
+        dsp,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn board() -> BoardConfig {
+        BoardConfig::default()
+    }
+
+    #[test]
+    fn small_design_fits_easily() {
+        let t = Tiling::new((1, 1, 1), (1, 1, 1));
+        let r = resources(&t, &board(), BufferPlacement::UramFirst);
+        assert!(r.fits(&board()));
+        assert!(r.max_utilization(&board()) < 0.05);
+        assert_eq!(r.uram, 0); // tiny tiles stay in BRAM
+    }
+
+    #[test]
+    fn bram_only_uses_no_uram() {
+        // Moderate design: fits in BRAM alone, so no URAM spill occurs.
+        let t = Tiling::new((8, 8, 4), (1, 2, 1));
+        let r = resources(&t, &board(), BufferPlacement::BramOnly);
+        assert_eq!(r.uram, 0);
+        let r2 = resources(&t, &board(), BufferPlacement::UramFirst);
+        assert!(r2.uram > 0);
+        assert!(r2.bram < r.bram);
+    }
+
+    #[test]
+    fn bram_only_spills_to_uram_when_exhausted() {
+        // CHARM's biggest designs (Table III G10-G13) do show URAM use:
+        // once BRAM is exhausted the packer spills.
+        let t = Tiling::new((8, 8, 4), (4, 4, 1));
+        let r = resources(&t, &board(), BufferPlacement::BramOnly);
+        assert_eq!(r.bram, board().bram_total);
+        assert!(r.uram > 0);
+    }
+
+    #[test]
+    fn bigger_buffers_cost_more_memory() {
+        let small = resources(
+            &Tiling::new((8, 8, 4), (1, 1, 1)),
+            &board(),
+            BufferPlacement::UramFirst,
+        );
+        let big = resources(
+            &Tiling::new((8, 8, 4), (4, 8, 1)),
+            &board(),
+            BufferPlacement::UramFirst,
+        );
+        assert!(big.bram + big.uram > small.bram + small.uram);
+    }
+
+    #[test]
+    fn logic_scales_with_aies() {
+        let few = resources(
+            &Tiling::new((2, 2, 1), (1, 1, 1)),
+            &board(),
+            BufferPlacement::UramFirst,
+        );
+        let many = resources(
+            &Tiling::new((8, 8, 4), (1, 1, 1)),
+            &board(),
+            BufferPlacement::UramFirst,
+        );
+        assert!(many.lut > few.lut);
+        assert!(many.ff > few.ff);
+        assert!(many.dsp > few.dsp);
+    }
+
+    #[test]
+    fn cascade_cut_needs_dsp_adders() {
+        let chained = resources(
+            &Tiling::new((8, 8, 1), (1, 1, 1)),
+            &board(),
+            BufferPlacement::UramFirst,
+        );
+        let cut = resources(
+            &Tiling::new((8, 8, 4), (1, 1, 1)),
+            &board(),
+            BufferPlacement::UramFirst,
+        );
+        assert!(cut.dsp > chained.dsp);
+    }
+
+    #[test]
+    fn percent_vec_order() {
+        let t = Tiling::new((4, 4, 2), (2, 2, 2));
+        let r = resources(&t, &board(), BufferPlacement::UramFirst);
+        let v = r.as_percent_vec(&board());
+        assert!((v[0] - 100.0 * r.bram as f64 / 963.0).abs() < 1e-9);
+        assert!((v[4] - 100.0 * r.dsp as f64 / 1968.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn utilization_consistency() {
+        let r = Resources {
+            bram: 963,
+            uram: 463,
+            lut: 900_000,
+            ff: 1_800_000,
+            dsp: 1968,
+        };
+        let u = r.utilization(&board());
+        assert!((u.bram - 1.0).abs() < 1e-12);
+        assert!((u.dsp - 1.0).abs() < 1e-12);
+        assert!(r.fits(&board()));
+        assert_eq!(r.max_utilization(&board()), 1.0);
+    }
+}

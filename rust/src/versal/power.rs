@@ -1,0 +1,173 @@
+//! Component-wise power model, calibrated to Fig. 3.
+//!
+//! Total board power = static + AIE dynamic + PL memory/logic + NoC +
+//! DDR. The AIE dynamic term follows the superlinear-region-activation
+//! fit `P = α·n^β` (α = 0.95, β = 0.556) which reproduces the paper's
+//! medians: ~12 W at 1 AIE, ~18 W at 32, ~38 W at 400, with outliers to
+//! ~49 W when large PL buffers and maximal DDR traffic stack on top.
+//! AIEs stalled on memory draw `p_aie_stall_factor` of busy power, which
+//! is why reuse-poor high-AIE designs show the wide spread of Fig. 3.
+
+use crate::config::{BoardConfig, SimConfig};
+use crate::versal::pl::Resources;
+
+/// Power breakdown in watts.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct PowerBreakdown {
+    pub static_w: f64,
+    pub aie_w: f64,
+    pub pl_w: f64,
+    pub noc_w: f64,
+    pub ddr_w: f64,
+}
+
+impl PowerBreakdown {
+    pub fn total(&self) -> f64 {
+        self.static_w + self.aie_w + self.pl_w + self.noc_w + self.ddr_w
+    }
+}
+
+/// AIE dynamic power for `n` active engines at `busy` duty cycle (0..1).
+pub fn aie_power(n: usize, busy: f64, sim: &SimConfig) -> f64 {
+    if n == 0 {
+        return 0.0;
+    }
+    let duty = sim.p_aie_stall_factor + (1.0 - sim.p_aie_stall_factor) * busy.clamp(0.0, 1.0);
+    sim.p_aie_alpha * (n as f64).powf(sim.p_aie_beta) * duty
+}
+
+/// PL power from allocated memories and logic.
+pub fn pl_power(res: &Resources, sim: &SimConfig) -> f64 {
+    sim.p_bram_w * res.bram as f64
+        + sim.p_uram_w * res.uram as f64
+        + sim.p_klut_w * res.lut as f64 / 1000.0
+}
+
+/// Full breakdown for one executing design.
+///
+/// * `busy` — AIE duty cycle (compute time / wall time);
+/// * `ddr_gbps` — achieved DDR bandwidth;
+/// * `noc_gbps` — PL↔AIE stream traffic rate.
+pub fn power(
+    res: &Resources,
+    n_aie: usize,
+    busy: f64,
+    ddr_gbps: f64,
+    noc_gbps: f64,
+    _board: &BoardConfig,
+    sim: &SimConfig,
+) -> PowerBreakdown {
+    PowerBreakdown {
+        static_w: sim.p_static_w,
+        aie_w: aie_power(n_aie, busy, sim),
+        pl_w: pl_power(res, sim),
+        noc_w: sim.p_noc_w_per_gbps * noc_gbps,
+        ddr_w: sim.p_ddr_w_per_gbps * ddr_gbps,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn defaults() -> (BoardConfig, SimConfig) {
+        (BoardConfig::default(), SimConfig::default())
+    }
+
+    fn typical_res(n_aie: usize) -> Resources {
+        Resources {
+            bram: 30 + n_aie / 4,
+            uram: 10 + n_aie / 8,
+            lut: 9_000 + 420 * n_aie,
+            ff: 11_000 + 540 * n_aie,
+            dsp: 6 + n_aie / 2,
+        }
+    }
+
+    #[test]
+    fn fig3_medians_low_end() {
+        // 1 AIE, moderate activity: ~12 W total.
+        let (b, s) = defaults();
+        let p = power(&typical_res(1), 1, 0.8, 2.0, 0.5, &b, &s);
+        assert!((11.0..14.0).contains(&p.total()), "total {}", p.total());
+    }
+
+    #[test]
+    fn fig3_medians_knee() {
+        // 32 AIEs: median ~18 W.
+        let (b, s) = defaults();
+        let p = power(&typical_res(32), 32, 0.85, 6.0, 2.0, &b, &s);
+        assert!((16.0..21.0).contains(&p.total()), "total {}", p.total());
+    }
+
+    #[test]
+    fn fig3_medians_full_array() {
+        // 400 AIEs busy: median ~38 W.
+        let (b, s) = defaults();
+        let p = power(&typical_res(400), 400, 0.9, 12.0, 10.0, &b, &s);
+        assert!((33.0..43.0).contains(&p.total()), "total {}", p.total());
+    }
+
+    #[test]
+    fn fig3_outlier_peak_near_49w() {
+        // Full array + huge PL buffers + saturated DDR: ~49 W peak.
+        let (b, s) = defaults();
+        let res = Resources {
+            bram: 700,
+            uram: 350,
+            lut: 200_000,
+            ff: 380_000,
+            dsp: 900,
+        };
+        let p = power(&res, 400, 1.0, 25.6, 16.0, &b, &s);
+        assert!((44.0..52.0).contains(&p.total()), "total {}", p.total());
+    }
+
+    #[test]
+    fn stalled_aies_draw_less() {
+        let (_, s) = defaults();
+        assert!(aie_power(256, 0.2, &s) < aie_power(256, 1.0, &s));
+        assert!(aie_power(256, 0.0, &s) >= aie_power(256, 1.0, &s) * s.p_aie_stall_factor * 0.99);
+    }
+
+    #[test]
+    fn aie_power_superlinear_regions() {
+        let (_, s) = defaults();
+        // Power-law: doubling n multiplies by 2^beta (~1.47).
+        let p64 = aie_power(64, 1.0, &s);
+        let p128 = aie_power(128, 1.0, &s);
+        assert!((p128 / p64 - 2.0f64.powf(s.p_aie_beta)).abs() < 1e-9);
+        assert_eq!(aie_power(0, 1.0, &s), 0.0);
+    }
+
+    #[test]
+    fn more_aies_can_use_less_power_than_fewer() {
+        // Paper §III-B.1: "some workloads with more AIEs can use less
+        // power than others with fewer AIEs" — a stalled big array with
+        // small buffers can undercut a busy mid array with huge buffers
+        // and saturated DDR.
+        let (b, s) = defaults();
+        let big_stalled = power(&typical_res(256), 256, 0.25, 4.0, 3.0, &b, &s);
+        let mid_busy = power(
+            &Resources {
+                bram: 800,
+                uram: 400,
+                lut: 150_000,
+                ff: 250_000,
+                dsp: 500,
+            },
+            128,
+            1.0,
+            25.6,
+            8.0,
+            &b,
+            &s,
+        );
+        assert!(
+            big_stalled.total() < mid_busy.total(),
+            "{} vs {}",
+            big_stalled.total(),
+            mid_busy.total()
+        );
+    }
+}

@@ -1,0 +1,106 @@
+//! Partial-reconfiguration cost model.
+//!
+//! Each mapping the framework emits is a distinct bitstream; a serving
+//! deployment that switches mappings between jobs pays a reconfiguration
+//! penalty: PL partial bitstream load over ICAP/PCAP plus AIE array
+//! re-initialization. The coordinator's dynamic batcher uses this model
+//! to order jobs so that consecutive jobs share a mapping (and accounts
+//! the simulated switch cost in its stats) — the deployment-side
+//! extension of the paper's per-workload mapping story.
+
+use crate::config::BoardConfig;
+use crate::tiling::Tiling;
+use crate::versal::pl::{resources, BufferPlacement};
+
+/// Reconfiguration interface parameters (Versal PCAP-class numbers).
+#[derive(Debug, Clone, Copy)]
+pub struct ReconfigModel {
+    /// Configuration port bandwidth (bytes/s).
+    pub pcap_bps: f64,
+    /// Bitstream bytes per BRAM/URAM column and per kLUT of region.
+    pub bytes_per_bram: f64,
+    pub bytes_per_uram: f64,
+    pub bytes_per_klut: f64,
+    /// Per-AIE ELF load + array reset (s).
+    pub aie_load_s: f64,
+    /// Fixed handshake/driver overhead per reconfiguration (s).
+    pub fixed_s: f64,
+}
+
+impl Default for ReconfigModel {
+    fn default() -> Self {
+        ReconfigModel {
+            pcap_bps: 400e6,
+            bytes_per_bram: 12.0 * 1024.0,
+            bytes_per_uram: 48.0 * 1024.0,
+            bytes_per_klut: 24.0 * 1024.0,
+            aie_load_s: 60e-6,
+            fixed_s: 3e-3,
+        }
+    }
+}
+
+impl ReconfigModel {
+    /// Partial-bitstream size for a design's PL region.
+    pub fn bitstream_bytes(&self, t: &Tiling, board: &BoardConfig) -> f64 {
+        let r = resources(t, board, BufferPlacement::UramFirst);
+        self.bytes_per_bram * r.bram as f64
+            + self.bytes_per_uram * r.uram as f64
+            + self.bytes_per_klut * r.lut as f64 / 1000.0
+    }
+
+    /// Seconds to switch `from` one mapping `to` another. `None` for
+    /// `from` means cold start (full region load). Switching to the same
+    /// mapping is free.
+    pub fn switch_time(&self, from: Option<&Tiling>, to: &Tiling, board: &BoardConfig) -> f64 {
+        if from == Some(to) {
+            return 0.0;
+        }
+        let pl = self.bitstream_bytes(to, board) / self.pcap_bps;
+        let aie = to.n_aie() as f64 * self.aie_load_s;
+        self.fixed_s + pl + aie
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn board() -> BoardConfig {
+        BoardConfig::default()
+    }
+
+    #[test]
+    fn same_mapping_is_free() {
+        let m = ReconfigModel::default();
+        let t = Tiling::new((4, 4, 2), (2, 2, 2));
+        assert_eq!(m.switch_time(Some(&t), &t, &board()), 0.0);
+    }
+
+    #[test]
+    fn cold_start_costs_more_than_nothing() {
+        let m = ReconfigModel::default();
+        let t = Tiling::new((4, 4, 2), (2, 2, 2));
+        let cost = m.switch_time(None, &t, &board());
+        assert!(cost > m.fixed_s);
+        assert!(cost < 1.0, "reconfig {cost}s absurd");
+    }
+
+    #[test]
+    fn bigger_regions_cost_more() {
+        let m = ReconfigModel::default();
+        let small = Tiling::new((2, 2, 1), (1, 1, 1));
+        let big = Tiling::new((8, 8, 4), (2, 2, 2));
+        let b = board();
+        assert!(m.switch_time(None, &big, &b) > m.switch_time(None, &small, &b));
+        assert!(m.bitstream_bytes(&big, &b) > m.bitstream_bytes(&small, &b));
+    }
+
+    #[test]
+    fn switch_between_distinct_mappings_charged() {
+        let m = ReconfigModel::default();
+        let a = Tiling::new((2, 2, 1), (1, 1, 1));
+        let bt = Tiling::new((4, 2, 1), (1, 1, 1));
+        assert!(m.switch_time(Some(&a), &bt, &board()) > 0.0);
+    }
+}

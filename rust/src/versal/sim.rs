@@ -1,0 +1,349 @@
+//! Composition of the component models into full design measurements —
+//! the simulator's public API and the framework's ground truth.
+
+use crate::config::{BoardConfig, Config, SimConfig};
+use crate::tiling::Tiling;
+use crate::util::rng::{fnv1a, Rng};
+use crate::versal::pl::{self, BufferPlacement, Resources};
+use crate::versal::power::{self, PowerBreakdown};
+use crate::versal::{aie, ddr, noc};
+use crate::workloads::Gemm;
+
+/// One "on-board" measurement of a (workload, tiling) design.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Measurement {
+    pub latency_s: f64,
+    pub power_w: f64,
+    pub resources: Resources,
+    /// Throughput in GFLOP/s over the *unpadded* workload FLOPs.
+    pub gflops: f64,
+    /// Energy efficiency in GFLOP/s/W — the paper's decisive edge metric.
+    pub energy_eff: f64,
+    /// AIE duty cycle (diagnostics; drives the power activity factor).
+    pub busy: f64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, thiserror::Error)]
+pub enum SimError {
+    #[error("tiling does not evenly partition the workload")]
+    InvalidTiling,
+    #[error("design exceeds PL resources")]
+    DoesNotFit,
+    #[error("design failed to build (timing/placement)")]
+    BuildFailed,
+}
+
+/// Latency decomposition (diagnostics and §Perf reporting).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct LatencyParts {
+    pub compute_s: f64,
+    pub feed_s: f64,
+    pub ddr_s: f64,
+    pub overhead_s: f64,
+    pub total_s: f64,
+}
+
+/// The VCK190 simulator.
+#[derive(Debug, Clone)]
+pub struct VersalSim {
+    pub board: BoardConfig,
+    pub sim: SimConfig,
+}
+
+impl VersalSim {
+    pub fn new(cfg: &Config) -> VersalSim {
+        VersalSim {
+            board: cfg.board.clone(),
+            sim: cfg.sim.clone(),
+        }
+    }
+
+    pub fn with(board: BoardConfig, sim: SimConfig) -> VersalSim {
+        VersalSim { board, sim }
+    }
+
+    /// Exact resource allocation for a design.
+    pub fn resources(&self, t: &Tiling, placement: BufferPlacement) -> Resources {
+        pl::resources(t, &self.board, placement)
+    }
+
+    /// Latency decomposition without measurement noise.
+    pub fn latency_parts(&self, g: &Gemm, t: &Tiling) -> Result<LatencyParts, SimError> {
+        let micro = self.board.micro_tile;
+        let (t_m, t_n, t_k) = t.l3_iters(g, micro).ok_or(SimError::InvalidTiling)?;
+        let iters = (t_m * t_n * t_k) as f64;
+
+        let compute_iter = aie::compute_time_per_l2_iter(t, &self.board, &self.sim);
+        let feed_iter = noc::feed_time_per_l2_iter(t, &self.board, &self.sim);
+        // Double buffering overlaps feed and compute inside an iteration;
+        // the slower of the two paces the pipeline.
+        let pipe_iter = compute_iter.max(feed_iter);
+        let pipe_total = iters * pipe_iter;
+
+        let ddr_total = ddr::ddr_time(g, t, &self.board, &self.sim).ok_or(SimError::InvalidTiling)?;
+
+        // DDR streaming overlaps the pipeline; the binding resource wins.
+        let core = pipe_total.max(ddr_total);
+        // Pipeline fill/drain at workload start plus per-iteration sync
+        // with the PS, plus one-time XRT kernel launch.
+        let ramp = self.sim.ramp_fraction * (pipe_iter + ddr_total / iters.max(1.0));
+        let overhead = self.sim.launch_overhead_s + ramp + iters * self.sim.iter_overhead_s;
+
+        Ok(LatencyParts {
+            compute_s: iters * compute_iter,
+            feed_s: iters * feed_iter,
+            ddr_s: ddr_total,
+            overhead_s: overhead,
+            total_s: core + overhead,
+        })
+    }
+
+    /// Ground-truth measurement without noise (model expectation).
+    pub fn evaluate_noiseless(
+        &self,
+        g: &Gemm,
+        t: &Tiling,
+        placement: BufferPlacement,
+    ) -> Result<Measurement, SimError> {
+        self.eval_inner(g, t, placement, false)
+    }
+
+    /// "On-board" measurement: adds deterministic per-design lognormal
+    /// noise (the same design re-measured returns the same value, as a
+    /// time-averaged 60 s BEAM power sample would) and gates on build
+    /// success near resource capacity.
+    pub fn evaluate(
+        &self,
+        g: &Gemm,
+        t: &Tiling,
+        placement: BufferPlacement,
+    ) -> Result<Measurement, SimError> {
+        self.eval_inner(g, t, placement, true)
+    }
+
+    fn eval_inner(
+        &self,
+        g: &Gemm,
+        t: &Tiling,
+        placement: BufferPlacement,
+        noisy: bool,
+    ) -> Result<Measurement, SimError> {
+        let res = self.resources(t, placement);
+        if !res.fits(&self.board) {
+            return Err(SimError::DoesNotFit);
+        }
+
+        let mut rng = self.design_rng(g, t);
+        if noisy {
+            // Near-capacity designs sometimes fail placement/timing; the
+            // paper "retains only successful builds".
+            let util = res.max_utilization(&self.board);
+            let thr = self.sim.build_fail_util_threshold;
+            if util > thr {
+                let p_fail = 0.6 * (util - thr) / (1.0 - thr).max(1e-9);
+                if rng.bool(p_fail) {
+                    return Err(SimError::BuildFailed);
+                }
+            }
+        }
+
+        let parts = self.latency_parts(g, t)?;
+        let mut latency = parts.total_s;
+        if noisy {
+            latency *= rng.lognormal(self.sim.noise_sigma);
+        }
+
+        let busy = (parts.compute_s / latency).clamp(0.0, 1.0);
+        let micro = self.board.micro_tile;
+        let ddr_gbps = ddr::achieved_bandwidth(g, t, micro, latency) / 1e9;
+        let padded = g.padded(micro);
+        let total_micros =
+            (padded.m / micro) as f64 * (padded.n / micro) as f64 * (padded.k / micro) as f64;
+        let noc_gbps = noc::array_traffic_bytes(total_micros, &self.board) / latency / 1e9;
+
+        let pb: PowerBreakdown =
+            power::power(&res, t.n_aie(), busy, ddr_gbps, noc_gbps, &self.board, &self.sim);
+        let mut power_w = pb.total();
+        if noisy {
+            power_w *= rng.lognormal(self.sim.noise_sigma * 0.7);
+        }
+
+        let gflops = g.flops() / latency / 1e9;
+        Ok(Measurement {
+            latency_s: latency,
+            power_w,
+            resources: res,
+            gflops,
+            energy_eff: gflops / power_w,
+            busy,
+        })
+    }
+
+    /// Deterministic per-design RNG: the same (workload, tiling, seed)
+    /// always yields the same "measurement".
+    fn design_rng(&self, g: &Gemm, t: &Tiling) -> Rng {
+        let h = fnv1a(&t.to_bytes(g));
+        Rng::new(h ^ self.sim.seed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tiling::{enumerate_candidates, TilingLimits};
+    use crate::util::forall;
+
+    fn sim() -> VersalSim {
+        VersalSim::new(&Config::default())
+    }
+
+    fn valid(g: &Gemm, t: &Tiling) -> Measurement {
+        sim()
+            .evaluate_noiseless(g, t, BufferPlacement::UramFirst)
+            .unwrap()
+    }
+
+    #[test]
+    fn throughput_below_peak_and_positive() {
+        let g = Gemm::new(2048, 2048, 2048);
+        let t = Tiling::new((8, 8, 4), (2, 2, 2));
+        let m = valid(&g, &t);
+        assert!(m.gflops > 0.0);
+        assert!(m.gflops < sim().board.peak_gflops());
+        assert!(m.power_w > 10.0 && m.power_w < 60.0);
+        assert!(m.energy_eff > 0.0);
+    }
+
+    #[test]
+    fn big_compute_bound_gemm_nears_array_efficiency() {
+        // A large square GEMM on 256 AIEs with good reuse should achieve
+        // a solid fraction of the allocated AIEs' peak.
+        let g = Gemm::new(4096, 4096, 4096);
+        let t = Tiling::new((8, 8, 4), (4, 4, 4));
+        let m = valid(&g, &t);
+        let alloc_peak =
+            256.0 / 400.0 * sim().board.peak_gflops();
+        let ratio = m.gflops / alloc_peak;
+        assert!(ratio > 0.55, "ratio {ratio}");
+        assert!(ratio < 0.95);
+    }
+
+    #[test]
+    fn more_aies_faster_for_big_workloads() {
+        let g = Gemm::new(2048, 2048, 2048);
+        let small = valid(&g, &Tiling::new((2, 2, 1), (4, 4, 8)));
+        let big = valid(&g, &Tiling::new((8, 8, 4), (2, 2, 2)));
+        assert!(big.latency_s < small.latency_s);
+    }
+
+    #[test]
+    fn reuse_helps_memory_bound_workloads() {
+        // Skinny GEMM: with minimal reuse the DDR path dominates; adding
+        // PL reuse buffers improves throughput.
+        let g = Gemm::new(64, 4096, 1024);
+        let no_reuse = valid(&g, &Tiling::new((2, 8, 4), (1, 1, 1)));
+        let reuse = valid(&g, &Tiling::new((2, 8, 4), (1, 4, 8)));
+        assert!(reuse.gflops > no_reuse.gflops);
+    }
+
+    #[test]
+    fn invalid_and_oversized_rejected() {
+        let g = Gemm::new(96, 96, 96);
+        let s = sim();
+        assert_eq!(
+            s.evaluate(&g, &Tiling::new((2, 1, 1), (1, 1, 1)), BufferPlacement::UramFirst),
+            Err(SimError::InvalidTiling)
+        );
+        // A buffer tiling far beyond PL capacity.
+        let g2 = Gemm::new(8192, 8192, 8192);
+        let huge = Tiling::new((8, 8, 4), (32, 32, 2));
+        assert_eq!(
+            s.evaluate(&g2, &huge, BufferPlacement::UramFirst),
+            Err(SimError::DoesNotFit)
+        );
+    }
+
+    #[test]
+    fn noise_is_deterministic_and_small() {
+        let g = Gemm::new(1024, 1024, 1024);
+        let t = Tiling::new((4, 4, 2), (2, 2, 2));
+        let s = sim();
+        let a = s.evaluate(&g, &t, BufferPlacement::UramFirst).unwrap();
+        let b = s.evaluate(&g, &t, BufferPlacement::UramFirst).unwrap();
+        assert_eq!(a, b, "re-measuring must be deterministic");
+        let clean = s.evaluate_noiseless(&g, &t, BufferPlacement::UramFirst).unwrap();
+        let rel = (a.latency_s - clean.latency_s).abs() / clean.latency_s;
+        assert!(rel < 0.15, "noise too large: {rel}");
+        assert!(rel > 0.0, "noise absent");
+    }
+
+    #[test]
+    fn latency_parts_sum_consistency() {
+        let g = Gemm::new(1024, 1024, 1024);
+        let t = Tiling::new((4, 4, 2), (2, 2, 2));
+        let p = sim().latency_parts(&g, &t).unwrap();
+        let core = p.compute_s.max(p.feed_s).max(p.ddr_s);
+        assert!((p.total_s - (core + p.overhead_s)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn energy_optimum_differs_from_throughput_optimum_somewhere() {
+        // The paper's central observation (Fig. 1): for some workload the
+        // most energy-efficient design is NOT the highest-throughput one.
+        let s = sim();
+        let limits = TilingLimits::from_board(&s.board);
+        let g = Gemm::new(224, 3072, 768); // medium-FLOP, many tilings
+        let cands = enumerate_candidates(&g, 32, &limits);
+        let measured: Vec<(Tiling, Measurement)> = cands
+            .iter()
+            .filter_map(|t| {
+                s.evaluate(&g, t, BufferPlacement::UramFirst)
+                    .ok()
+                    .map(|m| (*t, m))
+            })
+            .collect();
+        assert!(measured.len() > 100);
+        let best_thr = measured
+            .iter()
+            .max_by(|a, b| a.1.gflops.partial_cmp(&b.1.gflops).unwrap())
+            .unwrap();
+        let best_eff = measured
+            .iter()
+            .max_by(|a, b| a.1.energy_eff.partial_cmp(&b.1.energy_eff).unwrap())
+            .unwrap();
+        assert_ne!(best_thr.0, best_eff.0, "no energy/perf trade-off found");
+        assert!(best_eff.1.resources.bram <= best_thr.1.resources.bram * 4);
+        // Energy-best uses fewer or equal AIEs (paper Fig. 4c trend).
+        assert!(best_eff.0.n_aie() <= best_thr.0.n_aie());
+    }
+
+    #[test]
+    fn property_measurements_physical() {
+        let s = sim();
+        let limits = TilingLimits::from_board(&s.board);
+        forall(
+            0x5EED,
+            25,
+            |r| {
+                Gemm::new(
+                    32 * r.range_usize(1, 48),
+                    32 * r.range_usize(1, 48),
+                    32 * r.range_usize(1, 48),
+                )
+            },
+            |g| {
+                let cands = enumerate_candidates(g, 32, &limits);
+                for t in cands.iter().step_by((cands.len() / 40).max(1)) {
+                    if let Ok(m) = s.evaluate(g, t, BufferPlacement::UramFirst) {
+                        assert!(m.latency_s > 0.0);
+                        assert!(m.power_w > 10.0, "power {} below static", m.power_w);
+                        assert!(m.power_w < 60.0, "power {} absurd", m.power_w);
+                        assert!(m.gflops <= s.board.peak_gflops());
+                        assert!((0.0..=1.0).contains(&m.busy));
+                        assert!(m.resources.fits(&s.board));
+                    }
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,179 @@
+//! BEAM-style power telemetry (paper §V: "each workload is executed for
+//! 60 seconds, during which power data is collected via BEAM tool
+//! running on Versal's System Controller").
+//!
+//! The simulator's [`crate::versal::Measurement`] carries the
+//! steady-state mean; this module expands it into the *trace* a BEAM
+//! session would log — launch ramp, steady phase with AR(1) supply
+//! noise, and trailing idle — and the aggregation the paper applies
+//! (window mean of total board power). Used by the offline-phase
+//! example, the telemetry tests, and the `sweep` reporting.
+
+use crate::util::rng::{fnv1a, Rng};
+use crate::versal::Measurement;
+
+/// A sampled power trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PowerTrace {
+    /// Watts per sample.
+    pub samples: Vec<f64>,
+    /// Sampling period in seconds (BEAM default ~100 ms).
+    pub period_s: f64,
+}
+
+impl PowerTrace {
+    pub fn duration_s(&self) -> f64 {
+        self.samples.len() as f64 * self.period_s
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.samples.iter().sum::<f64>() / self.samples.len().max(1) as f64
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    /// Energy over the window (J).
+    pub fn energy_j(&self) -> f64 {
+        self.samples.iter().sum::<f64>() * self.period_s
+    }
+
+    /// Mean over the steady phase only (what the paper reports as the
+    /// workload's power: ramp and tail excluded).
+    pub fn steady_mean(&self) -> f64 {
+        let n = self.samples.len();
+        if n < 10 {
+            return self.mean();
+        }
+        let lo = n / 10;
+        let hi = n - n / 20;
+        let window = &self.samples[lo..hi];
+        window.iter().sum::<f64>() / window.len() as f64
+    }
+}
+
+/// Parameters of the telemetry session.
+#[derive(Debug, Clone, Copy)]
+pub struct BeamSession {
+    pub duration_s: f64,
+    pub sample_rate_hz: f64,
+    /// Idle board power before the kernel launches.
+    pub idle_w: f64,
+    /// AR(1) coefficient and noise scale of the supply regulation.
+    pub ar_coeff: f64,
+    pub noise_w: f64,
+}
+
+impl Default for BeamSession {
+    fn default() -> Self {
+        BeamSession {
+            duration_s: 60.0,
+            sample_rate_hz: 10.0,
+            idle_w: 11.5,
+            ar_coeff: 0.85,
+            noise_w: 0.35,
+        }
+    }
+}
+
+impl BeamSession {
+    /// Deterministically synthesize the trace a BEAM run of `m` would
+    /// log. Keyed by `design_key` so re-measuring a design reproduces
+    /// the same trace (as the simulator's noise model does).
+    pub fn trace(&self, m: &Measurement, design_key: u64) -> PowerTrace {
+        let n = (self.duration_s * self.sample_rate_hz).round() as usize;
+        let mut rng = Rng::new(fnv1a(&design_key.to_le_bytes()) ^ 0xBEA0_BEA0);
+        let mut samples = Vec::with_capacity(n);
+        let ramp = (n / 20).max(1); // launch + clock ramp
+        let tail = (n / 40).max(1); // drain + idle return
+        let mut ar = 0.0f64;
+        for i in 0..n {
+            let phase = if i < ramp {
+                // Exponential approach to the steady level.
+                let x = i as f64 / ramp as f64;
+                self.idle_w + (m.power_w - self.idle_w) * (1.0 - (-4.0 * x).exp())
+            } else if i >= n - tail {
+                self.idle_w + (m.power_w - self.idle_w) * 0.3
+            } else {
+                m.power_w
+            };
+            ar = self.ar_coeff * ar + self.noise_w * rng.normal();
+            samples.push((phase + ar).max(0.0));
+        }
+        PowerTrace {
+            samples,
+            period_s: 1.0 / self.sample_rate_hz,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::versal::Resources;
+
+    fn measurement(power: f64) -> Measurement {
+        Measurement {
+            latency_s: 1e-3,
+            power_w: power,
+            resources: Resources::default(),
+            gflops: 100.0,
+            energy_eff: 100.0 / power,
+            busy: 0.9,
+        }
+    }
+
+    #[test]
+    fn steady_mean_recovers_measurement_power() {
+        let session = BeamSession::default();
+        let m = measurement(30.0);
+        let trace = session.trace(&m, 42);
+        assert_eq!(trace.samples.len(), 600);
+        let err = (trace.steady_mean() - 30.0).abs();
+        assert!(err < 0.5, "steady mean off by {err} W");
+        // Plain mean is pulled down by ramp/tail.
+        assert!(trace.mean() < trace.steady_mean());
+    }
+
+    #[test]
+    fn trace_is_deterministic_per_design() {
+        let session = BeamSession::default();
+        let m = measurement(25.0);
+        assert_eq!(session.trace(&m, 7), session.trace(&m, 7));
+        assert_ne!(session.trace(&m, 7), session.trace(&m, 8));
+    }
+
+    #[test]
+    fn ramp_starts_near_idle() {
+        let session = BeamSession::default();
+        let m = measurement(40.0);
+        let trace = session.trace(&m, 1);
+        assert!(trace.samples[0] < 20.0, "first sample {}", trace.samples[0]);
+        assert!(trace.max() > 38.0);
+    }
+
+    #[test]
+    fn energy_consistent_with_mean() {
+        let session = BeamSession::default();
+        let m = measurement(20.0);
+        let trace = session.trace(&m, 3);
+        let e = trace.energy_j();
+        assert!((e - trace.mean() * trace.duration_s()).abs() < 1e-9);
+        assert!((trace.duration_s() - 60.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn short_trace_falls_back_to_mean() {
+        let t = PowerTrace {
+            samples: vec![10.0, 12.0],
+            period_s: 0.1,
+        };
+        assert_eq!(t.steady_mean(), t.mean());
+        assert_eq!(t.min(), 10.0);
+    }
+}

@@ -1,0 +1,219 @@
+//! GEMM workload definitions and catalogs.
+//!
+//! The paper uses two disjoint workload sets:
+//! * **Training set** (offline phase, §IV-A.1): 18 GEMMs extracted from
+//!   NCF, MLP benchmarks, ViT and BERT — the dataset the ML model is
+//!   trained on (≈6000 hardware designs total).
+//! * **Evaluation set** (§V-A): 13 GEMMs `G1..G13` from Swin-Tiny,
+//!   DeiT-Base, Qwen2.5-0.5B and LLaMA-3-1B, *not* in the training set,
+//!   ordered by increasing FLOPs / arithmetic intensity (Figs. 4, 8, 9,
+//!   Table III).
+
+
+pub mod models;
+/// One GEMM workload: `C[M,N] = A[M,K] @ B[K,N]`, FP32.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Gemm {
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+}
+
+impl Gemm {
+    pub const fn new(m: usize, n: usize, k: usize) -> Gemm {
+        Gemm { m, n, k }
+    }
+
+    /// Total floating point operations (multiply + add).
+    pub fn flops(&self) -> f64 {
+        2.0 * self.m as f64 * self.n as f64 * self.k as f64
+    }
+
+    /// Bytes touched in DDR assuming each matrix moves once (FP32).
+    pub fn min_bytes(&self) -> f64 {
+        4.0 * (self.m * self.k + self.k * self.n + self.m * self.n) as f64
+    }
+
+    /// Arithmetic intensity (FLOP / byte) — the x-ordering of Figs. 8/9.
+    pub fn arithmetic_intensity(&self) -> f64 {
+        self.flops() / self.min_bytes()
+    }
+
+    /// Dimension padded up to multiples of the AIE micro-tile.
+    pub fn padded(&self, tile: usize) -> Gemm {
+        let pad = |d: usize| d.div_ceil(tile) * tile;
+        Gemm::new(pad(self.m), pad(self.n), pad(self.k))
+    }
+
+    /// Per-dimension tile counts after padding.
+    pub fn tiles(&self, tile: usize) -> (usize, usize, usize) {
+        (
+            self.m.div_ceil(tile),
+            self.n.div_ceil(tile),
+            self.k.div_ceil(tile),
+        )
+    }
+
+    pub fn label(&self) -> String {
+        format!("{}x{}x{}", self.m, self.n, self.k)
+    }
+}
+
+/// A named workload with provenance (which model/layer it comes from).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Workload {
+    pub id: String,
+    pub source: String,
+    pub gemm: Gemm,
+}
+
+impl Workload {
+    fn new(id: &str, source: &str, m: usize, n: usize, k: usize) -> Workload {
+        Workload {
+            id: id.to_string(),
+            source: source.to_string(),
+            gemm: Gemm::new(m, n, k),
+        }
+    }
+}
+
+/// The 18 offline-phase training workloads (NCF / MLP / ViT / BERT as in
+/// CHARM and the paper). Sizes are the canonical layer GEMMs of each
+/// model family.
+pub fn training_workloads() -> Vec<Workload> {
+    vec![
+        // NCF (neural collaborative filtering MLP tower, batch 256).
+        Workload::new("ncf_l1", "NCF", 256, 256, 512),
+        Workload::new("ncf_l2", "NCF", 256, 128, 256),
+        Workload::new("ncf_l3", "NCF", 256, 64, 128),
+        Workload::new("ncf_emb", "NCF", 2048, 64, 256),
+        // MLP benchmark (CHARM's MLP: 320-sample batch, wide layers).
+        Workload::new("mlp_l1", "MLP", 320, 3072, 1024),
+        Workload::new("mlp_l2", "MLP", 320, 1024, 3072),
+        Workload::new("mlp_l3", "MLP", 320, 1024, 1024),
+        Workload::new("mlp_wide", "MLP", 640, 4096, 1024),
+        // ViT-Base (sequence 197 -> padded by the mapper; patch 16).
+        Workload::new("vit_qkv", "ViT-Base", 197, 2304, 768),
+        Workload::new("vit_proj", "ViT-Base", 197, 768, 768),
+        Workload::new("vit_fc1", "ViT-Base", 197, 3072, 768),
+        Workload::new("vit_fc2", "ViT-Base", 197, 768, 3072),
+        // BERT-Base (sequence 512).
+        Workload::new("bert_qkv", "BERT-Base", 512, 2304, 768),
+        Workload::new("bert_attn_out", "BERT-Base", 512, 768, 768),
+        Workload::new("bert_fc1", "BERT-Base", 512, 3072, 768),
+        Workload::new("bert_fc2", "BERT-Base", 512, 768, 3072),
+        // BERT-Large closers (bigger hidden, stress high-FLOP corner).
+        Workload::new("bertL_fc1", "BERT-Large", 512, 4096, 1024),
+        Workload::new("bertL_attn", "BERT-Large", 512, 1024, 1024),
+    ]
+}
+
+/// The 13 evaluation workloads `G1..G13` (paper §V-A): GEMMs from
+/// Swin-Tiny, DeiT-Base, Qwen2.5-0.5B and LLaMA-3-1B inference, disjoint
+/// from the training set and ordered by increasing FLOPs.
+///
+/// Decode-shaped layers (batch 32/64 token steps) supply the small,
+/// memory-bound `G1..G4`; ViT layers the mid range; prefill LLaMA layers
+/// the compute-bound tail, with `G12` the LM-head projection whose
+/// skinny-M / huge-N shape quantizes badly on GPU tensor cores (the
+/// paper's G12-beats-Orin point).
+pub fn eval_workloads() -> Vec<Workload> {
+    let mut wl = vec![
+        Workload::new("qwen_dec_oproj", "Qwen2.5-0.5B", 32, 896, 896),
+        Workload::new("swin_s1_attn", "Swin-Tiny", 3136, 96, 96),
+        Workload::new("qwen_dec_gate", "Qwen2.5-0.5B", 32, 4864, 896),
+        Workload::new("swin_s2_mlp", "Swin-Tiny", 784, 768, 192),
+        Workload::new("deit_attn_proj", "DeiT-Base (batch 8)", 1576, 768, 768),
+        Workload::new("deit_qkv", "DeiT-Base (batch 8)", 1576, 2304, 768),
+        Workload::new("deit_fc1", "DeiT-Base (batch 8)", 1576, 3072, 768),
+        Workload::new("qwen_pre_mlp", "Qwen2.5-0.5B", 1024, 4864, 896),
+        Workload::new("llama_pre_qkv", "LLaMA-3-1B", 512, 3072, 2048),
+        Workload::new("llama_pre_mlp", "LLaMA-3-1B", 512, 8192, 2048),
+        Workload::new("llama_long_attn", "LLaMA-3-1B", 2048, 2048, 2048),
+        Workload::new("llama_lm_head", "LLaMA-3-1B", 256, 128256, 2048),
+        Workload::new("llama_long_mlp", "LLaMA-3-1B", 2048, 8192, 2048),
+    ];
+    wl.sort_by(|a, b| a.gemm.flops().partial_cmp(&b.gemm.flops()).unwrap());
+    for (i, w) in wl.iter_mut().enumerate() {
+        w.id = format!("G{}", i + 1);
+    }
+    wl
+}
+
+/// Look up an eval workload by its `G<n>` id.
+pub fn eval_workload(id: &str) -> Option<Workload> {
+    eval_workloads().into_iter().find(|w| w.id == id)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flops_and_intensity() {
+        let g = Gemm::new(64, 128, 256);
+        assert_eq!(g.flops(), 2.0 * 64.0 * 128.0 * 256.0);
+        assert!(g.arithmetic_intensity() > 0.0);
+        // Bigger square GEMMs have higher arithmetic intensity.
+        assert!(
+            Gemm::new(1024, 1024, 1024).arithmetic_intensity()
+                > Gemm::new(128, 128, 128).arithmetic_intensity()
+        );
+    }
+
+    #[test]
+    fn padding() {
+        let g = Gemm::new(197, 768, 768).padded(32);
+        assert_eq!(g, Gemm::new(224, 768, 768));
+        assert_eq!(Gemm::new(32, 32, 32).padded(32), Gemm::new(32, 32, 32));
+        assert_eq!(Gemm::new(197, 768, 768).tiles(32), (7, 24, 24));
+    }
+
+    #[test]
+    fn training_set_has_18_unique() {
+        let wl = training_workloads();
+        assert_eq!(wl.len(), 18);
+        let mut ids: Vec<&str> = wl.iter().map(|w| w.id.as_str()).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 18);
+    }
+
+    #[test]
+    fn eval_set_is_13_sorted_by_flops() {
+        let wl = eval_workloads();
+        assert_eq!(wl.len(), 13);
+        for i in 1..wl.len() {
+            assert!(wl[i].gemm.flops() >= wl[i - 1].gemm.flops());
+            assert_eq!(wl[i].id, format!("G{}", i + 1));
+        }
+    }
+
+    #[test]
+    fn train_and_eval_disjoint() {
+        let train = training_workloads();
+        let eval = eval_workloads();
+        for e in &eval {
+            assert!(
+                train.iter().all(|t| t.gemm != e.gemm),
+                "eval workload {} leaked into training set",
+                e.id
+            );
+        }
+    }
+
+    #[test]
+    fn eval_lookup() {
+        assert!(eval_workload("G1").is_some());
+        assert!(eval_workload("G13").is_some());
+        assert!(eval_workload("G14").is_none());
+    }
+
+    #[test]
+    fn eval_spans_three_orders_of_magnitude() {
+        let wl = eval_workloads();
+        let lo = wl.first().unwrap().gemm.flops();
+        let hi = wl.last().unwrap().gemm.flops();
+        assert!(hi / lo > 500.0, "span {}", hi / lo);
+    }
+}

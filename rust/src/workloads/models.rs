@@ -1,0 +1,239 @@
+//! Structural model zoo: derive GEMM working sets from real DL
+//! architectures instead of hard-coding shapes.
+//!
+//! The paper extracts its training workloads from NCF/MLP/ViT/BERT and
+//! its evaluation workloads from Swin-Tiny/DeiT-Base/Qwen2.5-0.5B/
+//! LLaMA-3-1B inference. This module describes those architectures
+//! structurally (hidden sizes, FFN widths, attention layout) and emits
+//! the per-layer GEMMs for arbitrary sequence lengths / batch sizes —
+//! the job streams `examples/serve_llm.rs` and the `sweep` subcommand
+//! feed to the coordinator.
+
+use crate::workloads::Gemm;
+
+/// A transformer-family architecture (decoder or encoder).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TransformerSpec {
+    pub name: String,
+    pub hidden: usize,
+    pub ffn: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub n_layers: usize,
+    pub vocab: usize,
+    /// Gated FFN (SwiGLU-style: gate+up projections) vs plain MLP.
+    pub gated_ffn: bool,
+}
+
+impl TransformerSpec {
+    pub fn head_dim(&self) -> usize {
+        self.hidden / self.n_heads
+    }
+
+    /// Fused QKV output width (GQA shrinks the KV share).
+    pub fn qkv_width(&self) -> usize {
+        self.hidden + 2 * self.n_kv_heads * self.head_dim()
+    }
+
+    /// The GEMMs of ONE block for `m` token rows (named, in layer order).
+    pub fn block_gemms(&self, m: usize) -> Vec<(String, Gemm)> {
+        let mut out = vec![
+            ("qkv_proj".to_string(), Gemm::new(m, self.qkv_width(), self.hidden)),
+            ("attn_out".to_string(), Gemm::new(m, self.hidden, self.hidden)),
+        ];
+        if self.gated_ffn {
+            out.push(("ffn_gate_up".to_string(), Gemm::new(m, 2 * self.ffn, self.hidden)));
+        } else {
+            out.push(("ffn_up".to_string(), Gemm::new(m, self.ffn, self.hidden)));
+        }
+        out.push(("ffn_down".to_string(), Gemm::new(m, self.hidden, self.ffn)));
+        out
+    }
+
+    /// LM-head projection (decoder models).
+    pub fn lm_head(&self, m: usize) -> Gemm {
+        Gemm::new(m, self.vocab, self.hidden)
+    }
+
+    /// Whole-model inference working set: unique GEMMs of a forward pass
+    /// over `m` token rows (blocks are identical, so one block + head).
+    pub fn working_set(&self, m: usize, include_head: bool) -> Vec<(String, Gemm)> {
+        let mut out = self.block_gemms(m);
+        if include_head && self.vocab > 0 {
+            out.push(("lm_head".to_string(), self.lm_head(m)));
+        }
+        out
+    }
+
+    /// Total GEMM FLOPs for a forward pass over `m` rows.
+    pub fn forward_flops(&self, m: usize, include_head: bool) -> f64 {
+        let per_block: f64 = self.block_gemms(m).iter().map(|(_, g)| g.flops()).sum();
+        let head = if include_head && self.vocab > 0 {
+            self.lm_head(m).flops()
+        } else {
+            0.0
+        };
+        per_block * self.n_layers as f64 + head
+    }
+}
+
+/// Qwen2.5-0.5B (hidden 896, FFN 4864, 14 heads / 2 KV heads, 24 layers).
+pub fn qwen25_05b() -> TransformerSpec {
+    TransformerSpec {
+        name: "Qwen2.5-0.5B".into(),
+        hidden: 896,
+        ffn: 4864,
+        n_heads: 14,
+        n_kv_heads: 2,
+        n_layers: 24,
+        vocab: 151_936,
+        gated_ffn: true,
+    }
+}
+
+/// LLaMA-3.2-1B (hidden 2048, FFN 8192, 32 heads / 8 KV heads, 16 layers).
+pub fn llama3_1b() -> TransformerSpec {
+    TransformerSpec {
+        name: "LLaMA-3-1B".into(),
+        hidden: 2048,
+        ffn: 8192,
+        n_heads: 32,
+        n_kv_heads: 8,
+        n_layers: 16,
+        vocab: 128_256,
+        gated_ffn: true,
+    }
+}
+
+/// DeiT-Base encoder (hidden 768, MLP 3072, 12 heads, 12 layers; 197
+/// tokens per image at 224x224/patch-16).
+pub fn deit_base() -> TransformerSpec {
+    TransformerSpec {
+        name: "DeiT-Base".into(),
+        hidden: 768,
+        ffn: 3072,
+        n_heads: 12,
+        n_kv_heads: 12,
+        n_layers: 12,
+        vocab: 0,
+        gated_ffn: false,
+    }
+}
+
+/// BERT-Base encoder.
+pub fn bert_base() -> TransformerSpec {
+    TransformerSpec {
+        name: "BERT-Base".into(),
+        hidden: 768,
+        ffn: 3072,
+        n_heads: 12,
+        n_kv_heads: 12,
+        n_layers: 12,
+        vocab: 0,
+        gated_ffn: false,
+    }
+}
+
+/// A Swin-style hierarchical ViT stage (windowed attention — the GEMM
+/// shapes depend on the stage's token count and channel width).
+#[derive(Debug, Clone, Copy)]
+pub struct SwinStage {
+    pub tokens: usize,
+    pub channels: usize,
+}
+
+/// Swin-Tiny's four stages at 224x224 input.
+pub fn swin_tiny_stages() -> Vec<SwinStage> {
+    vec![
+        SwinStage { tokens: 3136, channels: 96 },
+        SwinStage { tokens: 784, channels: 192 },
+        SwinStage { tokens: 196, channels: 384 },
+        SwinStage { tokens: 49, channels: 768 },
+    ]
+}
+
+impl SwinStage {
+    /// The attention-projection and MLP GEMMs of one block in the stage.
+    pub fn block_gemms(&self) -> Vec<(String, Gemm)> {
+        let c = self.channels;
+        vec![
+            ("qkv".to_string(), Gemm::new(self.tokens, 3 * c, c)),
+            ("proj".to_string(), Gemm::new(self.tokens, c, c)),
+            ("mlp_fc1".to_string(), Gemm::new(self.tokens, 4 * c, c)),
+            ("mlp_fc2".to_string(), Gemm::new(self.tokens, c, 4 * c)),
+        ]
+    }
+}
+
+/// NCF MLP tower (user/item embedding concat -> funnel MLP).
+pub fn ncf_gemms(batch: usize) -> Vec<(String, Gemm)> {
+    vec![
+        ("mlp_l1".to_string(), Gemm::new(batch, 256, 512)),
+        ("mlp_l2".to_string(), Gemm::new(batch, 128, 256)),
+        ("mlp_l3".to_string(), Gemm::new(batch, 64, 128)),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qwen_shapes_match_eval_catalog() {
+        let q = qwen25_05b();
+        assert_eq!(q.head_dim(), 64);
+        // GQA: 2 KV heads of 64 -> qkv width 896 + 256.
+        assert_eq!(q.qkv_width(), 1152);
+        let block = q.block_gemms(32);
+        // attn_out is the paper-catalog G (32, 896, 896).
+        assert!(block.iter().any(|(n, g)| n == "attn_out" && *g == Gemm::new(32, 896, 896)));
+        // ffn_down contraction is the FFN width.
+        assert!(block.iter().any(|(n, g)| n == "ffn_down" && g.k == 4864));
+    }
+
+    #[test]
+    fn llama_lm_head_matches_g13_shape() {
+        let l = llama3_1b();
+        assert_eq!(l.lm_head(256), Gemm::new(256, 128_256, 2048));
+        assert_eq!(l.qkv_width(), 2048 + 2 * 8 * 64);
+    }
+
+    #[test]
+    fn deit_block_shapes() {
+        let d = deit_base();
+        let block = d.block_gemms(197);
+        assert!(block.iter().any(|(n, g)| n == "ffn_up" && *g == Gemm::new(197, 3072, 768)));
+        assert!(!d.gated_ffn);
+        assert_eq!(block.len(), 4);
+    }
+
+    #[test]
+    fn swin_stages_shrink_tokens_grow_channels() {
+        let stages = swin_tiny_stages();
+        assert_eq!(stages.len(), 4);
+        for w in stages.windows(2) {
+            assert_eq!(w[0].tokens, 4 * w[1].tokens);
+            assert_eq!(2 * w[0].channels, w[1].channels);
+        }
+        let g = &stages[0].block_gemms()[0].1;
+        assert_eq!(*g, Gemm::new(3136, 288, 96));
+    }
+
+    #[test]
+    fn forward_flops_scale_with_layers_and_rows() {
+        let q = qwen25_05b();
+        let f1 = q.forward_flops(64, false);
+        let f2 = q.forward_flops(128, false);
+        assert!((f2 / f1 - 2.0).abs() < 1e-9);
+        assert!(q.forward_flops(64, true) > f1);
+    }
+
+    #[test]
+    fn ncf_funnel() {
+        let g = ncf_gemms(256);
+        assert_eq!(g.len(), 3);
+        for w in g.windows(2) {
+            assert!(w[0].1.n > w[1].1.n);
+        }
+    }
+}

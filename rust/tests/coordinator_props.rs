@@ -1,0 +1,175 @@
+//! Property tests on coordinator invariants (routing, batching, state):
+//! randomized job streams through the planner/executor pipeline, with
+//! the invariants every router must keep — exactly-once completion, id
+//! preservation, cache coherence, monotonic stats.
+
+use versal_gemm::config::Config;
+use versal_gemm::coordinator::{Coordinator, GemmJob};
+use versal_gemm::dataset::Dataset;
+use versal_gemm::dse::{DseEngine, Objective};
+use versal_gemm::features::FeatureSet;
+use versal_gemm::models::Predictors;
+use versal_gemm::util::forall;
+use versal_gemm::util::rng::Rng;
+use versal_gemm::workloads::{training_workloads, Gemm};
+
+fn quick_cfg() -> Config {
+    let mut cfg = Config::default();
+    cfg.dataset.top_k = 8;
+    cfg.dataset.bottom_k = 6;
+    cfg.dataset.random_k = 20;
+    cfg.train.n_trees = 40;
+    cfg.train.learning_rate = 0.25;
+    cfg
+}
+
+fn engine(cfg: &Config) -> DseEngine {
+    let wl: Vec<_> = training_workloads().into_iter().take(3).collect();
+    let ds = Dataset::generate(cfg, &wl);
+    DseEngine::new(Predictors::train(&ds, cfg, FeatureSet::SetIAndII), &cfg.board)
+}
+
+/// Random pool of plan-only jobs over a small shape alphabet.
+fn random_jobs(rng: &mut Rng, n: usize) -> Vec<GemmJob> {
+    let shapes = [
+        Gemm::new(128, 256, 128),
+        Gemm::new(256, 512, 256),
+        Gemm::new(64, 1024, 512),
+        Gemm::new(512, 512, 512),
+    ];
+    (0..n as u64)
+        .map(|i| {
+            GemmJob::plan_only(
+                i,
+                shapes[rng.below(shapes.len())],
+                if rng.bool(0.5) {
+                    Objective::Throughput
+                } else {
+                    Objective::EnergyEfficiency
+                },
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn property_every_job_completes_exactly_once() {
+    let cfg = quick_cfg();
+    let eng = engine(&cfg);
+    forall(
+        0xC0DE,
+        6,
+        |r| {
+            let n = r.range_usize(1, 24);
+            let planners = r.range_usize(1, 3);
+            (random_jobs(r, n), planners)
+        },
+        |(jobs, planners)| {
+            let mut coord = Coordinator::start(&cfg, eng.clone(), None, *planners);
+            let n = jobs.len();
+            let results = coord.run_batch(jobs.clone());
+            assert_eq!(results.len(), n, "lost or duplicated jobs");
+            let mut ids: Vec<u64> = results.iter().map(|r| r.id).collect();
+            ids.sort_unstable();
+            ids.dedup();
+            assert_eq!(ids.len(), n, "duplicate completions");
+            assert!(coord.next_result().is_none(), "phantom extra result");
+        },
+    );
+}
+
+#[test]
+fn property_cache_is_coherent() {
+    // Jobs with the same (gemm, objective) must all receive the same plan
+    // regardless of planner interleaving.
+    let cfg = quick_cfg();
+    let eng = engine(&cfg);
+    forall(
+        0xCACE,
+        5,
+        |r| random_jobs(r, 20),
+        |jobs| {
+            let mut coord = Coordinator::start(&cfg, eng.clone(), None, 2);
+            let results = coord.run_batch(jobs.clone());
+            use std::collections::HashMap;
+            let mut seen: HashMap<(String, &str), _> = HashMap::new();
+            for res in &results {
+                let plan = res.plan.expect("plan");
+                let key = (res.gemm.label(), res.objective.label());
+                match seen.get(&key) {
+                    None => {
+                        seen.insert(key, plan.tiling);
+                    }
+                    Some(prev) => assert_eq!(
+                        *prev, plan.tiling,
+                        "cache served different plans for {key:?}"
+                    ),
+                }
+            }
+            let stats = coord.stats();
+            assert_eq!(
+                stats.cache_hits + stats.cache_misses,
+                results.len() as u64
+            );
+            // Two planners can race a first-seen key and both miss; the
+            // cache stays coherent but misses may exceed distinct keys by
+            // up to one extra miss per planner per key.
+            assert!(stats.cache_misses as usize <= seen.len() * 2 + 1);
+        },
+    );
+}
+
+#[test]
+fn property_stats_monotonic_across_batches() {
+    let cfg = quick_cfg();
+    let eng = engine(&cfg);
+    let mut coord = Coordinator::start(&cfg, eng, None, 2);
+    let mut rng = Rng::new(7);
+    let mut prev_completed = 0u64;
+    let mut prev_energy = 0.0f64;
+    for round in 0..4 {
+        let jobs = random_jobs(&mut rng, 6)
+            .into_iter()
+            .enumerate()
+            .map(|(i, mut j)| {
+                j.id = (round * 10 + i) as u64;
+                j
+            })
+            .collect();
+        let _ = coord.run_batch(jobs);
+        let s = coord.stats();
+        assert!(s.jobs_completed >= prev_completed);
+        assert!(s.simulated_energy_j >= prev_energy);
+        prev_completed = s.jobs_completed;
+        prev_energy = s.simulated_energy_j;
+    }
+}
+
+#[test]
+fn property_results_sorted_and_plans_valid() {
+    let cfg = quick_cfg();
+    let eng = engine(&cfg);
+    forall(
+        0x50FA,
+        4,
+        |r| {
+            let n = r.range_usize(2, 16);
+            random_jobs(r, n)
+        },
+        |jobs| {
+            let mut coord = Coordinator::start(&cfg, eng.clone(), None, 2);
+            let results = coord.run_batch(jobs.clone());
+            // run_batch returns id-sorted results.
+            for w in results.windows(2) {
+                assert!(w[0].id < w[1].id);
+            }
+            for res in &results {
+                let plan = res.plan.expect("plan");
+                // The chosen tiling partitions its workload.
+                assert!(plan.tiling.l3_iters(&res.gemm, 32).is_some());
+                assert!(plan.simulated.gflops > 0.0);
+                assert!(plan.simulated.power_w > 10.0);
+            }
+        },
+    );
+}

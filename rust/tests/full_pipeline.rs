@@ -1,0 +1,173 @@
+//! Integration: the whole framework pipeline on a reduced budget —
+//! offline phase → training → online DSE → framework comparison →
+//! report rendering — checking the paper's qualitative claims hold.
+
+use versal_gemm::analytical::{AriesPolicy, CharmPolicy};
+use versal_gemm::config::Config;
+use versal_gemm::dataset::Dataset;
+use versal_gemm::dse::compare::compare_frameworks;
+use versal_gemm::dse::{DseEngine, Objective};
+use versal_gemm::features::FeatureSet;
+use versal_gemm::metrics::geomean;
+use versal_gemm::models::Predictors;
+use versal_gemm::report::{render, Lab};
+use versal_gemm::workloads::{eval_workloads, training_workloads, Gemm};
+
+fn quick_cfg() -> Config {
+    let mut cfg = Config::default();
+    cfg.dataset.top_k = 14;
+    cfg.dataset.bottom_k = 10;
+    cfg.dataset.random_k = 80;
+    cfg.train.n_trees = 120;
+    cfg.train.learning_rate = 0.15;
+    cfg
+}
+
+fn quick_lab() -> Lab {
+    let cfg = quick_cfg();
+    let ds = Dataset::generate(&cfg, &training_workloads());
+    let predictors = Predictors::train(&ds, &cfg, FeatureSet::SetIAndII);
+    Lab::in_memory(cfg, ds, predictors)
+}
+
+#[test]
+fn offline_phase_produces_thousands_of_designs() {
+    let cfg = quick_cfg();
+    let ds = Dataset::generate(&cfg, &training_workloads());
+    assert!(ds.len() > 1200, "only {} designs", ds.len());
+    assert_eq!(ds.workload_ids().len(), 18);
+}
+
+#[test]
+fn framework_beats_baselines_on_geomean() {
+    // The paper's headline (Fig. 8): geomean > 1 vs both baselines, with
+    // the CHARM gap larger than the ARIES gap.
+    let lab = quick_lab();
+    let engine = lab.engine();
+    let mut thr_charm = Vec::new();
+    let mut thr_aries = Vec::new();
+    let mut eff_aries = Vec::new();
+    for w in eval_workloads().into_iter().take(8) {
+        let c = compare_frameworks(&lab.cfg, &engine, &w.gemm);
+        if let (Some(ch), Some(ar), Some(ot), Some(oe)) =
+            (c.charm, c.aries, c.ours_throughput, c.ours_energy)
+        {
+            thr_charm.push(ot.gflops / ch.gflops);
+            thr_aries.push(ot.gflops / ar.gflops);
+            eff_aries.push(oe.energy_eff / ar.energy_eff);
+        }
+    }
+    assert!(thr_charm.len() >= 6, "comparisons failed");
+    assert!(geomean(&thr_charm) > 1.1, "vs CHARM {}", geomean(&thr_charm));
+    assert!(geomean(&thr_aries) > 1.0, "vs ARIES {}", geomean(&thr_aries));
+    assert!(geomean(&eff_aries) > 0.95, "eff vs ARIES {}", geomean(&eff_aries));
+    assert!(
+        geomean(&thr_charm) > geomean(&thr_aries),
+        "CHARM should trail ARIES"
+    );
+}
+
+#[test]
+fn dse_objectives_are_coherent() {
+    let lab = quick_lab();
+    let engine = lab.engine();
+    for w in eval_workloads().into_iter().step_by(3) {
+        let r = engine.explore(&w.gemm).unwrap();
+        // The throughput pick predicts at least as much throughput as the
+        // energy pick, and vice versa for efficiency.
+        assert!(r.best_throughput.gflops >= r.best_energy.gflops - 1e-9);
+        assert!(r.best_energy.energy_eff >= r.best_throughput.energy_eff - 1e-9);
+        assert!(r.elapsed.as_secs_f64() < 2.0, "{} DSE too slow", w.id);
+    }
+}
+
+#[test]
+fn baselines_select_for_every_eval_workload() {
+    let cfg = quick_cfg();
+    let charm = CharmPolicy::new(&cfg.board);
+    let aries = AriesPolicy::new(&cfg.board);
+    for w in eval_workloads() {
+        assert!(charm.select(&w.gemm).is_some(), "CHARM failed on {}", w.id);
+        assert!(aries.select(&w.gemm).is_some(), "ARIES failed on {}", w.id);
+    }
+}
+
+#[test]
+fn reports_render_without_panicking() {
+    let lab = quick_lab();
+    for id in ["table2", "fig3", "fig7", "model-quality"] {
+        let text = render(&lab, id).unwrap();
+        assert!(text.len() > 100, "report {id} suspiciously short");
+    }
+    assert!(render(&lab, "nonsense").is_err());
+}
+
+#[test]
+fn dataset_roundtrip_through_disk_preserves_training() {
+    let cfg = quick_cfg();
+    let wl: Vec<_> = training_workloads().into_iter().take(4).collect();
+    let ds = Dataset::generate(&cfg, &wl);
+    let dir = std::env::temp_dir().join("versal_gemm_pipeline_test");
+    let path = dir.join("ds.csv");
+    ds.save(&cfg, &path).unwrap();
+    let back = Dataset::load(&cfg, &path).unwrap();
+    let m1 = Predictors::train(&ds, &cfg, FeatureSet::SetIAndII);
+    let m2 = Predictors::train(&back, &cfg, FeatureSet::SetIAndII);
+    // Training on the roundtripped dataset gives equivalent models; CSV
+    // rounding can flip individual tree splits, so compare predictions
+    // loosely rather than tree-for-tree.
+    let g = Gemm::new(512, 1024, 768);
+    let t = versal_gemm::tiling::Tiling::new((4, 4, 2), (2, 2, 2));
+    let a = m1.predict(&g, &t);
+    let b = m2.predict(&g, &t);
+    assert!(
+        (a.latency_s - b.latency_s).abs() / a.latency_s < 0.05,
+        "latency drifted: {} vs {}",
+        a.latency_s,
+        b.latency_s
+    );
+    assert!((a.power_w - b.power_w).abs() < 1.0);
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn determinism_end_to_end() {
+    // Same seeds => identical dataset, identical models, identical DSE.
+    let cfg = quick_cfg();
+    let wl: Vec<_> = training_workloads().into_iter().take(3).collect();
+    let ds1 = Dataset::generate(&cfg, &wl);
+    let ds2 = Dataset::generate(&cfg, &wl);
+    assert_eq!(ds1, ds2);
+    let m1 = Predictors::train(&ds1, &cfg, FeatureSet::SetIAndII);
+    let m2 = Predictors::train(&ds2, &cfg, FeatureSet::SetIAndII);
+    assert_eq!(m1, m2);
+    let e1 = DseEngine::new(m1, &cfg.board);
+    let g = Gemm::new(224, 3072, 768);
+    let r1 = e1.explore(&g).unwrap();
+    let e2 = DseEngine::new(m2, &cfg.board);
+    let r2 = e2.explore(&g).unwrap();
+    assert_eq!(r1.best_throughput.tiling, r2.best_throughput.tiling);
+    assert_eq!(r1.best_energy.tiling, r2.best_energy.tiling);
+    assert_eq!(r1.pareto.len(), r2.pareto.len());
+}
+
+#[test]
+fn energy_designs_use_fewer_aies_on_small_workloads() {
+    // Fig. 4c: energy-oriented mappings use fewer AIEs on the small and
+    // medium workloads.
+    let lab = quick_lab();
+    let engine = lab.engine();
+    let mut fewer = 0usize;
+    let mut total = 0usize;
+    for w in eval_workloads().into_iter().take(7) {
+        let c = compare_frameworks(&lab.cfg, &engine, &w.gemm);
+        if let (Some(t), Some(e)) = (c.ours_throughput, c.ours_energy) {
+            total += 1;
+            if e.n_aie <= t.n_aie {
+                fewer += 1;
+            }
+        }
+    }
+    assert!(total >= 5);
+    assert!(fewer * 3 >= total * 2, "energy designs bigger than throughput ones: {fewer}/{total}");
+}

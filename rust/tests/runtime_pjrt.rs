@@ -1,0 +1,128 @@
+//! Integration: the PJRT runtime over the real AOT artifacts.
+//!
+//! Requires `make artifacts` (the Makefile `test` target guarantees it).
+//! These tests exercise the L1→L2→L3 composition for real: Pallas
+//! kernels lowered to HLO text, compiled on the PJRT CPU client, and
+//! driven by the Rust tiled executor and the serving coordinator.
+
+use std::path::Path;
+
+use versal_gemm::config::Config;
+use versal_gemm::coordinator::{Coordinator, GemmJob};
+use versal_gemm::dataset::Dataset;
+use versal_gemm::dse::Objective;
+use versal_gemm::dse::DseEngine;
+use versal_gemm::features::FeatureSet;
+use versal_gemm::models::Predictors;
+use versal_gemm::runtime::{matmul_ref, max_abs_diff, GemmEngine};
+use versal_gemm::util::rng::Rng;
+use versal_gemm::workloads::{training_workloads, Gemm};
+
+fn artifacts() -> &'static Path {
+    let p = Path::new("artifacts");
+    assert!(
+        p.join("manifest.json").exists(),
+        "artifacts/manifest.json missing — run `make artifacts` first"
+    );
+    p
+}
+
+#[test]
+fn engine_loads_all_variants() {
+    let engine = GemmEngine::load(artifacts()).unwrap();
+    assert_eq!(engine.platform(), "cpu");
+    assert!(engine.manifest.variants.len() >= 5);
+    for name in ["micro_32", "tile_64", "tile_128", "tile_32x128x128", "tile_128_fused"] {
+        assert!(engine.variant_index(name).is_some(), "missing variant {name}");
+    }
+}
+
+#[test]
+fn micro_kernel_matches_reference() {
+    let engine = GemmEngine::load(artifacts()).unwrap();
+    let idx = engine.variant_index("micro_32").unwrap();
+    let mut rng = Rng::new(1);
+    let a: Vec<f32> = (0..32 * 32).map(|_| rng.normal() as f32).collect();
+    let b: Vec<f32> = (0..32 * 32).map(|_| rng.normal() as f32).collect();
+    let got = engine.execute_variant(idx, &a, &b).unwrap();
+    let want = matmul_ref(&a, &b, 32, 32, 32);
+    assert!(max_abs_diff(&got, &want) < 1e-4);
+}
+
+#[test]
+fn fused_variant_matches_blocked_variant() {
+    let engine = GemmEngine::load(artifacts()).unwrap();
+    let blocked = engine.variant_index("tile_128").unwrap();
+    let fused = engine.variant_index("tile_128_fused").unwrap();
+    let mut rng = Rng::new(2);
+    let a: Vec<f32> = (0..128 * 128).map(|_| rng.normal() as f32).collect();
+    let b: Vec<f32> = (0..128 * 128).map(|_| rng.normal() as f32).collect();
+    let x = engine.execute_variant(blocked, &a, &b).unwrap();
+    let y = engine.execute_variant(fused, &a, &b).unwrap();
+    assert!(max_abs_diff(&x, &y) < 1e-3);
+}
+
+#[test]
+fn tiled_executor_handles_unaligned_shapes() {
+    let engine = GemmEngine::load(artifacts()).unwrap();
+    let mut rng = Rng::new(3);
+    for (m, n, k) in [(32, 32, 32), (96, 64, 160), (70, 50, 90), (197, 128, 64), (1, 33, 7)] {
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let got = engine.gemm(&a, &b, m, n, k).unwrap();
+        let want = matmul_ref(&a, &b, m, n, k);
+        let err = max_abs_diff(&got, &want);
+        assert!(err < 1e-3, "{m}x{n}x{k}: err {err}");
+    }
+}
+
+#[test]
+fn executor_rejects_bad_shapes() {
+    let engine = GemmEngine::load(artifacts()).unwrap();
+    let a = vec![0f32; 10];
+    let b = vec![0f32; 10];
+    assert!(engine.gemm(&a, &b, 4, 4, 4).is_err());
+    let idx = engine.variant_index("micro_32").unwrap();
+    assert!(engine.execute_variant(idx, &a, &b).is_err());
+}
+
+#[test]
+fn coordinator_executes_and_validates_end_to_end() {
+    let cfg = {
+        let mut c = Config::default();
+        c.dataset.top_k = 8;
+        c.dataset.bottom_k = 6;
+        c.dataset.random_k = 20;
+        c.train.n_trees = 50;
+        c.train.learning_rate = 0.2;
+        c
+    };
+    let wl: Vec<_> = training_workloads().into_iter().take(3).collect();
+    let ds = Dataset::generate(&cfg, &wl);
+    let engine = DseEngine::new(Predictors::train(&ds, &cfg, FeatureSet::SetIAndII), &cfg.board);
+    let mut coord = Coordinator::start(&cfg, engine, Some("artifacts".into()), 2);
+
+    let mut rng = Rng::new(9);
+    let jobs: Vec<GemmJob> = (0..4u64)
+        .map(|i| {
+            let g = Gemm::new(64, 128 * (1 + i as usize % 2), 96);
+            let a: Vec<f32> = (0..g.m * g.k).map(|_| rng.normal() as f32).collect();
+            let b: Vec<f32> = (0..g.k * g.n).map(|_| rng.normal() as f32).collect();
+            let mut j = GemmJob::with_data(i, g, Objective::Throughput, a, b);
+            j.validate = true;
+            j
+        })
+        .collect();
+    let results = coord.run_batch(jobs);
+    assert_eq!(results.len(), 4);
+    for r in results {
+        assert!(r.error.is_none(), "job {} error {:?}", r.id, r.error);
+        assert!(r.exec_time.is_some());
+        let err = r.validation_err.expect("validated");
+        assert!(err < 1e-3, "job {} numerics {err}", r.id);
+        assert!(r.plan.is_some());
+    }
+    let stats = coord.stats();
+    assert_eq!(stats.executed_jobs, 4);
+    assert!(stats.executed_gflops() > 0.0);
+}
