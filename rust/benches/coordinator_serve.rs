@@ -1,7 +1,7 @@
-//! Bench: coordinator serving throughput (plan-only path: DSE + cache +
-//! channels), the L3 router hot path.
+//! Bench: coordinator serving throughput (plan-only path: streaming DSE
+//! + sharded plan cache + channels), the L3 router hot path.
 use versal_gemm::config::Config;
-use versal_gemm::coordinator::{Coordinator, GemmJob};
+use versal_gemm::coordinator::{Coordinator, CoordinatorOptions, GemmJob};
 use versal_gemm::dse::Objective;
 use versal_gemm::report::Lab;
 use versal_gemm::util::bench::once;
@@ -10,8 +10,13 @@ use versal_gemm::workloads::Gemm;
 fn main() -> anyhow::Result<()> {
     let cfg = Config::default();
     let lab = Lab::prepare(cfg.clone(), "data".into())?;
-    println!("== bench: coordinator plan-only serving ==");
-    let mut coord = Coordinator::start(&cfg, lab.engine(), None, 4);
+    println!("== bench: coordinator plan-only serving (sharded plan cache) ==");
+    let options = CoordinatorOptions::default();
+    println!(
+        "cache: {} shards, {} total capacity",
+        options.n_shards, options.cache_capacity
+    );
+    let mut coord = Coordinator::start_with(&cfg, lab.engine(), None, 4, options);
     let shapes = [
         Gemm::new(512, 1024, 512),
         Gemm::new(224, 3072, 768),
@@ -32,14 +37,42 @@ fn main() -> anyhow::Result<()> {
     assert_eq!(results.len(), 200);
     let stats = coord.stats();
     println!(
-        "cache: {} hits / {} misses; failed {}",
-        stats.cache_hits, stats.cache_misses, stats.jobs_failed
+        "cache: {} hits / {} misses / {} evictions ({:.0}% hit rate); failed {}",
+        stats.cache_hits,
+        stats.cache_misses,
+        stats.cache_evictions,
+        100.0 * stats.cache_hit_rate,
+        stats.jobs_failed
     );
-    let warm: Vec<f64> = results.iter().filter(|r| r.cache_hit).map(|r| r.plan_time.as_secs_f64()).collect();
+    let cold: Vec<f64> = results
+        .iter()
+        .filter(|r| !r.cache_hit)
+        .map(|r| r.plan_time.as_secs_f64())
+        .collect();
+    let warm: Vec<f64> = results
+        .iter()
+        .filter(|r| r.cache_hit)
+        .map(|r| r.plan_time.as_secs_f64())
+        .collect();
+    let cold_med = versal_gemm::metrics::median(&cold);
+    let warm_med = versal_gemm::metrics::median(&warm);
     println!(
-        "warm plan latency: median {:.1} us over {} jobs",
-        versal_gemm::metrics::median(&warm) * 1e6,
-        warm.len()
+        "plan latency: cold median {:.2} ms over {} jobs, warm median {:.1} us over {} jobs \
+         (p50 overall {:.3} ms)",
+        cold_med * 1e3,
+        cold.len(),
+        warm_med * 1e6,
+        warm.len(),
+        stats.plan_p50_ms
+    );
+    // Acceptance: a warm (cache-hit) plan is >= 5x faster than cold.
+    assert!(
+        cold_med >= warm_med * 5.0,
+        "warm plans not >=5x faster: cold {cold_med:.6}s warm {warm_med:.6}s"
+    );
+    println!(
+        "speedup warm vs cold: {:.0}x (acceptance floor: 5x)",
+        cold_med / warm_med.max(1e-12)
     );
     Ok(())
 }

@@ -1,5 +1,7 @@
 //! Bench: online-phase DSE wall-clock per workload (paper §V-A: the
-//! ML-driven DSE completes in < 2 s per workload).
+//! ML-driven DSE completes in < 2 s per workload). Exercises the
+//! streaming path: lazy candidate iterator -> PREDICT_CHUNK-sized
+//! batched GBDT predictions -> incremental Pareto front.
 use versal_gemm::config::Config;
 use versal_gemm::report::Lab;
 use versal_gemm::util::bench::{bench, report, report_throughput};
@@ -8,7 +10,10 @@ use versal_gemm::workloads::eval_workloads;
 fn main() -> anyhow::Result<()> {
     let lab = Lab::prepare(Config::default(), "data".into())?;
     let engine = lab.engine();
-    println!("== bench: DSE latency per eval workload (paper: < 2 s) ==");
+    println!(
+        "== bench: streaming DSE latency per eval workload (paper: < 2 s; chunk = {}) ==",
+        versal_gemm::dse::PREDICT_CHUNK
+    );
     let mut worst = 0.0f64;
     for w in eval_workloads() {
         let stats = bench(1, 5, || {

@@ -1,0 +1,561 @@
+//! N-way sharded, LRU-evicting plan cache — the coordinator's memory of
+//! the online phase.
+//!
+//! The seed coordinator serialized every planner on one
+//! `Mutex<HashMap>`; under heavy plan-only traffic the lock, not the
+//! DSE, became the bottleneck once plans were warm. This cache shards
+//! the key space `hash(Gemm, Objective) % N` so concurrent planners
+//! contend only when they race the *same* shard, bounds memory with
+//! per-shard LRU eviction, counts hits/misses/evictions (folded into
+//! `CoordinatorStats`), and persists to JSON via `util::json` so a
+//! restarted coordinator warms from disk (`--plan-cache` in `serve`).
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::coordinator::Plan;
+use crate::dse::Objective;
+use crate::models::Prediction;
+use crate::tiling::Tiling;
+use crate::util::json::{arr, num, obj, Json};
+use crate::util::lock_unpoisoned;
+use crate::util::rng::fnv1a;
+use crate::versal::{Measurement, Resources};
+use crate::workloads::Gemm;
+
+/// Stable objective <-> tag mapping used by cache keys and persistence.
+pub fn objective_tag(o: Objective) -> u8 {
+    match o {
+        Objective::Throughput => 0,
+        Objective::EnergyEfficiency => 1,
+    }
+}
+
+pub fn objective_from_tag(tag: u8) -> Option<Objective> {
+    match tag {
+        0 => Some(Objective::Throughput),
+        1 => Some(Objective::EnergyEfficiency),
+        _ => None,
+    }
+}
+
+/// Cache key: one plan per `(workload, objective)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    pub gemm: Gemm,
+    pub objective_tag: u8,
+}
+
+impl PlanKey {
+    pub fn new(gemm: Gemm, objective: Objective) -> PlanKey {
+        PlanKey {
+            gemm,
+            objective_tag: objective_tag(objective),
+        }
+    }
+
+    /// Deterministic 64-bit key hash (FNV-1a over the dims + tag), so
+    /// shard placement is stable across runs and processes.
+    fn hash64(&self) -> u64 {
+        let mut bytes = [0u8; 32];
+        let fields = [
+            self.gemm.m as u64,
+            self.gemm.n as u64,
+            self.gemm.k as u64,
+            self.objective_tag as u64,
+        ];
+        for (i, f) in fields.iter().enumerate() {
+            bytes[i * 8..(i + 1) * 8].copy_from_slice(&f.to_le_bytes());
+        }
+        fnv1a(&bytes)
+    }
+}
+
+/// Aggregate cache counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub entries: usize,
+}
+
+#[derive(Debug)]
+struct Entry {
+    plan: Plan,
+    last_used: u64,
+}
+
+#[derive(Debug, Default)]
+struct Shard {
+    map: HashMap<PlanKey, Entry>,
+    /// Monotonic per-shard recency clock (bumped on every access).
+    tick: u64,
+}
+
+/// The sharded plan cache. All methods take `&self`; interior shard
+/// locks are poison-proof so a panicking planner cannot wedge the pool.
+#[derive(Debug)]
+pub struct ShardedPlanCache {
+    shards: Vec<Mutex<Shard>>,
+    capacity_per_shard: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl ShardedPlanCache {
+    /// `capacity` is the TOTAL entry budget — an upper bound, never
+    /// exceeded. It is split evenly over `n_shards`; the shard count is
+    /// clamped to the capacity so tiny budgets cannot inflate (8 shards
+    /// with capacity 4 become 4 shards of 1, not 8 entries).
+    pub fn new(n_shards: usize, capacity: usize) -> ShardedPlanCache {
+        let capacity = capacity.max(1);
+        let n = n_shards.clamp(1, capacity);
+        let per_shard = capacity / n;
+        ShardedPlanCache {
+            shards: (0..n).map(|_| Mutex::new(Shard::default())).collect(),
+            capacity_per_shard: per_shard,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Effective total capacity across shards (<= the requested budget;
+    /// even division can round it down slightly).
+    pub fn capacity(&self) -> usize {
+        self.capacity_per_shard * self.shards.len()
+    }
+
+    fn shard(&self, key: &PlanKey) -> &Mutex<Shard> {
+        &self.shards[(key.hash64() % self.shards.len() as u64) as usize]
+    }
+
+    /// Look up a plan, bumping its recency and the hit/miss counters.
+    pub fn get(&self, key: &PlanKey) -> Option<Plan> {
+        let mut shard = lock_unpoisoned(self.shard(key));
+        shard.tick += 1;
+        let tick = shard.tick;
+        match shard.map.get_mut(key) {
+            Some(e) => {
+                e.last_used = tick;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(e.plan)
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Insert (or refresh) a plan, evicting the shard's least-recently
+    /// -used entry when the shard is at capacity.
+    pub fn insert(&self, key: PlanKey, plan: Plan) {
+        let mut shard = lock_unpoisoned(self.shard(&key));
+        shard.tick += 1;
+        let tick = shard.tick;
+        if !shard.map.contains_key(&key) && shard.map.len() >= self.capacity_per_shard {
+            if let Some(victim) = shard
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| *k)
+            {
+                shard.map.remove(&victim);
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        shard.map.insert(
+            key,
+            Entry {
+                plan,
+                last_used: tick,
+            },
+        );
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| lock_unpoisoned(s).map.len())
+            .sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            entries: self.len(),
+        }
+    }
+
+    // -- persistence -----------------------------------------------------
+
+    /// Serialize every cached entry (order-insensitive snapshot).
+    pub fn to_json(&self) -> Json {
+        let mut entries = Vec::new();
+        for shard in &self.shards {
+            let shard = lock_unpoisoned(shard);
+            for (key, e) in shard.map.iter() {
+                entries.push(entry_json(key, &e.plan));
+            }
+        }
+        obj(vec![("version", num(1.0)), ("plans", arr(entries))])
+    }
+
+    /// Rebuild a cache from a snapshot under new shard/capacity settings
+    /// (entries beyond capacity evict LRU-arbitrarily, which is fine for
+    /// a warm-start hint). Malformed entries are skipped, not fatal: a
+    /// stale cache file must never prevent the coordinator from booting.
+    pub fn from_json(json: &Json, n_shards: usize, capacity: usize) -> ShardedPlanCache {
+        let cache = ShardedPlanCache::new(n_shards, capacity);
+        if let Some(plans) = json.get("plans").and_then(Json::as_arr) {
+            for p in plans {
+                if let Some((key, plan)) = entry_from_json(p) {
+                    cache.insert(key, plan);
+                }
+            }
+        }
+        // A warm start is not a "hit" and skews nothing: reset counters.
+        cache.hits.store(0, Ordering::Relaxed);
+        cache.misses.store(0, Ordering::Relaxed);
+        cache.evictions.store(0, Ordering::Relaxed);
+        cache
+    }
+
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        std::fs::write(path, self.to_json().to_string_compact())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path, n_shards: usize, capacity: usize) -> anyhow::Result<ShardedPlanCache> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading plan cache {}: {e}", path.display()))?;
+        let json = Json::parse(&text).map_err(|e| anyhow::anyhow!("plan cache: {e}"))?;
+        Ok(ShardedPlanCache::from_json(&json, n_shards, capacity))
+    }
+}
+
+fn entry_json(key: &PlanKey, plan: &Plan) -> Json {
+    let t = &plan.tiling;
+    let pred = &plan.predicted;
+    let sim = &plan.simulated;
+    let res = &sim.resources;
+    obj(vec![
+        ("m", num(key.gemm.m as f64)),
+        ("n", num(key.gemm.n as f64)),
+        ("k", num(key.gemm.k as f64)),
+        ("obj", num(key.objective_tag as f64)),
+        (
+            "tiling",
+            arr([
+                num(t.p_m as f64),
+                num(t.p_n as f64),
+                num(t.p_k as f64),
+                num(t.b_m as f64),
+                num(t.b_n as f64),
+                num(t.b_k as f64),
+            ]),
+        ),
+        ("pred_latency_s", num(pred.latency_s)),
+        ("pred_power_w", num(pred.power_w)),
+        ("pred_resources_pct", arr(pred.resources_pct.iter().map(|&v| num(v)))),
+        ("sim_latency_s", num(sim.latency_s)),
+        ("sim_power_w", num(sim.power_w)),
+        ("sim_gflops", num(sim.gflops)),
+        ("sim_energy_eff", num(sim.energy_eff)),
+        ("sim_busy", num(sim.busy)),
+        (
+            "sim_resources",
+            arr([
+                num(res.bram as f64),
+                num(res.uram as f64),
+                num(res.lut as f64),
+                num(res.ff as f64),
+                num(res.dsp as f64),
+            ]),
+        ),
+    ])
+}
+
+fn entry_from_json(json: &Json) -> Option<(PlanKey, Plan)> {
+    let usize_field = |k: &str| json.get(k).and_then(Json::as_usize);
+    let f64_field = |k: &str| json.get(k).and_then(Json::as_f64);
+    let gemm = Gemm::new(usize_field("m")?, usize_field("n")?, usize_field("k")?);
+    // Range-check BEFORE narrowing: `256 as u8` would wrap to a "valid"
+    // tag and let a corrupted entry masquerade as a Throughput plan.
+    let tag_raw = usize_field("obj")?;
+    if tag_raw > u8::MAX as usize {
+        return None;
+    }
+    let tag = tag_raw as u8;
+    objective_from_tag(tag)?;
+    let tl = json.get("tiling")?.as_arr()?;
+    if tl.len() != 6 {
+        return None;
+    }
+    let tv: Vec<usize> = tl.iter().filter_map(Json::as_usize).collect();
+    if tv.len() != 6 || tv.iter().any(|&v| v == 0) {
+        return None;
+    }
+    let tiling = Tiling::new((tv[0], tv[1], tv[2]), (tv[3], tv[4], tv[5]));
+    let pr = json.get("pred_resources_pct")?.as_arr()?;
+    let prv: Vec<f64> = pr.iter().filter_map(Json::as_f64).collect();
+    if prv.len() != 5 {
+        return None;
+    }
+    let mut resources_pct = [0.0; 5];
+    resources_pct.copy_from_slice(&prv);
+    let predicted = Prediction {
+        latency_s: f64_field("pred_latency_s")?,
+        power_w: f64_field("pred_power_w")?,
+        resources_pct,
+    };
+    let sr = json.get("sim_resources")?.as_arr()?;
+    let srv: Vec<usize> = sr.iter().filter_map(Json::as_usize).collect();
+    if srv.len() != 5 {
+        return None;
+    }
+    let simulated = Measurement {
+        latency_s: f64_field("sim_latency_s")?,
+        power_w: f64_field("sim_power_w")?,
+        resources: Resources {
+            bram: srv[0],
+            uram: srv[1],
+            lut: srv[2],
+            ff: srv[3],
+            dsp: srv[4],
+        },
+        gflops: f64_field("sim_gflops")?,
+        energy_eff: f64_field("sim_energy_eff")?,
+        busy: f64_field("sim_busy")?,
+    };
+    Some((
+        PlanKey {
+            gemm,
+            objective_tag: tag,
+        },
+        Plan {
+            tiling,
+            predicted,
+            simulated,
+        },
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn plan(p_m: usize) -> Plan {
+        Plan {
+            tiling: Tiling::new((p_m, 2, 1), (1, 2, 4)),
+            predicted: Prediction {
+                latency_s: 1e-3 * p_m as f64,
+                power_w: 20.0,
+                resources_pct: [1.0, 2.0, 3.0, 4.0, 5.0],
+            },
+            simulated: Measurement {
+                latency_s: 1.1e-3 * p_m as f64,
+                power_w: 21.5,
+                resources: Resources {
+                    bram: 10 * p_m,
+                    uram: 3,
+                    lut: 12_345,
+                    ff: 23_456,
+                    dsp: 78,
+                },
+                gflops: 100.0 + p_m as f64,
+                energy_eff: 5.0,
+                busy: 0.9,
+            },
+        }
+    }
+
+    fn key(m: usize, obj: Objective) -> PlanKey {
+        PlanKey::new(Gemm::new(m, 64, 64), obj)
+    }
+
+    #[test]
+    fn get_insert_roundtrip_and_counters() {
+        let cache = ShardedPlanCache::new(4, 64);
+        let k = key(128, Objective::Throughput);
+        assert_eq!(cache.get(&k), None);
+        cache.insert(k, plan(4));
+        assert_eq!(cache.get(&k).unwrap().tiling.p_m, 4);
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.evictions, s.entries), (1, 1, 0, 1));
+        // Objectives key separately.
+        assert_eq!(cache.get(&key(128, Objective::EnergyEfficiency)), None);
+    }
+
+    #[test]
+    fn lru_eviction_order() {
+        // Single shard, capacity 2: classic LRU sequence.
+        let cache = ShardedPlanCache::new(1, 2);
+        let (ka, kb, kc) = (
+            key(32, Objective::Throughput),
+            key(64, Objective::Throughput),
+            key(96, Objective::Throughput),
+        );
+        cache.insert(ka, plan(1));
+        cache.insert(kb, plan(2));
+        // Touch A so B becomes the LRU victim.
+        assert!(cache.get(&ka).is_some());
+        cache.insert(kc, plan(3));
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.stats().evictions, 1);
+        assert!(cache.get(&ka).is_some(), "recently-used entry evicted");
+        assert!(cache.get(&kb).is_none(), "LRU entry survived");
+        assert!(cache.get(&kc).is_some());
+    }
+
+    #[test]
+    fn reinserting_existing_key_does_not_evict() {
+        let cache = ShardedPlanCache::new(1, 2);
+        let (ka, kb) = (key(32, Objective::Throughput), key(64, Objective::Throughput));
+        cache.insert(ka, plan(1));
+        cache.insert(kb, plan(2));
+        cache.insert(ka, plan(5)); // refresh, at capacity
+        assert_eq!(cache.stats().evictions, 0);
+        assert_eq!(cache.get(&ka).unwrap().tiling.p_m, 5);
+        assert!(cache.get(&kb).is_some());
+    }
+
+    #[test]
+    fn concurrent_hit_miss_accounting() {
+        let cache = Arc::new(ShardedPlanCache::new(8, 1024));
+        let n_threads = 4usize;
+        let per_thread = 200usize;
+        // Pre-populate half the key space.
+        for m in 0..per_thread {
+            if m % 2 == 0 {
+                cache.insert(key(32 * (m + 1), Objective::Throughput), plan(1));
+            }
+        }
+        let mut handles = Vec::new();
+        for _ in 0..n_threads {
+            let cache = Arc::clone(&cache);
+            handles.push(std::thread::spawn(move || {
+                let mut hits = 0u64;
+                for m in 0..per_thread {
+                    if cache.get(&key(32 * (m + 1), Objective::Throughput)).is_some() {
+                        hits += 1;
+                    }
+                }
+                hits
+            }));
+        }
+        let local_hits: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        let s = cache.stats();
+        assert_eq!(local_hits, (per_thread as u64 / 2) * n_threads as u64);
+        assert_eq!(s.hits, local_hits);
+        assert_eq!(s.hits + s.misses, (n_threads * per_thread) as u64);
+        assert_eq!(s.evictions, 0);
+    }
+
+    #[test]
+    fn deterministic_sharding() {
+        let k = key(224, Objective::EnergyEfficiency);
+        let a = ShardedPlanCache::new(8, 64);
+        let b = ShardedPlanCache::new(8, 64);
+        a.insert(k, plan(2));
+        b.insert(k, plan(2));
+        // Same shard index both times: hash64 is process-independent.
+        let idx_a = (k.hash64() % 8) as usize;
+        let idx_b = (k.hash64() % 8) as usize;
+        assert_eq!(idx_a, idx_b);
+        assert!(a.get(&k).is_some() && b.get(&k).is_some());
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_plans() {
+        let cache = ShardedPlanCache::new(4, 64);
+        for m in [32usize, 64, 224] {
+            cache.insert(key(m, Objective::Throughput), plan(m / 32));
+            cache.insert(key(m, Objective::EnergyEfficiency), plan(m / 16));
+        }
+        let json = cache.to_json();
+        let back = ShardedPlanCache::from_json(&json, 2, 64);
+        assert_eq!(back.len(), cache.len());
+        for m in [32usize, 64, 224] {
+            let k = key(m, Objective::Throughput);
+            assert_eq!(back.get(&k), cache.get(&k));
+        }
+        // Text roundtrip too.
+        let reparsed = Json::parse(&json.to_string_compact()).unwrap();
+        let again = ShardedPlanCache::from_json(&reparsed, 8, 64);
+        assert_eq!(again.len(), cache.len());
+    }
+
+    #[test]
+    fn capacity_budget_is_an_upper_bound() {
+        // 8 shards with budget 4 must clamp, not inflate to 8 entries.
+        let cache = ShardedPlanCache::new(8, 4);
+        assert_eq!(cache.n_shards(), 4);
+        assert!(cache.capacity() <= 4);
+        for m in 1..=10usize {
+            cache.insert(key(32 * m, Objective::Throughput), plan(1));
+        }
+        assert!(cache.len() <= 4, "cache grew past its budget: {}", cache.len());
+        // Exact division stays exact.
+        assert_eq!(ShardedPlanCache::new(8, 1024).capacity(), 1024);
+    }
+
+    #[test]
+    fn out_of_range_objective_tag_is_rejected() {
+        // A tag of 256 must not wrap to 0 and load as a Throughput plan.
+        let good = ShardedPlanCache::new(1, 8);
+        good.insert(key(32, Objective::Throughput), plan(1));
+        let mut text = good.to_json().to_string_compact();
+        text = text.replace("\"obj\":0", "\"obj\":256");
+        let tampered = Json::parse(&text).unwrap();
+        let back = ShardedPlanCache::from_json(&tampered, 1, 8);
+        assert!(back.is_empty(), "wrapped objective tag was accepted");
+    }
+
+    #[test]
+    fn malformed_snapshot_entries_are_skipped() {
+        let json = Json::parse(
+            r#"{"version": 1, "plans": [{"m": 32, "n": "bad"}, 17, {"m": 32}]}"#,
+        )
+        .unwrap();
+        let cache = ShardedPlanCache::from_json(&json, 4, 64);
+        assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn save_load_roundtrip_on_disk() {
+        let dir = std::env::temp_dir().join("versal_gemm_plan_cache_test");
+        let path = dir.join("plans.json");
+        let cache = ShardedPlanCache::new(4, 64);
+        cache.insert(key(512, Objective::Throughput), plan(8));
+        cache.save(&path).unwrap();
+        let back = ShardedPlanCache::load(&path, 4, 64).unwrap();
+        assert_eq!(back.len(), 1);
+        assert_eq!(
+            back.get(&key(512, Objective::Throughput)),
+            cache.get(&key(512, Objective::Throughput))
+        );
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

@@ -5,7 +5,10 @@
 //! §V-A). This module is that service:
 //!
 //! ```text
-//!   submit(GemmJob) ──► planner pool (DSE, cached per (gemm, objective))
+//!   submit(GemmJob) ──► planner pool (streaming DSE)
+//!                         │   ▲
+//!                         ▼   │ per-(gemm, objective) plans
+//!                     sharded LRU plan cache (N-way, persistable)
 //!                         │ plan-only jobs return here
 //!                         ▼
 //!                     executor thread (owns the PJRT GemmEngine)
@@ -17,21 +20,35 @@
 //!                     metrics + real execution time + validation)
 //! ```
 //!
-//! Planners are pure-CPU and run in parallel; the executor is a single
-//! thread because PJRT handles are not `Send`-safe across arbitrary
-//! threads (it is created *inside* its thread). Python never appears.
+//! Planners are pure-CPU and run in parallel; they contend only on the
+//! plan-cache *shard* their key hashes to (see [`cache`]), not on one
+//! global map lock as the seed did. The cache evicts LRU per shard,
+//! reports hit/miss/eviction counters plus the p50 plan latency through
+//! [`CoordinatorStats`], and can persist to disk so a restarted
+//! coordinator warms from the previous process's plans
+//! ([`CoordinatorOptions::cache_path`], `serve --plan-cache`).
+//!
+//! The executor is a single thread because PJRT handles are not
+//! `Send`-safe across arbitrary threads (it is created *inside* its
+//! thread). Python never appears. Serve-path failures (planner pool
+//! gone, DSE errors, missing artifacts) surface as `JobResult::error`,
+//! never as panics.
 
-use std::collections::HashMap;
+pub mod cache;
+
+use std::collections::VecDeque;
 use std::path::PathBuf;
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, SendError, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::config::Config;
+use crate::coordinator::cache::{PlanKey, ShardedPlanCache};
 use crate::dse::{DseEngine, Objective};
 use crate::models::Prediction;
 use crate::runtime::{matmul_ref, max_abs_diff, GemmEngine};
 use crate::tiling::Tiling;
+use crate::util::lock_unpoisoned;
 use crate::versal::reconfig::ReconfigModel;
 use crate::versal::{BufferPlacement, Measurement, VersalSim};
 use crate::workloads::Gemm;
@@ -119,6 +136,12 @@ pub struct CoordinatorStats {
     pub jobs_failed: u64,
     pub cache_hits: u64,
     pub cache_misses: u64,
+    /// Plans dropped by per-shard LRU eviction.
+    pub cache_evictions: u64,
+    /// `cache_hits / (cache_hits + cache_misses)`, 0.0 before traffic.
+    pub cache_hit_rate: f64,
+    /// Median planner latency (cache hits and misses together, ms).
+    pub plan_p50_ms: f64,
     pub executed_jobs: u64,
     pub executed_flops: f64,
     pub exec_time_s: f64,
@@ -140,6 +163,56 @@ impl CoordinatorStats {
     }
 }
 
+/// Tunables of the planning hot path.
+#[derive(Debug, Clone)]
+pub struct CoordinatorOptions {
+    /// Plan-cache shard count (lock-contention granularity).
+    pub n_shards: usize,
+    /// Total plan-cache entry budget (split across shards, LRU per shard).
+    pub cache_capacity: usize,
+    /// When set: warm the cache from this JSON file at start (if present)
+    /// and persist back on shutdown.
+    pub cache_path: Option<PathBuf>,
+}
+
+impl Default for CoordinatorOptions {
+    fn default() -> Self {
+        CoordinatorOptions {
+            n_shards: 8,
+            cache_capacity: 1024,
+            cache_path: None,
+        }
+    }
+}
+
+/// Bounded reservoir of recent plan latencies for the p50 readout.
+#[derive(Debug, Default)]
+struct PlanLatencies {
+    samples_ms: Vec<f64>,
+    cursor: usize,
+}
+
+const MAX_PLAN_SAMPLES: usize = 16_384;
+
+impl PlanLatencies {
+    fn push(&mut self, ms: f64) {
+        if self.samples_ms.len() < MAX_PLAN_SAMPLES {
+            self.samples_ms.push(ms);
+        } else {
+            self.samples_ms[self.cursor] = ms;
+            self.cursor = (self.cursor + 1) % MAX_PLAN_SAMPLES;
+        }
+    }
+
+    fn p50_ms(&self) -> f64 {
+        if self.samples_ms.is_empty() {
+            0.0
+        } else {
+            crate::metrics::median(&self.samples_ms)
+        }
+    }
+}
+
 struct PlannedJob {
     job: GemmJob,
     result: JobResult,
@@ -156,27 +229,64 @@ pub struct Coordinator {
     planners: Vec<std::thread::JoinHandle<()>>,
     executor: Option<std::thread::JoinHandle<()>>,
     stats: Arc<Mutex<CoordinatorStats>>,
+    cache: Arc<ShardedPlanCache>,
+    plan_lat: Arc<Mutex<PlanLatencies>>,
+    cache_path: Option<PathBuf>,
+    /// Jobs rejected at submit time (pool gone / already shut down);
+    /// drained ahead of channel results so every submit yields a result.
+    rejected: VecDeque<JobResult>,
     pending: u64,
 }
 
 impl Coordinator {
-    /// Start the service. `artifacts_dir = None` runs in plan-only mode
-    /// (jobs with data are refused politely in the result).
+    /// Start the service with default cache options. `artifacts_dir =
+    /// None` runs in plan-only mode (jobs with data are refused politely
+    /// in the result).
     pub fn start(
         cfg: &Config,
         engine: DseEngine,
         artifacts_dir: Option<PathBuf>,
         n_planners: usize,
     ) -> Coordinator {
+        Coordinator::start_with(cfg, engine, artifacts_dir, n_planners, CoordinatorOptions::default())
+    }
+
+    /// Start the service with explicit plan-cache options.
+    pub fn start_with(
+        cfg: &Config,
+        engine: DseEngine,
+        artifacts_dir: Option<PathBuf>,
+        n_planners: usize,
+        options: CoordinatorOptions,
+    ) -> Coordinator {
         let (job_tx, job_rx) = channel::<GemmJob>();
         let (exec_tx, exec_rx) = channel::<ExecMsg>();
         let (result_tx, result_rx) = channel::<JobResult>();
         let job_rx = Arc::new(Mutex::new(job_rx));
         let stats = Arc::new(Mutex::new(CoordinatorStats::default()));
+        let plan_lat = Arc::new(Mutex::new(PlanLatencies::default()));
 
         let dse = Arc::new(engine);
         let sim = Arc::new(VersalSim::new(cfg));
-        let cache: Arc<Mutex<HashMap<(Gemm, u8), Plan>>> = Arc::new(Mutex::new(HashMap::new()));
+        let cache = Arc::new(match &options.cache_path {
+            Some(path) if path.exists() => {
+                match ShardedPlanCache::load(path, options.n_shards, options.cache_capacity) {
+                    Ok(c) => {
+                        eprintln!(
+                            "coordinator: warmed plan cache with {} plans from {}",
+                            c.len(),
+                            path.display()
+                        );
+                        c
+                    }
+                    Err(e) => {
+                        eprintln!("coordinator: ignoring plan cache {}: {e}", path.display());
+                        ShardedPlanCache::new(options.n_shards, options.cache_capacity)
+                    }
+                }
+            }
+            _ => ShardedPlanCache::new(options.n_shards, options.cache_capacity),
+        });
 
         // --- planner pool -------------------------------------------------
         let mut planners = Vec::new();
@@ -188,16 +298,17 @@ impl Coordinator {
             let sim = Arc::clone(&sim);
             let cache = Arc::clone(&cache);
             let stats = Arc::clone(&stats);
+            let plan_lat = Arc::clone(&plan_lat);
             planners.push(std::thread::spawn(move || loop {
                 let job = {
-                    let guard = job_rx.lock().unwrap();
+                    let guard = lock_unpoisoned(&job_rx);
                     guard.recv()
                 };
                 let job = match job {
                     Ok(j) => j,
                     Err(_) => break, // all senders dropped: shutdown
                 };
-                let planned = plan_job(&dse, &sim, &cache, &stats, job);
+                let planned = plan_job(&dse, &sim, &cache, &stats, &plan_lat, job);
                 let has_data = planned.job.a.is_some() && planned.job.b.is_some();
                 if has_data && planned.result.error.is_none() {
                     let _ = exec_tx.send(ExecMsg::Job(Box::new(planned)));
@@ -259,7 +370,7 @@ impl Coordinator {
                                 &plan.tiling,
                                 &board,
                             );
-                            let mut s = exec_stats.lock().unwrap();
+                            let mut s = lock_unpoisoned(&exec_stats);
                             s.reconfigs += 1;
                             s.simulated_reconfig_s += cost;
                             drop(s);
@@ -278,24 +389,51 @@ impl Coordinator {
             planners,
             executor: Some(executor),
             stats,
+            cache,
+            plan_lat,
+            cache_path: options.cache_path,
+            rejected: VecDeque::new(),
             pending: 0,
         }
     }
 
-    /// Enqueue a job.
+    /// Enqueue a job. Never panics: if the coordinator is shut down or
+    /// the planner pool is gone, a `JobResult` carrying the error is
+    /// queued instead (surfaced by `next_result`/`run_batch`).
     pub fn submit(&mut self, job: GemmJob) {
-        self.job_tx
-            .as_ref()
-            .expect("coordinator already shut down")
-            .send(job)
-            .expect("planner pool gone");
         self.pending += 1;
+        let refused = match &self.job_tx {
+            Some(tx) => match tx.send(job) {
+                Ok(()) => None,
+                Err(SendError(job)) => Some((job, "planner pool unavailable")),
+            },
+            None => Some((job, "coordinator already shut down")),
+        };
+        if let Some((job, why)) = refused {
+            lock_unpoisoned(&self.stats).jobs_failed += 1;
+            self.rejected.push_back(JobResult {
+                id: job.id,
+                gemm: job.gemm,
+                objective: job.objective,
+                plan: None,
+                plan_time: Duration::default(),
+                cache_hit: false,
+                exec_time: None,
+                validation_err: None,
+                c: None,
+                error: Some(why.to_string()),
+            });
+        }
     }
 
     /// Wait for the next completed job.
     pub fn next_result(&mut self) -> Option<JobResult> {
         if self.pending == 0 {
             return None;
+        }
+        if let Some(r) = self.rejected.pop_front() {
+            self.pending -= 1;
+            return Some(r);
         }
         match self.result_rx.recv() {
             Ok(r) => {
@@ -324,10 +462,26 @@ impl Coordinator {
     }
 
     pub fn stats(&self) -> CoordinatorStats {
-        *self.stats.lock().unwrap()
+        let mut s = *lock_unpoisoned(&self.stats);
+        let cs = self.cache.stats();
+        s.cache_evictions = cs.evictions;
+        let lookups = s.cache_hits + s.cache_misses;
+        s.cache_hit_rate = if lookups > 0 {
+            s.cache_hits as f64 / lookups as f64
+        } else {
+            0.0
+        };
+        s.plan_p50_ms = lock_unpoisoned(&self.plan_lat).p50_ms();
+        s
     }
 
-    /// Graceful shutdown: waits for in-flight work.
+    /// Direct view of the plan cache (tests, benches, diagnostics).
+    pub fn plan_cache(&self) -> &ShardedPlanCache {
+        &self.cache
+    }
+
+    /// Graceful shutdown: waits for in-flight work, then persists the
+    /// plan cache when a path was configured.
     pub fn shutdown(&mut self) {
         if let Some(tx) = self.job_tx.take() {
             drop(tx);
@@ -338,6 +492,16 @@ impl Coordinator {
         if let Some(h) = self.executor.take() {
             let _ = h.join();
         }
+        if let Some(path) = self.cache_path.take() {
+            match self.cache.save(&path) {
+                Ok(()) => eprintln!(
+                    "coordinator: persisted {} cached plans to {}",
+                    self.cache.len(),
+                    path.display()
+                ),
+                Err(e) => eprintln!("coordinator: failed to persist plan cache: {e}"),
+            }
+        }
     }
 }
 
@@ -347,23 +511,17 @@ impl Drop for Coordinator {
     }
 }
 
-fn objective_tag(o: Objective) -> u8 {
-    match o {
-        Objective::Throughput => 0,
-        Objective::EnergyEfficiency => 1,
-    }
-}
-
 fn plan_job(
     dse: &DseEngine,
     sim: &VersalSim,
-    cache: &Mutex<HashMap<(Gemm, u8), Plan>>,
+    cache: &ShardedPlanCache,
     stats: &Mutex<CoordinatorStats>,
+    plan_lat: &Mutex<PlanLatencies>,
     job: GemmJob,
 ) -> PlannedJob {
     let started = Instant::now();
-    let key = (job.gemm, objective_tag(job.objective));
-    let cached = cache.lock().unwrap().get(&key).copied();
+    let key = PlanKey::new(job.gemm, job.objective);
+    let cached = cache.get(&key);
     let (plan, cache_hit, error) = match cached {
         Some(p) => (Some(p), true, None),
         None => match dse.explore(&job.gemm) {
@@ -383,15 +541,17 @@ fn plan_job(
                 match built {
                     None => (None, false, Some("no buildable design".to_string())),
                     Some(plan) => {
-                        cache.lock().unwrap().insert(key, plan);
+                        cache.insert(key, plan);
                         (Some(plan), false, None)
                     }
                 }
             }
         },
     };
+    let plan_time = started.elapsed();
+    lock_unpoisoned(plan_lat).push(plan_time.as_secs_f64() * 1e3);
     {
-        let mut s = stats.lock().unwrap();
+        let mut s = lock_unpoisoned(stats);
         if cache_hit {
             s.cache_hits += 1;
         } else {
@@ -411,7 +571,7 @@ fn plan_job(
         gemm: job.gemm,
         objective: job.objective,
         plan,
-        plan_time: started.elapsed(),
+        plan_time,
         cache_hit,
         exec_time: None,
         validation_err: None,
@@ -447,7 +607,7 @@ fn execute_job(engine: Option<&GemmEngine>, stats: &Mutex<CoordinatorStats>, pla
                 planned.result.validation_err = Some(max_abs_diff(&c, &want));
             }
             planned.result.c = Some(c);
-            let mut s = stats.lock().unwrap();
+            let mut s = lock_unpoisoned(stats);
             s.executed_jobs += 1;
             s.executed_flops += g.flops();
             s.exec_time_s += elapsed.as_secs_f64();
@@ -473,11 +633,14 @@ mod tests {
         cfg
     }
 
-    fn coordinator(cfg: &Config) -> Coordinator {
+    fn dse_engine(cfg: &Config) -> DseEngine {
         let wl: Vec<_> = training_workloads().into_iter().take(4).collect();
         let ds = Dataset::generate(cfg, &wl);
-        let engine = DseEngine::new(Predictors::train(&ds, cfg, FeatureSet::SetIAndII), &cfg.board);
-        Coordinator::start(cfg, engine, None, 2)
+        DseEngine::new(Predictors::train(&ds, cfg, FeatureSet::SetIAndII), &cfg.board)
+    }
+
+    fn coordinator(cfg: &Config) -> Coordinator {
+        Coordinator::start(cfg, dse_engine(cfg), None, 2)
     }
 
     #[test]
@@ -523,9 +686,39 @@ mod tests {
         let stats = coord.stats();
         assert!(stats.cache_hits >= 6, "cache hits {}", stats.cache_hits);
         assert!(stats.cache_misses >= 1);
+        assert!(stats.cache_hit_rate > 0.5, "hit rate {}", stats.cache_hit_rate);
+        assert!(stats.plan_p50_ms >= 0.0);
         // Cached plans are identical.
         let t0 = results[0].plan.unwrap().tiling;
         assert!(results.iter().all(|r| r.plan.unwrap().tiling == t0));
+    }
+
+    #[test]
+    fn warm_plans_are_much_faster_than_cold() {
+        // Acceptance: a cache-hit plan for a repeated (Gemm, Objective)
+        // is >= 5x faster than the cold DSE plan (in practice ~1000x).
+        let cfg = quick_cfg();
+        let mut coord = coordinator(&cfg);
+        let g = Gemm::new(512, 1024, 512);
+        let cold = coord.run_batch(vec![GemmJob::plan_only(0, g, Objective::Throughput)]);
+        assert!(!cold[0].cache_hit);
+        let warm = coord.run_batch(
+            (1..5)
+                .map(|i| GemmJob::plan_only(i, g, Objective::Throughput))
+                .collect(),
+        );
+        let cold_s = cold[0].plan_time.as_secs_f64();
+        let warm_s = warm
+            .iter()
+            .map(|r| {
+                assert!(r.cache_hit, "repeat job missed the cache");
+                r.plan_time.as_secs_f64()
+            })
+            .fold(f64::INFINITY, f64::min);
+        assert!(
+            cold_s >= warm_s * 5.0,
+            "cold {cold_s:.6}s not >= 5x warm {warm_s:.6}s"
+        );
     }
 
     #[test]
@@ -573,6 +766,19 @@ mod tests {
     }
 
     #[test]
+    fn submit_after_shutdown_surfaces_error_result() {
+        let cfg = quick_cfg();
+        let mut coord = coordinator(&cfg);
+        coord.shutdown();
+        coord.submit(GemmJob::plan_only(7, Gemm::new(128, 256, 128), Objective::Throughput));
+        let r = coord.next_result().expect("rejected job still yields a result");
+        assert_eq!(r.id, 7);
+        assert!(r.error.as_deref().unwrap_or("").contains("shut down"));
+        assert!(coord.next_result().is_none());
+        assert!(coord.stats().jobs_failed >= 1);
+    }
+
+    #[test]
     fn stats_accumulate() {
         let cfg = quick_cfg();
         let mut coord = coordinator(&cfg);
@@ -584,5 +790,58 @@ mod tests {
         let s = coord.stats();
         assert_eq!(s.jobs_completed, 2);
         assert!(s.simulated_energy_j > 0.0);
+    }
+
+    #[test]
+    fn tiny_cache_evicts_and_reports() {
+        let cfg = quick_cfg();
+        let opts = CoordinatorOptions {
+            n_shards: 1,
+            cache_capacity: 1,
+            cache_path: None,
+        };
+        let mut coord = Coordinator::start_with(&cfg, dse_engine(&cfg), None, 2, opts);
+        let shapes = [
+            Gemm::new(128, 256, 128),
+            Gemm::new(256, 512, 256),
+            Gemm::new(128, 512, 128),
+        ];
+        let jobs: Vec<GemmJob> = shapes
+            .iter()
+            .enumerate()
+            .map(|(i, g)| GemmJob::plan_only(i as u64, *g, Objective::Throughput))
+            .collect();
+        let results = coord.run_batch(jobs);
+        assert_eq!(results.len(), 3);
+        let s = coord.stats();
+        assert!(s.cache_evictions >= 1, "evictions {}", s.cache_evictions);
+        assert!(coord.plan_cache().len() <= 1);
+    }
+
+    #[test]
+    fn plan_cache_persists_across_restarts() {
+        let cfg = quick_cfg();
+        let dir = std::env::temp_dir().join("versal_gemm_coord_cache_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("plans.json");
+        let opts = CoordinatorOptions {
+            cache_path: Some(path.clone()),
+            ..CoordinatorOptions::default()
+        };
+        let engine = dse_engine(&cfg);
+        let g = Gemm::new(512, 1024, 512);
+
+        let mut first = Coordinator::start_with(&cfg, engine.clone(), None, 2, opts.clone());
+        let r1 = first.run_batch(vec![GemmJob::plan_only(0, g, Objective::Throughput)]);
+        assert!(r1[0].error.is_none());
+        first.shutdown();
+        assert!(path.exists(), "shutdown did not persist the cache");
+
+        let mut second = Coordinator::start_with(&cfg, engine, None, 2, opts);
+        let r2 = second.run_batch(vec![GemmJob::plan_only(0, g, Objective::Throughput)]);
+        assert!(r2[0].cache_hit, "restarted coordinator did not warm from disk");
+        assert_eq!(r1[0].plan.unwrap().tiling, r2[0].plan.unwrap().tiling);
+        assert_eq!(second.stats().cache_hits, 1);
+        let _ = std::fs::remove_dir_all(dir);
     }
 }

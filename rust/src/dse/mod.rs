@@ -1,22 +1,38 @@
 //! Online phase: ML-driven design space exploration (paper §IV-B).
 //!
-//! Given a GEMM and an objective, the engine enumerates every tiling
-//! configuration, computes Set-II features, batch-predicts
-//! `{𝓛, 𝓟, 𝓡}` with the pretrained models, filters configurations that
-//! do not fit the PL, extracts the Pareto front on the
+//! Given a GEMM and an objective, the engine *streams* the tiling
+//! candidate space ([`crate::tiling::candidate_iter`]), featurizes and
+//! batch-predicts `{𝓛, 𝓟, 𝓡}` in fixed-size chunks through the
+//! pretrained models, filters configurations that do not fit the PL,
+//! folds survivors into an incremental Pareto front on the
 //! (throughput, energy-efficiency) plane, and returns the best mapping
 //! for the requested objective. Paper: "less than 2 sec. per workload".
+//!
+//! The streaming path never materializes the candidate set: worker
+//! threads pull [`PREDICT_CHUNK`]-sized batches off a shared lazy
+//! iterator, so peak memory is O(front + feasible) rather than
+//! O(|C(G)|), and the Pareto front is maintained insert-by-insert
+//! instead of by a full post-hoc sweep. Ties are broken by the tiling
+//! tuple so results are deterministic regardless of worker interleaving
+//! (`streaming_matches_materialized_path` checks equivalence with the
+//! old materialize-everything path).
 //!
 //! [`ExhaustiveExplorer`] is the ground-truth twin used for Fig. 4 / 10:
 //! it measures every candidate on the simulator instead of predicting.
 
 pub mod compare;
 
+use std::sync::Mutex;
+
 use crate::metrics::{hypervolume_2d, pareto_front_max};
 use crate::models::{Prediction, Predictors};
-use crate::tiling::{enumerate_candidates, Tiling, TilingLimits};
+use crate::tiling::{candidate_iter, enumerate_candidates, Tiling, TilingLimits};
+use crate::util::lock_unpoisoned;
 use crate::versal::{BufferPlacement, Measurement, VersalSim};
 use crate::workloads::Gemm;
+
+/// Candidates per featurize+predict batch on the streaming hot path.
+pub const PREDICT_CHUNK: usize = 256;
 
 /// Optimization objective of the online phase.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -51,6 +67,88 @@ pub struct CandidateEval {
     pub energy_eff: f64,
 }
 
+/// Total-order tie-break key: ensures every selection is deterministic
+/// even when two candidates predict identical metrics and when worker
+/// threads process chunks in different orders.
+fn tiling_key(t: &Tiling) -> (usize, usize, usize, usize, usize, usize) {
+    (t.p_m, t.p_n, t.p_k, t.b_m, t.b_n, t.b_k)
+}
+
+/// `true` iff the new candidate strictly beats the incumbent on the
+/// metric, or ties it with a smaller tiling key. NaN metrics never win.
+fn improves(metric_new: f64, new: &Tiling, metric_cur: f64, cur: &Tiling) -> bool {
+    match metric_new.total_cmp(&metric_cur) {
+        std::cmp::Ordering::Greater => true,
+        std::cmp::Ordering::Less => false,
+        std::cmp::Ordering::Equal => tiling_key(new) < tiling_key(cur),
+    }
+}
+
+fn dominates(a: &CandidateEval, b: &CandidateEval) -> bool {
+    a.gflops >= b.gflops
+        && a.energy_eff >= b.energy_eff
+        && (a.gflops > b.gflops || a.energy_eff > b.energy_eff)
+}
+
+/// Incrementally maintained 2-D maximization Pareto front.
+///
+/// Inserts are O(front size), which stays in the tens for this design
+/// space — far cheaper than re-sweeping every feasible candidate, and
+/// insertion-order independent (exact-coordinate duplicates resolve to
+/// the smallest tiling key).
+#[derive(Debug, Clone, Default)]
+pub struct ParetoFront {
+    points: Vec<CandidateEval>,
+}
+
+impl ParetoFront {
+    pub fn insert(&mut self, c: CandidateEval) {
+        if !(c.gflops.is_finite() && c.energy_eff.is_finite()) {
+            return;
+        }
+        if let Some(i) = self
+            .points
+            .iter()
+            .position(|p| p.gflops == c.gflops && p.energy_eff == c.energy_eff)
+        {
+            if tiling_key(&c.tiling) < tiling_key(&self.points[i].tiling) {
+                self.points[i] = c;
+            }
+            return;
+        }
+        if self.points.iter().any(|p| dominates(p, &c)) {
+            return;
+        }
+        self.points.retain(|p| !dominates(&c, p));
+        self.points.push(c);
+    }
+
+    pub fn merge(&mut self, other: ParetoFront) {
+        for c in other.points {
+            self.insert(c);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// The front, throughput-descending (cosmetic parity with the old
+    /// sweep-based extraction).
+    pub fn into_sorted(mut self) -> Vec<CandidateEval> {
+        self.points.sort_by(|a, b| {
+            b.gflops
+                .total_cmp(&a.gflops)
+                .then_with(|| tiling_key(&a.tiling).cmp(&tiling_key(&b.tiling)))
+        });
+        self.points
+    }
+}
+
 /// Result of one DSE run.
 #[derive(Debug, Clone)]
 pub struct DseResult {
@@ -77,7 +175,8 @@ impl DseResult {
     }
 
     /// All feasible candidates, best-first by the objective — the retry
-    /// order when a selected design fails to build.
+    /// order when a selected design fails to build. Deterministic: ties
+    /// on the metric resolve by the tiling tuple.
     pub fn ranked(&self, objective: Objective) -> Vec<CandidateEval> {
         let mut out = self.feasible.clone();
         out.sort_by(|a, b| {
@@ -85,10 +184,21 @@ impl DseResult {
                 Objective::Throughput => (a.gflops, b.gflops),
                 Objective::EnergyEfficiency => (a.energy_eff, b.energy_eff),
             };
-            kb.partial_cmp(&ka).unwrap()
+            kb.total_cmp(&ka)
+                .then_with(|| tiling_key(&a.tiling).cmp(&tiling_key(&b.tiling)))
         });
         out
     }
+}
+
+/// Per-worker accumulator for one streaming pass.
+#[derive(Debug, Default)]
+struct StreamAcc {
+    n_candidates: usize,
+    feasible: Vec<CandidateEval>,
+    front: ParetoFront,
+    best_thr: Option<CandidateEval>,
+    best_eff: Option<CandidateEval>,
 }
 
 /// The ML-driven DSE engine.
@@ -112,78 +222,144 @@ impl DseEngine {
         }
     }
 
-    /// Featurize + predict + resource-filter a candidate slice.
-    /// Parallelized across threads for large spaces (the DSE hot path:
-    /// ~1350 tree traversals per candidate over up to ~25k candidates).
-    fn evaluate_candidates(&self, g: &Gemm, candidates: &[Tiling]) -> Vec<CandidateEval> {
-        let n_threads = std::thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(1)
-            .min(8);
-        let chunk_work = |chunk: &[Tiling]| -> Vec<CandidateEval> {
-            let mut out = Vec::with_capacity(chunk.len());
-            let n_feat = self.predictors.feature_set.len();
-            for t in chunk {
-                let full = crate::features::featurize(g, t, self.micro);
-                let prediction = self.predictors.predict_row(&full[..n_feat]);
-                if !prediction.fits(self.resource_margin_pct) {
-                    continue;
-                }
-                out.push(CandidateEval {
-                    tiling: *t,
-                    prediction,
-                    gflops: prediction.gflops(g),
-                    energy_eff: prediction.energy_eff(g),
-                });
-            }
-            out
-        };
-        if candidates.len() < 2048 || n_threads <= 1 {
-            return chunk_work(candidates);
+    /// Evaluate one already-predicted candidate against the filters;
+    /// returns `None` for designs that do not fit or whose predictions
+    /// degenerate (NaN/non-positive — never propagated downstream).
+    fn admit(&self, g: &Gemm, t: &Tiling, prediction: &Prediction) -> Option<CandidateEval> {
+        if !prediction.fits(self.resource_margin_pct) {
+            return None;
         }
-        let chunk_size = candidates.len().div_ceil(n_threads);
-        std::thread::scope(|scope| {
-            let handles: Vec<_> = candidates
-                .chunks(chunk_size)
-                .map(|chunk| scope.spawn(move || chunk_work(chunk)))
-                .collect();
-            let mut out = Vec::with_capacity(candidates.len() / 2);
-            for h in handles {
-                out.extend(h.join().expect("dse worker panicked"));
-            }
-            out
+        let gflops = prediction.gflops(g);
+        let energy_eff = prediction.energy_eff(g);
+        if !(gflops.is_finite() && gflops > 0.0 && energy_eff.is_finite() && energy_eff > 0.0) {
+            return None;
+        }
+        Some(CandidateEval {
+            tiling: *t,
+            prediction: *prediction,
+            gflops,
+            energy_eff,
         })
     }
 
-    /// Run the full online phase for one workload.
+    /// One worker of the streaming pass: pull fixed-size chunks off the
+    /// shared lazy iterator, featurize into a reused flat buffer, batch
+    /// -predict, and fold survivors into the local accumulator.
+    fn stream_worker<I: Iterator<Item = Tiling>>(
+        &self,
+        g: &Gemm,
+        shared: &Mutex<I>,
+    ) -> StreamAcc {
+        let n_feat = self.predictors.feature_set.len();
+        let mut acc = StreamAcc::default();
+        let mut batch: Vec<Tiling> = Vec::with_capacity(PREDICT_CHUNK);
+        let mut rows: Vec<f64> = Vec::with_capacity(PREDICT_CHUNK * n_feat);
+        let mut preds: Vec<Prediction> = Vec::with_capacity(PREDICT_CHUNK);
+        loop {
+            batch.clear();
+            {
+                let mut it = lock_unpoisoned(shared);
+                while batch.len() < PREDICT_CHUNK {
+                    match it.next() {
+                        Some(t) => batch.push(t),
+                        None => break,
+                    }
+                }
+            }
+            if batch.is_empty() {
+                break;
+            }
+            acc.n_candidates += batch.len();
+            rows.clear();
+            for t in &batch {
+                let full = crate::features::featurize(g, t, self.micro);
+                rows.extend_from_slice(&full[..n_feat]);
+            }
+            self.predictors.predict_rows(&rows, n_feat, &mut preds);
+            for (t, prediction) in batch.iter().zip(&preds) {
+                let Some(c) = self.admit(g, t, prediction) else {
+                    continue;
+                };
+                if acc
+                    .best_thr
+                    .map_or(true, |b| improves(c.gflops, &c.tiling, b.gflops, &b.tiling))
+                {
+                    acc.best_thr = Some(c);
+                }
+                if acc.best_eff.map_or(true, |b| {
+                    improves(c.energy_eff, &c.tiling, b.energy_eff, &b.tiling)
+                }) {
+                    acc.best_eff = Some(c);
+                }
+                acc.front.insert(c);
+                acc.feasible.push(c);
+            }
+        }
+        acc
+    }
+
+    /// Run the full online phase for one workload, streaming the
+    /// candidate space across up to 8 worker threads.
     pub fn explore(&self, g: &Gemm) -> anyhow::Result<DseResult> {
         let start = std::time::Instant::now();
-        let candidates = enumerate_candidates(g, self.micro, &self.limits);
-        let n_candidates = candidates.len();
+        let shared = Mutex::new(candidate_iter(g, self.micro, &self.limits));
+        let n_threads = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .clamp(1, 8);
+
+        let joined: Vec<std::thread::Result<StreamAcc>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..n_threads)
+                .map(|_| scope.spawn(|| self.stream_worker(g, &shared)))
+                .collect();
+            // Join EVERY handle before leaving the scope: short-circuiting
+            // on the first panicked worker would leave other panicked
+            // threads to be auto-joined by `scope`, which re-panics and
+            // would kill the calling planner thread. Joining each handle
+            // marks its panic as handled, so a worker panic degrades to a
+            // recoverable error below (surfaced in JobResult::error).
+            handles.into_iter().map(|h| h.join()).collect()
+        });
+        let accs: Vec<StreamAcc> = joined
+            .into_iter()
+            .map(|r| r.map_err(|_| anyhow::anyhow!("dse worker panicked for {}", g.label())))
+            .collect::<anyhow::Result<_>>()?;
+
+        let mut n_candidates = 0usize;
+        let mut feasible = Vec::new();
+        let mut front = ParetoFront::default();
+        let mut best_thr: Option<CandidateEval> = None;
+        let mut best_eff: Option<CandidateEval> = None;
+        for acc in accs {
+            n_candidates += acc.n_candidates;
+            feasible.extend(acc.feasible);
+            front.merge(acc.front);
+            if let Some(c) = acc.best_thr {
+                if best_thr.map_or(true, |b| improves(c.gflops, &c.tiling, b.gflops, &b.tiling)) {
+                    best_thr = Some(c);
+                }
+            }
+            if let Some(c) = acc.best_eff {
+                if best_eff.map_or(true, |b| {
+                    improves(c.energy_eff, &c.tiling, b.energy_eff, &b.tiling)
+                }) {
+                    best_eff = Some(c);
+                }
+            }
+        }
+
         if n_candidates == 0 {
             anyhow::bail!("no tiling candidates for {}", g.label());
         }
-
-        let feasible = self.evaluate_candidates(g, &candidates);
-        if feasible.is_empty() {
+        let (Some(best_throughput), Some(best_energy)) = (best_thr, best_eff) else {
             anyhow::bail!("no feasible design for {}", g.label());
-        }
-
-        let best_throughput = *feasible
-            .iter()
-            .max_by(|a, b| a.gflops.partial_cmp(&b.gflops).unwrap())
-            .unwrap();
-        let best_energy = *feasible
-            .iter()
-            .max_by(|a, b| a.energy_eff.partial_cmp(&b.energy_eff).unwrap())
-            .unwrap();
-        let pareto = pareto_candidates(&feasible);
+        };
 
         Ok(DseResult {
             gemm: *g,
             n_candidates,
             n_feasible: feasible.len(),
-            pareto,
+            pareto: front.into_sorted(),
             feasible,
             best_throughput,
             best_energy,
@@ -213,42 +389,42 @@ pub fn best_buildable(
 /// error collapses many truly-Pareto designs onto near-misses; the
 /// relaxed front (paper's "set with candidate GEMM mappings") recovers
 /// them for Fig. 10-style frontier construction.
+///
+/// Hardened: empty input or `cap == 0` yields an empty front, NaN
+/// metrics are skipped, and exact-duplicate tilings are collapsed.
 pub fn epsilon_pareto(cands: &[CandidateEval], eps: f64, cap: usize) -> Vec<CandidateEval> {
+    if cands.is_empty() || cap == 0 || !eps.is_finite() {
+        return Vec::new();
+    }
     let front = pareto_candidates(cands);
     let mut out: Vec<CandidateEval> = cands
         .iter()
+        .filter(|c| c.gflops.is_finite() && c.energy_eff.is_finite())
         .filter(|c| {
             !front.iter().any(|f| {
-                f.gflops >= c.gflops * (1.0 + eps)
-                    && f.energy_eff >= c.energy_eff * (1.0 + eps)
+                f.gflops >= c.gflops * (1.0 + eps) && f.energy_eff >= c.energy_eff * (1.0 + eps)
             })
         })
         .copied()
         .collect();
-    out.sort_by(|a, b| b.gflops.partial_cmp(&a.gflops).unwrap());
+    out.sort_by(|a, b| {
+        b.gflops
+            .total_cmp(&a.gflops)
+            .then_with(|| tiling_key(&a.tiling).cmp(&tiling_key(&b.tiling)))
+    });
+    out.dedup_by(|a, b| a.tiling == b.tiling);
     out.truncate(cap);
     out
 }
 
 /// Extract the Pareto-optimal subset of candidate evaluations.
+/// NaN metrics are skipped rather than panicking the comparison sort.
 pub fn pareto_candidates(cands: &[CandidateEval]) -> Vec<CandidateEval> {
-    let mut idx: Vec<usize> = (0..cands.len()).collect();
-    idx.sort_by(|&a, &b| {
-        cands[b]
-            .gflops
-            .partial_cmp(&cands[a].gflops)
-            .unwrap()
-            .then(cands[b].energy_eff.partial_cmp(&cands[a].energy_eff).unwrap())
-    });
-    let mut front = Vec::new();
-    let mut best_eff = f64::NEG_INFINITY;
-    for i in idx {
-        if cands[i].energy_eff > best_eff {
-            front.push(cands[i]);
-            best_eff = cands[i].energy_eff;
-        }
+    let mut front = ParetoFront::default();
+    for c in cands {
+        front.insert(*c);
     }
-    front
+    front.into_sorted()
 }
 
 /// Ground-truth exploration: measure every candidate on the simulator
@@ -288,7 +464,7 @@ impl ExhaustiveExplorer {
                 Objective::Throughput => b.1.gflops,
                 Objective::EnergyEfficiency => b.1.energy_eff,
             };
-            ka.partial_cmp(&kb).unwrap()
+            ka.total_cmp(&kb)
         })
     }
 
@@ -385,6 +561,121 @@ mod tests {
                 assert!(!dominates, "front member {i} dominated by {j}");
             }
         }
+        // into_sorted order: throughput-descending.
+        for w in front.windows(2) {
+            assert!(w[0].gflops >= w[1].gflops);
+        }
+    }
+
+    #[test]
+    fn streaming_matches_materialized_path() {
+        // The streaming/batched/incremental path must select exactly the
+        // mappings the old materialize-everything path selected.
+        let cfg = quick_cfg();
+        let eng = engine(&cfg);
+        for g in [
+            Gemm::new(512, 1024, 768),
+            Gemm::new(224, 3072, 768),
+            Gemm::new(128, 256, 128),
+            Gemm::new(32, 896, 896),
+        ] {
+            let r = eng.explore(&g).unwrap();
+
+            // Reference: eager enumeration, per-candidate prediction.
+            let cands = enumerate_candidates(&g, eng.micro, &eng.limits);
+            let n_feat = eng.predictors.feature_set.len();
+            let mut feasible: Vec<CandidateEval> = Vec::new();
+            for t in &cands {
+                let full = crate::features::featurize(&g, t, eng.micro);
+                let p = eng.predictors.predict_row(&full[..n_feat]);
+                if let Some(c) = eng.admit(&g, t, &p) {
+                    feasible.push(c);
+                }
+            }
+            assert_eq!(r.n_candidates, cands.len(), "{}", g.label());
+            assert_eq!(r.n_feasible, feasible.len(), "{}", g.label());
+
+            let best_thr = feasible
+                .iter()
+                .copied()
+                .reduce(|a, b| {
+                    if improves(b.gflops, &b.tiling, a.gflops, &a.tiling) {
+                        b
+                    } else {
+                        a
+                    }
+                })
+                .unwrap();
+            let best_eff = feasible
+                .iter()
+                .copied()
+                .reduce(|a, b| {
+                    if improves(b.energy_eff, &b.tiling, a.energy_eff, &a.tiling) {
+                        b
+                    } else {
+                        a
+                    }
+                })
+                .unwrap();
+            assert_eq!(r.best_throughput.tiling, best_thr.tiling, "{}", g.label());
+            assert_eq!(r.best_energy.tiling, best_eff.tiling, "{}", g.label());
+
+            // Same Pareto set (as a set of tilings).
+            let mut want: Vec<_> = pareto_candidates(&feasible)
+                .iter()
+                .map(|c| c.tiling)
+                .collect();
+            let mut got: Vec<_> = r.pareto.iter().map(|c| c.tiling).collect();
+            want.sort_by_key(tiling_key);
+            got.sort_by_key(tiling_key);
+            assert_eq!(got, want, "{}", g.label());
+        }
+    }
+
+    #[test]
+    fn explore_is_deterministic_across_runs() {
+        let cfg = quick_cfg();
+        let eng = engine(&cfg);
+        let g = Gemm::new(224, 3072, 768);
+        let a = eng.explore(&g).unwrap();
+        let b = eng.explore(&g).unwrap();
+        assert_eq!(a.best_throughput.tiling, b.best_throughput.tiling);
+        assert_eq!(a.best_energy.tiling, b.best_energy.tiling);
+        assert_eq!(a.pareto.len(), b.pareto.len());
+        for (x, y) in a.pareto.iter().zip(&b.pareto) {
+            assert_eq!(x.tiling, y.tiling);
+        }
+    }
+
+    #[test]
+    fn pareto_helpers_survive_degenerate_inputs() {
+        // Empty input.
+        assert!(pareto_candidates(&[]).is_empty());
+        assert!(epsilon_pareto(&[], 0.05, 10).is_empty());
+        let mk = |gf: f64, ee: f64, p_m: usize| CandidateEval {
+            tiling: Tiling::new((p_m, 1, 1), (1, 1, 1)),
+            prediction: Prediction {
+                latency_s: 1.0,
+                power_w: 1.0,
+                resources_pct: [0.0; 5],
+            },
+            gflops: gf,
+            energy_eff: ee,
+        };
+        // NaN points are skipped, not propagated.
+        let cands = [mk(f64::NAN, 1.0, 1), mk(2.0, f64::NAN, 2), mk(1.0, 1.0, 3)];
+        let front = pareto_candidates(&cands);
+        assert_eq!(front.len(), 1);
+        assert_eq!(front[0].tiling.p_m, 3);
+        // Duplicate points collapse deterministically (smallest key wins).
+        let dups = [mk(1.0, 1.0, 5), mk(1.0, 1.0, 2), mk(1.0, 1.0, 9)];
+        let front = pareto_candidates(&dups);
+        assert_eq!(front.len(), 1);
+        assert_eq!(front[0].tiling.p_m, 2);
+        // epsilon_pareto with cap 0 and duplicate tilings.
+        assert!(epsilon_pareto(&dups, 0.05, 0).is_empty());
+        let eps = epsilon_pareto(&[mk(1.0, 1.0, 2), mk(1.0, 1.0, 2)], 0.05, 10);
+        assert_eq!(eps.len(), 1);
     }
 
     #[test]

@@ -14,8 +14,9 @@
 //!   selection, Jetson GPU comparators, a PJRT runtime that executes the
 //!   chosen mappings through the AOT kernels, and a serving coordinator.
 //!
-//! See `DESIGN.md` for the system inventory and the per-figure/table
-//! experiment index, and `EXPERIMENTS.md` for paper-vs-measured results.
+//! See `DESIGN.md` (repo root) for the system inventory, the
+//! DSE→coordinator planning-path diagram (including the sharded plan
+//! cache), and the per-figure/table experiment index.
 
 pub mod analytical;
 pub mod coordinator;

@@ -12,7 +12,7 @@
 use std::path::PathBuf;
 
 use versal_gemm::config::Config;
-use versal_gemm::coordinator::{Coordinator, GemmJob};
+use versal_gemm::coordinator::{Coordinator, CoordinatorOptions, GemmJob};
 use versal_gemm::dataset::Dataset;
 use versal_gemm::dse::Objective;
 use versal_gemm::features::FeatureSet;
@@ -37,6 +37,8 @@ SUBCOMMANDS:
   report    <fig1|fig3|fig4|fig6|fig7|fig8|fig9|fig10|table2|table3|model-quality|all>
             [--data-dir data] [--out file]
   serve     [--jobs N] [--artifacts artifacts] [--data-dir data]
+            [--planners N] [--cache-shards N] [--cache-capacity N]
+            [--plan-cache file.json]   persist/warm the plan cache across restarts
   validate  [--artifacts artifacts]            PJRT runtime vs reference GEMM
   sweep     --model qwen|llama|deit [--seqs 32,64,..] per-layer mapping sweep
   info                                         board + workload summary
@@ -201,9 +203,16 @@ fn cmd_report(args: &Args, cfg: Config, data_dir: PathBuf) -> anyhow::Result<()>
 fn cmd_serve(args: &Args, cfg: Config, data_dir: PathBuf) -> anyhow::Result<()> {
     let n_jobs = args.opt_usize("jobs", 24)?;
     let artifacts = PathBuf::from(args.opt_or("artifacts", "artifacts"));
+    let n_planners = args.opt_usize("planners", 2)?;
+    let defaults = CoordinatorOptions::default();
+    let options = CoordinatorOptions {
+        n_shards: args.opt_usize("cache-shards", defaults.n_shards)?,
+        cache_capacity: args.opt_usize("cache-capacity", defaults.cache_capacity)?,
+        cache_path: args.opt("plan-cache").map(PathBuf::from),
+    };
     let lab = Lab::prepare(cfg.clone(), data_dir)?;
     let engine = lab.engine();
-    let mut coord = Coordinator::start(&cfg, engine, Some(artifacts), 2);
+    let mut coord = Coordinator::start_with(&cfg, engine, Some(artifacts), n_planners, options);
 
     // A small LLM-inference-like job stream over the eval workloads.
     let wl = eval_workloads();
@@ -245,14 +254,19 @@ fn cmd_serve(args: &Args, cfg: Config, data_dir: PathBuf) -> anyhow::Result<()> 
     let stats = coord.stats();
     println!(
         "served {ok}/{} jobs in {:.2}s — exec throughput {:.2} GFLOP/s, \
-         cache {} hits / {} misses, simulated VCK190 energy {:.1} J",
+         cache {} hits / {} misses / {} evictions ({:.0}% hit rate), \
+         p50 plan latency {:.3} ms, simulated VCK190 energy {:.1} J",
         results.len(),
         wall.as_secs_f64(),
         stats.executed_gflops(),
         stats.cache_hits,
         stats.cache_misses,
+        stats.cache_evictions,
+        100.0 * stats.cache_hit_rate,
+        stats.plan_p50_ms,
         stats.simulated_energy_j
     );
+    coord.shutdown();
     Ok(())
 }
 

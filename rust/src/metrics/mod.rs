@@ -102,10 +102,12 @@ pub fn median(xs: &[f64]) -> f64 {
 /// axes. This is the indicator behind the paper's "2.18× higher
 /// hypervolume area on geomean".
 pub fn hypervolume_2d(points: &[(f64, f64)], scale: (f64, f64)) -> f64 {
-    if points.is_empty() {
+    // Degenerate reference scales (empty fronts produce 0-maxima, NaN
+    // measurements produce NaN scales) yield an empty indicator rather
+    // than panicking a report/serve path.
+    if points.is_empty() || !(scale.0 > 0.0 && scale.1 > 0.0) || !scale.0.is_finite() || !scale.1.is_finite() {
         return 0.0;
     }
-    assert!(scale.0 > 0.0 && scale.1 > 0.0);
     // Normalize, keep only the non-dominated set, sweep by x descending.
     let norm: Vec<(f64, f64)> = points
         .iter()
@@ -113,7 +115,7 @@ pub fn hypervolume_2d(points: &[(f64, f64)], scale: (f64, f64)) -> f64 {
         .collect();
     let front = pareto_front_max(&norm);
     let mut sorted = front;
-    sorted.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    sorted.sort_by(|a, b| b.0.total_cmp(&a.0));
     let mut hv = 0.0;
     let mut prev_y = 0.0;
     for (x, y) in sorted {
@@ -125,21 +127,30 @@ pub fn hypervolume_2d(points: &[(f64, f64)], scale: (f64, f64)) -> f64 {
     hv
 }
 
-/// Non-dominated subset for 2-D maximization.
+/// Non-dominated subset for 2-D maximization. Non-finite points are
+/// skipped (a NaN coordinate can neither dominate nor be dominated
+/// meaningfully) and duplicate points collapse to one front member, so
+/// adversarial inputs cannot panic the sort or loop forever.
 pub fn pareto_front_max(points: &[(f64, f64)]) -> Vec<(f64, f64)> {
-    let mut idx: Vec<usize> = (0..points.len()).collect();
+    let mut idx: Vec<usize> = (0..points.len())
+        .filter(|&i| points[i].0.is_finite() && points[i].1.is_finite())
+        .collect();
     // Sort by x desc, then y desc; sweep keeping strictly increasing y.
     idx.sort_by(|&a, &b| {
         points[b]
             .0
-            .partial_cmp(&points[a].0)
-            .unwrap()
-            .then(points[b].1.partial_cmp(&points[a].1).unwrap())
+            .total_cmp(&points[a].0)
+            .then(points[b].1.total_cmp(&points[a].1))
     });
     let mut front = Vec::new();
     let mut best_y = f64::NEG_INFINITY;
+    let mut prev: Option<(f64, f64)> = None;
     for i in idx {
         let (x, y) = points[i];
+        if prev == Some((x, y)) {
+            continue; // exact duplicate of the previous kept/seen point
+        }
+        prev = Some((x, y));
         if y > best_y {
             front.push((x, y));
             best_y = y;
@@ -220,6 +231,23 @@ mod tests {
         // Dominated point adds nothing.
         let hv2 = hypervolume_2d(&[(1.0, 0.5), (0.5, 1.0), (0.4, 0.4)], (1.0, 1.0));
         assert!((hv2 - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn degenerate_inputs_do_not_panic() {
+        // Empty points / zero / NaN scales: 0 indicator, no panic.
+        assert_eq!(hypervolume_2d(&[], (1.0, 1.0)), 0.0);
+        assert_eq!(hypervolume_2d(&[(1.0, 1.0)], (0.0, 1.0)), 0.0);
+        assert_eq!(hypervolume_2d(&[(1.0, 1.0)], (f64::NAN, 1.0)), 0.0);
+        // NaN points are skipped, not propagated.
+        let front = pareto_front_max(&[(f64::NAN, 2.0), (1.0, f64::NAN), (1.0, 1.0)]);
+        assert_eq!(front, vec![(1.0, 1.0)]);
+        let hv = hypervolume_2d(&[(f64::NAN, 2.0), (1.0, 1.0)], (1.0, 1.0));
+        assert!((hv - 1.0).abs() < 1e-12);
+        // Duplicate points collapse to one front member.
+        let front = pareto_front_max(&[(2.0, 3.0), (2.0, 3.0), (2.0, 3.0)]);
+        assert_eq!(front, vec![(2.0, 3.0)]);
+        assert!(pareto_front_max(&[]).is_empty());
     }
 
     #[test]

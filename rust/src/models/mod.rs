@@ -98,6 +98,20 @@ impl Predictors {
         }
     }
 
+    /// Batched prediction over a flat row-major buffer of feature rows
+    /// (`rows.len() == n_rows * n_feat`) — the DSE hot path hands fixed
+    /// -size chunks here so the ~900 tree traversals per candidate run
+    /// back-to-back over a contiguous buffer instead of interleaving
+    /// with featurization, and `out` is reused across chunks.
+    pub fn predict_rows(&self, rows: &[f64], n_feat: usize, out: &mut Vec<Prediction>) {
+        debug_assert!(n_feat > 0 && rows.len() % n_feat == 0);
+        out.clear();
+        out.reserve(rows.len() / n_feat);
+        for row in rows.chunks_exact(n_feat) {
+            out.push(self.predict_row(row));
+        }
+    }
+
     /// Batch latency prediction (for metrics computation).
     pub fn predict_latency_batch(&self, x: &FeatureMatrix) -> Vec<f64> {
         (0..x.n_rows)

@@ -165,31 +165,57 @@ impl TilingLimits {
     }
 }
 
-/// Enumerate the candidate set `C(G)`: every `(P_d, B_d)` that evenly
-/// partitions the padded workload and respects the placement limits.
-pub fn enumerate_candidates(g: &Gemm, micro: usize, limits: &TilingLimits) -> Vec<Tiling> {
+/// Lazily enumerate the candidate set `C(G)`: every `(P_d, B_d)` that
+/// evenly partitions the padded workload and respects the placement
+/// limits, in the same nested order the eager enumeration used.
+///
+/// This is the streaming front of the DSE hot path: for the ~25k-point
+/// spaces of large workloads nothing is materialized up front — the
+/// engine pulls fixed-size chunks, featurizes and batch-predicts them,
+/// and folds survivors into an incremental Pareto front.
+pub fn candidate_iter(g: &Gemm, micro: usize, limits: &TilingLimits) -> impl Iterator<Item = Tiling> {
     let (tm, tn, tk) = g.tiles(micro);
-    let mut out = Vec::new();
-    for &p_m in divisors(tm).iter().filter(|&&p| p <= limits.max_p_m) {
-        for &p_n in divisors(tn).iter().filter(|&&p| p <= limits.max_p_n) {
-            for &p_k in divisors(tk).iter().filter(|&&p| p <= limits.max_p_k) {
-                if p_m * p_n * p_k > limits.max_aie {
-                    continue;
-                }
-                for &b_m in divisors(tm / p_m).iter() {
-                    for &b_n in divisors(tn / p_n).iter() {
-                        for &b_k in divisors(tk / p_k).iter() {
-                            let t = Tiling::new((p_m, p_n, p_k), (b_m, b_n, b_k));
-                            if t.buffer_bytes(micro).total() <= limits.max_buffer_bytes {
-                                out.push(t);
+    let limits = *limits;
+    let p_ms: Vec<usize> = divisors(tm).into_iter().filter(|&p| p <= limits.max_p_m).collect();
+    let p_ns: Vec<usize> = divisors(tn).into_iter().filter(|&p| p <= limits.max_p_n).collect();
+    let p_ks: Vec<usize> = divisors(tk).into_iter().filter(|&p| p <= limits.max_p_k).collect();
+    p_ms.into_iter().flat_map(move |p_m| {
+        let p_ns = p_ns.clone();
+        let p_ks = p_ks.clone();
+        p_ns.into_iter().flat_map(move |p_n| {
+            let p_ks = p_ks.clone();
+            p_ks.into_iter()
+                .filter(move |&p_k| p_m * p_n * p_k <= limits.max_aie)
+                .flat_map(move |p_k| {
+                    // The B-level block for one P-combination is small and
+                    // bounded (product of three divisor lists), so emit it
+                    // as one buffer: laziness lives at the P level, and
+                    // this avoids per-element Vec clones on the hot path.
+                    let b_ms = divisors(tm / p_m);
+                    let b_ns = divisors(tn / p_n);
+                    let b_ks = divisors(tk / p_k);
+                    let mut block =
+                        Vec::with_capacity(b_ms.len() * b_ns.len() * b_ks.len());
+                    for &b_m in &b_ms {
+                        for &b_n in &b_ns {
+                            for &b_k in &b_ks {
+                                let t = Tiling::new((p_m, p_n, p_k), (b_m, b_n, b_k));
+                                if t.buffer_bytes(micro).total() <= limits.max_buffer_bytes {
+                                    block.push(t);
+                                }
                             }
                         }
                     }
-                }
-            }
-        }
-    }
-    out
+                    block.into_iter()
+                })
+        })
+    })
+}
+
+/// Enumerate the candidate set `C(G)` eagerly (collected form of
+/// [`candidate_iter`], kept for the exhaustive explorer and tests).
+pub fn enumerate_candidates(g: &Gemm, micro: usize, limits: &TilingLimits) -> Vec<Tiling> {
+    candidate_iter(g, micro, limits).collect()
 }
 
 #[cfg(test)]
@@ -301,6 +327,19 @@ mod tests {
                 }
             },
         );
+    }
+
+    #[test]
+    fn candidate_iter_matches_eager_enumeration() {
+        for g in [
+            Gemm::new(512, 512, 512),
+            Gemm::new(224, 3072, 768),
+            Gemm::new(32, 896, 896),
+        ] {
+            let lazy: Vec<Tiling> = candidate_iter(&g, 32, &limits()).collect();
+            let eager = enumerate_candidates(&g, 32, &limits());
+            assert_eq!(lazy, eager, "order/content drift for {}", g.label());
+        }
     }
 
     #[test]

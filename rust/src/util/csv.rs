@@ -166,8 +166,7 @@ mod tests {
     }
 
     #[test]
-    fn save_load(
-    ) {
+    fn save_load() {
         let dir = std::env::temp_dir().join("versal_gemm_csv_test");
         let path = dir.join("d.csv");
         let mut csv = Csv::new(&["k"]);

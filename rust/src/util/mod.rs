@@ -12,6 +12,14 @@ pub mod rng;
 pub mod table;
 pub mod toml;
 
+/// Poison-proof mutex lock for the serve path: a panicking holder must
+/// not cascade `PoisonError` panics through planner threads, so recover
+/// the guard instead of unwrapping (the protected state is plain data
+/// whose worst case after a panic is a stale counter).
+pub fn lock_unpoisoned<T: ?Sized>(m: &std::sync::Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
 /// Property-testing helper: run `check` against `cases` randomly
 /// generated inputs, reporting the failing seed on panic. A lightweight
 /// stand-in for proptest in the offline environment — used by the L3

@@ -23,15 +23,24 @@ pub struct Measurement {
     pub busy: f64,
 }
 
-#[derive(Debug, Clone, Copy, PartialEq, Eq, thiserror::Error)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SimError {
-    #[error("tiling does not evenly partition the workload")]
     InvalidTiling,
-    #[error("design exceeds PL resources")]
     DoesNotFit,
-    #[error("design failed to build (timing/placement)")]
     BuildFailed,
 }
+
+impl std::fmt::Display for SimError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            SimError::InvalidTiling => "tiling does not evenly partition the workload",
+            SimError::DoesNotFit => "design exceeds PL resources",
+            SimError::BuildFailed => "design failed to build (timing/placement)",
+        })
+    }
+}
+
+impl std::error::Error for SimError {}
 
 /// Latency decomposition (diagnostics and §Perf reporting).
 #[derive(Debug, Clone, Copy, PartialEq, Default)]

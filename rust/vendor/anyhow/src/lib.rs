@@ -1,0 +1,152 @@
+//! Vendored, minimal `anyhow`-compatible error crate.
+//!
+//! The offline crate set has no registry access, so the subset of the
+//! real `anyhow` API this repository uses is reimplemented here:
+//! [`Error`], [`Result`], the [`anyhow!`]/[`bail!`]/[`ensure!`] macros,
+//! and the [`Context`] extension trait. Errors are stored as a message
+//! plus an optional source chain rendered into the message eagerly —
+//! enough for a CLI/server that only ever Displays its errors.
+
+use std::fmt;
+
+/// A type-erased error: a rendered message (like `anyhow::Error`, it
+/// deliberately does NOT implement `std::error::Error` so the blanket
+/// `From<E: std::error::Error>` conversion below stays coherent).
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from anything printable (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            msg: message.to_string(),
+        }
+    }
+
+    /// Prepend a context line, matching `anyhow`'s `{context}: {cause}`
+    /// single-line rendering of the chain.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error {
+            msg: format!("{context}: {}", self.msg),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow::Result<T>` — `Result` with a defaulted error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: std::error::Error + Send + Sync + 'static> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Build an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let e = std::fs::read_to_string("/definitely/not/a/path")?;
+        Ok(e)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert!(io_fail().is_err());
+    }
+
+    #[test]
+    fn macros_and_display() {
+        let e = anyhow!("bad value `{}`", 7);
+        assert_eq!(e.to_string(), "bad value `7`");
+        fn inner(x: usize) -> Result<usize> {
+            ensure!(x < 10, "too big: {x}");
+            if x == 3 {
+                bail!("three is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(inner(2).unwrap(), 2);
+        assert!(inner(3).is_err());
+        assert!(inner(11).unwrap_err().to_string().contains("too big"));
+    }
+
+    #[test]
+    fn context_prepends() {
+        let r: std::result::Result<(), std::io::Error> = Err(std::io::Error::new(
+            std::io::ErrorKind::Other,
+            "inner cause",
+        ));
+        let e = r.with_context(|| "outer step").unwrap_err();
+        let s = e.to_string();
+        assert!(s.starts_with("outer step"), "{s}");
+        assert!(s.contains("inner cause"));
+        let none: Option<u8> = None;
+        assert!(none.context("missing").is_err());
+    }
+}

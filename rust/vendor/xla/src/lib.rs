@@ -1,0 +1,122 @@
+//! Offline stub of the `xla-rs` PJRT bindings.
+//!
+//! The real crate links libxla and compiles AOT HLO artifacts on the
+//! PJRT CPU client. The offline crate set cannot link it, so this stub
+//! mirrors the API surface `versal_gemm::runtime` uses and fails at
+//! [`PjRtClient::cpu`] with a descriptive error. Callers already treat
+//! a failed client/engine load as "execution disabled, plan-only mode",
+//! so the rest of the framework (DSE, coordinator planning, simulator,
+//! reports) runs unaffected. Swap this path dependency for the real
+//! `xla` crate to enable the PJRT execution path.
+
+/// Error type mirroring xla-rs's; only ever Debug/Display-formatted.
+#[derive(Debug, Clone)]
+pub struct XlaError(pub String);
+
+impl std::fmt::Display for XlaError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+fn unavailable<T>() -> Result<T> {
+    Err(XlaError(
+        "PJRT runtime unavailable (offline xla stub; link the real xla crate to execute artifacts)"
+            .to_string(),
+    ))
+}
+
+/// PJRT client handle (never successfully constructed by the stub).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable()
+    }
+
+    pub fn platform_name(&self) -> String {
+        "cpu".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable()
+    }
+
+    pub fn buffer_from_host_buffer<T: Copy>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        unavailable()
+    }
+}
+
+/// Parsed HLO module (stub).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable()
+    }
+}
+
+/// XLA computation wrapper (stub).
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Compiled executable handle (stub).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Execute on borrowed device buffers; generic over the buffer
+    /// argument type like the real binding (`execute_b::<&PjRtBuffer>`).
+    pub fn execute_b<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable()
+    }
+}
+
+/// Device buffer handle (stub).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable()
+    }
+}
+
+/// Host literal (stub).
+pub struct Literal;
+
+impl Literal {
+    pub fn to_tuple1(self) -> Result<Literal> {
+        unavailable()
+    }
+
+    pub fn to_vec<T: Copy>(&self) -> Result<Vec<T>> {
+        unavailable()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_client_reports_unavailable() {
+        let err = match PjRtClient::cpu() {
+            Ok(_) => panic!("stub must not construct a client"),
+            Err(e) => e,
+        };
+        assert!(err.to_string().contains("unavailable"));
+    }
+}
