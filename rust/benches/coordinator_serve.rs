@@ -44,6 +44,10 @@ fn main() -> anyhow::Result<()> {
         100.0 * stats.cache_hit_rate,
         stats.jobs_failed
     );
+    println!(
+        "forest: compiled in {:.2} ms, {:.0} rows/s per planner thread",
+        stats.forest_compile_ms, stats.predict_rows_per_s
+    );
     let cold: Vec<f64> = results
         .iter()
         .filter(|r| !r.cache_hit)

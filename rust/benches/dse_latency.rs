@@ -2,21 +2,103 @@
 //! ML-driven DSE completes in < 2 s per workload). Exercises the
 //! streaming path: lazy candidate iterator -> PREDICT_CHUNK-sized
 //! batched GBDT predictions -> incremental Pareto front.
+//!
+//! Section 1 isolates the model layer: `CompiledForest::predict_rows`
+//! (one SoA arena, row-blocked traversal) vs the legacy per-tree walk
+//! on the same trained bundle and the same feature rows, asserting the
+//! >= 2x predictions-per-second acceptance floor plus bit-identical
+//! outputs.
+//!
+//! `--smoke` runs a cheap release-mode pass for CI: a reduced in-memory
+//! dataset/model, fewer iterations, the first two workloads, and
+//! report-only timing (shared runners are too noisy to hard-gate a
+//! measured ratio; the bit-identical output assert is the smoke gate).
 use versal_gemm::config::Config;
+use versal_gemm::dataset::Dataset;
+use versal_gemm::features::{featurize, FeatureSet};
+use versal_gemm::models::Predictors;
 use versal_gemm::report::Lab;
+use versal_gemm::tiling::enumerate_candidates;
 use versal_gemm::util::bench::{bench, report, report_throughput};
-use versal_gemm::workloads::eval_workloads;
+use versal_gemm::workloads::{eval_workloads, training_workloads, Gemm};
 
 fn main() -> anyhow::Result<()> {
-    let lab = Lab::prepare(Config::default(), "data".into())?;
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let lab = if smoke {
+        // Fast in-memory lab: no disk cache, reduced offline budget.
+        let mut cfg = Config::default();
+        cfg.dataset.top_k = 12;
+        cfg.dataset.bottom_k = 8;
+        cfg.dataset.random_k = 60;
+        cfg.train.n_trees = 120;
+        cfg.train.learning_rate = 0.15;
+        let ds = Dataset::generate(&cfg, &training_workloads());
+        let predictors = Predictors::train(&ds, &cfg, FeatureSet::SetIAndII);
+        Lab::in_memory(cfg, ds, predictors)
+    } else {
+        Lab::prepare(Config::default(), "data".into())?
+    };
     let engine = lab.engine();
+
+    // ---- 1. forest engine vs legacy per-tree traversal -----------------
+    let predictors = &engine.predictors;
+    let n_feat = predictors.feature_set.len();
+    let g = Gemm::new(512, 1024, 768);
+    let cands = enumerate_candidates(&g, engine.micro, &engine.limits);
+    let mut rows: Vec<f64> = Vec::with_capacity(cands.len() * n_feat);
+    for t in &cands {
+        let full = featurize(&g, t, engine.micro);
+        rows.extend_from_slice(&full[..n_feat]);
+    }
+    let fm = predictors.forest_metrics();
     println!(
-        "== bench: streaming DSE latency per eval workload (paper: < 2 s; chunk = {}) ==",
+        "== bench: forest inference engine ({} outputs, {} trees, {} nodes; \
+         compile {:.2} ms) ==",
+        fm.n_outputs, fm.n_trees, fm.n_nodes, fm.compile_ms
+    );
+    let iters = if smoke { 3 } else { 9 };
+    let mut legacy_preds = Vec::new();
+    let legacy = bench(1, iters, || {
+        predictors.predict_rows_legacy(&rows, n_feat, &mut legacy_preds);
+        std::hint::black_box(legacy_preds.len());
+    });
+    let mut forest_preds = Vec::new();
+    let forest = bench(1, iters, || {
+        predictors.predict_rows(&rows, n_feat, &mut forest_preds);
+        std::hint::black_box(forest_preds.len());
+    });
+    assert_eq!(
+        forest_preds, legacy_preds,
+        "forest predictions diverged from the legacy path"
+    );
+    report(&format!("legacy per-tree ({} rows)", cands.len()), &legacy);
+    report_throughput("  legacy rate", &legacy, cands.len() as f64, "rows");
+    report(&format!("compiled forest ({} rows)", cands.len()), &forest);
+    report_throughput("  forest rate", &forest, cands.len() as f64, "rows");
+    let speedup = legacy.median.as_secs_f64() / forest.median.as_secs_f64();
+    if smoke {
+        // Report-only on CI runners: shared vCPUs make measured ratios
+        // too noisy to hard-gate. The bit-identical output assert above
+        // is the smoke gate; the 2x floor is enforced by the full bench.
+        println!("forest speedup: {speedup:.2}x (smoke mode: informational)");
+    } else {
+        println!("forest speedup: {speedup:.2}x (acceptance floor: 2x)");
+        assert!(
+            speedup >= 2.0,
+            "forest path only {speedup:.2}x over legacy (floor 2x)"
+        );
+    }
+
+    // ---- 2. end-to-end streaming DSE latency per workload ---------------
+    println!(
+        "\n== bench: streaming DSE latency per eval workload (paper: < 2 s; chunk = {}) ==",
         versal_gemm::dse::PREDICT_CHUNK
     );
+    let workloads = eval_workloads();
+    let workloads = if smoke { &workloads[..2] } else { &workloads[..] };
     let mut worst = 0.0f64;
-    for w in eval_workloads() {
-        let stats = bench(1, 5, || {
+    for w in workloads {
+        let stats = bench(1, if smoke { 2 } else { 5 }, || {
             let r = engine.explore(&w.gemm).unwrap();
             std::hint::black_box(r.n_feasible);
         });
@@ -24,8 +106,10 @@ fn main() -> anyhow::Result<()> {
         report(&format!("{} {} ({} cands)", w.id, w.gemm.label(), r.n_candidates), &stats);
         report_throughput("  prediction rate", &stats, r.n_candidates as f64, "candidates");
         worst = worst.max(stats.median.as_secs_f64());
-        assert!(stats.median.as_secs_f64() < 2.0, "{} DSE exceeded 2 s", w.id);
+        if !smoke {
+            assert!(stats.median.as_secs_f64() < 2.0, "{} DSE exceeded 2 s", w.id);
+        }
     }
-    println!("worst-case median DSE: {:.3} s — within the paper's 2 s budget", worst);
+    println!("worst-case median DSE: {worst:.3} s — within the paper's 2 s budget");
     Ok(())
 }

@@ -151,6 +151,13 @@ pub struct CoordinatorStats {
     /// partial-reconfiguration cost on the VCK190.
     pub reconfigs: u64,
     pub simulated_reconfig_s: f64,
+    /// One-time cost of compiling the GBDT bundle into the forest
+    /// arena (0 until the engine's first prediction compiles it).
+    pub forest_compile_ms: f64,
+    /// Forest-inference throughput (feature rows per second of engine
+    /// busy time; per-thread, not summed across concurrent planners) —
+    /// the DSE hot-path health signal.
+    pub predict_rows_per_s: f64,
 }
 
 impl CoordinatorStats {
@@ -230,6 +237,9 @@ pub struct Coordinator {
     executor: Option<std::thread::JoinHandle<()>>,
     stats: Arc<Mutex<CoordinatorStats>>,
     cache: Arc<ShardedPlanCache>,
+    /// Shared with the planner pool; `stats()` reads the predictor
+    /// bundle's forest compile/throughput counters from here.
+    dse: Arc<DseEngine>,
     plan_lat: Arc<Mutex<PlanLatencies>>,
     cache_path: Option<PathBuf>,
     /// Jobs rejected at submit time (pool gone / already shut down);
@@ -390,6 +400,7 @@ impl Coordinator {
             executor: Some(executor),
             stats,
             cache,
+            dse,
             plan_lat,
             cache_path: options.cache_path,
             rejected: VecDeque::new(),
@@ -472,6 +483,9 @@ impl Coordinator {
             0.0
         };
         s.plan_p50_ms = lock_unpoisoned(&self.plan_lat).p50_ms();
+        let fm = self.dse.predictors.forest_metrics();
+        s.forest_compile_ms = fm.compile_ms;
+        s.predict_rows_per_s = fm.rows_per_s();
         s
     }
 
@@ -790,6 +804,9 @@ mod tests {
         let s = coord.stats();
         assert_eq!(s.jobs_completed, 2);
         assert!(s.simulated_energy_j > 0.0);
+        // The forest engine compiled once and served the DSE chunks.
+        assert!(s.forest_compile_ms > 0.0, "forest never compiled");
+        assert!(s.predict_rows_per_s > 0.0, "no forest throughput recorded");
     }
 
     #[test]

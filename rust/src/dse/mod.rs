@@ -214,6 +214,11 @@ pub struct DseEngine {
 
 impl DseEngine {
     pub fn new(predictors: Predictors, board: &crate::config::BoardConfig) -> DseEngine {
+        // Compile the forest-inference arena up front so the one-time
+        // flatten cost lands here instead of inside the first explore's
+        // latency budget (the OnceLock would otherwise fire lazily on
+        // the first worker's first chunk).
+        predictors.forest();
         DseEngine {
             predictors,
             limits: TilingLimits::from_board(board),

@@ -97,6 +97,24 @@ impl Ridge {
     pub fn predict_one(&self, row: &[f64]) -> f64 {
         let mut z = Vec::with_capacity(row.len());
         self.scaler.transform_row(row, &mut z);
+        self.predict_scaled(&z)
+    }
+
+    /// Batched evaluation sharing one standardization scratch buffer
+    /// (the per-row entry allocates per call) — the ablation report's
+    /// counterpart to the GBDT forest batch path.
+    pub fn predict_batch(&self, x: &FeatureMatrix) -> Vec<f64> {
+        let mut z = Vec::with_capacity(x.n_cols);
+        (0..x.n_rows)
+            .map(|i| {
+                self.scaler.transform_row(x.row(i), &mut z);
+                self.predict_scaled(&z)
+            })
+            .collect()
+    }
+
+    #[inline]
+    fn predict_scaled(&self, z: &[f64]) -> f64 {
         self.bias + z.iter().zip(&self.weights).map(|(a, b)| a * b).sum::<f64>()
     }
 }
@@ -167,17 +185,39 @@ impl Knn {
 
     pub fn predict_one(&self, row: &[f64]) -> f64 {
         let mut z = Vec::with_capacity(row.len());
-        self.scaler.transform_row(row, &mut z);
-        // Partial selection of the k smallest distances.
         let mut best: Vec<(f64, f64)> = Vec::with_capacity(self.k + 1);
+        self.predict_scratch(row, &mut z, &mut best)
+    }
+
+    /// Batched evaluation reusing the standardization and k-best
+    /// scratch buffers across rows.
+    pub fn predict_batch(&self, x: &FeatureMatrix) -> Vec<f64> {
+        let mut z = Vec::with_capacity(x.n_cols);
+        let mut best: Vec<(f64, f64)> = Vec::with_capacity(self.k + 1);
+        (0..x.n_rows)
+            .map(|i| self.predict_scratch(x.row(i), &mut z, &mut best))
+            .collect()
+    }
+
+    fn predict_scratch(&self, row: &[f64], z: &mut Vec<f64>, best: &mut Vec<(f64, f64)>) -> f64 {
+        self.scaler.transform_row(row, z);
+        // Partial selection of the k smallest distances. NaN distances
+        // (NaN features in the query or training rows) are skipped
+        // outright: sorted last they could still enter during the fill
+        // phase and then block every later replacement (`d2 < NaN` is
+        // always false), silently corrupting the neighbor set.
+        best.clear();
         for (p, &t) in self.points.iter().zip(&self.targets) {
-            let d2: f64 = p.iter().zip(&z).map(|(a, b)| (a - b) * (a - b)).sum();
+            let d2: f64 = p.iter().zip(z.iter()).map(|(a, b)| (a - b) * (a - b)).sum();
+            if d2.is_nan() {
+                continue;
+            }
             if best.len() < self.k {
                 best.push((d2, t));
-                best.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+                best.sort_by(|a, b| a.0.total_cmp(&b.0));
             } else if d2 < best[self.k - 1].0 {
                 best[self.k - 1] = (d2, t);
-                best.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+                best.sort_by(|a, b| a.0.total_cmp(&b.0));
             }
         }
         best.iter().map(|(_, t)| t).sum::<f64>() / best.len() as f64
@@ -243,6 +283,19 @@ mod tests {
         let far = model.predict_one(&[100.0, 100.0]);
         let truth = 3.0 * 100.0 - 2.0 * 100.0 + 5.0;
         assert!((far - truth).abs() > 20.0);
+    }
+
+    #[test]
+    fn batch_paths_match_per_row() {
+        let (x, y) = linear_data(120, 7);
+        let ridge = Ridge::fit(&x, &y, 1e-3);
+        let knn = Knn::fit(&x, &y, 3);
+        let rb = ridge.predict_batch(&x);
+        let kb = knn.predict_batch(&x);
+        for i in 0..x.n_rows {
+            assert_eq!(rb[i], ridge.predict_one(x.row(i)));
+            assert_eq!(kb[i], knn.predict_one(x.row(i)));
+        }
     }
 
     #[test]

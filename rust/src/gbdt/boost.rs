@@ -5,7 +5,8 @@
 //! and optional early stopping on a validation split.
 
 use crate::config::TrainConfig;
-use crate::gbdt::tree::{FeatureMatrix, RegressionTree, TreeParams};
+use crate::gbdt::forest::CompiledForest;
+use crate::gbdt::tree::{BinnedMatrix, FeatureMatrix, RegressionTree, TreeParams};
 use crate::util::json::{arr, num, obj, Json};
 use crate::util::rng::Rng;
 
@@ -20,9 +21,25 @@ pub struct Gbdt {
 impl Gbdt {
     /// Fit with the given hyper-parameters. If `valid` is provided,
     /// training stops once validation MSE fails to improve for
-    /// `patience` rounds (keeping the best prefix).
+    /// `patience` rounds (keeping the best prefix). Bins `x` once and
+    /// delegates to [`Gbdt::fit_with_bins`]; callers fitting several
+    /// models on the same matrix should bin once themselves.
     pub fn fit(
         x: &FeatureMatrix,
+        y: &[f64],
+        cfg: &TrainConfig,
+        valid: Option<(&FeatureMatrix, &[f64])>,
+        rng: &mut Rng,
+    ) -> Gbdt {
+        let binned = BinnedMatrix::build(x);
+        Gbdt::fit_with_bins(x, &binned, y, cfg, valid, rng)
+    }
+
+    /// Fit against a shared pre-binned view of `x` (histogram split
+    /// finding; see [`BinnedMatrix`]).
+    pub fn fit_with_bins(
+        x: &FeatureMatrix,
+        binned: &BinnedMatrix,
         y: &[f64],
         cfg: &TrainConfig,
         valid: Option<(&FeatureMatrix, &[f64])>,
@@ -61,7 +78,7 @@ impl Gbdt {
             } else {
                 rng.sample_indices(x.n_rows, n_sub)
             };
-            let tree = RegressionTree::fit(x, &residuals, &indices, &params, rng);
+            let tree = RegressionTree::fit_binned(x, binned, &residuals, &indices, &params, rng);
             for i in 0..x.n_rows {
                 pred[i] += cfg.learning_rate * tree.predict_one(x.row(i));
             }
@@ -101,8 +118,17 @@ impl Gbdt {
         acc
     }
 
+    /// Per-row reference path (the equivalence oracle for the compiled
+    /// forest); batch callers should prefer [`Gbdt::predict_batch`].
     pub fn predict(&self, x: &FeatureMatrix) -> Vec<f64> {
         (0..x.n_rows).map(|i| self.predict_one(x.row(i))).collect()
+    }
+
+    /// Batched prediction through the compiled-forest engine: flatten
+    /// the trees into one arena (O(nodes), negligible next to a fit)
+    /// and traverse row-blocked. Bit-identical to [`Gbdt::predict`].
+    pub fn predict_batch(&self, x: &FeatureMatrix) -> Vec<f64> {
+        CompiledForest::compile_single(self).predict_output(0, x)
     }
 
     pub fn n_trees(&self) -> usize {
@@ -231,6 +257,13 @@ mod tests {
         let m1 = Gbdt::fit(&x, &y, &quick_cfg(), None, &mut Rng::new(9));
         let m2 = Gbdt::fit(&x, &y, &quick_cfg(), None, &mut Rng::new(9));
         assert_eq!(m1, m2);
+    }
+
+    #[test]
+    fn predict_batch_bit_matches_predict() {
+        let (x, y) = synth(300, |a, b, c| a * b - c, 71);
+        let model = Gbdt::fit(&x, &y, &quick_cfg(), None, &mut Rng::new(6));
+        assert_eq!(model.predict_batch(&x), model.predict(&x));
     }
 
     #[test]

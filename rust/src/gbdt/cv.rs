@@ -63,16 +63,14 @@ pub fn cross_validate(
             yt_raw
         };
         let model = Gbdt::fit(&xt, &yt, cfg, None, &mut Rng::new(cfg.seed ^ f as u64));
-        let pred: Vec<f64> = (0..xv.n_rows)
-            .map(|i| {
-                let p = model.predict_one(xv.row(i));
-                if log_target {
-                    p.exp()
-                } else {
-                    p
-                }
-            })
-            .collect();
+        // Fold scoring goes through the batched forest path (compile is
+        // O(nodes), trivial next to the fold's fit).
+        let mut pred = model.predict_batch(&xv);
+        if log_target {
+            for p in &mut pred {
+                *p = p.exp();
+            }
+        }
         r2s.push(r2(&yv, &pred));
         mapes.push(mape(&yv, &pred));
     }

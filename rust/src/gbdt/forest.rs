@@ -1,0 +1,442 @@
+//! Unified forest-inference engine: every tree of every model in a
+//! predictor bundle, compiled into **one contiguous node arena** and
+//! traversed **row-blocked**.
+//!
+//! The DSE hot path evaluates ~900 trees per candidate across 7 models
+//! (latency + power + 5 resource outputs). Stored per-tree, each
+//! traversal chases a fresh heap allocation and the row loop restarts
+//! the cache cold. [`CompiledForest`] flattens all trees at compile time
+//! into structure-of-arrays storage:
+//!
+//! ```text
+//!   feature:   Vec<u16>   u16::MAX marks a leaf
+//!   threshold: Vec<f64>   split threshold, or the leaf value
+//!   left:      Vec<u32>   left-child index; right child is left + 1
+//!                         (children are laid out adjacently, so one
+//!                          packed index addresses both)
+//!   tree_roots: per-tree root offsets into the arena
+//!   outputs:    per-output tree ranges + (base, learning_rate)
+//! ```
+//!
+//! Traversal processes fixed blocks of [`ROW_BLOCK`] rows: for each
+//! tree, all rows of the block walk it back-to-back, so the tree's top
+//! levels stay in L1/L2 across the block and the row loop is a tight,
+//! branch-predictable kernel. Accumulation order per (row, output) is
+//! `base + Σ lr·leaf` in tree order — **bit-identical** to the legacy
+//! `Gbdt::predict_one` chain, which the equivalence property tests and
+//! the debug checks in `models::Predictors` rely on.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+use crate::gbdt::boost::Gbdt;
+use crate::gbdt::tree::{self, FeatureMatrix};
+
+/// Sentinel feature id marking a leaf in the arena.
+const LEAF: u16 = u16::MAX;
+
+/// Rows traversed together per block. 16 keeps the block's feature rows
+/// (16 x 17 features = ~2.2 KB) and the hot top of each tree resident
+/// in L1 while giving the row loop enough independent walks to overlap.
+pub const ROW_BLOCK: usize = 16;
+
+/// One model's slice of the forest.
+#[derive(Debug, Clone, Copy)]
+struct OutputSpec {
+    tree_start: u32,
+    tree_end: u32,
+    base: f64,
+    learning_rate: f64,
+}
+
+/// Compile-time and runtime counters of a [`CompiledForest`].
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ForestMetrics {
+    pub n_outputs: usize,
+    pub n_trees: usize,
+    pub n_nodes: usize,
+    /// One-time arena compilation cost.
+    pub compile_ms: f64,
+    /// Rows predicted through the batched entry points since compile.
+    pub rows_predicted: u64,
+    /// Wall-clock spent inside the batched entry points.
+    pub predict_s: f64,
+}
+
+impl ForestMetrics {
+    /// Inference throughput: rows per second of engine busy time
+    /// (`predict_s` sums per-call wall-clock, so with N threads
+    /// predicting concurrently this is per-thread, not machine-wide).
+    pub fn rows_per_s(&self) -> f64 {
+        if self.predict_s > 0.0 {
+            self.rows_predicted as f64 / self.predict_s
+        } else {
+            0.0
+        }
+    }
+}
+
+/// All trees of one or more GBDT models in a single SoA node arena.
+#[derive(Debug)]
+pub struct CompiledForest {
+    feature: Vec<u16>,
+    threshold: Vec<f64>,
+    left: Vec<u32>,
+    tree_roots: Vec<u32>,
+    outputs: Vec<OutputSpec>,
+    compile_time: Duration,
+    rows_predicted: AtomicU64,
+    predict_ns: AtomicU64,
+}
+
+impl CompiledForest {
+    /// Flatten `models` (one forest output per model, in order) into a
+    /// fresh arena. O(total nodes); recompiled whenever the owning
+    /// bundle retrains or reloads from JSON.
+    pub fn compile(models: &[&Gbdt]) -> CompiledForest {
+        assert!(!models.is_empty(), "cannot compile an empty forest");
+        let started = Instant::now();
+        let n_nodes: usize = models
+            .iter()
+            .flat_map(|m| m.trees.iter())
+            .map(|t| t.n_nodes())
+            .sum();
+        let n_trees: usize = models.iter().map(|m| m.trees.len()).sum();
+        let mut forest = CompiledForest {
+            feature: Vec::with_capacity(n_nodes),
+            threshold: Vec::with_capacity(n_nodes),
+            left: Vec::with_capacity(n_nodes),
+            tree_roots: Vec::with_capacity(n_trees),
+            outputs: Vec::with_capacity(models.len()),
+            compile_time: Duration::default(),
+            rows_predicted: AtomicU64::new(0),
+            predict_ns: AtomicU64::new(0),
+        };
+        for m in models {
+            let tree_start = forest.tree_roots.len() as u32;
+            for t in &m.trees {
+                let root = forest.flatten_tree(t.flat_nodes());
+                forest.tree_roots.push(root);
+            }
+            forest.outputs.push(OutputSpec {
+                tree_start,
+                tree_end: forest.tree_roots.len() as u32,
+                base: m.base,
+                learning_rate: m.learning_rate,
+            });
+        }
+        forest.compile_time = started.elapsed();
+        forest
+    }
+
+    /// Single-model convenience (CV fold scoring, batch baselines).
+    pub fn compile_single(model: &Gbdt) -> CompiledForest {
+        CompiledForest::compile(&[model])
+    }
+
+    /// BFS re-layout of one tree into the shared arena so that every
+    /// split's children occupy adjacent slots (right = left + 1).
+    fn flatten_tree(&mut self, nodes: &[tree::FlatNode]) -> u32 {
+        let root = self.push_placeholder();
+        let mut queue = std::collections::VecDeque::with_capacity(nodes.len());
+        queue.push_back((0usize, root as usize));
+        while let Some((old, new)) = queue.pop_front() {
+            let n = nodes[old];
+            if n.feature == tree::LEAF {
+                self.feature[new] = LEAF;
+                self.threshold[new] = n.threshold;
+            } else {
+                assert!(
+                    n.feature < LEAF as u32,
+                    "feature id {} overflows the u16 arena encoding",
+                    n.feature
+                );
+                let left_new = self.push_placeholder();
+                let right_new = self.push_placeholder();
+                debug_assert_eq!(right_new, left_new + 1);
+                self.feature[new] = n.feature as u16;
+                self.threshold[new] = n.threshold;
+                self.left[new] = left_new;
+                queue.push_back((n.left as usize, left_new as usize));
+                queue.push_back((n.right as usize, right_new as usize));
+            }
+        }
+        root
+    }
+
+    fn push_placeholder(&mut self) -> u32 {
+        let id = self.feature.len() as u32;
+        self.feature.push(LEAF);
+        self.threshold.push(0.0);
+        self.left.push(0);
+        id
+    }
+
+    pub fn n_outputs(&self) -> usize {
+        self.outputs.len()
+    }
+
+    pub fn n_trees(&self) -> usize {
+        self.tree_roots.len()
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.feature.len()
+    }
+
+    pub fn compile_time(&self) -> Duration {
+        self.compile_time
+    }
+
+    pub fn metrics(&self) -> ForestMetrics {
+        ForestMetrics {
+            n_outputs: self.n_outputs(),
+            n_trees: self.n_trees(),
+            n_nodes: self.n_nodes(),
+            compile_ms: self.compile_time.as_secs_f64() * 1e3,
+            rows_predicted: self.rows_predicted.load(Ordering::Relaxed),
+            predict_s: self.predict_ns.load(Ordering::Relaxed) as f64 / 1e9,
+        }
+    }
+
+    /// Walk one tree for one row. NaN features compare false and take
+    /// the right branch, matching `RegressionTree::predict_one`.
+    #[inline(always)]
+    fn traverse(&self, mut node: usize, row: &[f64]) -> f64 {
+        loop {
+            let f = self.feature[node];
+            if f == LEAF {
+                return self.threshold[node];
+            }
+            let go_right = !(row[f as usize] <= self.threshold[node]);
+            node = self.left[node] as usize + go_right as usize;
+        }
+    }
+
+    /// Predict every output for every row of a flat row-major feature
+    /// buffer (`rows.len() == n_rows * n_feat`). `out` is resized to
+    /// `n_rows * n_outputs`, row-major. The hot entry of the DSE.
+    pub fn predict_rows(&self, rows: &[f64], n_feat: usize, out: &mut Vec<f64>) {
+        assert!(n_feat > 0 && rows.len() % n_feat == 0, "ragged row buffer");
+        let started = Instant::now();
+        let n_rows = rows.len() / n_feat;
+        let n_out = self.outputs.len();
+        out.clear();
+        out.resize(n_rows * n_out, 0.0);
+        let mut r0 = 0usize;
+        while r0 < n_rows {
+            let r1 = (r0 + ROW_BLOCK).min(n_rows);
+            self.predict_block(
+                &rows[r0 * n_feat..r1 * n_feat],
+                n_feat,
+                &mut out[r0 * n_out..r1 * n_out],
+            );
+            r0 = r1;
+        }
+        self.rows_predicted.fetch_add(n_rows as u64, Ordering::Relaxed);
+        self.predict_ns
+            .fetch_add(started.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    /// Row-blocked kernel over one block (`rows.len() / n_feat <=
+    /// ROW_BLOCK` rows): for each tree, every row of the block walks it
+    /// back-to-back so node data stays hot across the row loop.
+    fn predict_block(&self, rows: &[f64], n_feat: usize, out: &mut [f64]) {
+        let n_rows = rows.len() / n_feat;
+        let n_out = self.outputs.len();
+        debug_assert_eq!(out.len(), n_rows * n_out);
+        for r in 0..n_rows {
+            for (o, spec) in self.outputs.iter().enumerate() {
+                out[r * n_out + o] = spec.base;
+            }
+        }
+        for (o, spec) in self.outputs.iter().enumerate() {
+            let lr = spec.learning_rate;
+            for t in spec.tree_start..spec.tree_end {
+                let root = self.tree_roots[t as usize] as usize;
+                for r in 0..n_rows {
+                    let row = &rows[r * n_feat..(r + 1) * n_feat];
+                    out[r * n_out + o] += lr * self.traverse(root, row);
+                }
+            }
+        }
+    }
+
+    /// Predict every output for a single row (`out.len() == n_outputs`).
+    pub fn predict_row_into(&self, row: &[f64], out: &mut [f64]) {
+        assert!(!row.is_empty());
+        self.predict_block(row, row.len(), out);
+    }
+
+    /// Row-blocked traversal of a single output's trees over a feature
+    /// matrix — the latency-only / power-only batch paths and CV fold
+    /// scoring, which would waste 6/7 of the full-bundle walk.
+    pub fn predict_output(&self, output: usize, x: &FeatureMatrix) -> Vec<f64> {
+        let started = Instant::now();
+        let spec = self.outputs[output];
+        let mut out = vec![spec.base; x.n_rows];
+        let mut r0 = 0usize;
+        while r0 < x.n_rows {
+            let r1 = (r0 + ROW_BLOCK).min(x.n_rows);
+            for t in spec.tree_start..spec.tree_end {
+                let root = self.tree_roots[t as usize] as usize;
+                for (r, slot) in out[r0..r1].iter_mut().enumerate() {
+                    *slot += spec.learning_rate * self.traverse(root, x.row(r0 + r));
+                }
+            }
+            r0 = r1;
+        }
+        self.rows_predicted
+            .fetch_add(x.n_rows as u64, Ordering::Relaxed);
+        self.predict_ns
+            .fetch_add(started.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TrainConfig;
+    use crate::util::forall;
+    use crate::util::rng::Rng;
+
+    fn synth(n: usize, n_feat: usize, rng: &mut Rng) -> (FeatureMatrix, Vec<f64>) {
+        let mut rows = Vec::with_capacity(n);
+        let mut y = Vec::with_capacity(n);
+        for _ in 0..n {
+            let row: Vec<f64> = (0..n_feat).map(|_| rng.range_f64(-5.0, 5.0)).collect();
+            let target = row.iter().enumerate().map(|(j, v)| v * (j as f64 + 1.0)).sum::<f64>()
+                + (row[0] * row[n_feat - 1]).sin();
+            rows.push(row);
+            y.push(target);
+        }
+        (FeatureMatrix::from_rows(&rows), y)
+    }
+
+    fn fit_random(rng: &mut Rng) -> (Gbdt, FeatureMatrix) {
+        let n_feat = 2 + rng.below(4);
+        let (x, y) = synth(40 + rng.below(120), n_feat, rng);
+        let cfg = TrainConfig {
+            n_trees: 5 + rng.below(40),
+            max_depth: 2 + rng.below(5),
+            learning_rate: rng.range_f64(0.05, 0.4),
+            min_samples_leaf: 1 + rng.below(4),
+            subsample: rng.range_f64(0.6, 1.0),
+            colsample: rng.range_f64(0.6, 1.0),
+            lambda: rng.range_f64(0.0, 3.0),
+            ..TrainConfig::default()
+        };
+        let model = Gbdt::fit(&x, &y, &cfg, None, &mut rng.fork(7));
+        (model, x)
+    }
+
+    #[test]
+    fn forest_bit_matches_predict_one_property() {
+        // Property: over randomly-fitted ensembles and random rows, the
+        // compiled arena returns *bit-identical* values to the legacy
+        // per-tree traversal.
+        forall(
+            0xF0_5E57,
+            12,
+            fit_random,
+            |(model, x)| {
+                let forest = CompiledForest::compile_single(model);
+                assert_eq!(forest.n_trees(), model.n_trees());
+                let batched = forest.predict_output(0, x);
+                for i in 0..x.n_rows {
+                    let want = model.predict_one(x.row(i));
+                    assert_eq!(batched[i], want, "row {i} diverged");
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn multi_output_forest_matches_each_model() {
+        let mut rng = Rng::new(41);
+        let (m0, x) = fit_random(&mut rng);
+        // Second model over the same feature space.
+        let y2: Vec<f64> = (0..x.n_rows).map(|i| x.get(i, 0) * 3.0 - 1.0).collect();
+        let cfg = TrainConfig {
+            n_trees: 30,
+            learning_rate: 0.2,
+            ..TrainConfig::default()
+        };
+        let m1 = Gbdt::fit(&x, &y2, &cfg, None, &mut Rng::new(5));
+        let forest = CompiledForest::compile(&[&m0, &m1]);
+        assert_eq!(forest.n_outputs(), 2);
+        assert_eq!(forest.n_trees(), m0.n_trees() + m1.n_trees());
+
+        let mut out = Vec::new();
+        forest.predict_rows(&x.data, x.n_cols, &mut out);
+        assert_eq!(out.len(), x.n_rows * 2);
+        for i in 0..x.n_rows {
+            assert_eq!(out[i * 2], m0.predict_one(x.row(i)));
+            assert_eq!(out[i * 2 + 1], m1.predict_one(x.row(i)));
+        }
+
+        // Single-row entry agrees with the batched one.
+        let mut single = [0.0; 2];
+        forest.predict_row_into(x.row(3), &mut single);
+        assert_eq!(single[0], out[6]);
+        assert_eq!(single[1], out[7]);
+    }
+
+    #[test]
+    fn json_roundtrip_recompiles_to_identical_predictions() {
+        let mut rng = Rng::new(77);
+        let (model, x) = fit_random(&mut rng);
+        let before = CompiledForest::compile_single(&model).predict_output(0, &x);
+        let back = Gbdt::from_json(&model.to_json()).unwrap();
+        let after = CompiledForest::compile_single(&back).predict_output(0, &x);
+        assert_eq!(before, after);
+    }
+
+    #[test]
+    fn block_boundaries_do_not_change_results() {
+        // n_rows not a multiple of ROW_BLOCK exercises the tail block.
+        let mut rng = Rng::new(99);
+        let (model, x) = fit_random(&mut rng);
+        let forest = CompiledForest::compile_single(&model);
+        for take in [1usize, ROW_BLOCK - 1, ROW_BLOCK, ROW_BLOCK + 3] {
+            let take = take.min(x.n_rows);
+            let sub = FeatureMatrix {
+                data: x.data[..take * x.n_cols].to_vec(),
+                n_rows: take,
+                n_cols: x.n_cols,
+            };
+            let got = forest.predict_output(0, &sub);
+            for i in 0..take {
+                assert_eq!(got[i], model.predict_one(x.row(i)));
+            }
+        }
+    }
+
+    #[test]
+    fn nan_rows_traverse_right_like_the_legacy_path() {
+        let mut rng = Rng::new(123);
+        let (model, x) = fit_random(&mut rng);
+        let forest = CompiledForest::compile_single(&model);
+        let mut row = x.row(0).to_vec();
+        row[0] = f64::NAN;
+        let mut out = [0.0];
+        forest.predict_row_into(&row, &mut out);
+        assert_eq!(out[0], model.predict_one(&row));
+        assert!(out[0].is_finite());
+    }
+
+    #[test]
+    fn metrics_count_compile_and_rows() {
+        let mut rng = Rng::new(55);
+        let (model, x) = fit_random(&mut rng);
+        let forest = CompiledForest::compile_single(&model);
+        let m0 = forest.metrics();
+        assert_eq!(m0.rows_predicted, 0);
+        assert!(m0.n_nodes > 0 && m0.n_trees > 0 && m0.n_outputs == 1);
+        let _ = forest.predict_output(0, &x);
+        let m1 = forest.metrics();
+        assert_eq!(m1.rows_predicted, x.n_rows as u64);
+        assert!(m1.rows_per_s() >= 0.0);
+    }
+}

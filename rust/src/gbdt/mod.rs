@@ -1,14 +1,18 @@
 //! From-scratch Gradient Boosted Decision Trees (the paper's model class,
-//! §IV-A.3): exact-split regression trees, squared-loss boosting with
+//! §IV-A.3): histogram-split regression trees, squared-loss boosting with
 //! shrinkage and row/column subsampling, a multi-output wrapper for the
-//! resource model, and k-fold CV + hyper-parameter search.
+//! resource model, k-fold CV + hyper-parameter search, and a compiled
+//! forest-inference engine ([`forest::CompiledForest`]) that flattens
+//! whole model bundles into one node arena for row-blocked traversal.
 
 pub mod baselines;
 pub mod boost;
 pub mod cv;
+pub mod forest;
 pub mod multi;
 pub mod tree;
 
 pub use boost::Gbdt;
+pub use forest::{CompiledForest, ForestMetrics, ROW_BLOCK};
 pub use multi::MultiGbdt;
-pub use tree::{FeatureMatrix, RegressionTree, TreeParams};
+pub use tree::{BinnedMatrix, FeatureMatrix, RegressionTree, TreeParams, MAX_BINS};

@@ -5,7 +5,7 @@
 
 use crate::config::TrainConfig;
 use crate::gbdt::boost::Gbdt;
-use crate::gbdt::tree::FeatureMatrix;
+use crate::gbdt::tree::{BinnedMatrix, FeatureMatrix};
 use crate::util::json::{arr, Json};
 use crate::util::rng::Rng;
 
@@ -17,13 +17,25 @@ pub struct MultiGbdt {
 impl MultiGbdt {
     /// `targets[j]` is the j-th output column (each length `x.n_rows`).
     pub fn fit(x: &FeatureMatrix, targets: &[Vec<f64>], cfg: &TrainConfig, rng: &mut Rng) -> MultiGbdt {
+        let binned = BinnedMatrix::build(x);
+        MultiGbdt::fit_with_bins(x, &binned, targets, cfg, rng)
+    }
+
+    /// Fit all outputs against one shared pre-binned view of `x`.
+    pub fn fit_with_bins(
+        x: &FeatureMatrix,
+        binned: &BinnedMatrix,
+        targets: &[Vec<f64>],
+        cfg: &TrainConfig,
+        rng: &mut Rng,
+    ) -> MultiGbdt {
         assert!(!targets.is_empty());
         let models = targets
             .iter()
             .enumerate()
             .map(|(j, y)| {
                 let mut child = rng.fork(j as u64);
-                Gbdt::fit(x, y, cfg, None, &mut child)
+                Gbdt::fit_with_bins(x, binned, y, cfg, None, &mut child)
             })
             .collect();
         MultiGbdt { models }

@@ -1,6 +1,19 @@
-//! Regression trees with exact greedy split search — the weak learner of
-//! the gradient-boosted ensemble (paper §IV-A.3: GBDT chosen because the
-//! features are bounded by the tiling-parameter ranges [30], [31]).
+//! Regression trees with histogram-based split search — the weak learner
+//! of the gradient-boosted ensemble (paper §IV-A.3: GBDT chosen because
+//! the features are bounded by the tiling-parameter ranges [30], [31]).
+//!
+//! Split finding works on a [`BinnedMatrix`]: every feature column is
+//! quantized once per ensemble fit into at most [`MAX_BINS`] bins whose
+//! cut points are midpoints between distinct sorted values (quantile-
+//! thinned beyond `MAX_BINS` distinct values). Below that cap the cuts
+//! can realize every partition the old exact-greedy sort-and-scan
+//! could — though interior nodes pick thresholds from the global cut
+//! set rather than recomputing node-local midpoints, so fitted trees
+//! are not bitwise comparable with pre-histogram models. Each node
+//! scans O(n + bins) per feature instead of sorting O(n log n), and the
+//! NaN-unsafe `partial_cmp().unwrap()` sort is gone: binning orders
+//! values with `f64::total_cmp` and routes NaN to the highest bin, the
+//! same side (`right`) a NaN takes at prediction time.
 
 use crate::util::json::{arr, num, obj, Json};
 use crate::util::rng::Rng;
@@ -42,6 +55,90 @@ impl FeatureMatrix {
     }
 }
 
+/// Maximum histogram bins per feature (8-bit bin codes).
+pub const MAX_BINS: usize = 256;
+
+/// Pre-binned view of a [`FeatureMatrix`] for histogram split finding.
+///
+/// Built once per ensemble fit and shared across every tree and output
+/// ([`crate::models::Predictors::train`] bins a dataset exactly once for
+/// all 7 models). Cut points are deterministic functions of the data —
+/// midpoints between distinct consecutive sorted values, thinned to
+/// even quantile ranks when a column has more than [`MAX_BINS`]
+/// distinct values — so fitted thresholds are identical across runs.
+#[derive(Debug, Clone, Default)]
+pub struct BinnedMatrix {
+    /// Per-cell bin code, row-major (`n_rows x n_cols`).
+    codes: Vec<u8>,
+    /// Ascending candidate thresholds per feature. Splitting at cut `t`
+    /// sends every row with `code <= t` left — by construction this is
+    /// exactly the `value <= cuts[t]` predicate the fitted tree applies
+    /// at prediction time (NaN compares false, lands in the top bin).
+    cuts: Vec<Vec<f64>>,
+    n_rows: usize,
+    n_cols: usize,
+}
+
+impl BinnedMatrix {
+    pub fn build(x: &FeatureMatrix) -> BinnedMatrix {
+        let mut cuts: Vec<Vec<f64>> = Vec::with_capacity(x.n_cols);
+        for j in 0..x.n_cols {
+            let mut vals: Vec<f64> = (0..x.n_rows)
+                .map(|i| x.get(i, j))
+                .filter(|v| !v.is_nan())
+                .collect();
+            vals.sort_by(f64::total_cmp);
+            vals.dedup();
+            let mut c: Vec<f64> = if vals.len() <= MAX_BINS {
+                // Exact mode: one cut between every pair of distinct
+                // values — every partition exact greedy could make.
+                vals.windows(2).map(|w| 0.5 * (w[0] + w[1])).collect()
+            } else {
+                // Quantile mode: MAX_BINS - 1 cuts at even ranks.
+                (1..MAX_BINS)
+                    .map(|k| {
+                        let idx = k * vals.len() / MAX_BINS;
+                        0.5 * (vals[idx - 1] + vals[idx])
+                    })
+                    .collect()
+            };
+            c.dedup();
+            cuts.push(c);
+        }
+        let mut codes = Vec::with_capacity(x.n_rows * x.n_cols);
+        for i in 0..x.n_rows {
+            for (j, &v) in x.row(i).iter().enumerate() {
+                // Number of leading cuts `v` falls strictly right of;
+                // `!(v <= c)` (not `v > c`) so NaN passes every cut and
+                // lands in the top bin — the side it takes at inference.
+                let code = cuts[j].partition_point(|&c| !(v <= c));
+                debug_assert!(code < MAX_BINS);
+                codes.push(code as u8);
+            }
+        }
+        BinnedMatrix {
+            codes,
+            cuts,
+            n_rows: x.n_rows,
+            n_cols: x.n_cols,
+        }
+    }
+
+    #[inline]
+    fn code(&self, i: usize, j: usize) -> usize {
+        self.codes[i * self.n_cols + j] as usize
+    }
+
+    /// Candidate thresholds for feature `j` (ascending).
+    pub fn cuts(&self, j: usize) -> &[f64] {
+        &self.cuts[j]
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+}
+
 /// Hyper-parameters for a single tree fit.
 #[derive(Debug, Clone, Copy)]
 pub struct TreeParams {
@@ -71,14 +168,14 @@ enum Node {
 /// gives ~1.5-2x faster prediction than matching on the boxed enum
 /// (see EXPERIMENTS.md §Perf).
 #[derive(Debug, Clone, Copy, PartialEq)]
-struct FlatNode {
-    feature: u32,
-    left: u32,
-    right: u32,
-    threshold: f64,
+pub(crate) struct FlatNode {
+    pub(crate) feature: u32,
+    pub(crate) left: u32,
+    pub(crate) right: u32,
+    pub(crate) threshold: f64,
 }
 
-const LEAF: u32 = u32::MAX;
+pub(crate) const LEAF: u32 = u32::MAX;
 
 /// A fitted regression tree (flat node arena, root at index 0).
 #[derive(Debug, Clone, PartialEq)]
@@ -89,6 +186,8 @@ pub struct RegressionTree {
 
 impl RegressionTree {
     /// Fit on the sample subset `indices` against `targets` (residuals).
+    /// Bins `x` internally; ensemble fits should bin once and use
+    /// [`RegressionTree::fit_binned`] instead.
     pub fn fit(
         x: &FeatureMatrix,
         targets: &[f64],
@@ -96,16 +195,36 @@ impl RegressionTree {
         params: &TreeParams,
         rng: &mut Rng,
     ) -> RegressionTree {
+        let binned = BinnedMatrix::build(x);
+        RegressionTree::fit_binned(x, &binned, targets, indices, params, rng)
+    }
+
+    /// Fit against a pre-binned view of `x` (histogram split finding).
+    pub fn fit_binned(
+        x: &FeatureMatrix,
+        binned: &BinnedMatrix,
+        targets: &[f64],
+        indices: &[usize],
+        params: &TreeParams,
+        rng: &mut Rng,
+    ) -> RegressionTree {
         assert_eq!(x.n_rows, targets.len());
+        assert_eq!(x.n_rows, binned.n_rows);
         assert!(!indices.is_empty());
         let mut tree = RegressionTree {
             nodes: Vec::new(),
             flat: Vec::new(),
         };
         let mut idx = indices.to_vec();
-        tree.build(x, targets, &mut idx, 0, params, rng);
+        let mut hist = Histogram::default();
+        tree.build(x, binned, targets, &mut idx, 0, params, rng, &mut hist);
         tree.rebuild_flat();
         tree
+    }
+
+    /// Read-only view of the compact node arena (forest compilation).
+    pub(crate) fn flat_nodes(&self) -> &[FlatNode] {
+        &self.flat
     }
 
     fn rebuild_flat(&mut self) {
@@ -135,15 +254,19 @@ impl RegressionTree {
     }
 
     /// Recursively build; `indices` is reordered in place so children see
-    /// contiguous slices (no per-node allocation of index vectors).
+    /// contiguous slices (no per-node allocation of index vectors), and
+    /// `hist` is one reused bin-accumulator for the whole tree.
+    #[allow(clippy::too_many_arguments)]
     fn build(
         &mut self,
         x: &FeatureMatrix,
+        binned: &BinnedMatrix,
         y: &[f64],
         indices: &mut [usize],
         depth: usize,
         params: &TreeParams,
         rng: &mut Rng,
+        hist: &mut Histogram,
     ) -> usize {
         let node_id = self.nodes.len();
         let n = indices.len();
@@ -155,7 +278,7 @@ impl RegressionTree {
             return node_id;
         }
 
-        match best_split(x, y, indices, params, rng) {
+        match best_split(binned, y, indices, params, rng, hist) {
             None => {
                 self.nodes.push(Node::Leaf { value: leaf_value });
                 node_id
@@ -173,8 +296,10 @@ impl RegressionTree {
                 });
                 // Split borrows end here; recurse then patch child ids.
                 let (left_slice, right_slice) = indices.split_at_mut(mid);
-                let left_id = self.build(x, y, left_slice, depth + 1, params, rng);
-                let right_id = self.build(x, y, right_slice, depth + 1, params, rng);
+                let left_id =
+                    self.build(x, binned, y, left_slice, depth + 1, params, rng, hist);
+                let right_id =
+                    self.build(x, binned, y, right_slice, depth + 1, params, rng, hist);
                 if let Node::Split { left, right, .. } = &mut self.nodes[node_id] {
                     *left = left_id;
                     *right = right_id;
@@ -270,14 +395,36 @@ struct SplitCandidate {
     threshold: f64,
 }
 
-/// Exact greedy split: for each (sampled) feature, sort the node's values
-/// and scan prefix sums for the maximal SSE reduction.
+/// Reused per-bin accumulators for one node's split search.
+#[derive(Debug)]
+struct Histogram {
+    cnt: [u32; MAX_BINS],
+    sum: [f64; MAX_BINS],
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            cnt: [0; MAX_BINS],
+            sum: [0.0; MAX_BINS],
+        }
+    }
+}
+
+/// Histogram split: for each (sampled) feature, accumulate per-bin
+/// count/target sums over the node's rows in O(n), then scan the bin
+/// boundaries for the maximal SSE reduction. Where a column has fewer
+/// than [`MAX_BINS`] distinct values the global cut set can realize
+/// every partition the old exact-greedy sort-and-scan considered
+/// (thresholds come from the shared cuts rather than node-local
+/// midpoints), without the per-node O(n log n) sort or its NaN panic.
 fn best_split(
-    x: &FeatureMatrix,
+    binned: &BinnedMatrix,
     y: &[f64],
     indices: &[usize],
     params: &TreeParams,
     rng: &mut Rng,
+    hist: &mut Histogram,
 ) -> Option<SplitCandidate> {
     let n = indices.len();
     let total_sum: f64 = indices.iter().map(|&i| y[i]).sum();
@@ -287,27 +434,36 @@ fn best_split(
         return None; // node is pure
     }
 
-    let n_feat = x.n_cols;
+    let n_feat = binned.n_cols;
     let n_try = ((n_feat as f64 * params.colsample).ceil() as usize).clamp(1, n_feat);
     let feat_order = rng.sample_indices(n_feat, n_try);
 
     let mut best: Option<(f64, SplitCandidate)> = None;
-    // (value, target) pairs, reused across features.
-    let mut pairs: Vec<(f64, f64)> = Vec::with_capacity(n);
     for feature in feat_order {
-        pairs.clear();
-        pairs.extend(indices.iter().map(|&i| (x.get(i, feature), y[i])));
-        pairs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let cuts = binned.cuts(feature);
+        if cuts.is_empty() {
+            continue; // constant column: nothing to split on
+        }
+        let n_bins = cuts.len() + 1;
+        hist.cnt[..n_bins].fill(0);
+        hist.sum[..n_bins].fill(0.0);
+        for &i in indices {
+            let b = binned.code(i, feature);
+            hist.cnt[b] += 1;
+            hist.sum[b] += y[i];
+        }
         let mut left_sum = 0.0;
         let mut left_n = 0usize;
-        for w in 0..n - 1 {
-            left_sum += pairs[w].1;
-            left_n += 1;
-            // Can't split between equal feature values.
-            if pairs[w].0 == pairs[w + 1].0 {
-                continue;
+        for (t, &threshold) in cuts.iter().enumerate() {
+            left_n += hist.cnt[t] as usize;
+            left_sum += hist.sum[t];
+            if left_n == 0 {
+                continue; // no rows this low in this node
             }
             let right_n = n - left_n;
+            if right_n == 0 {
+                break; // no rows above this cut in this node
+            }
             if left_n < params.min_samples_leaf || right_n < params.min_samples_leaf {
                 continue;
             }
@@ -317,14 +473,7 @@ fn best_split(
                 + right_sum * right_sum / right_n as f64
                 - total_sum * total_sum / n as f64;
             if gain > best.as_ref().map(|(g, _)| *g).unwrap_or(1e-12) {
-                let threshold = 0.5 * (pairs[w].0 + pairs[w + 1].0);
-                best = Some((
-                    gain,
-                    SplitCandidate {
-                        feature,
-                        threshold,
-                    },
-                ));
+                best = Some((gain, SplitCandidate { feature, threshold }));
             }
         }
     }
@@ -470,6 +619,87 @@ mod tests {
         for i in (0..x.n_rows).step_by(17) {
             assert_eq!(tree.predict_one(x.row(i)), back.predict_one(x.row(i)));
         }
+    }
+
+    #[test]
+    fn nan_features_do_not_panic() {
+        // Regression: the old exact-greedy search sorted feature values
+        // with `partial_cmp().unwrap()` and panicked on NaN. Binning
+        // orders with total_cmp and routes NaN to the highest bin.
+        let x = FeatureMatrix::from_rows(&[
+            vec![1.0, 4.0],
+            vec![2.0, f64::NAN],
+            vec![3.0, 2.0],
+            vec![f64::NAN, 1.0],
+            vec![5.0, 3.0],
+            vec![6.0, f64::NAN],
+        ]);
+        let y = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let idx: Vec<usize> = (0..x.n_rows).collect();
+        let mut rng = Rng::new(8);
+        let tree = RegressionTree::fit(&x, &y, &idx, &params(), &mut rng);
+        // Every prediction is a finite leaf value, NaN rows included
+        // (they deterministically take the `right` branch).
+        for i in 0..x.n_rows {
+            assert!(tree.predict_one(x.row(i)).is_finite());
+        }
+        assert!(tree.predict_one(&[f64::NAN, f64::NAN]).is_finite());
+    }
+
+    #[test]
+    fn binning_matches_exact_thresholds_on_small_columns() {
+        // Fewer distinct values than MAX_BINS: cuts are exactly the
+        // midpoints the exact-greedy search used as thresholds.
+        let x = FeatureMatrix::from_rows(&[
+            vec![3.0],
+            vec![1.0],
+            vec![3.0],
+            vec![7.0],
+            vec![1.0],
+        ]);
+        let b = BinnedMatrix::build(&x);
+        assert_eq!(b.cuts(0), &[2.0, 5.0]);
+        // Codes follow the `v <= cut` predicate used at inference.
+        let codes: Vec<usize> = (0..x.n_rows).map(|i| b.code(i, 0)).collect();
+        assert_eq!(codes, vec![1, 0, 1, 2, 0]);
+    }
+
+    #[test]
+    fn binning_caps_wide_columns_at_max_bins() {
+        let rows: Vec<Vec<f64>> = (0..1000).map(|i| vec![i as f64 * 1.37]).collect();
+        let x = FeatureMatrix::from_rows(&rows);
+        let b = BinnedMatrix::build(&x);
+        assert!(b.cuts(0).len() <= MAX_BINS - 1);
+        assert!(b.cuts(0).len() >= MAX_BINS / 2, "cuts {}", b.cuts(0).len());
+        // Cuts are strictly ascending; codes are monotone in the value.
+        for w in b.cuts(0).windows(2) {
+            assert!(w[0] < w[1]);
+        }
+        let mut prev = 0usize;
+        for i in 0..x.n_rows {
+            let c = b.code(i, 0);
+            assert!(c >= prev);
+            prev = c;
+        }
+        // A tree fit on the quantized column still models the trend.
+        let y: Vec<f64> = (0..1000).map(|i| (i as f64) * 0.5).collect();
+        let idx: Vec<usize> = (0..1000).collect();
+        let tree = RegressionTree::fit(&x, &y, &idx, &params(), &mut Rng::new(9));
+        let sse: f64 = (0..x.n_rows)
+            .map(|i| (tree.predict_one(x.row(i)) - y[i]).powi(2))
+            .sum::<f64>()
+            / x.n_rows as f64;
+        assert!(sse < 100.0, "mean sse {sse}");
+    }
+
+    #[test]
+    fn fit_binned_matches_fit() {
+        let (x, y) = grid_xy(|a, b| a * 2.0 - b * b);
+        let idx: Vec<usize> = (0..x.n_rows).collect();
+        let binned = BinnedMatrix::build(&x);
+        let t1 = RegressionTree::fit(&x, &y, &idx, &params(), &mut Rng::new(10));
+        let t2 = RegressionTree::fit_binned(&x, &binned, &y, &idx, &params(), &mut Rng::new(10));
+        assert_eq!(t1, t2);
     }
 
     #[test]

@@ -16,7 +16,9 @@
 //!
 //! See `DESIGN.md` (repo root) for the system inventory, the
 //! DSE→coordinator planning-path diagram (including the sharded plan
-//! cache), and the per-figure/table experiment index.
+//! cache), the compiled forest-inference engine (§3: the arena layout
+//! and row-blocked traversal behind `Predictors::predict_rows`), and
+//! the per-figure/table experiment index.
 
 pub mod analytical;
 pub mod coordinator;

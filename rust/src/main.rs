@@ -255,7 +255,8 @@ fn cmd_serve(args: &Args, cfg: Config, data_dir: PathBuf) -> anyhow::Result<()> 
     println!(
         "served {ok}/{} jobs in {:.2}s — exec throughput {:.2} GFLOP/s, \
          cache {} hits / {} misses / {} evictions ({:.0}% hit rate), \
-         p50 plan latency {:.3} ms, simulated VCK190 energy {:.1} J",
+         p50 plan latency {:.3} ms, forest compile {:.1} ms / predict \
+         {:.0} rows/s, simulated VCK190 energy {:.1} J",
         results.len(),
         wall.as_secs_f64(),
         stats.executed_gflops(),
@@ -264,6 +265,8 @@ fn cmd_serve(args: &Args, cfg: Config, data_dir: PathBuf) -> anyhow::Result<()> 
         stats.cache_evictions,
         100.0 * stats.cache_hit_rate,
         stats.plan_p50_ms,
+        stats.forest_compile_ms,
+        stats.predict_rows_per_s,
         stats.simulated_energy_j
     );
     coord.shutdown();

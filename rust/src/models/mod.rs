@@ -1,15 +1,32 @@
 //! The trained predictor bundle: separate 𝓛 (log-latency) and 𝓟 models
 //! plus the 5-output 𝓡 model (paper §IV-A.3), with JSON persistence so
 //! the online phase never retrains.
+//!
+//! Inference routes through [`crate::gbdt::CompiledForest`]: on first
+//! prediction the bundle's ~900 trees are flattened into one contiguous
+//! node arena (compiled lazily once per `Predictors`, so a retrained or
+//! JSON-loaded bundle always recompiles) and traversed row-blocked. The
+//! legacy per-tree path survives as `predict_row_legacy`/`predict_rows_
+//! legacy` — the equivalence oracle debug builds assert against on every
+//! batch, and the baseline the `dse_latency` bench measures speedup
+//! over.
+
+use std::sync::OnceLock;
 
 use crate::config::{Config, TrainConfig};
 use crate::dataset::Dataset;
 use crate::features::{featurize_set, FeatureSet};
-use crate::gbdt::{FeatureMatrix, Gbdt, MultiGbdt};
+use crate::gbdt::{BinnedMatrix, CompiledForest, FeatureMatrix, ForestMetrics, Gbdt, MultiGbdt};
 use crate::tiling::Tiling;
 use crate::util::json::{num, obj, s, Json};
 use crate::util::rng::Rng;
 use crate::workloads::Gemm;
+
+/// Forest output indices of the bundle: latency, power, then the 𝓡
+/// outputs in `MultiGbdt` order.
+const OUT_LATENCY: usize = 0;
+const OUT_POWER: usize = 1;
+const OUT_RESOURCES: usize = 2;
 
 /// Predicted metrics for one candidate design.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -36,13 +53,43 @@ impl Prediction {
 }
 
 /// The paper's model bundle.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug)]
 pub struct Predictors {
     pub feature_set: FeatureSet,
     pub micro: usize,
     pub latency: Gbdt,
     pub power: Gbdt,
     pub resources: MultiGbdt,
+    /// Unified inference engine over all 7 models, compiled lazily on
+    /// first prediction. Never persisted: `train`/`from_json` construct
+    /// a fresh (empty) slot, so retrained or reloaded bundles always
+    /// recompile, and `clone` resets it for the same reason.
+    forest: OnceLock<CompiledForest>,
+}
+
+impl Clone for Predictors {
+    fn clone(&self) -> Predictors {
+        Predictors {
+            feature_set: self.feature_set,
+            micro: self.micro,
+            latency: self.latency.clone(),
+            power: self.power.clone(),
+            resources: self.resources.clone(),
+            forest: OnceLock::new(),
+        }
+    }
+}
+
+/// Equality is over the trained models only — the compiled forest is a
+/// cache derived from them.
+impl PartialEq for Predictors {
+    fn eq(&self, other: &Self) -> bool {
+        self.feature_set == other.feature_set
+            && self.micro == other.micro
+            && self.latency == other.latency
+            && self.power == other.power
+            && self.resources == other.resources
+    }
 }
 
 impl Predictors {
@@ -53,9 +100,13 @@ impl Predictors {
         let x = ds.feature_matrix(micro, set);
         let t = ds.targets(cfg);
         let log_latency: Vec<f64> = t.latency_s.iter().map(|v| v.ln()).collect();
+        // One histogram binning of the shared feature matrix feeds all
+        // 7 model fits (the per-node split search then costs O(n + bins)
+        // instead of the old per-node sort).
+        let binned = BinnedMatrix::build(&x);
         let mut rng = Rng::new(cfg.train.seed);
-        let latency = Gbdt::fit(&x, &log_latency, &cfg.train, None, &mut rng.fork(1));
-        let power = Gbdt::fit(&x, &t.power_w, &cfg.train, None, &mut rng.fork(2));
+        let latency = Gbdt::fit_with_bins(&x, &binned, &log_latency, &cfg.train, None, &mut rng.fork(1));
+        let power = Gbdt::fit_with_bins(&x, &binned, &t.power_w, &cfg.train, None, &mut rng.fork(2));
         // The resource model learns near-deterministic packing arithmetic;
         // far fewer (but stronger-stepped) trees suffice, which also cuts
         // the DSE hot path from ~1350 to ~900 traversals per candidate
@@ -65,14 +116,33 @@ impl Predictors {
             learning_rate: (cfg.train.learning_rate * 2.0).min(0.3),
             ..cfg.train.clone()
         };
-        let resources = MultiGbdt::fit(&x, &t.resources_pct, &res_cfg, &mut rng.fork(3));
+        let resources = MultiGbdt::fit_with_bins(&x, &binned, &t.resources_pct, &res_cfg, &mut rng.fork(3));
         Predictors {
             feature_set: set,
             micro,
             latency,
             power,
             resources,
+            forest: OnceLock::new(),
         }
+    }
+
+    /// The compiled forest engine, built on first use. Output order:
+    /// latency, power, then the resource outputs.
+    pub fn forest(&self) -> &CompiledForest {
+        self.forest.get_or_init(|| {
+            let mut models: Vec<&Gbdt> = Vec::with_capacity(2 + self.resources.models.len());
+            models.push(&self.latency);
+            models.push(&self.power);
+            models.extend(self.resources.models.iter());
+            CompiledForest::compile(&models)
+        })
+    }
+
+    /// Compile-time + throughput counters of the forest engine (zeros
+    /// until the first prediction compiles it).
+    pub fn forest_metrics(&self) -> ForestMetrics {
+        self.forest.get().map(CompiledForest::metrics).unwrap_or_default()
     }
 
     /// Predict all metrics for one candidate.
@@ -81,9 +151,39 @@ impl Predictors {
         self.predict_row(&row)
     }
 
-    /// Predict from a pre-computed feature row (hot path of the DSE:
-    /// no allocation, ~900 flat-tree traversals).
+    /// Assemble a [`Prediction`] from one row of raw forest outputs,
+    /// applying the same transforms as the legacy path (`exp` on
+    /// log-latency, floors on power/resources).
+    fn prediction_from_raw(raw: &[f64]) -> Prediction {
+        let mut resources_pct = [0.0; 5];
+        for (slot, v) in resources_pct.iter_mut().zip(&raw[OUT_RESOURCES..]) {
+            *slot = v.max(0.0);
+        }
+        Prediction {
+            latency_s: raw[OUT_LATENCY].exp(),
+            power_w: raw[OUT_POWER].max(1.0),
+            resources_pct,
+        }
+    }
+
+    /// Predict from a pre-computed feature row via the compiled forest.
     pub fn predict_row(&self, row: &[f64]) -> Prediction {
+        let forest = self.forest();
+        let mut raw = vec![0.0; forest.n_outputs()];
+        forest.predict_row_into(row, &mut raw);
+        let p = Predictors::prediction_from_raw(&raw);
+        debug_assert_eq!(
+            p,
+            self.predict_row_legacy(row),
+            "compiled forest diverged from the per-tree path"
+        );
+        p
+    }
+
+    /// Legacy per-tree reference path: one heap-separate tree walk at a
+    /// time. Kept as the equivalence oracle for the forest engine and
+    /// the baseline of the `dse_latency` speedup bench.
+    pub fn predict_row_legacy(&self, row: &[f64]) -> Prediction {
         let latency_s = self.latency.predict_one(row).exp();
         let power_w = self.power.predict_one(row).max(1.0);
         let mut resources_pct = [0.0; 5];
@@ -101,28 +201,81 @@ impl Predictors {
     /// Batched prediction over a flat row-major buffer of feature rows
     /// (`rows.len() == n_rows * n_feat`) — the DSE hot path hands fixed
     /// -size chunks here so the ~900 tree traversals per candidate run
-    /// back-to-back over a contiguous buffer instead of interleaving
-    /// with featurization, and `out` is reused across chunks.
+    /// row-blocked through the forest arena instead of interleaving
+    /// with featurization, and `out` is reused across chunks. Debug
+    /// builds assert a sampled subset of rows (plus the final row)
+    /// against the legacy per-tree path.
     pub fn predict_rows(&self, rows: &[f64], n_feat: usize, out: &mut Vec<Prediction>) {
+        debug_assert!(n_feat > 0 && rows.len() % n_feat == 0);
+        let forest = self.forest();
+        let n_out = forest.n_outputs();
+        // Per-thread scratch for the raw forest outputs, so the chunked
+        // hot path stays allocation-free after the first call (the
+        // caller already reuses `out` across chunks).
+        thread_local! {
+            static RAW: std::cell::RefCell<Vec<f64>> = const { std::cell::RefCell::new(Vec::new()) };
+        }
+        RAW.with(|cell| {
+            let mut raw = cell.borrow_mut();
+            forest.predict_rows(rows, n_feat, &mut raw);
+            out.clear();
+            out.reserve(rows.len() / n_feat);
+            for chunk in raw.chunks_exact(n_out) {
+                out.push(Predictors::prediction_from_raw(chunk));
+            }
+        });
+        if cfg!(debug_assertions) {
+            // Sampled equivalence oracle: checking every row would double
+            // the cost of every debug-mode DSE run; a prime stride plus
+            // the final row still crosses chunk and row-block boundaries.
+            let n_rows = out.len();
+            let mut r = 0usize;
+            while r < n_rows {
+                let row = &rows[r * n_feat..(r + 1) * n_feat];
+                debug_assert_eq!(
+                    out[r],
+                    self.predict_row_legacy(row),
+                    "compiled forest diverged from the per-tree path at row {r}"
+                );
+                r += 61;
+            }
+            if let Some(last) = n_rows.checked_sub(1) {
+                let row = &rows[last * n_feat..(last + 1) * n_feat];
+                debug_assert_eq!(
+                    out[last],
+                    self.predict_row_legacy(row),
+                    "compiled forest diverged from the per-tree path at last row"
+                );
+            }
+        }
+    }
+
+    /// Legacy batched path (bench baseline for the forest speedup).
+    pub fn predict_rows_legacy(&self, rows: &[f64], n_feat: usize, out: &mut Vec<Prediction>) {
         debug_assert!(n_feat > 0 && rows.len() % n_feat == 0);
         out.clear();
         out.reserve(rows.len() / n_feat);
         for row in rows.chunks_exact(n_feat) {
-            out.push(self.predict_row(row));
+            out.push(self.predict_row_legacy(row));
         }
     }
 
-    /// Batch latency prediction (for metrics computation).
+    /// Batch latency prediction (for metrics computation): row-blocked
+    /// over the latency trees only.
     pub fn predict_latency_batch(&self, x: &FeatureMatrix) -> Vec<f64> {
-        (0..x.n_rows)
-            .map(|i| self.latency.predict_one(x.row(i)).exp())
-            .collect()
+        let mut out = self.forest().predict_output(OUT_LATENCY, x);
+        for v in &mut out {
+            *v = v.exp();
+        }
+        out
     }
 
     pub fn predict_power_batch(&self, x: &FeatureMatrix) -> Vec<f64> {
-        (0..x.n_rows)
-            .map(|i| self.power.predict_one(x.row(i)).max(1.0))
-            .collect()
+        let mut out = self.forest().predict_output(OUT_POWER, x);
+        for v in &mut out {
+            *v = v.max(1.0);
+        }
+        out
     }
 
     // -- persistence -----------------------------------------------------
@@ -151,6 +304,7 @@ impl Predictors {
         };
         Ok(Predictors {
             feature_set,
+            forest: OnceLock::new(),
             micro: json.req_usize("micro")?,
             latency: Gbdt::from_json(
                 json.get("latency").ok_or_else(|| anyhow::anyhow!("no latency model"))?,
@@ -262,6 +416,75 @@ mod tests {
         let e1 = mape(&truth, &p1);
         let e2 = mape(&truth, &p2);
         assert!(e2 < e1, "Set-I&II {e2} should beat Set-I {e1} on unseen workload");
+    }
+
+    #[test]
+    fn forest_bit_matches_legacy_bundle_paths() {
+        let cfg = quick_cfg();
+        let ds = quick_dataset(&cfg, 3);
+        let model = Predictors::train(&ds, &cfg, FeatureSet::SetIAndII);
+        let n_feat = model.feature_set.len();
+        let mut rows: Vec<f64> = Vec::new();
+        for p in ds.points.iter().step_by(3) {
+            let full = crate::features::featurize(&p.gemm, &p.tiling, model.micro);
+            rows.extend_from_slice(&full[..n_feat]);
+        }
+        let mut forest_preds = Vec::new();
+        model.predict_rows(&rows, n_feat, &mut forest_preds);
+        let mut legacy_preds = Vec::new();
+        model.predict_rows_legacy(&rows, n_feat, &mut legacy_preds);
+        assert_eq!(forest_preds, legacy_preds);
+        // Single-row entry agrees too.
+        for (row, want) in rows.chunks_exact(n_feat).zip(&legacy_preds) {
+            assert_eq!(model.predict_row(row), *want);
+        }
+        // Forest metrics report the compiled bundle.
+        let fm = model.forest_metrics();
+        assert_eq!(fm.n_outputs, 7);
+        assert_eq!(
+            fm.n_trees,
+            model.latency.n_trees()
+                + model.power.n_trees()
+                + model.resources.models.iter().map(|m| m.n_trees()).sum::<usize>()
+        );
+        assert!(fm.rows_predicted >= forest_preds.len() as u64);
+    }
+
+    #[test]
+    fn latency_batch_matches_per_row_path() {
+        let cfg = quick_cfg();
+        let ds = quick_dataset(&cfg, 2);
+        let model = Predictors::train(&ds, &cfg, FeatureSet::SetIAndII);
+        let x = ds.feature_matrix(model.micro, model.feature_set);
+        let batched = model.predict_latency_batch(&x);
+        for i in 0..x.n_rows {
+            assert_eq!(batched[i], model.latency.predict_one(x.row(i)).exp());
+        }
+        let pw = model.predict_power_batch(&x);
+        for i in 0..x.n_rows {
+            assert_eq!(pw[i], model.power.predict_one(x.row(i)).max(1.0));
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_recompiles_identical_forest() {
+        // Persistence round-trip -> fresh lazy compile -> identical
+        // predictions (the forest cache is never serialized).
+        let cfg = quick_cfg();
+        let ds = quick_dataset(&cfg, 2);
+        let model = Predictors::train(&ds, &cfg, FeatureSet::SetIAndII);
+        let back = Predictors::from_json(&model.to_json()).unwrap();
+        assert_eq!(back.forest_metrics().rows_predicted, 0, "forest must not persist");
+        let n_feat = model.feature_set.len();
+        let mut rows: Vec<f64> = Vec::new();
+        for p in ds.points.iter().step_by(5) {
+            let full = crate::features::featurize(&p.gemm, &p.tiling, model.micro);
+            rows.extend_from_slice(&full[..n_feat]);
+        }
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        model.predict_rows(&rows, n_feat, &mut a);
+        back.predict_rows(&rows, n_feat, &mut b);
+        assert_eq!(a, b);
     }
 
     #[test]

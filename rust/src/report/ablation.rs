@@ -72,12 +72,18 @@ pub fn ablation(lab: &Lab) -> String {
     let knn = Knn::fit(&xtr, &ytr, 7);
     let analytical = AnalyticalModel::new(&cfg.board);
 
-    let pred_with = |f: &dyn Fn(&[f64]) -> f64| -> Vec<f64> {
-        (0..xte.n_rows).map(|i| f(xte.row(i)).exp()).collect()
+    // Batched evaluation: the GBDT goes through the compiled-forest
+    // row-blocked path, the baselines through their scratch-reusing
+    // batch entries.
+    let expd = |mut v: Vec<f64>| -> Vec<f64> {
+        for p in &mut v {
+            *p = p.exp();
+        }
+        v
     };
-    let gbdt_pred = pred_with(&|r| gbdt.predict_one(r));
-    let ridge_pred = pred_with(&|r| ridge.predict_one(r));
-    let knn_pred = pred_with(&|r| knn.predict_one(r));
+    let gbdt_pred = expd(gbdt.predict_batch(&xte));
+    let ridge_pred = expd(ridge.predict_batch(&xte));
+    let knn_pred = expd(knn.predict_batch(&xte));
     let ana_pred: Vec<f64> = test
         .points
         .iter()
@@ -105,7 +111,7 @@ pub fn ablation(lab: &Lab) -> String {
         let xte = matrix_without(&test, micro, drop);
         let mut rng = Rng::new(cfg.train.seed);
         let model = Gbdt::fit(&xtr, &ytr, &cfg.train, None, &mut rng);
-        let pred: Vec<f64> = (0..xte.n_rows).map(|i| model.predict_one(xte.row(i)).exp()).collect();
+        let pred = expd(model.predict_batch(&xte));
         t2.row(vec![name.to_string(), format!("{:.2}", mape(&truth, &pred))]);
     }
     out.push_str(&t2.render());
@@ -128,7 +134,7 @@ pub fn ablation(lab: &Lab) -> String {
     let rxe = rtest.feature_matrix(micro, FeatureSet::SetIAndII);
     let mut rng = Rng::new(cfg.train.seed);
     let rmodel = Gbdt::fit(&rx, &ry, &cfg.train, None, &mut rng);
-    let rpred: Vec<f64> = (0..rxe.n_rows).map(|i| rmodel.predict_one(rxe.row(i)).exp()).collect();
+    let rpred = expd(rmodel.predict_batch(&rxe));
 
     let mut t3 = Table::new(
         "(3) offline sampling strategy — latency MAPE on UNKNOWN workloads (%)",
@@ -199,8 +205,8 @@ mod tests {
         let mut rng = Rng::new(cfg.train.seed);
         let gbdt = Gbdt::fit(&xtr, &ytr, &cfg.train, None, &mut rng);
         let ridge = Ridge::fit(&xtr, &ytr, 1.0);
-        let g: Vec<f64> = (0..xte.n_rows).map(|i| gbdt.predict_one(xte.row(i)).exp()).collect();
-        let l: Vec<f64> = (0..xte.n_rows).map(|i| ridge.predict_one(xte.row(i)).exp()).collect();
+        let g: Vec<f64> = gbdt.predict_batch(&xte).iter().map(|p| p.exp()).collect();
+        let l: Vec<f64> = ridge.predict_batch(&xte).iter().map(|p| p.exp()).collect();
         assert!(
             mape(&truth, &g) < mape(&truth, &l),
             "gbdt {} >= ridge {}",
