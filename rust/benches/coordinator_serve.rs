@@ -1,20 +1,52 @@
 //! Bench: coordinator serving throughput (plan-only path: streaming DSE
-//! + sharded plan cache + channels), the L3 router hot path.
+//! + single-flight coalescing + sharded plan cache + bounded admission),
+//! the L3 router hot path.
+//!
+//! Two scenarios:
+//! 1. warm-vs-cold — 200 jobs over 8 unique plans: a cache-hit plan must
+//!    be >= 5x faster than a cold DSE plan;
+//! 2. burst coalescing — a K-way burst of *identical* cold jobs across 4
+//!    planners must run exactly ONE DSE exploration (the seed ran up to
+//!    min(K, n_planners)) and finish in ~1 cold-plan wall-clock.
+//!
+//! `--smoke` runs a cheap release-mode pass for CI: a reduced in-memory
+//! dataset/model and report-only timing/coalescing numbers (shared
+//! runners are too noisy to hard-gate ratios; the full bench asserts).
 use versal_gemm::config::Config;
 use versal_gemm::coordinator::{Coordinator, CoordinatorOptions, GemmJob};
+use versal_gemm::dataset::Dataset;
 use versal_gemm::dse::Objective;
+use versal_gemm::features::FeatureSet;
+use versal_gemm::models::Predictors;
 use versal_gemm::report::Lab;
 use versal_gemm::util::bench::once;
-use versal_gemm::workloads::Gemm;
+use versal_gemm::workloads::{training_workloads, Gemm};
 
 fn main() -> anyhow::Result<()> {
-    let cfg = Config::default();
-    let lab = Lab::prepare(cfg.clone(), "data".into())?;
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let lab = if smoke {
+        // Fast in-memory lab: no disk cache, reduced offline budget.
+        let mut cfg = Config::default();
+        cfg.dataset.top_k = 12;
+        cfg.dataset.bottom_k = 8;
+        cfg.dataset.random_k = 60;
+        cfg.train.n_trees = 120;
+        cfg.train.learning_rate = 0.15;
+        let ds = Dataset::generate(&cfg, &training_workloads());
+        let predictors = Predictors::train(&ds, &cfg, FeatureSet::SetIAndII);
+        Lab::in_memory(cfg, ds, predictors)
+    } else {
+        Lab::prepare(Config::default(), "data".into())?
+    };
+    let cfg = lab.cfg.clone();
     println!("== bench: coordinator plan-only serving (sharded plan cache) ==");
     let options = CoordinatorOptions::default();
     println!(
-        "cache: {} shards, {} total capacity",
-        options.n_shards, options.cache_capacity
+        "cache: {} shards, {} total capacity; admission: {} (queue depth {})",
+        options.n_shards,
+        options.cache_capacity,
+        options.admission.label(),
+        options.max_queue_depth
     );
     let mut coord = Coordinator::start_with(&cfg, lab.engine(), None, 4, options);
     let shapes = [
@@ -23,25 +55,39 @@ fn main() -> anyhow::Result<()> {
         Gemm::new(32, 4864, 896),
         Gemm::new(2048, 2048, 2048),
     ];
-    // Cold: 8 distinct (shape, objective) plans; warm: 192 cached jobs.
-    let jobs: Vec<GemmJob> = (0..200u64)
-        .map(|i| {
-            GemmJob::plan_only(
-                i,
-                shapes[(i % 4) as usize],
-                if i % 2 == 0 { Objective::Throughput } else { Objective::EnergyEfficiency },
-            )
-        })
-        .collect();
-    let results = once("serve 200 plan jobs (8 unique plans)", || coord.run_batch(jobs));
+    // Phase 1 — cold: the 8 distinct (shape, objective) plans. Phase 2 —
+    // warm: 192 repeat jobs served from the now-populated cache. Two
+    // batches keep the cold/warm split deterministic: a single combined
+    // burst would coalesce the repeats onto the in-flight cold plans
+    // (measured separately by the burst scenario below) instead of
+    // exercising the cache-hit path.
+    // Shape cycles with i % 4, objective with (i / 4) % 2 — independent
+    // selectors, so the first 8 jobs really are 8 distinct keys.
+    let job_at = |i: u64| {
+        GemmJob::plan_only(
+            i,
+            shapes[(i % 4) as usize],
+            if (i / 4) % 2 == 0 { Objective::Throughput } else { Objective::EnergyEfficiency },
+        )
+    };
+    let cold_jobs: Vec<GemmJob> = (0..8u64).map(job_at).collect();
+    let warm_jobs: Vec<GemmJob> = (8..200u64).map(job_at).collect();
+    let mut results = once("serve 8 cold plan jobs (8 unique plans)", || {
+        coord.run_batch(cold_jobs)
+    });
+    results.extend(once("serve 192 warm plan jobs", || coord.run_batch(warm_jobs)));
     assert_eq!(results.len(), 200);
     let stats = coord.stats();
     println!(
-        "cache: {} hits / {} misses / {} evictions ({:.0}% hit rate); failed {}",
+        "cache: {} hits / {} misses / {} evictions ({:.0}% hit rate); \
+         {} coalesced / {} rejected / queue peak {}; failed {}",
         stats.cache_hits,
         stats.cache_misses,
         stats.cache_evictions,
         100.0 * stats.cache_hit_rate,
+        stats.coalesced_plans,
+        stats.rejected_jobs,
+        stats.queue_depth_peak,
         stats.jobs_failed
     );
     println!(
@@ -69,14 +115,82 @@ fn main() -> anyhow::Result<()> {
         warm.len(),
         stats.plan_p50_ms
     );
-    // Acceptance: a warm (cache-hit) plan is >= 5x faster than cold.
-    assert!(
-        cold_med >= warm_med * 5.0,
-        "warm plans not >=5x faster: cold {cold_med:.6}s warm {warm_med:.6}s"
+    if smoke {
+        println!(
+            "speedup warm vs cold: {:.0}x (smoke mode: informational)",
+            cold_med / warm_med.max(1e-12)
+        );
+    } else {
+        // Acceptance: a warm (cache-hit) plan is >= 5x faster than cold.
+        assert!(
+            cold_med >= warm_med * 5.0,
+            "warm plans not >=5x faster: cold {cold_med:.6}s warm {warm_med:.6}s"
+        );
+        println!(
+            "speedup warm vs cold: {:.0}x (acceptance floor: 5x)",
+            cold_med / warm_med.max(1e-12)
+        );
+    }
+
+    // ---- burst coalescing: K identical cold jobs, 4 planners ------------
+    println!("\n== bench: single-flight burst coalescing (4 planners) ==");
+    let burst_shape = Gemm::new(640, 1536, 640); // not planned above: cold
+    let k = 48u64;
+    let before = coord.stats();
+    let burst: Vec<GemmJob> = (1000..1000 + k)
+        .map(|i| GemmJob::plan_only(i, burst_shape, Objective::Throughput))
+        .collect();
+    let started = std::time::Instant::now();
+    let burst_results = coord.run_batch(burst);
+    let burst_wall = started.elapsed().as_secs_f64();
+    assert_eq!(burst_results.len(), k as usize);
+    let after = coord.stats();
+    let (misses, coalesced, hits) = (
+        after.cache_misses - before.cache_misses,
+        after.coalesced_plans - before.coalesced_plans,
+        after.cache_hits - before.cache_hits,
     );
+    // The leader is the only non-coalesced, non-hit result: its
+    // plan_time is the burst's one cold DSE. (Coalesced waiters' wait
+    // time tracks the burst wall-clock by construction, so they must be
+    // excluded for the wall-vs-leader assertion to mean anything.)
+    let lead_s = burst_results
+        .iter()
+        .filter(|r| !r.cache_hit && !r.coalesced)
+        .map(|r| r.plan_time.as_secs_f64())
+        .fold(0.0, f64::max);
+    let tilings: std::collections::HashSet<_> = burst_results
+        .iter()
+        .map(|r| {
+            let p = r.plan.expect("burst job failed");
+            (p.tiling.p_m, p.tiling.p_n, p.tiling.p_k, p.tiling.b_m, p.tiling.b_n, p.tiling.b_k)
+        })
+        .collect();
     println!(
-        "speedup warm vs cold: {:.0}x (acceptance floor: 5x)",
-        cold_med / warm_med.max(1e-12)
+        "{k}-way identical burst: {misses} cold DSE / {coalesced} coalesced / {hits} warm hits, \
+         {} distinct tilings; wall {:.2} ms vs leader cold plan {:.2} ms",
+        tilings.len(),
+        burst_wall * 1e3,
+        lead_s * 1e3
     );
+    if smoke {
+        println!(
+            "burst coalescing: report-only in smoke mode \
+             (full bench asserts 1 DSE + ~1 cold-plan wall-clock)"
+        );
+    } else {
+        // Acceptance: exactly ONE exploration served the whole burst
+        // (the seed ran min(K, n_planners) = 4), every job carries the
+        // identical tiling, and the burst's wall-clock is ~one cold
+        // plan, not several serialized/contending ones.
+        assert_eq!(misses, 1, "burst ran {misses} explorations, wanted 1");
+        assert_eq!(coalesced + hits, k - 1, "burst jobs leaked past the flight");
+        assert_eq!(tilings.len(), 1, "burst produced divergent plans");
+        assert!(
+            burst_wall <= lead_s * 2.0 + 0.05,
+            "burst wall {burst_wall:.3}s not ~1 cold plan ({lead_s:.3}s)"
+        );
+    }
+    coord.shutdown();
     Ok(())
 }

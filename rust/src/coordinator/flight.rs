@@ -1,0 +1,357 @@
+//! Single-flight plan coalescing and bounded admission — the
+//! coordinator's front door.
+//!
+//! Real GEMM streams are heavily repetitive (a model's layer working set
+//! is a handful of shapes), so the worst serving pathology is a burst of
+//! identical cold jobs: without coordination every planner that misses
+//! the cache for the same `(Gemm, Objective)` key redundantly runs the
+//! full streaming DSE — up to `min(K, n_planners)` explorations for a
+//! K-way burst that needs exactly one.
+//!
+//! [`FlightTable`] kills that herd with a per-key waiter queue claimed
+//! at *submit* time:
+//!
+//! * **claim** — the first job for an un-cached, un-claimed key claims
+//!   the flight and is handed to the planner pool; it will run the one
+//!   exploration (the "leader").
+//! * **park**  — every later job for a claimed key parks on the flight's
+//!   waiter queue instead of entering the planner channel. Parked jobs
+//!   consume no planner thread.
+//! * **publish / fail** — when the leader resolves (cache hit, cold plan,
+//!   or error), it removes the flight and completes every parked job
+//!   from that one resolution. Errors propagate to all waiters.
+//! * **release** — resolution always removes the flight, so a failed
+//!   exploration never poisons the key: the next submit claims afresh
+//!   and retries.
+//!
+//! Because the claim happens on the submitting thread before the job
+//! reaches any planner, a burst submitted back-to-back coalesces
+//! deterministically — the leader cannot publish before the remaining
+//! submits have parked unless the entire DSE outran a few channel sends.
+//!
+//! [`QueueGauge`] bounds admission: the seed's unbounded `mpsc` channel
+//! admitted unlimited queued jobs (operand buffers included). The gauge
+//! counts jobs that are admitted but not yet finalized — planner-queued,
+//! parked on a flight, or queued for execution with their operands —
+//! against `max_queue_depth`, either blocking the submitter
+//! ([`Admission::Block`]) or refusing the job with a `JobResult::error`
+//! ([`Admission::Reject`]).
+
+use std::collections::HashMap;
+use std::sync::{Condvar, Mutex, MutexGuard};
+use std::time::Instant;
+
+use crate::coordinator::cache::PlanKey;
+use crate::coordinator::GemmJob;
+use crate::util::lock_unpoisoned;
+
+/// What `submit` does when the queue is at `max_queue_depth`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admission {
+    /// Block the submitting thread until a planner drains the queue.
+    Block,
+    /// Refuse the job immediately; it surfaces as a `JobResult::error`
+    /// and counts in `CoordinatorStats::rejected_jobs`.
+    Reject,
+}
+
+impl Admission {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Admission::Block => "block",
+            Admission::Reject => "reject",
+        }
+    }
+
+    pub fn parse(text: &str) -> anyhow::Result<Admission> {
+        match text {
+            "block" => Ok(Admission::Block),
+            "reject" => Ok(Admission::Reject),
+            other => anyhow::bail!("unknown admission policy `{other}` (block|reject)"),
+        }
+    }
+}
+
+/// A job parked on an in-flight plan, stamped so its eventual
+/// `JobResult::plan_time` reports the latency it actually experienced.
+#[derive(Debug)]
+pub struct ParkedJob {
+    pub job: GemmJob,
+    pub since: Instant,
+}
+
+/// Outcome of [`FlightTable::claim_or_park`].
+#[derive(Debug)]
+pub enum ClaimOutcome {
+    /// No flight existed: the caller now owns the claim and must send the
+    /// job to a planner (and guarantee an eventual [`FlightTable::resolve`]).
+    Claimed(GemmJob),
+    /// An identical plan is already in flight; the job was parked on it.
+    Parked,
+}
+
+/// Per-key single-flight registry. A key is "in flight" from the moment
+/// a job claims it until the planner that dequeues that job resolves it;
+/// the entry's vector holds every job parked on the flight meanwhile.
+#[derive(Debug, Default)]
+pub struct FlightTable {
+    slots: Mutex<HashMap<PlanKey, Vec<ParkedJob>>>,
+}
+
+impl FlightTable {
+    pub fn new() -> FlightTable {
+        FlightTable::default()
+    }
+
+    /// Claim the key for `job`, or park `job` on the existing flight.
+    pub fn claim_or_park(&self, key: PlanKey, job: GemmJob) -> ClaimOutcome {
+        let mut slots = lock_unpoisoned(&self.slots);
+        match slots.entry(key) {
+            std::collections::hash_map::Entry::Occupied(mut e) => {
+                e.get_mut().push(ParkedJob {
+                    job,
+                    since: Instant::now(),
+                });
+                ClaimOutcome::Parked
+            }
+            std::collections::hash_map::Entry::Vacant(v) => {
+                v.insert(Vec::new());
+                ClaimOutcome::Claimed(job)
+            }
+        }
+    }
+
+    /// Remove the key's flight, returning every job parked on it. Called
+    /// exactly once per claim — by the planner after it resolves the plan
+    /// (publish or fail), or by `submit` when the planner pool is gone.
+    pub fn resolve(&self, key: &PlanKey) -> Vec<ParkedJob> {
+        lock_unpoisoned(&self.slots).remove(key).unwrap_or_default()
+    }
+
+    /// Tear down every flight (shutdown backstop for waiters stranded by
+    /// a dead planner). Normal shutdown resolves all flights through the
+    /// planners; this returns whatever is left.
+    pub fn drain_all(&self) -> Vec<ParkedJob> {
+        let mut slots = lock_unpoisoned(&self.slots);
+        slots.drain().flat_map(|(_, parked)| parked).collect()
+    }
+
+    /// Number of keys currently in flight.
+    pub fn in_flight(&self) -> usize {
+        lock_unpoisoned(&self.slots).len()
+    }
+
+    /// Number of jobs parked across all flights.
+    pub fn parked(&self) -> usize {
+        lock_unpoisoned(&self.slots).values().map(Vec::len).sum()
+    }
+}
+
+#[derive(Debug, Default)]
+struct GaugeState {
+    depth: usize,
+    peak: u64,
+}
+
+/// Bounded admission gauge: tracks jobs admitted but not yet finalized
+/// (planner-queued, parked on a flight, or awaiting execution).
+#[derive(Debug)]
+pub struct QueueGauge {
+    state: Mutex<GaugeState>,
+    drained: Condvar,
+    limit: usize,
+    policy: Admission,
+}
+
+impl QueueGauge {
+    pub fn new(max_queue_depth: usize, policy: Admission) -> QueueGauge {
+        QueueGauge {
+            state: Mutex::new(GaugeState::default()),
+            drained: Condvar::new(),
+            limit: max_queue_depth.max(1),
+            policy,
+        }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, GaugeState> {
+        lock_unpoisoned(&self.state)
+    }
+
+    /// Try to admit one job. `Block` waits for the planners/executor to
+    /// finish admitted work (they always make progress: explorations are
+    /// finite and cancellable); `Reject` returns `false` when the queue
+    /// is full.
+    pub fn admit(&self) -> bool {
+        let mut g = self.lock();
+        while g.depth >= self.limit {
+            match self.policy {
+                Admission::Reject => return false,
+                Admission::Block => {
+                    g = self.drained.wait(g).unwrap_or_else(|e| e.into_inner());
+                }
+            }
+        }
+        g.depth += 1;
+        g.peak = g.peak.max(g.depth as u64);
+        true
+    }
+
+    /// Mark `n` admitted jobs as finished (result finalized, refused at
+    /// send, or torn down at shutdown), waking blocked submitters.
+    pub fn release(&self, n: usize) {
+        if n == 0 {
+            return;
+        }
+        let mut g = self.lock();
+        g.depth = g.depth.saturating_sub(n);
+        drop(g);
+        self.drained.notify_all();
+    }
+
+    pub fn depth(&self) -> usize {
+        self.lock().depth
+    }
+
+    /// High-water mark of the queue depth since start.
+    pub fn peak(&self) -> u64 {
+        self.lock().peak
+    }
+
+    pub fn limit(&self) -> usize {
+        self.limit
+    }
+
+    pub fn policy(&self) -> Admission {
+        self.policy
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::Objective;
+    use crate::workloads::Gemm;
+
+    fn job(id: u64, m: usize) -> GemmJob {
+        GemmJob::plan_only(id, Gemm::new(m, 64, 64), Objective::Throughput)
+    }
+
+    fn key_of(j: &GemmJob) -> PlanKey {
+        PlanKey::new(j.gemm, j.objective)
+    }
+
+    #[test]
+    fn first_claims_rest_park_until_resolved() {
+        let table = FlightTable::new();
+        let k = key_of(&job(0, 128));
+        match table.claim_or_park(k, job(0, 128)) {
+            ClaimOutcome::Claimed(j) => assert_eq!(j.id, 0),
+            ClaimOutcome::Parked => panic!("first job must claim"),
+        }
+        for id in 1..4 {
+            assert!(matches!(
+                table.claim_or_park(k, job(id, 128)),
+                ClaimOutcome::Parked
+            ));
+        }
+        assert_eq!((table.in_flight(), table.parked()), (1, 3));
+        let parked = table.resolve(&k);
+        assert_eq!(parked.len(), 3);
+        let ids: Vec<u64> = parked.iter().map(|p| p.job.id).collect();
+        assert_eq!(ids, vec![1, 2, 3]);
+        // Released: the next job claims afresh (failed plans don't poison).
+        assert!(matches!(
+            table.claim_or_park(k, job(9, 128)),
+            ClaimOutcome::Claimed(_)
+        ));
+        assert!(table.resolve(&k).is_empty());
+    }
+
+    #[test]
+    fn distinct_keys_fly_independently() {
+        let table = FlightTable::new();
+        let (a, b) = (job(0, 128), job(1, 256));
+        assert!(matches!(
+            table.claim_or_park(key_of(&a), a.clone()),
+            ClaimOutcome::Claimed(_)
+        ));
+        assert!(matches!(
+            table.claim_or_park(key_of(&b), b.clone()),
+            ClaimOutcome::Claimed(_)
+        ));
+        assert_eq!(table.in_flight(), 2);
+        assert_eq!(table.parked(), 0);
+        let leftovers = table.drain_all();
+        assert!(leftovers.is_empty());
+        assert_eq!(table.in_flight(), 0);
+    }
+
+    #[test]
+    fn drain_all_returns_stranded_waiters() {
+        let table = FlightTable::new();
+        let k = key_of(&job(0, 128));
+        let _ = table.claim_or_park(k, job(0, 128));
+        let _ = table.claim_or_park(k, job(1, 128));
+        let _ = table.claim_or_park(k, job(2, 128));
+        let stranded = table.drain_all();
+        assert_eq!(stranded.len(), 2);
+        assert_eq!(table.in_flight(), 0);
+    }
+
+    #[test]
+    fn reject_gauge_refuses_at_capacity_and_recovers() {
+        let gauge = QueueGauge::new(2, Admission::Reject);
+        assert!(gauge.admit());
+        assert!(gauge.admit());
+        assert!(!gauge.admit(), "admitted past the depth limit");
+        assert_eq!(gauge.depth(), 2);
+        assert_eq!(gauge.peak(), 2);
+        gauge.release(1);
+        assert!(gauge.admit());
+        assert_eq!(gauge.peak(), 2);
+        // Zero-clamped limit still admits one at a time.
+        let tiny = QueueGauge::new(0, Admission::Reject);
+        assert_eq!(tiny.limit(), 1);
+        assert!(tiny.admit());
+        assert!(!tiny.admit());
+    }
+
+    #[test]
+    fn block_gauge_waits_for_release() {
+        use std::sync::Arc;
+        let gauge = Arc::new(QueueGauge::new(1, Admission::Block));
+        assert!(gauge.admit());
+        let waiter = {
+            let gauge = Arc::clone(&gauge);
+            std::thread::spawn(move || gauge.admit())
+        };
+        // The waiter is blocked on a full queue; draining unblocks it.
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert!(!waiter.is_finished(), "blocked submitter returned early");
+        gauge.release(1);
+        assert!(waiter.join().unwrap());
+        assert_eq!(gauge.depth(), 1);
+    }
+
+    #[test]
+    fn release_saturates_and_peak_is_sticky() {
+        let gauge = QueueGauge::new(4, Admission::Reject);
+        gauge.release(3); // spurious release: no underflow
+        assert_eq!(gauge.depth(), 0);
+        for _ in 0..3 {
+            assert!(gauge.admit());
+        }
+        gauge.release(3);
+        assert_eq!(gauge.depth(), 0);
+        assert_eq!(gauge.peak(), 3);
+    }
+
+    #[test]
+    fn admission_parse_roundtrip() {
+        assert_eq!(Admission::parse("block").unwrap(), Admission::Block);
+        assert_eq!(Admission::parse("reject").unwrap(), Admission::Reject);
+        assert!(Admission::parse("drop").is_err());
+        assert_eq!(Admission::Block.label(), "block");
+        assert_eq!(Admission::Reject.label(), "reject");
+    }
+}

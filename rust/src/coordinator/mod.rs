@@ -5,11 +5,17 @@
 //! §V-A). This module is that service:
 //!
 //! ```text
-//!   submit(GemmJob) ──► planner pool (streaming DSE)
-//!                         │   ▲
-//!                         ▼   │ per-(gemm, objective) plans
+//!   submit(GemmJob) ──► bounded admission (QueueGauge: Block | Reject)
+//!                         │ over-depth jobs block the caller or surface
+//!                         │ as JobResult::error (rejected_jobs)
+//!                         ▼
+//!                     single-flight table (per-(gemm, objective) key)
+//!                         │ first job claims ──► planner pool (streaming
+//!                         │ DSE); identical jobs park on the claim and
+//!                         │ complete from its one exploration
+//!                         ▼   ▲
 //!                     sharded LRU plan cache (N-way, persistable)
-//!                         │ plan-only jobs return here
+//!                         │ plan-only + coalesced jobs return here
 //!                         ▼
 //!                     executor thread (owns the PJRT GemmEngine)
 //!                         │ dynamic batching: drains the queue, groups
@@ -28,22 +34,34 @@
 //! coordinator warms from the previous process's plans
 //! ([`CoordinatorOptions::cache_path`], `serve --plan-cache`).
 //!
+//! A burst of K identical cold jobs runs exactly **one** DSE: the first
+//! claims the key in the [`flight`] table, the rest park on the claim
+//! (consuming no planner thread), and the leader publishes its plan — or
+//! its error — to every waiter when it resolves (see [`flight`] for the
+//! claim → park → publish/fail → release state machine). Admission is
+//! bounded by [`CoordinatorOptions::max_queue_depth`] with
+//! [`Admission::Block`] or [`Admission::Reject`] semantics.
+//!
 //! The executor is a single thread because PJRT handles are not
 //! `Send`-safe across arbitrary threads (it is created *inside* its
 //! thread). Python never appears. Serve-path failures (planner pool
-//! gone, DSE errors, missing artifacts) surface as `JobResult::error`,
-//! never as panics.
+//! gone, DSE errors, missing artifacts, admission rejections) surface as
+//! `JobResult::error`, never as panics.
 
 pub mod cache;
+pub mod flight;
 
 use std::collections::VecDeque;
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, SendError, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::config::Config;
 use crate::coordinator::cache::{PlanKey, ShardedPlanCache};
+pub use crate::coordinator::flight::Admission;
+use crate::coordinator::flight::{ClaimOutcome, FlightTable, ParkedJob, QueueGauge};
 use crate::dse::{DseEngine, Objective};
 use crate::models::Prediction;
 use crate::runtime::{matmul_ref, max_abs_diff, GemmEngine};
@@ -113,6 +131,9 @@ pub struct JobResult {
     pub plan: Option<Plan>,
     pub plan_time: Duration,
     pub cache_hit: bool,
+    /// True when this job parked on another job's in-flight exploration
+    /// and completed (plan or error) from that single run.
+    pub coalesced: bool,
     /// Wall-clock of the PJRT execution (None for plan-only jobs or when
     /// no artifact engine is available).
     pub exec_time: Option<Duration>,
@@ -127,15 +148,50 @@ impl JobResult {
         self.exec_time
             .map(|t| self.gemm.flops() / t.as_secs_f64() / 1e9)
     }
+
+    /// A result for a job that never produced a plan (refused at submit,
+    /// lost by a dying pipeline, stranded at shutdown).
+    fn errored(id: u64, gemm: Gemm, objective: Objective, why: &str) -> JobResult {
+        JobResult {
+            id,
+            gemm,
+            objective,
+            plan: None,
+            plan_time: Duration::default(),
+            cache_hit: false,
+            coalesced: false,
+            exec_time: None,
+            validation_err: None,
+            c: None,
+            error: Some(why.to_string()),
+        }
+    }
 }
 
 /// Aggregate service counters.
+///
+/// `jobs_completed` and `jobs_failed` are bumped at *result
+/// finalization* (when a job's `JobResult` is sealed — after execution
+/// for data jobs), so the two counters partition finished jobs. Every
+/// planned job lands in exactly one of `cache_hits` (served from the
+/// cache, directly or flushed from a flight that resolved warm),
+/// `cache_misses` (an actual DSE exploration was started for it), or
+/// `coalesced_plans` (parked on another job's in-flight exploration and
+/// completed — plan or error — from that single run).
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct CoordinatorStats {
     pub jobs_completed: u64,
     pub jobs_failed: u64,
     pub cache_hits: u64,
     pub cache_misses: u64,
+    /// Jobs that coalesced onto another job's in-flight exploration
+    /// instead of running their own DSE (single-flight wins).
+    pub coalesced_plans: u64,
+    /// Jobs refused at submit by `Admission::Reject` on a full queue.
+    pub rejected_jobs: u64,
+    /// High-water mark of admitted-but-unfinished jobs (planner-queued,
+    /// parked on a flight, or awaiting execution).
+    pub queue_depth_peak: u64,
     /// Plans dropped by per-shard LRU eviction.
     pub cache_evictions: u64,
     /// `cache_hits / (cache_hits + cache_misses)`, 0.0 before traffic.
@@ -180,6 +236,12 @@ pub struct CoordinatorOptions {
     /// When set: warm the cache from this JSON file at start (if present)
     /// and persist back on shutdown.
     pub cache_path: Option<PathBuf>,
+    /// Maximum jobs admitted but not yet finalized: planner-queued,
+    /// parked on an in-flight plan, or queued for execution (operand
+    /// buffers included). Clamped to >= 1.
+    pub max_queue_depth: usize,
+    /// What `submit` does when the queue is at `max_queue_depth`.
+    pub admission: Admission,
 }
 
 impl Default for CoordinatorOptions {
@@ -188,6 +250,8 @@ impl Default for CoordinatorOptions {
             n_shards: 8,
             cache_capacity: 1024,
             cache_path: None,
+            max_queue_depth: 1024,
+            admission: Admission::Block,
         }
     }
 }
@@ -241,9 +305,17 @@ pub struct Coordinator {
     /// bundle's forest compile/throughput counters from here.
     dse: Arc<DseEngine>,
     plan_lat: Arc<Mutex<PlanLatencies>>,
+    /// Single-flight registry: one exploration per key, waiters parked.
+    flight: Arc<FlightTable>,
+    /// Bounded admission gauge (`max_queue_depth`, Block | Reject).
+    gauge: Arc<QueueGauge>,
+    /// Raised at shutdown: planners skip/abort explorations so queued
+    /// jobs and parked waiters drain promptly instead of deadlocking.
+    cancel: Arc<AtomicBool>,
     cache_path: Option<PathBuf>,
-    /// Jobs rejected at submit time (pool gone / already shut down);
-    /// drained ahead of channel results so every submit yields a result.
+    /// Jobs refused at submit time (pool gone / shut down / admission
+    /// reject); drained ahead of channel results so every submit yields
+    /// a result.
     rejected: VecDeque<JobResult>,
     pending: u64,
 }
@@ -298,17 +370,26 @@ impl Coordinator {
             _ => ShardedPlanCache::new(options.n_shards, options.cache_capacity),
         });
 
+        let flight = Arc::new(FlightTable::new());
+        let gauge = Arc::new(QueueGauge::new(options.max_queue_depth, options.admission));
+        let cancel = Arc::new(AtomicBool::new(false));
+
         // --- planner pool -------------------------------------------------
         let mut planners = Vec::new();
         for _ in 0..n_planners.max(1) {
             let job_rx = Arc::clone(&job_rx);
             let exec_tx = exec_tx.clone();
             let result_tx = result_tx.clone();
-            let dse = Arc::clone(&dse);
-            let sim = Arc::clone(&sim);
-            let cache = Arc::clone(&cache);
-            let stats = Arc::clone(&stats);
-            let plan_lat = Arc::clone(&plan_lat);
+            let ctx = PlannerCtx {
+                dse: Arc::clone(&dse),
+                sim: Arc::clone(&sim),
+                cache: Arc::clone(&cache),
+                stats: Arc::clone(&stats),
+                plan_lat: Arc::clone(&plan_lat),
+                flight: Arc::clone(&flight),
+                gauge: Arc::clone(&gauge),
+                cancel: Arc::clone(&cancel),
+            };
             planners.push(std::thread::spawn(move || loop {
                 let job = {
                     let guard = lock_unpoisoned(&job_rx);
@@ -318,12 +399,28 @@ impl Coordinator {
                     Ok(j) => j,
                     Err(_) => break, // all senders dropped: shutdown
                 };
-                let planned = plan_job(&dse, &sim, &cache, &stats, &plan_lat, job);
-                let has_data = planned.job.a.is_some() && planned.job.b.is_some();
-                if has_data && planned.result.error.is_none() {
-                    let _ = exec_tx.send(ExecMsg::Job(Box::new(planned)));
-                } else {
-                    let _ = result_tx.send(planned.result);
+                // One resolution serves the dequeued job AND every job
+                // parked on its flight (coalesced plans / errors). Each
+                // job's admission slot is held until its result is
+                // finalized — here for plan-only/failed jobs, in the
+                // executor for data jobs — so `max_queue_depth` bounds
+                // queued operand buffers too, not just unplanned jobs.
+                for planned in plan_and_flush(&ctx, job) {
+                    let has_data = planned.job.a.is_some() && planned.job.b.is_some();
+                    if has_data && planned.result.error.is_none() {
+                        if let Err(SendError(ExecMsg::Job(mut planned))) =
+                            exec_tx.send(ExecMsg::Job(Box::new(planned)))
+                        {
+                            planned.result.error = Some("executor unavailable".to_string());
+                            finalize_result(&ctx.stats, &planned.result);
+                            ctx.gauge.release(1);
+                            let _ = result_tx.send(planned.result);
+                        }
+                    } else {
+                        finalize_result(&ctx.stats, &planned.result);
+                        ctx.gauge.release(1);
+                        let _ = result_tx.send(planned.result);
+                    }
                 }
             }));
         }
@@ -331,6 +428,7 @@ impl Coordinator {
 
         // --- executor thread ----------------------------------------------
         let exec_stats = Arc::clone(&stats);
+        let exec_gauge = Arc::clone(&gauge);
         let board = cfg.board.clone();
         let executor = std::thread::spawn(move || {
             let reconfig = ReconfigModel::default();
@@ -388,6 +486,8 @@ impl Coordinator {
                         }
                     }
                     execute_job(engine.as_ref(), &exec_stats, &mut planned);
+                    finalize_result(&exec_stats, &planned.result);
+                    exec_gauge.release(1); // execution done: free the admission slot
                     let _ = result_tx.send(planned.result);
                 }
             }
@@ -402,39 +502,65 @@ impl Coordinator {
             cache,
             dse,
             plan_lat,
+            flight,
+            gauge,
+            cancel,
             cache_path: options.cache_path,
             rejected: VecDeque::new(),
             pending: 0,
         }
     }
 
-    /// Enqueue a job. Never panics: if the coordinator is shut down or
-    /// the planner pool is gone, a `JobResult` carrying the error is
-    /// queued instead (surfaced by `next_result`/`run_batch`).
+    /// Enqueue a job. Never panics: if the coordinator is shut down, the
+    /// planner pool is gone, or `Admission::Reject` refuses a full
+    /// queue, a `JobResult` carrying the error is queued instead
+    /// (surfaced by `next_result`/`run_batch`). With `Admission::Block`
+    /// this call waits for planners to drain a full queue.
+    ///
+    /// A job whose `(gemm, objective)` plan is already in flight parks
+    /// on that flight — it consumes an admission slot but no planner
+    /// thread, and completes from the single shared exploration.
     pub fn submit(&mut self, job: GemmJob) {
         self.pending += 1;
-        let refused = match &self.job_tx {
-            Some(tx) => match tx.send(job) {
-                Ok(()) => None,
-                Err(SendError(job)) => Some((job, "planner pool unavailable")),
-            },
-            None => Some((job, "coordinator already shut down")),
+        let Some(tx) = self.job_tx.clone() else {
+            self.refuse(job, "coordinator already shut down");
+            return;
         };
-        if let Some((job, why)) = refused {
-            lock_unpoisoned(&self.stats).jobs_failed += 1;
-            self.rejected.push_back(JobResult {
-                id: job.id,
-                gemm: job.gemm,
-                objective: job.objective,
-                plan: None,
-                plan_time: Duration::default(),
-                cache_hit: false,
-                exec_time: None,
-                validation_err: None,
-                c: None,
-                error: Some(why.to_string()),
-            });
+        if !self.gauge.admit() {
+            lock_unpoisoned(&self.stats).rejected_jobs += 1;
+            self.refuse(
+                job,
+                &format!(
+                    "admission queue full ({} jobs, policy=reject)",
+                    self.gauge.limit()
+                ),
+            );
+            return;
         }
+        let key = PlanKey::new(job.gemm, job.objective);
+        match self.flight.claim_or_park(key, job) {
+            ClaimOutcome::Parked => {}
+            ClaimOutcome::Claimed(job) => {
+                if let Err(SendError(job)) = tx.send(job) {
+                    // Planner pool gone: release the claim and refuse the
+                    // job plus anything that parked on it meanwhile.
+                    let parked = self.flight.resolve(&key);
+                    self.gauge.release(1 + parked.len());
+                    self.refuse(job, "planner pool unavailable");
+                    for pj in parked {
+                        self.refuse(pj.job, "planner pool unavailable");
+                    }
+                }
+            }
+        }
+    }
+
+    /// Queue an error result for a job that never reached a planner.
+    /// `pending` was already incremented by the job's own `submit`.
+    fn refuse(&mut self, job: GemmJob, why: &str) {
+        let r = JobResult::errored(job.id, job.gemm, job.objective, why);
+        finalize_result(&self.stats, &r);
+        self.rejected.push_back(r);
     }
 
     /// Wait for the next completed job.
@@ -456,16 +582,44 @@ impl Coordinator {
     }
 
     /// Submit a batch and wait for all results (ordered by job id).
+    /// Always returns exactly `jobs.len()` results: if the pipeline dies
+    /// mid-batch (result channel closed), the missing jobs are
+    /// synthesized as error results instead of being silently dropped.
     pub fn run_batch(&mut self, jobs: Vec<GemmJob>) -> Vec<JobResult> {
-        let n = jobs.len();
+        let submitted: Vec<(u64, Gemm, Objective)> =
+            jobs.iter().map(|j| (j.id, j.gemm, j.objective)).collect();
         for j in jobs {
             self.submit(j);
         }
-        let mut out = Vec::with_capacity(n);
-        for _ in 0..n {
+        let mut out = Vec::with_capacity(submitted.len());
+        for _ in 0..submitted.len() {
             match self.next_result() {
                 Some(r) => out.push(r),
                 None => break,
+            }
+        }
+        if out.len() < submitted.len() {
+            // Multiset diff (ids may repeat in adversarial batches).
+            let mut returned: std::collections::HashMap<u64, usize> =
+                std::collections::HashMap::new();
+            for r in &out {
+                *returned.entry(r.id).or_insert(0) += 1;
+            }
+            for (id, gemm, objective) in submitted {
+                match returned.get_mut(&id) {
+                    Some(n) if *n > 0 => *n -= 1,
+                    _ => {
+                        self.pending = self.pending.saturating_sub(1);
+                        let r = JobResult::errored(
+                            id,
+                            gemm,
+                            objective,
+                            "result lost: coordinator pipeline closed mid-batch",
+                        );
+                        finalize_result(&self.stats, &r);
+                        out.push(r);
+                    }
+                }
             }
         }
         out.sort_by_key(|r| r.id);
@@ -483,10 +637,16 @@ impl Coordinator {
             0.0
         };
         s.plan_p50_ms = lock_unpoisoned(&self.plan_lat).p50_ms();
+        s.queue_depth_peak = self.gauge.peak();
         let fm = self.dse.predictors.forest_metrics();
         s.forest_compile_ms = fm.compile_ms;
         s.predict_rows_per_s = fm.rows_per_s();
         s
+    }
+
+    /// Direct view of the single-flight table (tests, diagnostics).
+    pub fn flight_table(&self) -> &FlightTable {
+        &self.flight
     }
 
     /// Direct view of the plan cache (tests, benches, diagnostics).
@@ -494,9 +654,15 @@ impl Coordinator {
         &self.cache
     }
 
-    /// Graceful shutdown: waits for in-flight work, then persists the
-    /// plan cache when a path was configured.
+    /// Shutdown: drains the pipeline promptly, then persists the plan
+    /// cache when a path was configured. The cancellation flag makes
+    /// in-flight explorations abort (their jobs — and every waiter
+    /// parked on them — surface a "shutting down" error rather than
+    /// deadlocking), so callers wanting all plans must drain results
+    /// *before* shutting down; every submitted job still yields exactly
+    /// one result afterwards.
     pub fn shutdown(&mut self) {
+        self.cancel.store(true, Ordering::SeqCst);
         if let Some(tx) = self.job_tx.take() {
             drop(tx);
         }
@@ -505,6 +671,13 @@ impl Coordinator {
         }
         if let Some(h) = self.executor.take() {
             let _ = h.join();
+        }
+        // Backstop: planners resolve every flight on their way out, so
+        // leftovers only exist if a planner died mid-job. Refuse them so
+        // no submitter is left waiting on a result that will never come.
+        for pj in self.flight.drain_all() {
+            self.gauge.release(1);
+            self.refuse(pj.job, "coordinator shut down while plan was in flight");
         }
         if let Some(path) = self.cache_path.take() {
             match self.cache.save(&path) {
@@ -525,74 +698,140 @@ impl Drop for Coordinator {
     }
 }
 
-fn plan_job(
-    dse: &DseEngine,
-    sim: &VersalSim,
-    cache: &ShardedPlanCache,
-    stats: &Mutex<CoordinatorStats>,
-    plan_lat: &Mutex<PlanLatencies>,
-    job: GemmJob,
-) -> PlannedJob {
+/// Shared planner-thread state (one clone per planner).
+struct PlannerCtx {
+    dse: Arc<DseEngine>,
+    sim: Arc<VersalSim>,
+    cache: Arc<ShardedPlanCache>,
+    stats: Arc<Mutex<CoordinatorStats>>,
+    plan_lat: Arc<Mutex<PlanLatencies>>,
+    flight: Arc<FlightTable>,
+    gauge: Arc<QueueGauge>,
+    cancel: Arc<AtomicBool>,
+}
+
+/// How a key resolved: from the cache, from a fresh exploration, or not
+/// at all. One outcome completes the leader job and every parked waiter.
+enum PlanOutcome {
+    Hit(Plan),
+    Cold(Plan),
+    Failed(String),
+}
+
+impl PlanOutcome {
+    fn to_result(&self, job: &GemmJob, plan_time: Duration, coalesced: bool) -> JobResult {
+        let (plan, cache_hit, error) = match self {
+            PlanOutcome::Hit(p) => (Some(*p), true, None),
+            PlanOutcome::Cold(p) => (Some(*p), false, None),
+            PlanOutcome::Failed(e) => (None, false, Some(e.clone())),
+        };
+        JobResult {
+            id: job.id,
+            gemm: job.gemm,
+            objective: job.objective,
+            plan,
+            plan_time,
+            cache_hit,
+            coalesced,
+            exec_time: None,
+            validation_err: None,
+            c: None,
+            error,
+        }
+    }
+}
+
+/// Result finalization: completed/failed accounting happens exactly once
+/// per job, when its result is sealed — plan-only and refused jobs at
+/// result emission, data jobs after execution — so the two counters
+/// partition finished jobs (a data job that plans fine but fails
+/// execution counts as failed, not completed).
+fn finalize_result(stats: &Mutex<CoordinatorStats>, r: &JobResult) {
+    let mut s = lock_unpoisoned(stats);
+    if r.error.is_some() {
+        s.jobs_failed += 1;
+    } else {
+        s.jobs_completed += 1;
+        if let Some(p) = r.plan {
+            s.simulated_energy_j += p.simulated.latency_s * p.simulated.power_w;
+        }
+    }
+}
+
+/// Resolve one dequeued job's plan and flush every waiter parked on its
+/// flight from that single resolution (single-flight publish/fail).
+fn plan_and_flush(ctx: &PlannerCtx, job: GemmJob) -> Vec<PlannedJob> {
     let started = Instant::now();
     let key = PlanKey::new(job.gemm, job.objective);
-    let cached = cache.get(&key);
-    let (plan, cache_hit, error) = match cached {
-        Some(p) => (Some(p), true, None),
-        None => match dse.explore(&job.gemm) {
-            Err(e) => (None, false, Some(e.to_string())),
-            Ok(r) => {
-                // Walk the ranked list until a design actually builds
-                // (absorbs resource-model error, like re-running codegen).
-                let built = r.ranked(job.objective).into_iter().take(64).find_map(|c| {
-                    sim.evaluate(&job.gemm, &c.tiling, BufferPlacement::UramFirst)
-                        .ok()
-                        .map(|m| Plan {
-                            tiling: c.tiling,
-                            predicted: c.prediction,
-                            simulated: m,
-                        })
-                });
-                match built {
-                    None => (None, false, Some("no buildable design".to_string())),
-                    Some(plan) => {
-                        cache.insert(key, plan);
-                        (Some(plan), false, None)
+    let outcome = match ctx.cache.get(&key) {
+        Some(p) => PlanOutcome::Hit(p),
+        None if ctx.cancel.load(Ordering::SeqCst) => {
+            PlanOutcome::Failed("coordinator shutting down".to_string())
+        }
+        None => {
+            lock_unpoisoned(&ctx.stats).cache_misses += 1;
+            match ctx.dse.explore_with_cancel(&job.gemm, &ctx.cancel) {
+                Err(e) => PlanOutcome::Failed(e.to_string()),
+                Ok(r) => {
+                    // Walk the ranked list until a design actually builds
+                    // (absorbs resource-model error, like re-running
+                    // codegen).
+                    let built = r.ranked(job.objective).into_iter().take(64).find_map(|c| {
+                        ctx.sim
+                            .evaluate(&job.gemm, &c.tiling, BufferPlacement::UramFirst)
+                            .ok()
+                            .map(|m| Plan {
+                                tiling: c.tiling,
+                                predicted: c.prediction,
+                                simulated: m,
+                            })
+                    });
+                    match built {
+                        None => PlanOutcome::Failed("no buildable design".to_string()),
+                        Some(plan) => {
+                            ctx.cache.insert(key, plan);
+                            PlanOutcome::Cold(plan)
+                        }
                     }
                 }
             }
-        },
-    };
-    let plan_time = started.elapsed();
-    lock_unpoisoned(plan_lat).push(plan_time.as_secs_f64() * 1e3);
-    {
-        let mut s = lock_unpoisoned(stats);
-        if cache_hit {
-            s.cache_hits += 1;
-        } else {
-            s.cache_misses += 1;
         }
-        if error.is_some() {
-            s.jobs_failed += 1;
-        } else {
-            s.jobs_completed += 1;
-            if let Some(p) = plan {
-                s.simulated_energy_j += p.simulated.latency_s * p.simulated.power_w;
+    };
+    if matches!(outcome, PlanOutcome::Hit(_)) {
+        lock_unpoisoned(&ctx.stats).cache_hits += 1;
+    }
+    let plan_time = started.elapsed();
+    lock_unpoisoned(&ctx.plan_lat).push(plan_time.as_secs_f64() * 1e3);
+    let result = outcome.to_result(&job, plan_time, false);
+    let mut out = vec![PlannedJob { job, result }];
+
+    // Publish/fail: release the flight and complete every parked waiter
+    // from this one resolution. A warm resolution serves waiters as
+    // cache hits; a cold or failed one coalesces them (they shared the
+    // single exploration — and its error, if any).
+    let parked: Vec<ParkedJob> = ctx.flight.resolve(&key);
+    if !parked.is_empty() {
+        let warm = matches!(outcome, PlanOutcome::Hit(_));
+        {
+            let mut s = lock_unpoisoned(&ctx.stats);
+            if warm {
+                s.cache_hits += parked.len() as u64;
+            } else {
+                s.coalesced_plans += parked.len() as u64;
             }
         }
+        let mut lat = lock_unpoisoned(&ctx.plan_lat);
+        for pj in parked {
+            let waited = pj.since.elapsed();
+            lat.push(waited.as_secs_f64() * 1e3);
+            let result = outcome.to_result(&pj.job, waited, !warm);
+            out.push(PlannedJob {
+                job: pj.job,
+                result,
+            });
+        }
     }
-    let result = JobResult {
-        id: job.id,
-        gemm: job.gemm,
-        objective: job.objective,
-        plan,
-        plan_time,
-        cache_hit,
-        exec_time: None,
-        validation_err: None,
-        c: None,
-        error,
-    };
-    PlannedJob { job, result }
+    out
 }
 
 fn execute_job(engine: Option<&GemmEngine>, stats: &Mutex<CoordinatorStats>, planned: &mut PlannedJob) {
@@ -688,23 +927,174 @@ mod tests {
     }
 
     #[test]
-    fn dse_cache_hits_on_repeat_jobs() {
+    fn burst_of_identical_jobs_coalesces_to_one_dse() {
+        // The single-flight guarantee, deterministically: the first job
+        // of a back-to-back burst claims the key at submit time, so the
+        // other K-1 park on the claim before any planner can resolve it
+        // (a full DSE takes orders of magnitude longer than K channel
+        // sends). Exactly one exploration runs no matter how many
+        // planners are idle — the old behavior was min(K, n_planners)
+        // redundant cold plans.
         let cfg = quick_cfg();
-        let mut coord = coordinator(&cfg);
+        let mut coord = Coordinator::start(&cfg, dse_engine(&cfg), None, 4);
         let g = Gemm::new(512, 1024, 512);
-        let jobs: Vec<GemmJob> = (0..8)
+        let k = 12u64;
+        let jobs: Vec<GemmJob> = (0..k)
             .map(|i| GemmJob::plan_only(i, g, Objective::Throughput))
             .collect();
         let results = coord.run_batch(jobs);
-        assert_eq!(results.len(), 8);
+        assert_eq!(results.len(), k as usize);
+        // All K results carry the identical tiling from the one explore.
+        let t0 = results[0].plan.expect("plan").tiling;
+        for r in &results {
+            assert!(r.error.is_none(), "job {} failed: {:?}", r.id, r.error);
+            assert_eq!(r.plan.expect("plan").tiling, t0);
+        }
         let stats = coord.stats();
-        assert!(stats.cache_hits >= 6, "cache hits {}", stats.cache_hits);
-        assert!(stats.cache_misses >= 1);
-        assert!(stats.cache_hit_rate > 0.5, "hit rate {}", stats.cache_hit_rate);
+        assert_eq!(stats.cache_misses, 1, "burst ran more than one DSE");
+        assert_eq!(stats.coalesced_plans, k - 1);
+        assert_eq!(stats.cache_hits, 0);
+        assert_eq!(stats.jobs_completed, k);
         assert!(stats.plan_p50_ms >= 0.0);
-        // Cached plans are identical.
-        let t0 = results[0].plan.unwrap().tiling;
-        assert!(results.iter().all(|r| r.plan.unwrap().tiling == t0));
+        // A later identical job is a plain cache hit, not a coalesce.
+        let warm = coord.run_batch(vec![GemmJob::plan_only(99, g, Objective::Throughput)]);
+        assert!(warm[0].cache_hit);
+        let stats = coord.stats();
+        assert_eq!((stats.cache_hits, stats.cache_misses), (1, 1));
+    }
+
+    #[test]
+    fn explore_failure_wakes_all_waiters_and_releases_the_flight() {
+        let cfg = quick_cfg();
+        let mut eng = dse_engine(&cfg);
+        // Impossible resource margin: every candidate is filtered, so
+        // every exploration deterministically fails "no feasible design".
+        eng.resource_margin_pct = 1e9;
+        let mut coord = Coordinator::start(&cfg, eng, None, 4);
+        let g = Gemm::new(256, 512, 256);
+        let k = 6u64;
+        let results = coord.run_batch(
+            (0..k)
+                .map(|i| GemmJob::plan_only(i, g, Objective::Throughput))
+                .collect(),
+        );
+        assert_eq!(results.len(), k as usize);
+        // The leader's error propagated to every parked waiter.
+        for r in &results {
+            assert!(r.plan.is_none());
+            assert!(
+                r.error.as_deref().unwrap_or("").contains("no feasible design"),
+                "job {}: {:?}",
+                r.id,
+                r.error
+            );
+        }
+        let stats = coord.stats();
+        assert_eq!(stats.cache_misses, 1, "failed burst ran more than one DSE");
+        assert_eq!(stats.coalesced_plans, k - 1);
+        assert_eq!(stats.jobs_failed, k);
+        assert_eq!(stats.jobs_completed, 0);
+        // The flight was released, not poisoned: a later request retries
+        // with a fresh exploration.
+        let retry = coord.run_batch(vec![GemmJob::plan_only(99, g, Objective::Throughput)]);
+        assert!(retry[0].error.is_some());
+        assert_eq!(coord.stats().cache_misses, 2, "failed key did not retry");
+        assert_eq!(coord.flight_table().in_flight(), 0);
+    }
+
+    #[test]
+    fn reject_admission_surfaces_errors() {
+        let cfg = quick_cfg();
+        let opts = CoordinatorOptions {
+            max_queue_depth: 2,
+            admission: Admission::Reject,
+            ..CoordinatorOptions::default()
+        };
+        let mut coord = Coordinator::start_with(&cfg, dse_engine(&cfg), None, 1, opts);
+        let g = Gemm::new(512, 1024, 512);
+        let k = 16u64;
+        // One planner churning a cold DSE + depth 2: most of the burst
+        // must be refused, and every refusal still yields a result.
+        let results = coord.run_batch(
+            (0..k)
+                .map(|i| GemmJob::plan_only(i, g, Objective::Throughput))
+                .collect(),
+        );
+        assert_eq!(results.len(), k as usize);
+        let rejected: Vec<_> = results
+            .iter()
+            .filter(|r| r.error.as_deref().unwrap_or("").contains("admission queue full"))
+            .collect();
+        let stats = coord.stats();
+        assert_eq!(stats.rejected_jobs, rejected.len() as u64);
+        assert!(
+            stats.rejected_jobs >= k - 3,
+            "expected most of the burst rejected, got {}",
+            stats.rejected_jobs
+        );
+        assert!(stats.queue_depth_peak <= 2);
+        // Admitted jobs all completed with the identical plan.
+        let ok: Vec<_> = results.iter().filter(|r| r.error.is_none()).collect();
+        assert!(!ok.is_empty());
+        let t0 = ok[0].plan.expect("plan").tiling;
+        assert!(ok.iter().all(|r| r.plan.expect("plan").tiling == t0));
+        assert_eq!(stats.jobs_failed, stats.rejected_jobs);
+        assert_eq!(stats.jobs_completed, k - stats.rejected_jobs);
+    }
+
+    #[test]
+    fn block_admission_completes_everything_within_the_depth_bound() {
+        let cfg = quick_cfg();
+        let opts = CoordinatorOptions {
+            max_queue_depth: 2,
+            admission: Admission::Block,
+            ..CoordinatorOptions::default()
+        };
+        let mut coord = Coordinator::start_with(&cfg, dse_engine(&cfg), None, 1, opts);
+        let g = Gemm::new(512, 1024, 512);
+        let results = coord.run_batch(
+            (0..8u64)
+                .map(|i| GemmJob::plan_only(i, g, Objective::Throughput))
+                .collect(),
+        );
+        assert_eq!(results.len(), 8);
+        for r in &results {
+            assert!(r.error.is_none(), "job {} failed: {:?}", r.id, r.error);
+        }
+        let stats = coord.stats();
+        assert_eq!(stats.rejected_jobs, 0);
+        assert!(
+            stats.queue_depth_peak <= 2,
+            "blocking admission exceeded the bound: peak {}",
+            stats.queue_depth_peak
+        );
+        assert_eq!(stats.jobs_completed, 8);
+    }
+
+    #[test]
+    fn shutdown_with_parked_waiters_does_not_deadlock() {
+        let cfg = quick_cfg();
+        let mut coord = coordinator(&cfg);
+        let g = Gemm::new(512, 1024, 512);
+        let k = 6u64;
+        for i in 0..k {
+            coord.submit(GemmJob::plan_only(i, g, Objective::Throughput));
+        }
+        // Shut down while the leader is (likely) mid-exploration and the
+        // rest of the burst is parked on its flight. The cancellation
+        // hook aborts the explore; every waiter must still resolve —
+        // with the shared plan if the leader won the race, with a
+        // shutdown error otherwise. A deadlock here hangs the test.
+        coord.shutdown();
+        let mut n = 0;
+        while let Some(r) = coord.next_result() {
+            assert!(r.plan.is_some() || r.error.is_some());
+            n += 1;
+        }
+        assert_eq!(n, k, "lost jobs across shutdown");
+        assert_eq!(coord.flight_table().in_flight(), 0);
+        let stats = coord.stats();
+        assert_eq!(stats.jobs_completed + stats.jobs_failed, k);
     }
 
     #[test]
@@ -815,7 +1205,7 @@ mod tests {
         let opts = CoordinatorOptions {
             n_shards: 1,
             cache_capacity: 1,
-            cache_path: None,
+            ..CoordinatorOptions::default()
         };
         let mut coord = Coordinator::start_with(&cfg, dse_engine(&cfg), None, 2, opts);
         let shapes = [

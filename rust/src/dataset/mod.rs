@@ -85,11 +85,16 @@ impl Dataset {
                 continue;
             }
             // Rank by analytical throughput to pick best/worst/random.
+            // NaN-safe ranking: a degenerate analytical estimate must not
+            // panic dataset generation (the old `partial_cmp().unwrap()`)
+            // nor masquerade as a top design, so non-finite throughputs
+            // are dropped before the `total_cmp` sort.
             let mut ranked: Vec<(f64, Tiling)> = relaxed
                 .iter()
                 .filter_map(|t| analytical.throughput(&w.gemm, t).map(|thr| (thr, *t)))
+                .filter(|(thr, _)| thr.is_finite())
                 .collect();
-            ranked.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+            ranked.sort_by(|a, b| b.0.total_cmp(&a.0));
 
             let n = ranked.len();
             let top = cfg.dataset.top_k.min(n);

@@ -22,6 +22,7 @@
 
 pub mod compare;
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Mutex;
 
 use crate::metrics::{hypervolume_2d, pareto_front_max};
@@ -254,6 +255,7 @@ impl DseEngine {
         &self,
         g: &Gemm,
         shared: &Mutex<I>,
+        cancel: &AtomicBool,
     ) -> StreamAcc {
         let n_feat = self.predictors.feature_set.len();
         let mut acc = StreamAcc::default();
@@ -261,6 +263,12 @@ impl DseEngine {
         let mut rows: Vec<f64> = Vec::with_capacity(PREDICT_CHUNK * n_feat);
         let mut preds: Vec<Prediction> = Vec::with_capacity(PREDICT_CHUNK);
         loop {
+            // Cancellation hook (coordinator shutdown while plan waiters
+            // park on this exploration): stop pulling chunks; the partial
+            // result is discarded by `explore_with_cancel`.
+            if cancel.load(Ordering::Relaxed) {
+                break;
+            }
             batch.clear();
             {
                 let mut it = lock_unpoisoned(shared);
@@ -306,6 +314,16 @@ impl DseEngine {
     /// Run the full online phase for one workload, streaming the
     /// candidate space across up to 8 worker threads.
     pub fn explore(&self, g: &Gemm) -> anyhow::Result<DseResult> {
+        self.explore_with_cancel(g, &AtomicBool::new(false))
+    }
+
+    /// [`DseEngine::explore`] with a cooperative cancellation hook: when
+    /// `cancel` becomes true, workers stop pulling candidate chunks and
+    /// the exploration returns an error instead of a (partial) result.
+    /// The coordinator raises the flag at shutdown so an in-flight cold
+    /// plan — possibly with a queue of coalesced waiters parked on it —
+    /// aborts promptly instead of finishing a doomed sweep.
+    pub fn explore_with_cancel(&self, g: &Gemm, cancel: &AtomicBool) -> anyhow::Result<DseResult> {
         let start = std::time::Instant::now();
         let shared = Mutex::new(candidate_iter(g, self.micro, &self.limits));
         let n_threads = std::thread::available_parallelism()
@@ -315,7 +333,7 @@ impl DseEngine {
 
         let joined: Vec<std::thread::Result<StreamAcc>> = std::thread::scope(|scope| {
             let handles: Vec<_> = (0..n_threads)
-                .map(|_| scope.spawn(|| self.stream_worker(g, &shared)))
+                .map(|_| scope.spawn(|| self.stream_worker(g, &shared, cancel)))
                 .collect();
             // Join EVERY handle before leaving the scope: short-circuiting
             // on the first panicked worker would leave other panicked
@@ -329,6 +347,10 @@ impl DseEngine {
             .into_iter()
             .map(|r| r.map_err(|_| anyhow::anyhow!("dse worker panicked for {}", g.label())))
             .collect::<anyhow::Result<_>>()?;
+
+        if cancel.load(Ordering::Relaxed) {
+            anyhow::bail!("dse cancelled for {}", g.label());
+        }
 
         let mut n_candidates = 0usize;
         let mut feasible = Vec::new();
@@ -681,6 +703,21 @@ mod tests {
         assert!(epsilon_pareto(&dups, 0.05, 0).is_empty());
         let eps = epsilon_pareto(&[mk(1.0, 1.0, 2), mk(1.0, 1.0, 2)], 0.05, 10);
         assert_eq!(eps.len(), 1);
+    }
+
+    #[test]
+    fn cancelled_explore_errors_instead_of_returning_partial_result() {
+        let cfg = quick_cfg();
+        let eng = engine(&cfg);
+        let g = Gemm::new(512, 1024, 768);
+        // Pre-set flag: workers pull nothing, the call must surface the
+        // cancellation (not "no candidates", not a partial front).
+        let cancel = AtomicBool::new(true);
+        let err = eng.explore_with_cancel(&g, &cancel).unwrap_err();
+        assert!(err.to_string().contains("cancelled"), "got: {err}");
+        // The same engine still explores normally afterwards.
+        cancel.store(false, Ordering::Relaxed);
+        assert!(eng.explore_with_cancel(&g, &cancel).is_ok());
     }
 
     #[test]

@@ -15,10 +15,11 @@
 //!   chosen mappings through the AOT kernels, and a serving coordinator.
 //!
 //! See `DESIGN.md` (repo root) for the system inventory, the
-//! DSE→coordinator planning-path diagram (including the sharded plan
-//! cache), the compiled forest-inference engine (§3: the arena layout
-//! and row-blocked traversal behind `Predictors::predict_rows`), and
-//! the per-figure/table experiment index.
+//! DSE→coordinator planning-path diagram (bounded admission,
+//! single-flight plan coalescing, and the sharded plan cache), the
+//! compiled forest-inference engine (§3: the arena layout and
+//! row-blocked traversal behind `Predictors::predict_rows`), and the
+//! per-figure/table experiment index.
 
 pub mod analytical;
 pub mod coordinator;

@@ -12,7 +12,7 @@
 use std::path::PathBuf;
 
 use versal_gemm::config::Config;
-use versal_gemm::coordinator::{Coordinator, CoordinatorOptions, GemmJob};
+use versal_gemm::coordinator::{Admission, Coordinator, CoordinatorOptions, GemmJob};
 use versal_gemm::dataset::Dataset;
 use versal_gemm::dse::Objective;
 use versal_gemm::features::FeatureSet;
@@ -39,6 +39,8 @@ SUBCOMMANDS:
   serve     [--jobs N] [--artifacts artifacts] [--data-dir data]
             [--planners N] [--cache-shards N] [--cache-capacity N]
             [--plan-cache file.json]   persist/warm the plan cache across restarts
+            [--max-queue N]            bound on queued + coalesced-parked jobs
+            [--admission block|reject] full-queue policy (default: block)
   validate  [--artifacts artifacts]            PJRT runtime vs reference GEMM
   sweep     --model qwen|llama|deit [--seqs 32,64,..] per-layer mapping sweep
   info                                         board + workload summary
@@ -209,6 +211,11 @@ fn cmd_serve(args: &Args, cfg: Config, data_dir: PathBuf) -> anyhow::Result<()> 
         n_shards: args.opt_usize("cache-shards", defaults.n_shards)?,
         cache_capacity: args.opt_usize("cache-capacity", defaults.cache_capacity)?,
         cache_path: args.opt("plan-cache").map(PathBuf::from),
+        max_queue_depth: args.opt_usize("max-queue", defaults.max_queue_depth)?,
+        admission: match args.opt("admission") {
+            Some(text) => Admission::parse(text)?,
+            None => defaults.admission,
+        },
     };
     let lab = Lab::prepare(cfg.clone(), data_dir)?;
     let engine = lab.engine();
@@ -255,6 +262,7 @@ fn cmd_serve(args: &Args, cfg: Config, data_dir: PathBuf) -> anyhow::Result<()> 
     println!(
         "served {ok}/{} jobs in {:.2}s — exec throughput {:.2} GFLOP/s, \
          cache {} hits / {} misses / {} evictions ({:.0}% hit rate), \
+         {} coalesced plans / {} rejected jobs / queue peak {}, \
          p50 plan latency {:.3} ms, forest compile {:.1} ms / predict \
          {:.0} rows/s, simulated VCK190 energy {:.1} J",
         results.len(),
@@ -264,6 +272,9 @@ fn cmd_serve(args: &Args, cfg: Config, data_dir: PathBuf) -> anyhow::Result<()> 
         stats.cache_misses,
         stats.cache_evictions,
         100.0 * stats.cache_hit_rate,
+        stats.coalesced_plans,
+        stats.rejected_jobs,
+        stats.queue_depth_peak,
         stats.plan_p50_ms,
         stats.forest_compile_ms,
         stats.predict_rows_per_s,

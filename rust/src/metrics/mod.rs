@@ -75,12 +75,15 @@ pub fn mean(xs: &[f64]) -> f64 {
     xs.iter().sum::<f64>() / xs.len() as f64
 }
 
-/// Quantile with linear interpolation, `q ∈ [0,1]`.
+/// Quantile with linear interpolation, `q ∈ [0,1]`. NaN-safe: the sort
+/// uses `total_cmp` (NaNs order above +inf instead of panicking the
+/// comparator), so an adversarial sample cannot take down a caller —
+/// this feeds the serve path's `plan_p50_ms` readout.
 pub fn quantile(xs: &[f64], q: f64) -> f64 {
     assert!(!xs.is_empty());
     assert!((0.0..=1.0).contains(&q));
     let mut sorted = xs.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    sorted.sort_by(f64::total_cmp);
     let pos = q * (sorted.len() - 1) as f64;
     let lo = pos.floor() as usize;
     let hi = pos.ceil() as usize;
@@ -208,6 +211,23 @@ mod tests {
         assert_eq!(quantile(&xs, 1.0), 4.0);
         assert_eq!(median(&xs), 2.5);
         assert_eq!(median(&[1.0, 2.0, 9.0]), 2.0);
+    }
+
+    #[test]
+    fn quantile_and_median_survive_nan_input() {
+        // Regression: the old `partial_cmp().unwrap()` comparator
+        // panicked on any NaN sample, which could take down the serve
+        // path's p50 readout. `total_cmp` orders NaN above +inf, so
+        // finite quantiles of a partially-NaN sample stay meaningful.
+        let xs = [4.0, f64::NAN, 1.0, 3.0, 2.0];
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(median(&xs), 3.0);
+        assert_eq!(median(&[1.0, f64::NAN, 2.0]), 2.0);
+        assert_eq!(quantile(&[f64::NAN, 7.0], 0.0), 7.0);
+        // All-NaN input degrades to NaN, not a panic.
+        assert!(median(&[f64::NAN, f64::NAN]).is_nan());
+        // NaN lands in the top tail, so q = 1.0 reads it back.
+        assert!(quantile(&xs, 1.0).is_nan());
     }
 
     #[test]

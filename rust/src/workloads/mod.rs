@@ -133,7 +133,7 @@ pub fn eval_workloads() -> Vec<Workload> {
         Workload::new("llama_lm_head", "LLaMA-3-1B", 256, 128256, 2048),
         Workload::new("llama_long_mlp", "LLaMA-3-1B", 2048, 8192, 2048),
     ];
-    wl.sort_by(|a, b| a.gemm.flops().partial_cmp(&b.gemm.flops()).unwrap());
+    wl.sort_by(|a, b| a.gemm.flops().total_cmp(&b.gemm.flops()));
     for (i, w) in wl.iter_mut().enumerate() {
         w.id = format!("G{}", i + 1);
     }
