@@ -62,7 +62,7 @@ use crate::config::Config;
 use crate::coordinator::cache::{PlanKey, ShardedPlanCache};
 pub use crate::coordinator::flight::Admission;
 use crate::coordinator::flight::{ClaimOutcome, FlightTable, ParkedJob, QueueGauge};
-use crate::dse::{DseEngine, Objective};
+use crate::dse::{DseEngine, DsePool, Objective};
 use crate::models::Prediction;
 use crate::runtime::{matmul_ref, max_abs_diff, GemmEngine};
 use crate::tiling::Tiling;
@@ -214,6 +214,18 @@ pub struct CoordinatorStats {
     /// busy time; per-thread, not summed across concurrent planners) —
     /// the DSE hot-path health signal.
     pub predict_rows_per_s: f64,
+    /// Width of the process-wide DSE worker pool every exploration runs
+    /// on (0 until the pool spins up) — however many cold plans are in
+    /// flight, DSE work never occupies more threads than this.
+    pub dse_pool_threads: u64,
+    /// Candidate rows evaluated by this coordinator's cold explorations.
+    pub gate_rows_total: u64,
+    /// Of those, rows the stage-1 resource gate rejected — their
+    /// latency/power tree walks were skipped entirely.
+    pub gate_rows_skipped: u64,
+    /// `gate_rows_skipped / gate_rows_total` (0.0 before any cold plan):
+    /// the fraction of candidate rows that paid only 5/7 of the forest.
+    pub gate_skip_rate: f64,
 }
 
 impl CoordinatorStats {
@@ -242,6 +254,12 @@ pub struct CoordinatorOptions {
     pub max_queue_depth: usize,
     /// What `submit` does when the queue is at `max_queue_depth`.
     pub admission: Admission,
+    /// Size the process-wide DSE worker pool with this many threads
+    /// (`serve --dse-threads`). `None` keeps the default sizing
+    /// (`PALLAS_DSE_THREADS`, else `available_parallelism`). The pool
+    /// is global and sized exactly once: if something already spun it
+    /// up at a different width, the existing pool wins (logged).
+    pub dse_threads: Option<usize>,
 }
 
 impl Default for CoordinatorOptions {
@@ -252,6 +270,7 @@ impl Default for CoordinatorOptions {
             cache_path: None,
             max_queue_depth: 1024,
             admission: Admission::Block,
+            dse_threads: None,
         }
     }
 }
@@ -341,6 +360,26 @@ impl Coordinator {
         n_planners: usize,
         options: CoordinatorOptions,
     ) -> Coordinator {
+        // The DSE worker pool is process-wide and sized exactly once;
+        // apply the configured width (or spin the pool up at its default
+        // sizing) now so the first cold burst lands on a running pool
+        // and `stats()` reports the width serving traffic shares.
+        let pool = match options.dse_threads {
+            Some(n) => DsePool::configure_global(n),
+            None => DsePool::global(),
+        };
+        if let Some(n) = options.dse_threads {
+            let requested = DsePool::clamp_width(n);
+            if pool.n_threads() != requested {
+                eprintln!(
+                    "coordinator: dse pool already running with {} threads; --dse-threads {n} ignored",
+                    pool.n_threads()
+                );
+            } else if requested != n {
+                eprintln!("coordinator: --dse-threads {n} clamped to {requested}");
+            }
+        }
+
         let (job_tx, job_rx) = channel::<GemmJob>();
         let (exec_tx, exec_rx) = channel::<ExecMsg>();
         let (result_tx, result_rx) = channel::<JobResult>();
@@ -641,6 +680,12 @@ impl Coordinator {
         let fm = self.dse.predictors.forest_metrics();
         s.forest_compile_ms = fm.compile_ms;
         s.predict_rows_per_s = fm.rows_per_s();
+        s.dse_pool_threads = self.dse.pool_threads() as u64;
+        s.gate_skip_rate = if s.gate_rows_total > 0 {
+            s.gate_rows_skipped as f64 / s.gate_rows_total as f64
+        } else {
+            0.0
+        };
         s
     }
 
@@ -773,10 +818,18 @@ fn plan_and_flush(ctx: &PlannerCtx, job: GemmJob) -> Vec<PlannedJob> {
             match ctx.dse.explore_with_cancel(&job.gemm, &ctx.cancel) {
                 Err(e) => PlanOutcome::Failed(e.to_string()),
                 Ok(r) => {
+                    // Gate accounting: how much stage-2 forest work the
+                    // resource gate skipped for this cold exploration.
+                    {
+                        let mut s = lock_unpoisoned(&ctx.stats);
+                        s.gate_rows_total += r.n_candidates as u64;
+                        s.gate_rows_skipped += r.n_gated as u64;
+                    }
                     // Walk the ranked list until a design actually builds
                     // (absorbs resource-model error, like re-running
-                    // codegen).
-                    let built = r.ranked(job.objective).into_iter().take(64).find_map(|c| {
+                    // codegen). `ranked_top` partially selects the 64
+                    // retry candidates instead of sorting all feasible.
+                    let built = r.ranked_top(job.objective, 64).into_iter().find_map(|c| {
                         ctx.sim
                             .evaluate(&job.gemm, &c.tiling, BufferPlacement::UramFirst)
                             .ok()
@@ -1197,6 +1250,12 @@ mod tests {
         // The forest engine compiled once and served the DSE chunks.
         assert!(s.forest_compile_ms > 0.0, "forest never compiled");
         assert!(s.predict_rows_per_s > 0.0, "no forest throughput recorded");
+        // Explorations ran on the shared process-wide pool, and the cold
+        // plan's gate accounting landed in the counters.
+        assert!(s.dse_pool_threads >= 1, "pool never spun up");
+        assert!(s.gate_rows_total > 0, "no gated exploration recorded");
+        assert!(s.gate_rows_skipped <= s.gate_rows_total);
+        assert!((0.0..=1.0).contains(&s.gate_skip_rate));
     }
 
     #[test]

@@ -97,9 +97,8 @@ pub fn compare_frameworks(cfg: &Config, engine: &DseEngine, g: &Gemm) -> Workloa
             // failure), re-run "codegen" down the ranked list — exactly
             // what the real flow does with failed bitstreams.
             let pick = |objective: Objective| {
-                r.ranked(objective)
+                r.ranked_top(objective, 64)
                     .iter()
-                    .take(64)
                     .find_map(|c| measure_ours(&sim, cfg, g, &c.tiling))
             };
             (pick(Objective::Throughput), pick(Objective::EnergyEfficiency))

@@ -8,32 +8,48 @@
 //! (throughput, energy-efficiency) plane, and returns the best mapping
 //! for the requested objective. Paper: "less than 2 sec. per workload".
 //!
-//! The streaming path never materializes the candidate set: worker
-//! threads pull [`PREDICT_CHUNK`]-sized batches off a shared lazy
-//! iterator, so peak memory is O(front + feasible) rather than
-//! O(|C(G)|), and the Pareto front is maintained insert-by-insert
-//! instead of by a full post-hoc sweep. Ties are broken by the tiling
-//! tuple so results are deterministic regardless of worker interleaving
-//! (`streaming_matches_materialized_path` checks equivalence with the
-//! old materialize-everything path).
+//! The streaming path never materializes the candidate set: cooperative
+//! tasks on the process-wide [`DsePool`] pull [`PREDICT_CHUNK`]-sized
+//! batches off a shared lazy iterator, so peak memory is O(front +
+//! feasible) rather than O(|C(G)|), and the Pareto front is maintained
+//! insert-by-insert instead of by a full post-hoc sweep. Ties are broken
+//! by the tiling tuple so results are deterministic regardless of worker
+//! interleaving and pool width (`streaming_matches_materialized_path`
+//! and `explore_is_identical_across_pool_sizes` check it).
+//!
+//! Prediction is **two-stage and resource-gated** by default: stage 1
+//! runs only the 5 𝓡 outputs and applies `fits(resource_margin_pct)`;
+//! stage 2 pays the (heavier) 𝓛/𝓟 ensembles only for the survivors.
+//! Selections are bit-identical with gating on or off — the gate merely
+//! skips tree walks whose outputs the resource filter was about to
+//! discard (see `Predictors::predict_rows_gated`).
 //!
 //! [`ExhaustiveExplorer`] is the ground-truth twin used for Fig. 4 / 10:
 //! it measures every candidate on the simulator instead of predicting.
 
 pub mod compare;
+pub mod pool;
 
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Mutex;
+pub use pool::DsePool;
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 
 use crate::metrics::{hypervolume_2d, pareto_front_max};
 use crate::models::{Prediction, Predictors};
-use crate::tiling::{candidate_iter, enumerate_candidates, Tiling, TilingLimits};
+use crate::tiling::{candidate_iter, enumerate_candidates, CandidateIter, Tiling, TilingLimits};
 use crate::util::lock_unpoisoned;
 use crate::versal::{BufferPlacement, Measurement, VersalSim};
 use crate::workloads::Gemm;
 
 /// Candidates per featurize+predict batch on the streaming hot path.
 pub const PREDICT_CHUNK: usize = 256;
+
+/// Chunks one cooperative pool turn processes before yielding its
+/// worker, so concurrent explorations sharing [`DsePool`] interleave at
+/// ~millisecond granularity instead of serializing behind whole
+/// explorations.
+const TURN_CHUNKS: usize = 4;
 
 /// Optimization objective of the online phase.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -158,6 +174,9 @@ pub struct DseResult {
     pub n_candidates: usize,
     /// Candidates surviving the resource filter.
     pub n_feasible: usize,
+    /// Candidates the stage-1 resource gate rejected, skipping their
+    /// latency/power tree walks entirely (0 with gating disabled).
+    pub n_gated: usize,
     /// Predicted Pareto front (throughput x energy-eff, maximization).
     pub pareto: Vec<CandidateEval>,
     /// Every feasible candidate (resource-filtered), unordered.
@@ -180,26 +199,126 @@ impl DseResult {
     /// on the metric resolve by the tiling tuple.
     pub fn ranked(&self, objective: Objective) -> Vec<CandidateEval> {
         let mut out = self.feasible.clone();
-        out.sort_by(|a, b| {
-            let (ka, kb) = match objective {
-                Objective::Throughput => (a.gflops, b.gflops),
-                Objective::EnergyEfficiency => (a.energy_eff, b.energy_eff),
-            };
-            kb.total_cmp(&ka)
-                .then_with(|| tiling_key(&a.tiling).cmp(&tiling_key(&b.tiling)))
-        });
+        out.sort_by(rank_cmp(objective));
+        out
+    }
+
+    /// The best `k` feasible candidates by the objective — what the
+    /// build-retry walk actually consumes (`best_buildable` and the
+    /// coordinator try at most 64). Partial selection: the ~25k feasible
+    /// candidates are partitioned around the k-th best in O(n) and only
+    /// the survivors sorted, instead of the full O(n log n) sort
+    /// [`DseResult::ranked`] pays. The comparator is a total order
+    /// (metric, then tiling tuple), so the result equals the first `k`
+    /// entries of `ranked` exactly.
+    pub fn ranked_top(&self, objective: Objective, k: usize) -> Vec<CandidateEval> {
+        if k == 0 {
+            return Vec::new();
+        }
+        let cmp = rank_cmp(objective);
+        let mut out = self.feasible.clone();
+        if k < out.len() {
+            let _ = out.select_nth_unstable_by(k - 1, &cmp);
+            out.truncate(k);
+        }
+        out.sort_by(&cmp);
         out
     }
 }
 
-/// Per-worker accumulator for one streaming pass.
+/// Total-order ranking comparator for one objective: metric descending,
+/// ties broken by the tiling tuple.
+fn rank_cmp(objective: Objective) -> impl Fn(&CandidateEval, &CandidateEval) -> std::cmp::Ordering {
+    move |a, b| {
+        let (ka, kb) = match objective {
+            Objective::Throughput => (a.gflops, b.gflops),
+            Objective::EnergyEfficiency => (a.energy_eff, b.energy_eff),
+        };
+        kb.total_cmp(&ka)
+            .then_with(|| tiling_key(&a.tiling).cmp(&tiling_key(&b.tiling)))
+    }
+}
+
+/// Per-task accumulator for one streaming pass. A task owns its
+/// accumulator across cooperative pool turns; accumulators merge with
+/// total-order tie-breaks after the scope completes, so the merge is
+/// independent of which task saw which chunk.
 #[derive(Debug, Default)]
 struct StreamAcc {
     n_candidates: usize,
+    /// Candidates the stage-1 resource gate rejected.
+    n_gated: usize,
     feasible: Vec<CandidateEval>,
     front: ParetoFront,
     best_thr: Option<CandidateEval>,
     best_eff: Option<CandidateEval>,
+}
+
+impl StreamAcc {
+    fn fold(&mut self, c: CandidateEval) {
+        if self
+            .best_thr
+            .map_or(true, |b| improves(c.gflops, &c.tiling, b.gflops, &b.tiling))
+        {
+            self.best_thr = Some(c);
+        }
+        if self.best_eff.map_or(true, |b| {
+            improves(c.energy_eff, &c.tiling, b.energy_eff, &b.tiling)
+        }) {
+            self.best_eff = Some(c);
+        }
+        self.front.insert(c);
+        self.feasible.push(c);
+    }
+}
+
+/// Per-pool-worker scratch reused across chunks, turns, and entire
+/// explorations — pool workers are process-lifetime threads, so these
+/// buffers are allocated once per worker and stay warm.
+#[derive(Debug, Default)]
+struct WorkerScratch {
+    batch: Vec<Tiling>,
+    rows: Vec<f64>,
+    preds: Vec<Prediction>,
+    /// Stage-1 survivor indices (compaction index of the gated path).
+    surv: Vec<u32>,
+}
+
+thread_local! {
+    static SCRATCH: std::cell::RefCell<WorkerScratch> =
+        std::cell::RefCell::new(WorkerScratch::default());
+}
+
+/// Process-wide gauge of threads currently executing DSE streaming work,
+/// counted at stream-turn granularity on *whatever* thread runs the turn.
+/// Unlike the pool's own active counter (bounded by construction), this
+/// would catch a regression back to per-exploration thread spawning —
+/// the concurrency bench asserts its peak never exceeds the pool width.
+static DSE_ACTIVE: AtomicUsize = AtomicUsize::new(0);
+static DSE_ACTIVE_PEAK: AtomicUsize = AtomicUsize::new(0);
+
+/// High-water mark of threads concurrently executing DSE streaming work
+/// since process start.
+pub fn active_dse_workers_peak() -> usize {
+    DSE_ACTIVE_PEAK.load(Ordering::SeqCst)
+}
+
+/// RAII guard around one stream turn: decrements the gauge even if the
+/// turn panics (the pool catches the unwind; the gauge must not leak).
+struct DseActiveGuard;
+
+impl DseActiveGuard {
+    fn enter() -> DseActiveGuard {
+        let now = DSE_ACTIVE.fetch_add(1, Ordering::SeqCst) + 1;
+        DSE_ACTIVE_PEAK.fetch_max(now, Ordering::SeqCst);
+        DseActiveGuard
+    }
+}
+
+impl Drop for DseActiveGuard {
+    fn drop(&mut self) {
+        DSE_ACTIVE.fetch_sub(1, Ordering::SeqCst);
+    }
 }
 
 /// The ML-driven DSE engine.
@@ -211,6 +330,15 @@ pub struct DseEngine {
     /// Safety margin (percent) on predicted resource utilization —
     /// absorbs 𝓡-model error so selected designs actually build.
     pub resource_margin_pct: f64,
+    /// Two-stage resource-gated prediction: stage 1 predicts only the 5
+    /// 𝓡 outputs and applies `fits(resource_margin_pct)`; stage 2 runs
+    /// the 𝓛/𝓟 trees on the survivors only. Selections are
+    /// bit-identical with gating on or off (property-tested); `false`
+    /// is the full-prediction baseline the benches compare against.
+    pub gate: bool,
+    /// Worker-pool override (determinism tests, benches); `None` routes
+    /// explorations through the shared process-wide [`DsePool::global`].
+    pool: Option<Arc<DsePool>>,
 }
 
 impl DseEngine {
@@ -225,6 +353,31 @@ impl DseEngine {
             limits: TilingLimits::from_board(board),
             micro: board.micro_tile,
             resource_margin_pct: 4.0,
+            gate: true,
+            pool: None,
+        }
+    }
+
+    /// Route this engine's explorations through a dedicated pool instead
+    /// of the process-global one (pool-width determinism tests, benches).
+    pub fn with_pool(mut self, pool: Arc<DsePool>) -> DseEngine {
+        self.pool = Some(pool);
+        self
+    }
+
+    fn pool(&self) -> &DsePool {
+        match &self.pool {
+            Some(p) => p,
+            None => DsePool::global(),
+        }
+    }
+
+    /// Width of the worker pool explorations run on (0 when the shared
+    /// global pool has not spun up yet).
+    pub fn pool_threads(&self) -> usize {
+        match &self.pool {
+            Some(p) => p.n_threads(),
+            None => DsePool::get_global().map_or(0, DsePool::n_threads),
         }
     }
 
@@ -248,117 +401,140 @@ impl DseEngine {
         })
     }
 
-    /// One worker of the streaming pass: pull fixed-size chunks off the
-    /// shared lazy iterator, featurize into a reused flat buffer, batch
-    /// -predict, and fold survivors into the local accumulator.
-    fn stream_worker<I: Iterator<Item = Tiling>>(
+    /// One cooperative turn of one streaming task: pull up to
+    /// [`TURN_CHUNKS`] fixed-size chunks off the shared lazy iterator,
+    /// featurize into per-worker scratch, predict (two-stage gated when
+    /// [`DseEngine::gate`] is set), and fold survivors into the task's
+    /// accumulator. Returns `true` while the iterator may hold more work
+    /// (the pool re-enqueues the task behind other explorations' turns),
+    /// `false` once drained or cancelled.
+    fn stream_turn(
         &self,
         g: &Gemm,
-        shared: &Mutex<I>,
+        shared: &Mutex<CandidateIter>,
         cancel: &AtomicBool,
-    ) -> StreamAcc {
+        acc: &mut StreamAcc,
+    ) -> bool {
         let n_feat = self.predictors.feature_set.len();
-        let mut acc = StreamAcc::default();
-        let mut batch: Vec<Tiling> = Vec::with_capacity(PREDICT_CHUNK);
-        let mut rows: Vec<f64> = Vec::with_capacity(PREDICT_CHUNK * n_feat);
-        let mut preds: Vec<Prediction> = Vec::with_capacity(PREDICT_CHUNK);
-        loop {
-            // Cancellation hook (coordinator shutdown while plan waiters
-            // park on this exploration): stop pulling chunks; the partial
-            // result is discarded by `explore_with_cancel`.
-            if cancel.load(Ordering::Relaxed) {
-                break;
-            }
-            batch.clear();
-            {
-                let mut it = lock_unpoisoned(shared);
-                while batch.len() < PREDICT_CHUNK {
-                    match it.next() {
-                        Some(t) => batch.push(t),
-                        None => break,
+        let _active = DseActiveGuard::enter();
+        SCRATCH.with(|cell| {
+            let scratch = &mut *cell.borrow_mut();
+            let WorkerScratch {
+                batch,
+                rows,
+                preds,
+                surv,
+            } = scratch;
+            for _ in 0..TURN_CHUNKS {
+                // Cancellation hook (coordinator shutdown while plan
+                // waiters park on this exploration): stop pulling chunks;
+                // the partial result is discarded by `explore_with_cancel`.
+                if cancel.load(Ordering::Relaxed) {
+                    return false;
+                }
+                batch.clear();
+                {
+                    let mut it = lock_unpoisoned(shared);
+                    while batch.len() < PREDICT_CHUNK {
+                        match it.next() {
+                            Some(t) => batch.push(t),
+                            None => break,
+                        }
+                    }
+                }
+                if batch.is_empty() {
+                    return false;
+                }
+                acc.n_candidates += batch.len();
+                rows.clear();
+                for t in batch.iter() {
+                    let full = crate::features::featurize(g, t, self.micro);
+                    rows.extend_from_slice(&full[..n_feat]);
+                }
+                if self.gate {
+                    // Stage 1 predicts only the 5 resource outputs; rows
+                    // the fits() filter rejects never pay the 𝓛/𝓟 trees
+                    // (stage 2 runs on the in-place-compacted survivors).
+                    let n_rows = self.predictors.predict_rows_gated(
+                        rows,
+                        n_feat,
+                        self.resource_margin_pct,
+                        surv,
+                        preds,
+                    );
+                    acc.n_gated += n_rows - surv.len();
+                    for (&ri, p) in surv.iter().zip(preds.iter()) {
+                        if let Some(c) = self.admit(g, &batch[ri as usize], p) {
+                            acc.fold(c);
+                        }
+                    }
+                } else {
+                    self.predictors.predict_rows(rows, n_feat, preds);
+                    for (t, p) in batch.iter().zip(preds.iter()) {
+                        if let Some(c) = self.admit(g, t, p) {
+                            acc.fold(c);
+                        }
                     }
                 }
             }
-            if batch.is_empty() {
-                break;
-            }
-            acc.n_candidates += batch.len();
-            rows.clear();
-            for t in &batch {
-                let full = crate::features::featurize(g, t, self.micro);
-                rows.extend_from_slice(&full[..n_feat]);
-            }
-            self.predictors.predict_rows(&rows, n_feat, &mut preds);
-            for (t, prediction) in batch.iter().zip(&preds) {
-                let Some(c) = self.admit(g, t, prediction) else {
-                    continue;
-                };
-                if acc
-                    .best_thr
-                    .map_or(true, |b| improves(c.gflops, &c.tiling, b.gflops, &b.tiling))
-                {
-                    acc.best_thr = Some(c);
-                }
-                if acc.best_eff.map_or(true, |b| {
-                    improves(c.energy_eff, &c.tiling, b.energy_eff, &b.tiling)
-                }) {
-                    acc.best_eff = Some(c);
-                }
-                acc.front.insert(c);
-                acc.feasible.push(c);
-            }
-        }
-        acc
+            true
+        })
     }
 
     /// Run the full online phase for one workload, streaming the
-    /// candidate space across up to 8 worker threads.
+    /// candidate space across the shared DSE worker pool.
     pub fn explore(&self, g: &Gemm) -> anyhow::Result<DseResult> {
         self.explore_with_cancel(g, &AtomicBool::new(false))
     }
 
     /// [`DseEngine::explore`] with a cooperative cancellation hook: when
-    /// `cancel` becomes true, workers stop pulling candidate chunks and
+    /// `cancel` becomes true, tasks stop pulling candidate chunks and
     /// the exploration returns an error instead of a (partial) result.
     /// The coordinator raises the flag at shutdown so an in-flight cold
     /// plan — possibly with a queue of coalesced waiters parked on it —
     /// aborts promptly instead of finishing a doomed sweep.
+    ///
+    /// Execution model: `n_threads` cooperative tasks are submitted to
+    /// the shared [`DsePool`] (no per-exploration thread spawning — K
+    /// concurrent explorations share pool-size workers, not K x 8).
+    /// Each task folds into its own accumulator; a panicking task turn
+    /// degrades to a recoverable error here, exactly like the old
+    /// scoped-thread join did. Selection is deterministic regardless of
+    /// pool width or interleaving: accumulator merging uses the same
+    /// total-order tiling-tuple tie-breaks as the fold itself.
     pub fn explore_with_cancel(&self, g: &Gemm, cancel: &AtomicBool) -> anyhow::Result<DseResult> {
         let start = std::time::Instant::now();
         let shared = Mutex::new(candidate_iter(g, self.micro, &self.limits));
-        let n_threads = std::thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(1)
-            .clamp(1, 8);
-
-        let joined: Vec<std::thread::Result<StreamAcc>> = std::thread::scope(|scope| {
-            let handles: Vec<_> = (0..n_threads)
-                .map(|_| scope.spawn(|| self.stream_worker(g, &shared, cancel)))
-                .collect();
-            // Join EVERY handle before leaving the scope: short-circuiting
-            // on the first panicked worker would leave other panicked
-            // threads to be auto-joined by `scope`, which re-panics and
-            // would kill the calling planner thread. Joining each handle
-            // marks its panic as handled, so a worker panic degrades to a
-            // recoverable error below (surfaced in JobResult::error).
-            handles.into_iter().map(|h| h.join()).collect()
+        let pool = self.pool();
+        let n_tasks = pool.n_threads();
+        let states: Vec<Mutex<StreamAcc>> = (0..n_tasks)
+            .map(|_| Mutex::new(StreamAcc::default()))
+            .collect();
+        // The per-task mutex is uncontended by construction (at most one
+        // turn of a task runs at a time); it exists to hand `&mut` state
+        // through the `Sync` closure the pool requires.
+        let panics = pool.run_scoped(n_tasks, |i| {
+            let mut acc = lock_unpoisoned(&states[i]);
+            self.stream_turn(g, &shared, cancel, &mut acc)
         });
-        let accs: Vec<StreamAcc> = joined
-            .into_iter()
-            .map(|r| r.map_err(|_| anyhow::anyhow!("dse worker panicked for {}", g.label())))
-            .collect::<anyhow::Result<_>>()?;
+        if panics > 0 {
+            anyhow::bail!("dse worker panicked for {}", g.label());
+        }
 
         if cancel.load(Ordering::Relaxed) {
             anyhow::bail!("dse cancelled for {}", g.label());
         }
 
         let mut n_candidates = 0usize;
+        let mut n_gated = 0usize;
         let mut feasible = Vec::new();
         let mut front = ParetoFront::default();
         let mut best_thr: Option<CandidateEval> = None;
         let mut best_eff: Option<CandidateEval> = None;
-        for acc in accs {
+        for state in states {
+            let acc = state.into_inner().unwrap_or_else(|e| e.into_inner());
             n_candidates += acc.n_candidates;
+            n_gated += acc.n_gated;
             feasible.extend(acc.feasible);
             front.merge(acc.front);
             if let Some(c) = acc.best_thr {
@@ -386,6 +562,7 @@ impl DseEngine {
             gemm: *g,
             n_candidates,
             n_feasible: feasible.len(),
+            n_gated,
             pareto: front.into_sorted(),
             feasible,
             best_throughput,
@@ -404,7 +581,7 @@ pub fn best_buildable(
     g: &Gemm,
     objective: Objective,
 ) -> Option<(CandidateEval, Measurement)> {
-    r.ranked(objective).into_iter().take(64).find_map(|c| {
+    r.ranked_top(objective, 64).into_iter().find_map(|c| {
         sim.evaluate(g, &c.tiling, BufferPlacement::UramFirst)
             .ok()
             .map(|m| (c, m))
@@ -656,6 +833,82 @@ mod tests {
             want.sort_by_key(tiling_key);
             got.sort_by_key(tiling_key);
             assert_eq!(got, want, "{}", g.label());
+        }
+    }
+
+    /// Tilings of a result's Pareto front, sorted (set comparison).
+    fn pareto_tilings(r: &DseResult) -> Vec<Tiling> {
+        let mut out: Vec<Tiling> = r.pareto.iter().map(|c| c.tiling).collect();
+        out.sort_by_key(tiling_key);
+        out
+    }
+
+    #[test]
+    fn explore_is_identical_across_pool_sizes() {
+        // The acceptance property behind `PALLAS_DSE_THREADS`: the env
+        // var only sizes the process-global pool, so pinning dedicated
+        // pools of 1 / 2 / 8 workers exercises exactly the same widths.
+        // Selection, Pareto set, and counts must not depend on width or
+        // interleaving.
+        let cfg = quick_cfg();
+        let eng = engine(&cfg);
+        let g = Gemm::new(224, 3072, 768);
+        let base = eng.explore(&g).unwrap();
+        for n in [1usize, 2, 8] {
+            let eng_n = eng.clone().with_pool(std::sync::Arc::new(DsePool::new(n)));
+            let r = eng_n.explore(&g).unwrap();
+            assert_eq!(r.n_candidates, base.n_candidates, "{n} threads");
+            assert_eq!(r.n_feasible, base.n_feasible, "{n} threads");
+            assert_eq!(r.n_gated, base.n_gated, "{n} threads");
+            assert_eq!(r.best_throughput.tiling, base.best_throughput.tiling, "{n} threads");
+            assert_eq!(r.best_energy.tiling, base.best_energy.tiling, "{n} threads");
+            assert_eq!(pareto_tilings(&r), pareto_tilings(&base), "{n} threads");
+        }
+    }
+
+    #[test]
+    fn gated_explore_matches_ungated() {
+        // The tentpole equivalence: two-stage resource gating must not
+        // change any selection — it only skips latency/power tree walks
+        // for candidates the fits() filter rejects anyway.
+        let cfg = quick_cfg();
+        let gated = engine(&cfg);
+        let mut ungated = gated.clone();
+        ungated.gate = false;
+        for g in [
+            Gemm::new(512, 1024, 768),
+            Gemm::new(224, 3072, 768),
+            Gemm::new(32, 896, 896),
+        ] {
+            let a = gated.explore(&g).unwrap();
+            let b = ungated.explore(&g).unwrap();
+            assert_eq!(a.n_candidates, b.n_candidates, "{}", g.label());
+            assert_eq!(a.n_feasible, b.n_feasible, "{}", g.label());
+            assert_eq!(a.best_throughput.tiling, b.best_throughput.tiling, "{}", g.label());
+            assert_eq!(a.best_energy.tiling, b.best_energy.tiling, "{}", g.label());
+            assert_eq!(pareto_tilings(&a), pareto_tilings(&b), "{}", g.label());
+            // Gate accounting: the ungated path skips nothing; the gated
+            // path skips exactly the candidates that fail fits(), all of
+            // which are infeasible.
+            assert_eq!(b.n_gated, 0, "{}", g.label());
+            assert!(a.n_gated <= a.n_candidates - a.n_feasible, "{}", g.label());
+        }
+    }
+
+    #[test]
+    fn ranked_top_equals_ranked_prefix() {
+        let cfg = quick_cfg();
+        let eng = engine(&cfg);
+        let r = eng.explore(&Gemm::new(512, 1024, 768)).unwrap();
+        for objective in [Objective::Throughput, Objective::EnergyEfficiency] {
+            let full = r.ranked(objective);
+            for k in [0usize, 1, 7, 64, full.len(), full.len() + 100] {
+                let top = r.ranked_top(objective, k);
+                assert_eq!(top.len(), k.min(full.len()), "k={k}");
+                for (a, b) in top.iter().zip(&full) {
+                    assert_eq!(a.tiling, b.tiling, "k={k}");
+                }
+            }
         }
     }
 

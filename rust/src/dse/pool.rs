@@ -1,0 +1,396 @@
+//! Shared, process-wide DSE worker pool.
+//!
+//! The seed's `explore` spawned `min(cores, 8)` *scoped* threads per
+//! call, so `n_planners` concurrent cold plans oversubscribed the
+//! machine with up to `n_planners x 8` transient threads all fighting
+//! the OS scheduler. [`DsePool`] replaces that with one process-wide
+//! pool, sized exactly once from `available_parallelism()` (overridable
+//! via `PALLAS_DSE_THREADS` or `CoordinatorOptions::dse_threads` /
+//! `serve --dse-threads`): however many explorations are in flight, DSE
+//! work never occupies more than pool-size threads.
+//!
+//! Scheduling is cooperative: an exploration submits `n_threads` tasks
+//! via [`DsePool::run_scoped`], and each task *turn* processes a bounded
+//! slice of work (a few candidate chunks) before returning `true` to be
+//! re-enqueued at the back of the FIFO queue. Concurrent explorations
+//! therefore interleave round-robin at ~millisecond granularity instead
+//! of serializing behind whole explorations, while per-task accumulator
+//! state stays single-owner (at most one turn of a task runs at any
+//! moment).
+//!
+//! Panic containment: a panicking turn retires its task and is counted;
+//! it never kills a pool worker (workers `catch_unwind` every job) and
+//! never strands the scope latch, so the calling exploration degrades to
+//! a recoverable error exactly like the old scoped-thread join did.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+use crate::util::lock_unpoisoned;
+
+/// Sanity cap on pool sizing (absorbs misconfigured overrides).
+const MAX_THREADS: usize = 256;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+#[derive(Default)]
+struct PoolState {
+    queue: VecDeque<Job>,
+    shutdown: bool,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    available: Condvar,
+    /// Workers currently executing a task turn, and its high-water mark
+    /// — the oversubscription evidence the concurrency bench asserts on
+    /// (`peak_active <= n_threads` no matter how many explorations run).
+    active: AtomicUsize,
+    peak_active: AtomicUsize,
+}
+
+impl PoolShared {
+    fn enqueue(&self, job: Job) {
+        let mut st = lock_unpoisoned(&self.state);
+        st.queue.push_back(job);
+        drop(st);
+        self.available.notify_one();
+    }
+}
+
+fn worker_loop(shared: &Arc<PoolShared>) {
+    loop {
+        let job = {
+            let mut st = lock_unpoisoned(&shared.state);
+            loop {
+                if let Some(job) = st.queue.pop_front() {
+                    break job;
+                }
+                if st.shutdown {
+                    return;
+                }
+                st = shared.available.wait(st).unwrap_or_else(|e| e.into_inner());
+            }
+        };
+        let now = shared.active.fetch_add(1, Ordering::SeqCst) + 1;
+        shared.peak_active.fetch_max(now, Ordering::SeqCst);
+        // Backstop only: `run_scoped` turns catch their own panics so
+        // the scope latch always resolves; this keeps the worker alive
+        // even if a raw job unwinds.
+        let _ = catch_unwind(AssertUnwindSafe(job));
+        shared.active.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Latch one [`DsePool::run_scoped`] call blocks on: counts tasks still
+/// live (queued or running) plus the turns that panicked.
+struct ScopeState {
+    remaining: Mutex<usize>,
+    done: Condvar,
+    panics: AtomicUsize,
+}
+
+fn finish_task(scope: &ScopeState, panicked: bool) {
+    if panicked {
+        scope.panics.fetch_add(1, Ordering::SeqCst);
+    }
+    let mut rem = lock_unpoisoned(&scope.remaining);
+    *rem -= 1;
+    if *rem == 0 {
+        scope.done.notify_all();
+    }
+}
+
+/// Enqueue one turn of task `i`. The job re-enqueues itself while the
+/// turn asks for more work (`true`), and settles the scope latch when
+/// the task completes or panics.
+fn spawn_turn(
+    shared: &Arc<PoolShared>,
+    i: usize,
+    turn: &'static (dyn Fn(usize) -> bool + Sync),
+    scope: Arc<ScopeState>,
+) {
+    let sh = Arc::clone(shared);
+    let job: Job = Box::new(move || match catch_unwind(AssertUnwindSafe(|| turn(i))) {
+        // Yield: re-enter the queue *behind* whatever other explorations
+        // enqueued meanwhile — round-robin fairness across scopes.
+        Ok(true) => spawn_turn(&sh, i, turn, scope),
+        Ok(false) => finish_task(&scope, false),
+        Err(_) => finish_task(&scope, true),
+    });
+    shared.enqueue(job);
+}
+
+static GLOBAL: OnceLock<DsePool> = OnceLock::new();
+
+/// Default sizing of the global pool: `PALLAS_DSE_THREADS` when set to a
+/// positive integer, else `available_parallelism()`.
+fn default_threads() -> usize {
+    std::env::var("PALLAS_DSE_THREADS")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        })
+}
+
+/// A fixed-width worker pool executing cooperative task turns.
+pub struct DsePool {
+    shared: Arc<PoolShared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    n_threads: usize,
+}
+
+impl std::fmt::Debug for DsePool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("DsePool")
+            .field("n_threads", &self.n_threads)
+            .field("queued", &self.queued())
+            .field("active", &self.active())
+            .finish()
+    }
+}
+
+impl DsePool {
+    /// Spin up a dedicated pool (determinism tests, benches). Production
+    /// explorations share [`DsePool::global`] instead.
+    pub fn new(n_threads: usize) -> DsePool {
+        let n_threads = n_threads.clamp(1, MAX_THREADS);
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState::default()),
+            available: Condvar::new(),
+            active: AtomicUsize::new(0),
+            peak_active: AtomicUsize::new(0),
+        });
+        let workers = (0..n_threads)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("dse-pool-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawn dse pool worker")
+            })
+            .collect();
+        DsePool {
+            shared,
+            workers,
+            n_threads,
+        }
+    }
+
+    /// The process-wide pool, spun up on first use and sized exactly
+    /// once (see [`default_threads`] and [`DsePool::configure_global`]).
+    pub fn global() -> &'static DsePool {
+        GLOBAL.get_or_init(|| DsePool::new(default_threads()))
+    }
+
+    /// Initialize the global pool with `n` threads if it is not running
+    /// yet (`CoordinatorOptions::dse_threads` / `serve --dse-threads`).
+    /// Returns the global pool; its size may differ when another
+    /// component already spun it up — the pool is sized exactly once
+    /// per process, so callers should compare and log.
+    pub fn configure_global(n: usize) -> &'static DsePool {
+        GLOBAL.get_or_init(|| DsePool::new(n))
+    }
+
+    /// The global pool, if anything has spun it up yet.
+    pub fn get_global() -> Option<&'static DsePool> {
+        GLOBAL.get()
+    }
+
+    /// The width a requested size actually yields (sanity clamp applied
+    /// by [`DsePool::new`]) — lets callers distinguish "request was
+    /// clamped" from "pool was already running at another width".
+    pub fn clamp_width(n: usize) -> usize {
+        n.clamp(1, MAX_THREADS)
+    }
+
+    pub fn n_threads(&self) -> usize {
+        self.n_threads
+    }
+
+    /// Workers currently executing a task turn.
+    pub fn active(&self) -> usize {
+        self.shared.active.load(Ordering::SeqCst)
+    }
+
+    /// High-water mark of concurrently active workers since the pool
+    /// started — bounded by `n_threads` by construction.
+    pub fn peak_active(&self) -> usize {
+        self.shared.peak_active.load(Ordering::SeqCst)
+    }
+
+    /// Task turns waiting for a free worker.
+    pub fn queued(&self) -> usize {
+        lock_unpoisoned(&self.shared.state).queue.len()
+    }
+
+    /// Run `n_tasks` cooperative tasks to completion, blocking until
+    /// every task retires; returns how many turns panicked (0 = clean).
+    ///
+    /// Each `turn(i)` call processes a bounded slice of task `i`'s work
+    /// and returns `true` to be re-enqueued (yielding its worker to
+    /// other explorations sharing the pool) or `false` when the task is
+    /// done. At most one turn of a given task runs at any moment, so
+    /// per-task state needs no synchronization beyond reaching it from
+    /// the closure. A panicking turn retires its task without killing
+    /// the worker; the caller maps a non-zero panic count to a
+    /// recoverable error.
+    pub fn run_scoped<F>(&self, n_tasks: usize, turn: F) -> usize
+    where
+        F: Fn(usize) -> bool + Sync,
+    {
+        if n_tasks == 0 {
+            return 0;
+        }
+        let scope = Arc::new(ScopeState {
+            remaining: Mutex::new(n_tasks),
+            done: Condvar::new(),
+            panics: AtomicUsize::new(0),
+        });
+        // SAFETY: the closure reference is lifetime-erased so jobs can
+        // ride on 'static worker threads. Every job holding it is
+        // consumed before the scope latch reaches zero (a task's final
+        // turn runs, *then* decrements `remaining`), and this call
+        // blocks until the latch does reach zero, so the reference never
+        // escapes the lifetime of `turn`.
+        let turn_ref: &(dyn Fn(usize) -> bool + Sync) = &turn;
+        let turn_static: &'static (dyn Fn(usize) -> bool + Sync) = unsafe {
+            std::mem::transmute::<
+                &(dyn Fn(usize) -> bool + Sync),
+                &'static (dyn Fn(usize) -> bool + Sync),
+            >(turn_ref)
+        };
+        for i in 0..n_tasks {
+            spawn_turn(&self.shared, i, turn_static, Arc::clone(&scope));
+        }
+        let mut remaining = lock_unpoisoned(&scope.remaining);
+        while *remaining > 0 {
+            remaining = scope
+                .done
+                .wait(remaining)
+                .unwrap_or_else(|e| e.into_inner());
+        }
+        scope.panics.load(Ordering::SeqCst)
+    }
+}
+
+impl Drop for DsePool {
+    fn drop(&mut self) {
+        lock_unpoisoned(&self.shared.state).shutdown = true;
+        self.shared.available.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicBool;
+
+    #[test]
+    fn run_scoped_executes_every_task_once() {
+        let pool = DsePool::new(3);
+        let ran: Vec<AtomicUsize> = (0..8).map(|_| AtomicUsize::new(0)).collect();
+        let panics = pool.run_scoped(8, |i| {
+            ran[i].fetch_add(1, Ordering::SeqCst);
+            false
+        });
+        assert_eq!(panics, 0);
+        for r in &ran {
+            assert_eq!(r.load(Ordering::SeqCst), 1);
+        }
+        assert_eq!(pool.queued(), 0);
+        assert_eq!(pool.active(), 0);
+    }
+
+    #[test]
+    fn cooperative_turns_resume_until_done() {
+        let pool = DsePool::new(2);
+        let turns: Vec<AtomicUsize> = (0..4).map(|_| AtomicUsize::new(0)).collect();
+        let panics = pool.run_scoped(4, |i| {
+            // Each task asks for (i + 3) turns in total.
+            turns[i].fetch_add(1, Ordering::SeqCst) + 1 < i + 3
+        });
+        assert_eq!(panics, 0);
+        for (i, t) in turns.iter().enumerate() {
+            assert_eq!(t.load(Ordering::SeqCst), i + 3, "task {i} turn count");
+        }
+    }
+
+    #[test]
+    fn panicking_turn_is_counted_and_pool_survives() {
+        let pool = DsePool::new(2);
+        let panics = pool.run_scoped(4, |i| {
+            if i == 1 {
+                panic!("boom");
+            }
+            false
+        });
+        assert_eq!(panics, 1);
+        // The pool is still serviceable afterwards.
+        let ok = AtomicBool::new(false);
+        assert_eq!(
+            pool.run_scoped(1, |_| {
+                ok.store(true, Ordering::SeqCst);
+                false
+            }),
+            0
+        );
+        assert!(ok.load(Ordering::SeqCst));
+    }
+
+    #[test]
+    fn active_workers_never_exceed_pool_width() {
+        let pool = DsePool::new(2);
+        // 6 tasks x several turns of real (if tiny) work through 2
+        // workers: concurrency is bounded by the pool width.
+        let turns = AtomicUsize::new(0);
+        let panics = pool.run_scoped(6, |_| {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+            turns.fetch_add(1, Ordering::SeqCst) < 18
+        });
+        assert_eq!(panics, 0);
+        assert!(pool.peak_active() <= pool.n_threads());
+        assert!(pool.peak_active() >= 1);
+    }
+
+    #[test]
+    fn concurrent_scopes_share_the_pool_and_all_finish() {
+        let pool = Arc::new(DsePool::new(2));
+        let done = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..3 {
+                let pool = Arc::clone(&pool);
+                let done = &done;
+                s.spawn(move || {
+                    let turns = AtomicUsize::new(0);
+                    let p = pool.run_scoped(2, |_| turns.fetch_add(1, Ordering::SeqCst) < 10);
+                    assert_eq!(p, 0);
+                    done.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+        });
+        assert_eq!(done.load(Ordering::SeqCst), 3);
+        assert!(pool.peak_active() <= 2);
+    }
+
+    #[test]
+    fn zero_tasks_is_a_noop() {
+        let pool = DsePool::new(1);
+        assert_eq!(pool.run_scoped(0, |_| false), 0);
+    }
+
+    #[test]
+    fn width_is_clamped() {
+        let pool = DsePool::new(0);
+        assert_eq!(pool.n_threads(), 1);
+    }
+}

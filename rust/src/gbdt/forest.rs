@@ -26,6 +26,7 @@
 //! `Gbdt::predict_one` chain, which the equivalence property tests and
 //! the debug checks in `models::Predictors` rely on.
 
+use std::ops::Range;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
 
@@ -57,7 +58,10 @@ pub struct ForestMetrics {
     pub n_nodes: usize,
     /// One-time arena compilation cost.
     pub compile_ms: f64,
-    /// Rows predicted through the batched entry points since compile.
+    /// Full-row equivalents predicted through the batched entry points
+    /// since compile: a partial-range traversal (the gated DSE stages)
+    /// counts as `rows x outputs_walked / n_outputs`, so gate-on and
+    /// gate-off runs report comparable throughput.
     pub rows_predicted: u64,
     /// Wall-clock spent inside the batched entry points.
     pub predict_s: f64,
@@ -85,7 +89,9 @@ pub struct CompiledForest {
     tree_roots: Vec<u32>,
     outputs: Vec<OutputSpec>,
     compile_time: Duration,
-    rows_predicted: AtomicU64,
+    /// (row, output) walks through the batched entry points; metrics
+    /// normalize to full-row equivalents by dividing by `n_outputs`.
+    output_walks: AtomicU64,
     predict_ns: AtomicU64,
 }
 
@@ -109,7 +115,7 @@ impl CompiledForest {
             tree_roots: Vec::with_capacity(n_trees),
             outputs: Vec::with_capacity(models.len()),
             compile_time: Duration::default(),
-            rows_predicted: AtomicU64::new(0),
+            output_walks: AtomicU64::new(0),
             predict_ns: AtomicU64::new(0),
         };
         for m in models {
@@ -194,7 +200,7 @@ impl CompiledForest {
             n_trees: self.n_trees(),
             n_nodes: self.n_nodes(),
             compile_ms: self.compile_time.as_secs_f64() * 1e3,
-            rows_predicted: self.rows_predicted.load(Ordering::Relaxed),
+            rows_predicted: self.output_walks.load(Ordering::Relaxed) / self.outputs.len() as u64,
             predict_s: self.predict_ns.load(Ordering::Relaxed) as f64 / 1e9,
         }
     }
@@ -217,40 +223,67 @@ impl CompiledForest {
     /// buffer (`rows.len() == n_rows * n_feat`). `out` is resized to
     /// `n_rows * n_outputs`, row-major. The hot entry of the DSE.
     pub fn predict_rows(&self, rows: &[f64], n_feat: usize, out: &mut Vec<f64>) {
+        self.predict_outputs(rows, n_feat, 0..self.outputs.len(), out);
+    }
+
+    /// Predict a contiguous `outputs` range for every row of a flat
+    /// row-major feature buffer. `out` is resized to `n_rows *
+    /// outputs.len()`, row-major in range order, and each (row, output)
+    /// value is bit-identical to the corresponding column of the full
+    /// [`CompiledForest::predict_rows`] traversal (per-output tree walks
+    /// are independent, so restricting the range never changes the
+    /// accumulation order within an output). The resource-gated DSE path
+    /// predicts the 𝓡 range for every candidate and the 𝓛/𝓟 range only
+    /// for rows that survive the fits() filter.
+    pub fn predict_outputs(
+        &self,
+        rows: &[f64],
+        n_feat: usize,
+        outputs: Range<usize>,
+        out: &mut Vec<f64>,
+    ) {
         assert!(n_feat > 0 && rows.len() % n_feat == 0, "ragged row buffer");
+        assert!(outputs.end <= self.outputs.len(), "output range out of bounds");
         let started = Instant::now();
         let n_rows = rows.len() / n_feat;
-        let n_out = self.outputs.len();
+        let n_out = outputs.len();
         out.clear();
         out.resize(n_rows * n_out, 0.0);
+        if n_out == 0 {
+            return;
+        }
         let mut r0 = 0usize;
         while r0 < n_rows {
             let r1 = (r0 + ROW_BLOCK).min(n_rows);
             self.predict_block(
                 &rows[r0 * n_feat..r1 * n_feat],
                 n_feat,
+                outputs.clone(),
                 &mut out[r0 * n_out..r1 * n_out],
             );
             r0 = r1;
         }
-        self.rows_predicted.fetch_add(n_rows as u64, Ordering::Relaxed);
+        self.output_walks
+            .fetch_add((n_rows * n_out) as u64, Ordering::Relaxed);
         self.predict_ns
             .fetch_add(started.elapsed().as_nanos() as u64, Ordering::Relaxed);
     }
 
     /// Row-blocked kernel over one block (`rows.len() / n_feat <=
-    /// ROW_BLOCK` rows): for each tree, every row of the block walks it
-    /// back-to-back so node data stays hot across the row loop.
-    fn predict_block(&self, rows: &[f64], n_feat: usize, out: &mut [f64]) {
+    /// ROW_BLOCK` rows) restricted to the `outputs` range: for each
+    /// tree, every row of the block walks it back-to-back so node data
+    /// stays hot across the row loop.
+    fn predict_block(&self, rows: &[f64], n_feat: usize, outputs: Range<usize>, out: &mut [f64]) {
         let n_rows = rows.len() / n_feat;
-        let n_out = self.outputs.len();
+        let specs = &self.outputs[outputs];
+        let n_out = specs.len();
         debug_assert_eq!(out.len(), n_rows * n_out);
         for r in 0..n_rows {
-            for (o, spec) in self.outputs.iter().enumerate() {
+            for (o, spec) in specs.iter().enumerate() {
                 out[r * n_out + o] = spec.base;
             }
         }
-        for (o, spec) in self.outputs.iter().enumerate() {
+        for (o, spec) in specs.iter().enumerate() {
             let lr = spec.learning_rate;
             for t in spec.tree_start..spec.tree_end {
                 let root = self.tree_roots[t as usize] as usize;
@@ -265,7 +298,7 @@ impl CompiledForest {
     /// Predict every output for a single row (`out.len() == n_outputs`).
     pub fn predict_row_into(&self, row: &[f64], out: &mut [f64]) {
         assert!(!row.is_empty());
-        self.predict_block(row, row.len(), out);
+        self.predict_block(row, row.len(), 0..self.outputs.len(), out);
     }
 
     /// Row-blocked traversal of a single output's trees over a feature
@@ -286,8 +319,7 @@ impl CompiledForest {
             }
             r0 = r1;
         }
-        self.rows_predicted
-            .fetch_add(x.n_rows as u64, Ordering::Relaxed);
+        self.output_walks.fetch_add(x.n_rows as u64, Ordering::Relaxed);
         self.predict_ns
             .fetch_add(started.elapsed().as_nanos() as u64, Ordering::Relaxed);
         out
@@ -381,6 +413,44 @@ mod tests {
         forest.predict_row_into(x.row(3), &mut single);
         assert_eq!(single[0], out[6]);
         assert_eq!(single[1], out[7]);
+    }
+
+    #[test]
+    fn output_range_traversal_matches_full_prediction() {
+        // `predict_outputs` over any contiguous subrange must reproduce
+        // the corresponding columns of the full traversal bit-exactly —
+        // the invariant the two-stage gated DSE path leans on.
+        let mut rng = Rng::new(71);
+        let (m0, x) = fit_random(&mut rng);
+        let y1: Vec<f64> = (0..x.n_rows).map(|i| x.get(i, 0) * 2.0 + 0.5).collect();
+        let y2: Vec<f64> = (0..x.n_rows).map(|i| x.get(i, 0) - 1.5).collect();
+        let cfg = TrainConfig {
+            n_trees: 25,
+            learning_rate: 0.2,
+            ..TrainConfig::default()
+        };
+        let m1 = Gbdt::fit(&x, &y1, &cfg, None, &mut Rng::new(11));
+        let m2 = Gbdt::fit(&x, &y2, &cfg, None, &mut Rng::new(13));
+        let forest = CompiledForest::compile(&[&m0, &m1, &m2]);
+        let mut full = Vec::new();
+        forest.predict_rows(&x.data, x.n_cols, &mut full);
+        assert_eq!(full.len(), x.n_rows * 3);
+        for (lo, hi) in [(0, 3), (0, 1), (0, 2), (1, 3), (2, 3), (1, 2), (0, 0), (3, 3)] {
+            let mut part = Vec::new();
+            forest.predict_outputs(&x.data, x.n_cols, lo..hi, &mut part);
+            let w = hi - lo;
+            assert_eq!(part.len(), x.n_rows * w, "range {lo}..{hi}");
+            for r in 0..x.n_rows {
+                for o in 0..w {
+                    assert_eq!(
+                        part[r * w + o],
+                        full[r * 3 + lo + o],
+                        "row {r} output {} via range {lo}..{hi}",
+                        lo + o
+                    );
+                }
+            }
+        }
     }
 
     #[test]

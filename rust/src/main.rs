@@ -41,6 +41,8 @@ SUBCOMMANDS:
             [--plan-cache file.json]   persist/warm the plan cache across restarts
             [--max-queue N]            bound on queued + coalesced-parked jobs
             [--admission block|reject] full-queue policy (default: block)
+            [--dse-threads N]          width of the process-wide DSE worker pool
+                                       (default: PALLAS_DSE_THREADS, else cores)
   validate  [--artifacts artifacts]            PJRT runtime vs reference GEMM
   sweep     --model qwen|llama|deit [--seqs 32,64,..] per-layer mapping sweep
   info                                         board + workload summary
@@ -216,6 +218,10 @@ fn cmd_serve(args: &Args, cfg: Config, data_dir: PathBuf) -> anyhow::Result<()> 
             Some(text) => Admission::parse(text)?,
             None => defaults.admission,
         },
+        dse_threads: match args.opt_usize("dse-threads", 0)? {
+            0 => None,
+            n => Some(n),
+        },
     };
     let lab = Lab::prepare(cfg.clone(), data_dir)?;
     let engine = lab.engine();
@@ -263,8 +269,9 @@ fn cmd_serve(args: &Args, cfg: Config, data_dir: PathBuf) -> anyhow::Result<()> 
         "served {ok}/{} jobs in {:.2}s — exec throughput {:.2} GFLOP/s, \
          cache {} hits / {} misses / {} evictions ({:.0}% hit rate), \
          {} coalesced plans / {} rejected jobs / queue peak {}, \
-         p50 plan latency {:.3} ms, forest compile {:.1} ms / predict \
-         {:.0} rows/s, simulated VCK190 energy {:.1} J",
+         p50 plan latency {:.3} ms, dse pool {} threads / stage-2 gate \
+         skipped {:.0}% of candidate rows, forest compile {:.1} ms / \
+         predict {:.0} rows/s, simulated VCK190 energy {:.1} J",
         results.len(),
         wall.as_secs_f64(),
         stats.executed_gflops(),
@@ -276,6 +283,8 @@ fn cmd_serve(args: &Args, cfg: Config, data_dir: PathBuf) -> anyhow::Result<()> 
         stats.rejected_jobs,
         stats.queue_depth_peak,
         stats.plan_p50_ms,
+        stats.dse_pool_threads,
+        100.0 * stats.gate_skip_rate,
         stats.forest_compile_ms,
         stats.predict_rows_per_s,
         stats.simulated_energy_j

@@ -250,6 +250,122 @@ impl Predictors {
         }
     }
 
+    /// Two-stage resource-gated batch prediction — the DSE hot path when
+    /// `DseEngine::gate` is on. Stage 1 predicts only the 5 𝓡 outputs
+    /// for every row and applies [`Prediction::fits`] with `margin_pct`
+    /// (on the floored utilizations, exactly like the full path does);
+    /// `rows` is then compacted **in place** to the surviving feature
+    /// rows, original order preserved. Stage 2 runs the 𝓛/𝓟 trees on
+    /// the survivors only — the ~2/7 of the tree count (more by tree
+    /// share: 𝓛/𝓟 carry full-depth ensembles while 𝓡 uses the reduced
+    /// one) that rejected candidates never pay.
+    ///
+    /// `surv` receives each survivor's original row index (ascending)
+    /// and `out` its full [`Prediction`], bit-identical to what
+    /// [`Predictors::predict_rows`] produces for that row: per-output
+    /// tree walks are independent, so splitting the output range never
+    /// changes any accumulation order. Debug builds assert a sampled
+    /// subset against the legacy per-tree path (survivors match bitwise,
+    /// gated rows genuinely fail `fits`), and a property test pins the
+    /// gated/full equivalence over random batches including NaN
+    /// features. Returns the original row count.
+    pub fn predict_rows_gated(
+        &self,
+        rows: &mut Vec<f64>,
+        n_feat: usize,
+        margin_pct: f64,
+        surv: &mut Vec<u32>,
+        out: &mut Vec<Prediction>,
+    ) -> usize {
+        debug_assert!(n_feat > 0 && rows.len() % n_feat == 0);
+        let forest = self.forest();
+        let n_res = forest.n_outputs() - OUT_RESOURCES;
+        // Hard (once-per-batch, negligible) layout guards: the 5-slot
+        // resources array and the stage-2 stride below depend on them,
+        // and a drifted output layout must not misindex in release.
+        assert_eq!(n_res, 5, "resource output count drifted");
+        let n_lp = OUT_RESOURCES - OUT_LATENCY; // stage-2 outputs per row
+        let n_rows = rows.len() / n_feat;
+        surv.clear();
+        out.clear();
+        #[cfg(debug_assertions)]
+        let rows_before = rows.clone();
+        // Per-thread scratch for the raw stage outputs (distinct from
+        // the `predict_rows` scratch: the ungated path stays reentrant).
+        thread_local! {
+            static RAW_GATED: std::cell::RefCell<Vec<f64>> =
+                const { std::cell::RefCell::new(Vec::new()) };
+        }
+        RAW_GATED.with(|cell| {
+            let mut raw = cell.borrow_mut();
+            // Stage 1: resource outputs for every row.
+            forest.predict_outputs(rows, n_feat, OUT_RESOURCES..forest.n_outputs(), &mut raw);
+            for r in 0..n_rows {
+                let mut resources_pct = [0.0; 5];
+                for (slot, v) in resources_pct.iter_mut().zip(&raw[r * n_res..(r + 1) * n_res]) {
+                    *slot = v.max(0.0);
+                }
+                let partial = Prediction {
+                    latency_s: 0.0,
+                    power_w: 0.0,
+                    resources_pct,
+                };
+                if !partial.fits(margin_pct) {
+                    continue;
+                }
+                let (src, dst) = (r * n_feat, surv.len() * n_feat);
+                if src != dst {
+                    rows.copy_within(src..src + n_feat, dst);
+                }
+                surv.push(r as u32);
+                out.push(partial);
+            }
+            rows.truncate(surv.len() * n_feat);
+            // Stage 2: latency + power trees, survivors only.
+            forest.predict_outputs(rows, n_feat, OUT_LATENCY..OUT_RESOURCES, &mut raw);
+            for (i, p) in out.iter_mut().enumerate() {
+                p.latency_s = raw[i * n_lp + OUT_LATENCY].exp();
+                p.power_w = raw[i * n_lp + OUT_POWER].max(1.0);
+            }
+        });
+        #[cfg(debug_assertions)]
+        self.debug_check_gated(&rows_before, n_feat, margin_pct, surv, out);
+        n_rows
+    }
+
+    /// Sampled equivalence oracle for the gated path (debug builds):
+    /// survivors carry bit-identical predictions to the legacy per-tree
+    /// walk, and gated rows genuinely fail `fits` within the margin.
+    #[cfg(debug_assertions)]
+    fn debug_check_gated(
+        &self,
+        rows: &[f64],
+        n_feat: usize,
+        margin_pct: f64,
+        surv: &[u32],
+        out: &[Prediction],
+    ) {
+        let n_rows = rows.len() / n_feat;
+        let mut si = 0usize;
+        let mut r = 0usize;
+        while r < n_rows {
+            while si < surv.len() && (surv[si] as usize) < r {
+                si += 1;
+            }
+            let row = &rows[r * n_feat..(r + 1) * n_feat];
+            let want = self.predict_row_legacy(row);
+            if si < surv.len() && surv[si] as usize == r {
+                debug_assert_eq!(out[si], want, "gated survivor diverged at row {r}");
+            } else {
+                debug_assert!(
+                    !want.fits(margin_pct),
+                    "row {r} was gated but fits within margin {margin_pct}"
+                );
+            }
+            r += 37; // prime stride: crosses chunk and row-block edges
+        }
+    }
+
     /// Legacy batched path (bench baseline for the forest speedup).
     pub fn predict_rows_legacy(&self, rows: &[f64], n_feat: usize, out: &mut Vec<Prediction>) {
         debug_assert!(n_feat > 0 && rows.len() % n_feat == 0);
@@ -448,6 +564,117 @@ mod tests {
                 + model.resources.models.iter().map(|m| m.n_trees()).sum::<usize>()
         );
         assert!(fm.rows_predicted >= forest_preds.len() as u64);
+    }
+
+    #[test]
+    fn gated_prediction_bit_matches_full_path_property() {
+        // Property: over random row batches (shape-space rows perturbed
+        // and salted with NaN features) and random resource margins, the
+        // two-stage gated path returns exactly the fits() survivors of
+        // the full 7-output path, each with a bit-identical Prediction,
+        // and compacts `rows` to the survivor features in order. Checked
+        // against two independently trained ensembles.
+        let cfg_a = quick_cfg();
+        let mut cfg_b = quick_cfg();
+        cfg_b.train.n_trees = 50;
+        cfg_b.train.learning_rate = 0.25;
+        cfg_b.train.seed = cfg_b.train.seed.wrapping_add(917);
+        let ds = quick_dataset(&cfg_a, 3);
+        let models = [
+            Predictors::train(&ds, &cfg_a, FeatureSet::SetIAndII),
+            Predictors::train(&ds, &cfg_b, FeatureSet::SetIAndII),
+        ];
+        let n_feat = models[0].feature_set.len();
+        let base_rows: Vec<Vec<f64>> = ds
+            .points
+            .iter()
+            .step_by(7)
+            .map(|p| {
+                let full = crate::features::featurize(&p.gemm, &p.tiling, models[0].micro);
+                full[..n_feat].to_vec()
+            })
+            .collect();
+        assert!(!base_rows.is_empty());
+        crate::util::forall(
+            0x6A7ED,
+            16,
+            |r| {
+                let n = 1 + r.below(40);
+                let mut rows = Vec::with_capacity(n * n_feat);
+                for _ in 0..n {
+                    let mut row = base_rows[r.below(base_rows.len())].clone();
+                    for v in row.iter_mut() {
+                        if r.below(14) == 0 {
+                            *v = f64::NAN;
+                        } else if r.below(8) == 0 {
+                            *v *= r.range_f64(0.25, 4.0);
+                        }
+                    }
+                    rows.extend_from_slice(&row);
+                }
+                // Occasionally a margin that gates everything / nothing.
+                let margin = match r.below(6) {
+                    0 => 1e9,
+                    1 => -1e9,
+                    _ => r.range_f64(-10.0, 30.0),
+                };
+                (rows, margin)
+            },
+            |(rows, margin)| {
+                for model in &models {
+                    let mut full = Vec::new();
+                    model.predict_rows(rows, n_feat, &mut full);
+                    let mut gated_rows = rows.clone();
+                    let (mut surv, mut preds) = (Vec::new(), Vec::new());
+                    let n_rows = model.predict_rows_gated(
+                        &mut gated_rows,
+                        n_feat,
+                        *margin,
+                        &mut surv,
+                        &mut preds,
+                    );
+                    assert_eq!(n_rows, full.len());
+                    let mut si = 0usize;
+                    for (ri, fp) in full.iter().enumerate() {
+                        if fp.fits(*margin) {
+                            assert_eq!(surv[si] as usize, ri, "survivor order drifted");
+                            assert_eq!(preds[si], *fp, "gated prediction diverged");
+                            // Bitwise row comparison: survivor rows may
+                            // legitimately contain NaN features.
+                            let got = &gated_rows[si * n_feat..(si + 1) * n_feat];
+                            let want = &rows[ri * n_feat..(ri + 1) * n_feat];
+                            assert!(
+                                got.iter().zip(want).all(|(a, b)| a.to_bits() == b.to_bits()),
+                                "compacted row {ri} corrupted"
+                            );
+                            si += 1;
+                        }
+                    }
+                    assert_eq!(si, surv.len(), "gated path admitted a non-fitting row");
+                    assert_eq!(gated_rows.len(), surv.len() * n_feat);
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn gated_prediction_handles_empty_and_all_gated_batches() {
+        let cfg = quick_cfg();
+        let ds = quick_dataset(&cfg, 2);
+        let model = Predictors::train(&ds, &cfg, FeatureSet::SetIAndII);
+        let n_feat = model.feature_set.len();
+        let (mut surv, mut preds) = (Vec::new(), Vec::new());
+        // Empty batch.
+        let mut rows: Vec<f64> = Vec::new();
+        assert_eq!(model.predict_rows_gated(&mut rows, n_feat, 4.0, &mut surv, &mut preds), 0);
+        assert!(surv.is_empty() && preds.is_empty());
+        // Impossible margin: everything gated, stage 2 never runs.
+        let p = &ds.points[0];
+        let full = crate::features::featurize(&p.gemm, &p.tiling, model.micro);
+        let mut rows = full[..n_feat].to_vec();
+        let n = model.predict_rows_gated(&mut rows, n_feat, 1e9, &mut surv, &mut preds);
+        assert_eq!(n, 1);
+        assert!(surv.is_empty() && preds.is_empty() && rows.is_empty());
     }
 
     #[test]

@@ -165,51 +165,134 @@ impl TilingLimits {
     }
 }
 
-/// Lazily enumerate the candidate set `C(G)`: every `(P_d, B_d)` that
-/// evenly partitions the padded workload and respects the placement
-/// limits, in the same nested order the eager enumeration used.
+/// Lazy enumeration of the candidate set `C(G)`: every `(P_d, B_d)`
+/// that evenly partitions the padded workload and respects the placement
+/// limits, in the same nested order the eager enumeration used
+/// (`p_m` outer, `p_n`, `p_k`, then `b_m`/`b_n`/`b_k`).
 ///
-/// This is the streaming front of the DSE hot path: for the ~25k-point
-/// spaces of large workloads nothing is materialized up front — the
-/// engine pulls fixed-size chunks, featurizes and batch-predicts them,
-/// and folds survivors into an incremental Pareto front.
-pub fn candidate_iter(g: &Gemm, micro: usize, limits: &TilingLimits) -> impl Iterator<Item = Tiling> {
-    let (tm, tn, tk) = g.tiles(micro);
-    let limits = *limits;
-    let p_ms: Vec<usize> = divisors(tm).into_iter().filter(|&p| p <= limits.max_p_m).collect();
-    let p_ns: Vec<usize> = divisors(tn).into_iter().filter(|&p| p <= limits.max_p_n).collect();
-    let p_ks: Vec<usize> = divisors(tk).into_iter().filter(|&p| p <= limits.max_p_k).collect();
-    p_ms.into_iter().flat_map(move |p_m| {
-        let p_ns = p_ns.clone();
-        let p_ks = p_ks.clone();
-        p_ns.into_iter().flat_map(move |p_n| {
-            let p_ks = p_ks.clone();
-            p_ks.into_iter()
-                .filter(move |&p_k| p_m * p_n * p_k <= limits.max_aie)
-                .flat_map(move |p_k| {
-                    // The B-level block for one P-combination is small and
-                    // bounded (product of three divisor lists), so emit it
-                    // as one buffer: laziness lives at the P level, and
-                    // this avoids per-element Vec clones on the hot path.
-                    let b_ms = divisors(tm / p_m);
-                    let b_ns = divisors(tn / p_n);
-                    let b_ks = divisors(tk / p_k);
-                    let mut block =
-                        Vec::with_capacity(b_ms.len() * b_ns.len() * b_ks.len());
-                    for &b_m in &b_ms {
-                        for &b_n in &b_ns {
-                            for &b_k in &b_ks {
-                                let t = Tiling::new((p_m, p_n, p_k), (b_m, b_n, b_k));
-                                if t.buffer_bytes(micro).total() <= limits.max_buffer_bytes {
-                                    block.push(t);
-                                }
-                            }
+/// This is the streaming front of the DSE hot path: nothing is
+/// materialized up front — the engine pulls fixed-size chunks,
+/// featurizes and batch-predicts them, and folds survivors into an
+/// incremental Pareto front. Two hot-path economies over the old
+/// triple-`flat_map` closure tower:
+///
+/// * the B-level divisor lists are **memoized per P value** at
+///   construction (`divisors(tm/p_m)` depends only on `p_m`, yet the
+///   old shape recomputed it — plus the `p_ns`/`p_ks` list clones — for
+///   every `(p_n, p_k)` pair);
+/// * one **reused block buffer** holds the current P-combination's
+///   B-grid instead of allocating a fresh `Vec` per combination.
+#[derive(Debug)]
+pub struct CandidateIter {
+    micro: usize,
+    max_aie: usize,
+    max_buffer_bytes: usize,
+    /// P-level divisor lists, pre-filtered by the placement limits.
+    p_ms: Vec<usize>,
+    p_ns: Vec<usize>,
+    p_ks: Vec<usize>,
+    /// Memoized B-level divisor lists, index-aligned with the P lists:
+    /// `b_ms[i] == divisors(tm / p_ms[i])`, etc.
+    b_ms: Vec<Vec<usize>>,
+    b_ns: Vec<Vec<usize>>,
+    b_ks: Vec<Vec<usize>>,
+    /// Cursor over P-combinations, advanced in nested order.
+    i_m: usize,
+    i_n: usize,
+    i_k: usize,
+    /// Reused block buffer: the current P-combination's B-grid.
+    block: Vec<Tiling>,
+    cursor: usize,
+}
+
+impl CandidateIter {
+    fn new(g: &Gemm, micro: usize, limits: &TilingLimits) -> CandidateIter {
+        let (tm, tn, tk) = g.tiles(micro);
+        let p_ms: Vec<usize> = divisors(tm).into_iter().filter(|&p| p <= limits.max_p_m).collect();
+        let p_ns: Vec<usize> = divisors(tn).into_iter().filter(|&p| p <= limits.max_p_n).collect();
+        let p_ks: Vec<usize> = divisors(tk).into_iter().filter(|&p| p <= limits.max_p_k).collect();
+        let b_ms = p_ms.iter().map(|&p| divisors(tm / p)).collect();
+        let b_ns = p_ns.iter().map(|&p| divisors(tn / p)).collect();
+        let b_ks = p_ks.iter().map(|&p| divisors(tk / p)).collect();
+        CandidateIter {
+            micro,
+            max_aie: limits.max_aie,
+            max_buffer_bytes: limits.max_buffer_bytes,
+            p_ms,
+            p_ns,
+            p_ks,
+            b_ms,
+            b_ns,
+            b_ks,
+            i_m: 0,
+            i_n: 0,
+            i_k: 0,
+            block: Vec::new(),
+            cursor: 0,
+        }
+    }
+
+    /// Advance to the next P-combination with a non-empty B-block,
+    /// rebuilding `block` in place. `false` = enumeration exhausted.
+    fn refill(&mut self) -> bool {
+        self.block.clear();
+        self.cursor = 0;
+        while self.i_m < self.p_ms.len() {
+            if self.i_n >= self.p_ns.len() {
+                self.i_m += 1;
+                self.i_n = 0;
+                self.i_k = 0;
+                continue;
+            }
+            if self.i_k >= self.p_ks.len() {
+                self.i_n += 1;
+                self.i_k = 0;
+                continue;
+            }
+            let (i_m, i_n, i_k) = (self.i_m, self.i_n, self.i_k);
+            self.i_k += 1;
+            let (p_m, p_n, p_k) = (self.p_ms[i_m], self.p_ns[i_n], self.p_ks[i_k]);
+            if p_m * p_n * p_k > self.max_aie {
+                continue;
+            }
+            for &b_m in &self.b_ms[i_m] {
+                for &b_n in &self.b_ns[i_n] {
+                    for &b_k in &self.b_ks[i_k] {
+                        let t = Tiling::new((p_m, p_n, p_k), (b_m, b_n, b_k));
+                        if t.buffer_bytes(self.micro).total() <= self.max_buffer_bytes {
+                            self.block.push(t);
                         }
                     }
-                    block.into_iter()
-                })
-        })
-    })
+                }
+            }
+            if !self.block.is_empty() {
+                return true;
+            }
+        }
+        false
+    }
+}
+
+impl Iterator for CandidateIter {
+    type Item = Tiling;
+
+    fn next(&mut self) -> Option<Tiling> {
+        loop {
+            if self.cursor < self.block.len() {
+                let t = self.block[self.cursor];
+                self.cursor += 1;
+                return Some(t);
+            }
+            if !self.refill() {
+                return None;
+            }
+        }
+    }
+}
+
+/// Construct the lazy enumeration of `C(G)` (see [`CandidateIter`]).
+pub fn candidate_iter(g: &Gemm, micro: usize, limits: &TilingLimits) -> CandidateIter {
+    CandidateIter::new(g, micro, limits)
 }
 
 /// Enumerate the candidate set `C(G)` eagerly (collected form of
@@ -327,6 +410,44 @@ mod tests {
                 }
             },
         );
+    }
+
+    #[test]
+    fn candidate_iter_matches_naive_reference() {
+        // The memoized/streaming iterator must reproduce the naive
+        // nested-loop enumeration exactly — order included (the DSE's
+        // determinism tie-breaks assume a stable enumeration order).
+        let lim = limits();
+        for g in [
+            Gemm::new(512, 512, 512),
+            Gemm::new(224, 3072, 768),
+            Gemm::new(1024, 4864, 896),
+            Gemm::new(32, 32, 32),
+        ] {
+            let (tm, tn, tk) = g.tiles(32);
+            let mut want = Vec::new();
+            for p_m in divisors(tm).into_iter().filter(|&p| p <= lim.max_p_m) {
+                for p_n in divisors(tn).into_iter().filter(|&p| p <= lim.max_p_n) {
+                    for p_k in divisors(tk).into_iter().filter(|&p| p <= lim.max_p_k) {
+                        if p_m * p_n * p_k > lim.max_aie {
+                            continue;
+                        }
+                        for b_m in divisors(tm / p_m) {
+                            for b_n in divisors(tn / p_n) {
+                                for b_k in divisors(tk / p_k) {
+                                    let t = Tiling::new((p_m, p_n, p_k), (b_m, b_n, b_k));
+                                    if t.buffer_bytes(32).total() <= lim.max_buffer_bytes {
+                                        want.push(t);
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            let got: Vec<Tiling> = candidate_iter(&g, 32, &lim).collect();
+            assert_eq!(got, want, "enumeration drift for {}", g.label());
+        }
     }
 
     #[test]
