@@ -1,13 +1,15 @@
-//! END-TO-END driver (DESIGN.md §5): serve the GEMM working set of a
+//! END-TO-END driver (DESIGN.md §6): serve the GEMM working set of a
 //! real small-transformer inference trace through the full stack.
 //!
 //! All three layers compose here:
 //! * L1/L2 — the AOT-compiled Pallas tiled-GEMM artifacts (`make
-//!   artifacts`) execute every job's actual numerics via PJRT;
+//!   artifacts`) execute every job's actual numerics via PJRT (the
+//!   coordinator's `auto` backend falls back to the blocked CPU GEMM
+//!   when no artifacts exist, so the driver runs in every checkout);
 //! * L3 — the coordinator plans each job with the ML-driven DSE (cached
 //!   per shape/objective), batches execution, validates results against
-//!   the Rust reference, and accounts simulated-VCK190 energy for the
-//!   selected mappings.
+//!   the Rust reference, and accounts per-job executed energy plus
+//!   simulated-VCK190 energy for the selected mappings.
 //!
 //! The trace is Qwen2.5-0.5B-shaped (hidden 896, FFN 4864): one prefill
 //! pass (batched sequence) and a run of decode steps — exactly the

@@ -1,10 +1,124 @@
-//! Bench: L3 hot path — the PJRT tiled-GEMM executor over the AOT
-//! Pallas artifacts (requires `make artifacts`).
-use versal_gemm::runtime::{matmul_ref, GemmEngine};
-use versal_gemm::util::bench::{bench, report, report_throughput};
+//! Bench: L3 execution hot path — the pluggable backends behind
+//! `runtime::backend`.
+//!
+//! Section 1 exercises the always-available CPU backend (blocked tiled
+//! GEMM, row panels on the shared DSE pool) against the reference
+//! GEMM. Section 2 serves data jobs through a coordinator with
+//! `--backend cpu` and asserts the per-job energy accounting
+//! (`energy_j` / `avg_power_w` / `gflops_per_w`) is present, finite,
+//! and mutually consistent. Section 3 is the original PJRT tiled
+//! executor over the AOT Pallas artifacts (requires `make artifacts`).
+//!
+//! `--smoke` (CI on every PR) runs sections 1–2 only with reduced
+//! shapes and a tiny in-memory model, so the execution path and the
+//! energy fields are covered even where no artifacts exist.
+use versal_gemm::config::Config;
+use versal_gemm::coordinator::{BackendChoice, Coordinator, CoordinatorOptions, GemmJob};
+use versal_gemm::dataset::Dataset;
+use versal_gemm::dse::{DseEngine, Objective};
+use versal_gemm::features::FeatureSet;
+use versal_gemm::models::Predictors;
+use versal_gemm::runtime::backend::{CpuBackend, ExecBackend};
+use versal_gemm::runtime::{matmul_ref, max_abs_diff, GemmEngine};
+use versal_gemm::util::bench::{bench, once, report, report_throughput};
 use versal_gemm::util::rng::Rng;
+use versal_gemm::workloads::{training_workloads, Gemm};
 
 fn main() -> anyhow::Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+
+    // ---- 1. CPU backend: blocked tiled GEMM on the shared pool ---------
+    println!("== bench: cpu execution backend (blocked tiled GEMM, DsePool row panels) ==");
+    let cpu = CpuBackend::new();
+    let mut rng = Rng::new(3);
+    let shapes: &[(usize, usize, usize)] = if smoke {
+        &[(128, 128, 128), (70, 50, 90)]
+    } else {
+        &[(128, 128, 128), (256, 256, 256), (32, 896, 896), (512, 512, 512)]
+    };
+    for &(m, n, k) in shapes {
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let flops = 2.0 * (m * n * k) as f64;
+        let got = cpu.gemm(&a, &b, m, n, k)?;
+        let err = max_abs_diff(&got, &matmul_ref(&a, &b, m, n, k));
+        assert!(err < 1e-2, "cpu backend numerics {m}x{n}x{k}: err {err}");
+        let (warmup, iters) = if smoke { (1, 3) } else { (2, 8) };
+        let stats = bench(warmup, iters, || {
+            std::hint::black_box(cpu.gemm(&a, &b, m, n, k).unwrap());
+        });
+        report(&format!("cpu gemm {m}x{n}x{k}"), &stats);
+        report_throughput("  throughput", &stats, flops / 1e9, "GFLOP");
+    }
+
+    // ---- 2. serving energy accounting over the CPU backend -------------
+    println!("== bench: coordinator data jobs + per-job energy accounting (backend cpu) ==");
+    let mut cfg = Config::default();
+    cfg.dataset.top_k = 10;
+    cfg.dataset.bottom_k = 6;
+    cfg.dataset.random_k = 30;
+    cfg.train.n_trees = 60;
+    cfg.train.learning_rate = 0.2;
+    let engine = once("offline phase (reduced dataset + train)", || {
+        let wl: Vec<_> = training_workloads().into_iter().take(4).collect();
+        let ds = Dataset::generate(&cfg, &wl);
+        DseEngine::new(Predictors::train(&ds, &cfg, FeatureSet::SetIAndII), &cfg.board)
+    });
+    let options = CoordinatorOptions {
+        backend: BackendChoice::Cpu,
+        ..CoordinatorOptions::default()
+    };
+    let mut coord = Coordinator::start_with(&cfg, engine, None, 2, options);
+    let n_jobs = if smoke { 4u64 } else { 12 };
+    let jobs: Vec<GemmJob> = (0..n_jobs)
+        .map(|i| {
+            let g = Gemm::new(64 * (1 + i as usize % 3), 256, 128);
+            let a: Vec<f32> = (0..g.m * g.k).map(|_| rng.normal() as f32).collect();
+            let b: Vec<f32> = (0..g.k * g.n).map(|_| rng.normal() as f32).collect();
+            let mut j = GemmJob::with_data(i, g, Objective::Throughput, a, b);
+            j.validate = i % 2 == 0;
+            j
+        })
+        .collect();
+    let results = once(&format!("run_batch ({n_jobs} data jobs)"), || {
+        coord.run_batch(jobs)
+    });
+    assert_eq!(results.len(), n_jobs as usize);
+    for r in &results {
+        assert!(r.error.is_none(), "job {} failed: {:?}", r.id, r.error);
+        let exec = r.exec_time.expect("executed").as_secs_f64();
+        let energy = r.energy_j.expect("energy accounted");
+        let avg_w = r.avg_power_w.expect("avg power");
+        let gpw = r.gflops_per_w.expect("gflops/W");
+        assert!(energy.is_finite() && energy > 0.0, "job {}: energy {energy}", r.id);
+        assert!(avg_w.is_finite() && avg_w > 0.0);
+        assert!(gpw.is_finite() && gpw > 0.0);
+        let drift = (energy - avg_w * exec).abs() / energy;
+        assert!(drift < 1e-9, "job {}: energy/power inconsistent ({drift})", r.id);
+        if let Some(err) = r.validation_err {
+            assert!(err < 1e-2, "job {} numerics {err}", r.id);
+        }
+    }
+    let stats = coord.stats();
+    assert_eq!(coord.backend_name(), "cpu");
+    assert_eq!(stats.executed_jobs, n_jobs);
+    assert!(stats.executed_energy_j > 0.0);
+    assert!(stats.executed_gflops_per_w > 0.0);
+    println!(
+        "backend `{}`: {} jobs, {:.2} GFLOP/s, {:.3} J total, {:.2} GFLOPS/W aggregate",
+        coord.backend_name(),
+        stats.executed_jobs,
+        stats.executed_gflops(),
+        stats.executed_energy_j,
+        stats.executed_gflops_per_w
+    );
+    coord.shutdown();
+    if smoke {
+        println!("smoke OK: cpu backend numerics + energy accounting");
+        return Ok(());
+    }
+
+    // ---- 3. PJRT tiled executor over the AOT artifacts -----------------
     let engine = GemmEngine::load(std::path::Path::new("artifacts"))?;
     println!("== bench: PJRT tiled GEMM executor (platform {}) ==", engine.platform());
     let mut rng = Rng::new(3);

@@ -11,14 +11,17 @@
 //! * **L3** (this crate) — the paper's framework: VCK190 simulator
 //!   substrate, feature engineering, from-scratch GBDT models,
 //!   analytical baselines (CHARM/ARIES), ML-driven DSE with Pareto
-//!   selection, Jetson GPU comparators, a PJRT runtime that executes the
-//!   chosen mappings through the AOT kernels, and a serving coordinator.
+//!   selection, Jetson GPU comparators, pluggable execution backends
+//!   (PJRT over the AOT kernels, an always-available blocked CPU GEMM,
+//!   and a simulator-stamped variant) with per-job energy accounting,
+//!   and a serving coordinator.
 //!
 //! See `DESIGN.md` (repo root) for the system inventory, the
 //! DSE→coordinator planning-path diagram (bounded admission,
 //! single-flight plan coalescing, and the sharded plan cache), the
-//! compiled forest-inference engine (§3: the arena layout and
-//! row-blocked traversal behind `Predictors::predict_rows`), and the
+//! execution-backend layer and its energy formula (§3), the compiled
+//! forest-inference engine (§4: the arena layout and row-blocked
+//! traversal behind `Predictors::predict_rows`), and the
 //! per-figure/table experiment index.
 
 pub mod analytical;

@@ -4,15 +4,17 @@
 //! * `dataset`  — offline phase: generate the ~6000-design dataset;
 //! * `train`    — fit the L/P/R GBDT models (optionally with search);
 //! * `dse`      — online phase: Pareto-optimal mapping for one GEMM;
-//! * `report`   — regenerate any paper figure/table (see DESIGN.md §4);
+//! * `report`   — regenerate any paper figure/table (see DESIGN.md §6);
 //! * `serve`    — boot the coordinator and stream GEMM jobs through the
-//!   AOT Pallas kernels (requires `make artifacts`);
+//!   selected execution backend (PJRT over the AOT Pallas kernels when
+//!   artifacts exist, the blocked CPU GEMM otherwise, or the VCK190
+//!   simulator via `--backend sim`);
 //! * `validate` — numerics check of the PJRT runtime vs the reference.
 
 use std::path::PathBuf;
 
 use versal_gemm::config::Config;
-use versal_gemm::coordinator::{Admission, Coordinator, CoordinatorOptions, GemmJob};
+use versal_gemm::coordinator::{Admission, BackendChoice, Coordinator, CoordinatorOptions, GemmJob};
 use versal_gemm::dataset::Dataset;
 use versal_gemm::dse::Objective;
 use versal_gemm::features::FeatureSet;
@@ -43,6 +45,8 @@ SUBCOMMANDS:
             [--admission block|reject] full-queue policy (default: block)
             [--dse-threads N]          width of the process-wide DSE worker pool
                                        (default: PALLAS_DSE_THREADS, else cores)
+            [--backend pjrt|cpu|sim|auto] execution backend (default: auto =
+                                       PJRT if the artifacts load, else CPU)
   validate  [--artifacts artifacts]            PJRT runtime vs reference GEMM
   sweep     --model qwen|llama|deit [--seqs 32,64,..] per-layer mapping sweep
   info                                         board + workload summary
@@ -222,6 +226,7 @@ fn cmd_serve(args: &Args, cfg: Config, data_dir: PathBuf) -> anyhow::Result<()> 
             0 => None,
             n => Some(n),
         },
+        backend: BackendChoice::parse(args.opt_or("backend", "auto"))?,
     };
     let lab = Lab::prepare(cfg.clone(), data_dir)?;
     let engine = lab.engine();
@@ -266,7 +271,8 @@ fn cmd_serve(args: &Args, cfg: Config, data_dir: PathBuf) -> anyhow::Result<()> 
     }
     let stats = coord.stats();
     println!(
-        "served {ok}/{} jobs in {:.2}s — exec throughput {:.2} GFLOP/s, \
+        "served {ok}/{} jobs in {:.2}s via backend `{}` — exec throughput \
+         {:.2} GFLOP/s, executed energy {:.2} J ({:.2} GFLOPS/W aggregate), \
          cache {} hits / {} misses / {} evictions ({:.0}% hit rate), \
          {} coalesced plans / {} rejected jobs / queue peak {}, \
          p50 plan latency {:.3} ms, dse pool {} threads / stage-2 gate \
@@ -274,7 +280,10 @@ fn cmd_serve(args: &Args, cfg: Config, data_dir: PathBuf) -> anyhow::Result<()> 
          predict {:.0} rows/s, simulated VCK190 energy {:.1} J",
         results.len(),
         wall.as_secs_f64(),
+        coord.backend_name(),
         stats.executed_gflops(),
+        stats.executed_energy_j,
+        stats.executed_gflops_per_w,
         stats.cache_hits,
         stats.cache_misses,
         stats.cache_evictions,

@@ -1,4 +1,4 @@
-//! One renderer per paper figure/table (DESIGN.md §4 experiment index).
+//! One renderer per paper figure/table (DESIGN.md §6 experiment index).
 
 use crate::analytical::AriesPolicy;
 use crate::dse::compare::tradeoff_stats;
@@ -19,13 +19,18 @@ pub fn fig1_tiling_impact(lab: &Lab) -> String {
     let g = Gemm::new(224, 3072, 768); // medium ViT-style workload
     let ex = ExhaustiveExplorer::new(VersalSim::new(&lab.cfg));
     let all = ex.explore(&g);
+    // NaN-safe selection: filter non-finite measurements out entirely
+    // (under `total_cmp` alone a NaN would *win* a max_by, and the old
+    // `partial_cmp().unwrap()` panicked).
     let best_thr = all
         .iter()
-        .max_by(|a, b| a.1.gflops.partial_cmp(&b.1.gflops).unwrap())
+        .filter(|c| c.1.gflops.is_finite())
+        .max_by(|a, b| a.1.gflops.total_cmp(&b.1.gflops))
         .unwrap();
     let best_eff = all
         .iter()
-        .max_by(|a, b| a.1.energy_eff.partial_cmp(&b.1.energy_eff).unwrap())
+        .filter(|c| c.1.energy_eff.is_finite())
+        .max_by(|a, b| a.1.energy_eff.total_cmp(&b.1.energy_eff))
         .unwrap();
     let aries_pick = AriesPolicy::new(&lab.cfg.board)
         .select(&g)
@@ -453,7 +458,8 @@ pub fn fig9_gpu_comparison(lab: &Lab) -> String {
     }
     let best = orin_wins
         .iter()
-        .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .filter(|w| w.1.is_finite())
+        .max_by(|a, b| a.1.total_cmp(&b.1))
         .cloned()
         .unwrap_or(("-".into(), 0.0));
     format!(

@@ -1,0 +1,487 @@
+//! Pluggable execution backends — how a planned GEMM job's numerics
+//! actually run (DESIGN.md §3).
+//!
+//! Until this layer existed, execution was hard-wired to the PJRT
+//! [`GemmEngine`]: without the AOT artifacts (the default in CI and
+//! every offline checkout) a `GemmJob::with_data` died with "no
+//! artifact engine" and the coordinator could not serve a single data
+//! job end-to-end. [`ExecBackend`] breaks that coupling with three
+//! implementations:
+//!
+//! * [`PjrtBackend`] — the original path: tiles streamed through the
+//!   AOT-compiled Pallas artifacts on the PJRT CPU client;
+//! * [`CpuBackend`] — always available: a blocked tiled GEMM over the
+//!   same [`extract_tile`]/[`accumulate_tile`] primitives the PJRT
+//!   executor composes, parallelized over row panels on the shared
+//!   process-wide [`DsePool`] so execution honors the same worker
+//!   budget as planning instead of spawning its own threads;
+//! * [`SimBackend`] — executes via [`CpuBackend`] for real numerics but
+//!   stamps the result with a [`VersalSim`] measurement, so the serving
+//!   path reports the latency/power the *selected mapping* would
+//!   achieve on the VCK190 — plan-quality evaluation as a service.
+//!
+//! [`BackendChoice::Auto`] (the default) selects PJRT when the
+//! artifacts load and falls back to CPU otherwise, which is what
+//! deletes the "plan-only mode" limitation the vendored `xla` stub used
+//! to force.
+
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::dse::DsePool;
+use crate::runtime::{accumulate_tile, extract_tile, pick_variant, GemmEngine};
+use crate::tiling::Tiling;
+use crate::util::lock_unpoisoned;
+use crate::versal::{BufferPlacement, Measurement, VersalSim};
+use crate::workloads::Gemm;
+
+/// One way of executing a GEMM's numerics. Implementations are owned by
+/// the coordinator's executor thread (PJRT handles are not `Send`, so
+/// the trait deliberately requires neither `Send` nor `Sync`).
+pub trait ExecBackend {
+    /// Stable identifier surfaced in the `serve` summary and stats.
+    fn name(&self) -> &'static str;
+
+    /// Whether this backend can execute the given workload.
+    fn supports(&self, g: &Gemm) -> bool {
+        g.m > 0 && g.n > 0 && g.k > 0
+    }
+
+    /// Execute `C[m,n] = A[m,k] @ B[k,n]` (row-major FP32).
+    fn gemm(&self, a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Result<Vec<f32>>;
+
+    /// Artifact-variant key for executor batch grouping (PJRT reuses
+    /// compiled executables across same-variant jobs; others have no
+    /// variant notion).
+    fn variant_hint(&self, _m: usize, _n: usize, _k: usize) -> Option<usize> {
+        None
+    }
+
+    /// Board-level measurement stamp for an executed job: `Some` only
+    /// for [`SimBackend`], whose results report the simulated VCK190
+    /// latency/power of the job's selected mapping instead of host
+    /// wall-clock.
+    fn board_measurement(&self, _g: &Gemm, _t: &Tiling) -> Option<Measurement> {
+        None
+    }
+}
+
+/// Which backend `Coordinator::start` builds
+/// (`CoordinatorOptions::backend`, `serve --backend`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BackendChoice {
+    /// PJRT when the artifacts load, else [`CpuBackend`].
+    #[default]
+    Auto,
+    Pjrt,
+    Cpu,
+    Sim,
+}
+
+impl BackendChoice {
+    pub fn parse(text: &str) -> Result<BackendChoice> {
+        match text {
+            "auto" => Ok(BackendChoice::Auto),
+            "pjrt" => Ok(BackendChoice::Pjrt),
+            "cpu" => Ok(BackendChoice::Cpu),
+            "sim" => Ok(BackendChoice::Sim),
+            other => bail!("unknown backend `{other}` (pjrt|cpu|sim|auto)"),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            BackendChoice::Auto => "auto",
+            BackendChoice::Pjrt => "pjrt",
+            BackendChoice::Cpu => "cpu",
+            BackendChoice::Sim => "sim",
+        }
+    }
+}
+
+/// Build the backend a coordinator will execute on. `Auto` tries PJRT
+/// when an artifacts directory is configured and falls back to the
+/// always-available CPU backend (logged); explicit `Pjrt` propagates
+/// the load error so a misconfigured deployment fails loudly.
+pub fn make_backend(
+    choice: BackendChoice,
+    artifacts_dir: Option<&Path>,
+    sim: VersalSim,
+) -> Result<Box<dyn ExecBackend>> {
+    match choice {
+        BackendChoice::Cpu => Ok(Box::new(CpuBackend::new())),
+        BackendChoice::Sim => Ok(Box::new(SimBackend::new(sim))),
+        BackendChoice::Pjrt => {
+            let dir = artifacts_dir
+                .ok_or_else(|| anyhow!("backend `pjrt` requires an artifacts directory"))?;
+            Ok(Box::new(PjrtBackend::load(dir)?))
+        }
+        BackendChoice::Auto => {
+            if let Some(dir) = artifacts_dir {
+                match PjrtBackend::load(dir) {
+                    Ok(b) => return Ok(Box::new(b)),
+                    Err(e) => {
+                        eprintln!("exec backend: PJRT unavailable ({e}); falling back to cpu")
+                    }
+                }
+            }
+            Ok(Box::new(CpuBackend::new()))
+        }
+    }
+}
+
+/// The PJRT path: the AOT-compiled Pallas artifacts behind the
+/// [`ExecBackend`] trait.
+pub struct PjrtBackend {
+    engine: GemmEngine,
+}
+
+impl PjrtBackend {
+    pub fn load(dir: &Path) -> Result<PjrtBackend> {
+        Ok(PjrtBackend {
+            engine: GemmEngine::load(dir)?,
+        })
+    }
+}
+
+impl ExecBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn gemm(&self, a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Result<Vec<f32>> {
+        self.engine.gemm(a, b, m, n, k)
+    }
+
+    fn variant_hint(&self, m: usize, n: usize, k: usize) -> Option<usize> {
+        Some(pick_variant(&self.engine.manifest.variants, m, n, k))
+    }
+}
+
+/// Default CPU block dimension: 64 keeps one A/B/C tile trio (~48 KB)
+/// inside L1/L2 while giving row panels enough work per pool turn.
+const CPU_TILE: usize = 64;
+
+/// GEMMs at or below this total MAC count run inline — the pool
+/// round-trip costs more than the whole product (one 64-cube). Gated
+/// on *total* work, not per-panel work: a tall-skinny GEMM with many
+/// small panels still amortizes one `run_scoped` fan-out across all of
+/// them.
+const CPU_INLINE_MACS: usize = 64 * 64 * 64;
+
+/// Always-available host execution: blocked tiled GEMM over
+/// [`extract_tile`]/[`accumulate_tile`], row panels fanned out as
+/// cooperative tasks on the shared [`DsePool`] (execution and planning
+/// draw from the same process-wide worker budget; a panel per turn
+/// keeps concurrent explorations interleaving).
+pub struct CpuBackend {
+    /// `None` routes through the process-global pool.
+    pool: Option<Arc<DsePool>>,
+    tile: usize,
+}
+
+impl Default for CpuBackend {
+    fn default() -> Self {
+        CpuBackend::new()
+    }
+}
+
+impl CpuBackend {
+    pub fn new() -> CpuBackend {
+        CpuBackend {
+            pool: None,
+            tile: CPU_TILE,
+        }
+    }
+
+    /// Route panel tasks through a dedicated pool (tests, benches).
+    pub fn with_pool(mut self, pool: Arc<DsePool>) -> CpuBackend {
+        self.pool = Some(pool);
+        self
+    }
+
+    fn pool(&self) -> &DsePool {
+        match &self.pool {
+            Some(p) => p,
+            None => DsePool::global(),
+        }
+    }
+}
+
+/// `C_tile = A_tile @ B_tile` for square `t`-tiles (overwrites `c`).
+/// Zero-padded lanes contribute nothing, so padded edge tiles are free.
+fn tile_kernel(a: &[f32], b: &[f32], t: usize, c: &mut [f32]) {
+    c.fill(0.0);
+    for i in 0..t {
+        for kk in 0..t {
+            let av = a[i * t + kk];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[kk * t..(kk + 1) * t];
+            let crow = &mut c[i * t..(i + 1) * t];
+            for (cv, bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
+/// Per-thread A/B/C tile scratch, reused across panels, jobs, and the
+/// process lifetime of whichever thread computes panels (pool workers
+/// and the executor thread) — the same TLS pattern as the DSE worker
+/// scratch, so the serving hot path allocates nothing per panel.
+#[derive(Default)]
+struct TileScratch {
+    a: Vec<f32>,
+    b: Vec<f32>,
+    c: Vec<f32>,
+}
+
+thread_local! {
+    static TILE_SCRATCH: std::cell::RefCell<TileScratch> =
+        std::cell::RefCell::new(TileScratch::default());
+}
+
+/// Compute one row panel (`rows r0 .. r0+panel_rows` of C) of the
+/// blocked product. `panel` is that slice of the output matrix.
+#[allow(clippy::too_many_arguments)]
+fn gemm_panel(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    r0: usize,
+    tile: usize,
+    panel: &mut [f32],
+) {
+    let panel_rows = (m - r0).min(tile);
+    debug_assert_eq!(panel.len(), panel_rows * n);
+    TILE_SCRATCH.with(|cell| {
+        let scratch = &mut *cell.borrow_mut();
+        // resize is a no-op after the first panel at this tile size;
+        // extract_tile and tile_kernel overwrite every lane they read.
+        scratch.a.resize(tile * tile, 0.0);
+        scratch.b.resize(tile * tile, 0.0);
+        scratch.c.resize(tile * tile, 0.0);
+        for kk in (0..k).step_by(tile) {
+            extract_tile(a, m, k, r0, kk, tile, tile, &mut scratch.a);
+            for j in (0..n).step_by(tile) {
+                extract_tile(b, k, n, kk, j, tile, tile, &mut scratch.b);
+                tile_kernel(&scratch.a, &scratch.b, tile, &mut scratch.c);
+                accumulate_tile(panel, panel_rows, n, 0, j, tile, tile, &scratch.c);
+            }
+        }
+    });
+}
+
+impl ExecBackend for CpuBackend {
+    fn name(&self) -> &'static str {
+        "cpu"
+    }
+
+    fn gemm(&self, a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Result<Vec<f32>> {
+        if a.len() != m * k || b.len() != k * n {
+            bail!("operand shapes do not match {m}x{n}x{k}");
+        }
+        let mut c = vec![0f32; m * n];
+        let tile = self.tile;
+        let n_panels = m.div_ceil(tile);
+        let serial = |c: &mut [f32]| {
+            for p in 0..n_panels {
+                let r0 = p * tile;
+                let end = ((p + 1) * tile * n).min(m * n);
+                gemm_panel(a, b, m, n, k, r0, tile, &mut c[r0 * n..end]);
+            }
+        };
+        // Decide serial vs fan-out before touching the pool, so tiny
+        // GEMMs never lazily spin up the global worker threads.
+        if n_panels <= 1 || m * n * k <= CPU_INLINE_MACS {
+            serial(&mut c);
+            return Ok(c);
+        }
+        let pool = self.pool();
+        if pool.n_threads() == 1 {
+            serial(&mut c);
+            return Ok(c);
+        }
+        // One cooperative pool turn per row panel: panels are disjoint
+        // slices of C, each claimed exactly once off the shared counter,
+        // so the result is bit-identical for any pool width.
+        let next = AtomicUsize::new(0);
+        let panics = {
+            let panels: Vec<Mutex<(usize, &mut [f32])>> = c
+                .chunks_mut(tile * n)
+                .enumerate()
+                .map(Mutex::new)
+                .collect();
+            let n_tasks = pool.n_threads().min(n_panels);
+            pool.run_scoped(n_tasks, |_| {
+                let p = next.fetch_add(1, Ordering::SeqCst);
+                if p >= n_panels {
+                    return false;
+                }
+                let mut guard = lock_unpoisoned(&panels[p]);
+                let (idx, panel) = &mut *guard;
+                gemm_panel(a, b, m, n, k, *idx * tile, tile, panel);
+                true
+            })
+        };
+        if panics > 0 {
+            bail!("cpu backend worker panicked executing {m}x{n}x{k}");
+        }
+        Ok(c)
+    }
+}
+
+/// Plan-quality evaluation as a service: real numerics via
+/// [`CpuBackend`], but the result is stamped with the [`VersalSim`]
+/// measurement of the job's selected mapping, so `exec_time`, power,
+/// and GFLOPS/W report what the plan would deliver on the VCK190.
+pub struct SimBackend {
+    cpu: CpuBackend,
+    sim: VersalSim,
+}
+
+impl SimBackend {
+    pub fn new(sim: VersalSim) -> SimBackend {
+        SimBackend {
+            cpu: CpuBackend::new(),
+            sim,
+        }
+    }
+
+    pub fn with_cpu(cpu: CpuBackend, sim: VersalSim) -> SimBackend {
+        SimBackend { cpu, sim }
+    }
+}
+
+impl ExecBackend for SimBackend {
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+
+    fn gemm(&self, a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Result<Vec<f32>> {
+        self.cpu.gemm(a, b, m, n, k)
+    }
+
+    fn board_measurement(&self, g: &Gemm, t: &Tiling) -> Option<Measurement> {
+        self.sim.evaluate(g, t, BufferPlacement::UramFirst).ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::runtime::{matmul_ref, max_abs_diff};
+    use crate::util::rng::Rng;
+
+    fn randn(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn cpu_backend_matches_reference() {
+        let cpu = CpuBackend::new();
+        let mut rng = Rng::new(11);
+        for (m, n, k) in [
+            (1, 1, 1),
+            (1, 33, 7),
+            (70, 50, 90),
+            (64, 64, 64),
+            (65, 63, 66),
+            (1, 256, 130),
+            (97, 1, 5),
+            (128, 128, 1),
+            (200, 96, 131),
+        ] {
+            let a = randn(&mut rng, m * k);
+            let b = randn(&mut rng, k * n);
+            let got = cpu.gemm(&a, &b, m, n, k).unwrap();
+            let want = matmul_ref(&a, &b, m, n, k);
+            let err = max_abs_diff(&got, &want);
+            assert!(err < 1e-3, "{m}x{n}x{k}: err {err}");
+        }
+    }
+
+    #[test]
+    fn cpu_backend_rejects_bad_shapes() {
+        let cpu = CpuBackend::new();
+        assert!(cpu.gemm(&[0.0; 10], &[0.0; 16], 4, 4, 4).is_err());
+        assert!(cpu.gemm(&[0.0; 16], &[0.0; 10], 4, 4, 4).is_err());
+    }
+
+    #[test]
+    fn cpu_backend_identical_across_pool_widths() {
+        // Panel decomposition is fixed, so any worker interleaving
+        // produces bit-identical output.
+        let mut rng = Rng::new(5);
+        let (m, n, k) = (300, 129, 170);
+        let a = randn(&mut rng, m * k);
+        let b = randn(&mut rng, k * n);
+        let base = CpuBackend::new()
+            .with_pool(Arc::new(DsePool::new(1)))
+            .gemm(&a, &b, m, n, k)
+            .unwrap();
+        for width in [2usize, 4, 8] {
+            let got = CpuBackend::new()
+                .with_pool(Arc::new(DsePool::new(width)))
+                .gemm(&a, &b, m, n, k)
+                .unwrap();
+            assert_eq!(got, base, "width {width}");
+        }
+    }
+
+    #[test]
+    fn backend_choice_parses() {
+        assert_eq!(BackendChoice::parse("auto").unwrap(), BackendChoice::Auto);
+        assert_eq!(BackendChoice::parse("pjrt").unwrap(), BackendChoice::Pjrt);
+        assert_eq!(BackendChoice::parse("cpu").unwrap(), BackendChoice::Cpu);
+        assert_eq!(BackendChoice::parse("sim").unwrap(), BackendChoice::Sim);
+        assert!(BackendChoice::parse("tpu").is_err());
+        assert_eq!(BackendChoice::default().label(), "auto");
+    }
+
+    #[test]
+    fn auto_without_artifacts_is_cpu_and_explicit_pjrt_fails_loudly() {
+        let cfg = Config::default();
+        let missing = Path::new("definitely/not/artifacts");
+        let b = make_backend(BackendChoice::Auto, Some(missing), VersalSim::new(&cfg)).unwrap();
+        assert_eq!(b.name(), "cpu");
+        let b = make_backend(BackendChoice::Auto, None, VersalSim::new(&cfg)).unwrap();
+        assert_eq!(b.name(), "cpu");
+        assert!(make_backend(BackendChoice::Pjrt, Some(missing), VersalSim::new(&cfg)).is_err());
+        assert!(make_backend(BackendChoice::Pjrt, None, VersalSim::new(&cfg)).is_err());
+    }
+
+    #[test]
+    fn sim_backend_stamps_measurement_and_matches_cpu_numerics() {
+        let cfg = Config::default();
+        let sim = SimBackend::new(VersalSim::new(&cfg));
+        assert_eq!(sim.name(), "sim");
+        let mut rng = Rng::new(9);
+        let (m, n, k) = (64, 96, 32);
+        let a = randn(&mut rng, m * k);
+        let b = randn(&mut rng, k * n);
+        let got = sim.gemm(&a, &b, m, n, k).unwrap();
+        assert!(max_abs_diff(&got, &matmul_ref(&a, &b, m, n, k)) < 1e-3);
+        let g = Gemm::new(1024, 1024, 1024);
+        let t = Tiling::new((4, 4, 2), (2, 2, 2));
+        let mea = sim.board_measurement(&g, &t).expect("buildable design");
+        assert!(mea.latency_s > 0.0 && mea.power_w > 0.0);
+        // Non-sim backends never stamp.
+        assert!(CpuBackend::new().board_measurement(&g, &t).is_none());
+    }
+
+    #[test]
+    fn supports_rejects_degenerate_dims() {
+        let cpu = CpuBackend::new();
+        assert!(cpu.supports(&Gemm::new(64, 64, 64)));
+        assert!(!cpu.supports(&Gemm::new(0, 64, 64)));
+    }
+}

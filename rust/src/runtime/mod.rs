@@ -8,6 +8,13 @@
 //! invokes the micro/macro-kernel executable per tile, and accumulates
 //! partial `T_C` tiles — exactly the role the PL plays for the AIE array
 //! on the real board (DESIGN.md §1). Python never runs here.
+//!
+//! The PJRT engine is one of several execution paths: [`backend`]
+//! abstracts it behind the [`backend::ExecBackend`] trait next to an
+//! always-available blocked CPU GEMM and a simulator-stamped variant,
+//! so the coordinator executes data jobs even when no artifacts exist.
+
+pub mod backend;
 
 use anyhow::{anyhow, bail, Context, Result};
 use std::path::{Path, PathBuf};
@@ -31,6 +38,32 @@ impl VariantMeta {
     pub fn flops(&self) -> f64 {
         2.0 * (self.m * self.n * self.k) as f64
     }
+
+    /// Dimension sanity. [`pick_variant`] divides by the block dims and
+    /// assumes they partition the tile, so a malformed manifest entry
+    /// must fail here at parse time with a clear error, not panic the
+    /// planner mid-serve.
+    pub fn validate(&self) -> Result<()> {
+        for (what, dim, block) in [
+            ("m", self.m, self.block_m),
+            ("n", self.n, self.block_n),
+            ("k", self.k, self.block_k),
+        ] {
+            if dim == 0 || block == 0 {
+                bail!(
+                    "variant `{}`: {what}={dim}, block_{what}={block} — tile and block dims must be nonzero",
+                    self.name
+                );
+            }
+            if dim % block != 0 {
+                bail!(
+                    "variant `{}`: block_{what}={block} does not divide {what}={dim}",
+                    self.name
+                );
+            }
+        }
+        Ok(())
+    }
 }
 
 /// Parsed artifact manifest.
@@ -49,7 +82,7 @@ impl Manifest {
             .ok_or_else(|| anyhow!("manifest missing `variants`"))?
             .iter()
             .map(|v| {
-                Ok(VariantMeta {
+                let meta = VariantMeta {
                     name: v.req_str("name")?.to_string(),
                     file: v.req_str("file")?.to_string(),
                     m: v.req_usize("m")?,
@@ -58,7 +91,9 @@ impl Manifest {
                     block_m: v.req_usize("block_m")?,
                     block_n: v.req_usize("block_n")?,
                     block_k: v.req_usize("block_k")?,
-                })
+                };
+                meta.validate()?;
+                Ok(meta)
             })
             .collect::<Result<Vec<_>>>()?;
         if variants.is_empty() {
@@ -88,10 +123,22 @@ impl Manifest {
 /// per-invocation charge, plus a per-*grid-step* charge — interpret-mode
 /// Pallas pays ~10us of loop overhead per 32^3 grid step, which is why
 /// the fused MXU-edge variants win whenever they fit.
+///
+/// Degenerate metas (a zero dim or block dim) are skipped rather than
+/// divided by. Callers must supply at least one valid variant —
+/// `Manifest::parse` rejects degenerate entries, so every
+/// engine-loaded manifest satisfies this; with an all-degenerate
+/// hand-built slice the fallback index 0 is returned and downstream
+/// tiling loops must not assume its dims are usable.
 pub fn pick_variant(variants: &[VariantMeta], m: usize, n: usize, k: usize) -> usize {
     let mut best = 0usize;
     let mut best_cost = f64::INFINITY;
     for (i, v) in variants.iter().enumerate() {
+        // Manifest::parse enforces nonzero dividing blocks; guard
+        // hand-constructed metas so the planner can't divide by zero.
+        if v.m == 0 || v.n == 0 || v.k == 0 || v.block_m == 0 || v.block_n == 0 || v.block_k == 0 {
+            continue;
+        }
         let padded = (m.div_ceil(v.m) * v.m) as f64
             * (n.div_ceil(v.n) * v.n) as f64
             * (k.div_ceil(v.k) * v.k) as f64;
@@ -353,6 +400,44 @@ mod tests {
         assert_eq!(m.variants[0].name, "micro_32");
         assert_eq!(m.variants[0].flops(), 2.0 * 32768.0);
         assert!(Manifest::parse(r#"{"variants": []}"#, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn manifest_rejects_malformed_block_dims() {
+        // Regression: a zero or non-dividing block dim used to sail
+        // through parsing and panic `pick_variant` in the planner.
+        let text = |m: usize, block_m: usize| {
+            format!(
+                r#"{{"variants": [{{"name": "bad", "file": "bad.hlo.txt",
+                    "m": {m}, "n": 32, "k": 32,
+                    "block_m": {block_m}, "block_n": 32, "block_k": 32}}]}}"#
+            )
+        };
+        for (m, block_m, want) in [
+            (32, 0, "nonzero"),
+            (0, 32, "nonzero"),
+            (0, 0, "nonzero"),
+            (48, 32, "does not divide"),
+        ] {
+            let err = Manifest::parse(&text(m, block_m), Path::new("/tmp"))
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains(want), "m={m} block_m={block_m}: {err}");
+            assert!(err.contains("bad"), "error names the variant: {err}");
+        }
+        // A well-formed entry still parses.
+        assert!(Manifest::parse(&text(64, 32), Path::new("/tmp")).is_ok());
+    }
+
+    #[test]
+    fn pick_variant_skips_degenerate_metas() {
+        // Hand-constructed zero-block metas are skipped, not divided by
+        // — even when the degenerate variant would otherwise have won.
+        let mut v = metas();
+        assert_eq!(v[pick_variant(&v, 128, 128, 128)].name, "tile_128");
+        v[2].block_m = 0; // tile_128
+        let idx = pick_variant(&v, 128, 128, 128);
+        assert_ne!(v[idx].name, "tile_128");
     }
 
     #[test]

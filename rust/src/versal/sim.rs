@@ -188,6 +188,29 @@ impl VersalSim {
         })
     }
 
+    /// Recompute the component power breakdown behind a measurement —
+    /// the serving executor's energy-accounting source: given the plan's
+    /// resources/duty/latency it re-derives the DDR and NoC traffic
+    /// rates and feeds them through [`power::power`], yielding the
+    /// noiseless steady power the selected mapping draws on the VCK190.
+    pub fn power_breakdown(&self, g: &Gemm, t: &Tiling, m: &Measurement) -> PowerBreakdown {
+        let micro = self.board.micro_tile;
+        let ddr_gbps = ddr::achieved_bandwidth(g, t, micro, m.latency_s) / 1e9;
+        let padded = g.padded(micro);
+        let total_micros =
+            (padded.m / micro) as f64 * (padded.n / micro) as f64 * (padded.k / micro) as f64;
+        let noc_gbps = noc::array_traffic_bytes(total_micros, &self.board) / m.latency_s / 1e9;
+        power::power(
+            &m.resources,
+            t.n_aie(),
+            m.busy,
+            ddr_gbps,
+            noc_gbps,
+            &self.board,
+            &self.sim,
+        )
+    }
+
     /// Deterministic per-design RNG: the same (workload, tiling, seed)
     /// always yields the same "measurement".
     fn design_rng(&self, g: &Gemm, t: &Tiling) -> Rng {
@@ -287,6 +310,26 @@ mod tests {
     }
 
     #[test]
+    fn power_breakdown_recovers_noiseless_power() {
+        // The serving executor's energy source: the breakdown total must
+        // equal the power the simulator composed into the measurement
+        // (exactly, for a noiseless measurement).
+        let s = sim();
+        let g = Gemm::new(1024, 1024, 1024);
+        let t = Tiling::new((4, 4, 2), (2, 2, 2));
+        let m = s.evaluate_noiseless(&g, &t, BufferPlacement::UramFirst).unwrap();
+        let pb = s.power_breakdown(&g, &t, &m);
+        assert!((pb.total() - m.power_w).abs() < 1e-9, "{} vs {}", pb.total(), m.power_w);
+        assert!(pb.static_w > 0.0 && pb.aie_w > 0.0);
+        // Noisy measurements recover the same components modulo the
+        // lognormal power noise (latency noise shifts traffic rates).
+        let noisy = s.evaluate(&g, &t, BufferPlacement::UramFirst).unwrap();
+        let pb = s.power_breakdown(&g, &t, &noisy);
+        let rel = (pb.total() - noisy.power_w).abs() / noisy.power_w;
+        assert!(rel < 0.2, "rel {rel}");
+    }
+
+    #[test]
     fn latency_parts_sum_consistency() {
         let g = Gemm::new(1024, 1024, 1024);
         let t = Tiling::new((4, 4, 2), (2, 2, 2));
@@ -312,13 +355,18 @@ mod tests {
             })
             .collect();
         assert!(measured.len() > 100);
+        // NaN-safe best-design selection: non-finite measurements are
+        // filtered before the total_cmp max (a bare total_cmp max_by
+        // would let a NaN win; the old partial_cmp().unwrap() panicked).
         let best_thr = measured
             .iter()
-            .max_by(|a, b| a.1.gflops.partial_cmp(&b.1.gflops).unwrap())
+            .filter(|c| c.1.gflops.is_finite())
+            .max_by(|a, b| a.1.gflops.total_cmp(&b.1.gflops))
             .unwrap();
         let best_eff = measured
             .iter()
-            .max_by(|a, b| a.1.energy_eff.partial_cmp(&b.1.energy_eff).unwrap())
+            .filter(|c| c.1.energy_eff.is_finite())
+            .max_by(|a, b| a.1.energy_eff.total_cmp(&b.1.energy_eff))
             .unwrap();
         assert_ne!(best_thr.0, best_eff.0, "no energy/perf trade-off found");
         assert!(best_eff.1.resources.bram <= best_thr.1.resources.bram * 4);

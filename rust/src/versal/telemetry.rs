@@ -110,6 +110,32 @@ impl BeamSession {
             period_s: 1.0 / self.sample_rate_hz,
         }
     }
+
+    /// Synthesize the power trace of one *executed serving job*: a
+    /// steady draw of `steady_w` over `duration_s`, with the session's
+    /// AR(1) supply noise. Sampled at the session rate but never fewer
+    /// than 8 samples, so the coordinator's energy integral
+    /// (`JobResult::energy_j = ∫ trace`) stays meaningful for
+    /// sub-100-ms host executions. Deterministic per `design_key`.
+    pub fn execution_trace(&self, steady_w: f64, duration_s: f64, design_key: u64) -> PowerTrace {
+        let duration_s = if duration_s.is_finite() && duration_s > 0.0 {
+            duration_s
+        } else {
+            1.0 / self.sample_rate_hz
+        };
+        let n = ((duration_s * self.sample_rate_hz).ceil() as usize).clamp(8, 4096);
+        let mut rng = Rng::new(fnv1a(&design_key.to_le_bytes()) ^ 0xE4EC_E4EC);
+        let mut ar = 0.0f64;
+        let mut samples = Vec::with_capacity(n);
+        for _ in 0..n {
+            ar = self.ar_coeff * ar + self.noise_w * rng.normal();
+            samples.push((steady_w + ar).max(0.0));
+        }
+        PowerTrace {
+            samples,
+            period_s: duration_s / n as f64,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -165,6 +191,30 @@ mod tests {
         let e = trace.energy_j();
         assert!((e - trace.mean() * trace.duration_s()).abs() < 1e-9);
         assert!((trace.duration_s() - 60.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn execution_trace_integrates_to_steady_energy() {
+        let session = BeamSession::default();
+        // Long execution: sampled at the session rate.
+        let t = session.execution_trace(30.0, 2.0, 42);
+        assert!((t.duration_s() - 2.0).abs() < 1e-9);
+        assert_eq!(t.samples.len(), 20);
+        let e = t.energy_j();
+        assert!((e - 60.0).abs() / 60.0 < 0.1, "energy {e} vs ~60 J");
+        // Sub-sample-period execution still integrates over >= 8 samples.
+        let tiny = session.execution_trace(20.0, 1e-4, 7);
+        assert_eq!(tiny.samples.len(), 8);
+        assert!((tiny.duration_s() - 1e-4).abs() < 1e-12);
+        let e = tiny.energy_j();
+        assert!((e - 20.0 * 1e-4).abs() / (20.0 * 1e-4) < 0.2, "tiny energy {e}");
+        // Deterministic per design key; degenerate durations don't panic.
+        assert_eq!(
+            session.execution_trace(30.0, 0.5, 3),
+            session.execution_trace(30.0, 0.5, 3)
+        );
+        assert!(session.execution_trace(30.0, 0.0, 3).energy_j().is_finite());
+        assert!(session.execution_trace(30.0, f64::NAN, 3).energy_j().is_finite());
     }
 
     #[test]

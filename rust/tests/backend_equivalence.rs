@@ -1,0 +1,221 @@
+//! Backend-equivalence suite: the pluggable execution backends must
+//! agree with the reference GEMM, `auto` selection must fall back to
+//! the CPU backend whenever PJRT artifacts are absent (the default in
+//! CI and offline checkouts), and every executed job's energy
+//! accounting must be finite and internally consistent.
+
+use std::sync::Arc;
+
+use versal_gemm::config::Config;
+use versal_gemm::coordinator::{
+    BackendChoice, Coordinator, CoordinatorOptions, GemmJob, JobResult,
+};
+use versal_gemm::dataset::Dataset;
+use versal_gemm::dse::{DseEngine, DsePool, Objective};
+use versal_gemm::features::FeatureSet;
+use versal_gemm::models::Predictors;
+use versal_gemm::runtime::backend::{CpuBackend, ExecBackend, SimBackend};
+use versal_gemm::runtime::{matmul_ref, max_abs_diff};
+use versal_gemm::util::rng::Rng;
+use versal_gemm::versal::VersalSim;
+use versal_gemm::workloads::{training_workloads, Gemm};
+
+fn quick_cfg() -> Config {
+    let mut cfg = Config::default();
+    cfg.dataset.top_k = 10;
+    cfg.dataset.bottom_k = 6;
+    cfg.dataset.random_k = 30;
+    cfg.train.n_trees = 60;
+    cfg.train.learning_rate = 0.2;
+    cfg
+}
+
+fn dse_engine(cfg: &Config) -> DseEngine {
+    let wl: Vec<_> = training_workloads().into_iter().take(4).collect();
+    let ds = Dataset::generate(cfg, &wl);
+    DseEngine::new(Predictors::train(&ds, cfg, FeatureSet::SetIAndII), &cfg.board)
+}
+
+fn randn(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() as f32).collect()
+}
+
+/// Assert the energy triple is present, finite, and mutually
+/// consistent: `energy_j ≈ avg_power_w * exec_time` and
+/// `gflops_per_w ≈ executed GFLOP/s ÷ avg power`.
+fn assert_energy_consistent(r: &JobResult) {
+    let exec = r.exec_time.expect("executed").as_secs_f64();
+    assert!(exec > 0.0);
+    let energy = r.energy_j.expect("energy_j");
+    let avg_w = r.avg_power_w.expect("avg_power_w");
+    let gpw = r.gflops_per_w.expect("gflops_per_w");
+    assert!(energy.is_finite() && energy > 0.0, "energy {energy}");
+    assert!(avg_w.is_finite() && avg_w > 0.0, "avg power {avg_w}");
+    assert!(gpw.is_finite() && gpw > 0.0, "gflops/W {gpw}");
+    let drift = (energy - avg_w * exec).abs() / energy;
+    assert!(drift < 1e-9, "energy {energy} != {avg_w} W * {exec} s ({drift})");
+    let want_gpw = r.gemm.flops() / exec / 1e9 / avg_w;
+    assert!(
+        (gpw - want_gpw).abs() / want_gpw < 1e-9,
+        "gflops_per_w {gpw} != {want_gpw}"
+    );
+}
+
+#[test]
+fn cpu_backend_tolerance_matches_reference_across_uneven_shapes() {
+    // Non-multiples of the 64-tile, degenerate m=1 / n=1 / k=1 edges,
+    // and shapes that span several row panels.
+    let cpu = CpuBackend::new();
+    let mut rng = Rng::new(2024);
+    for (m, n, k) in [
+        (1, 1, 1),
+        (1, 33, 7),
+        (97, 1, 5),
+        (70, 50, 90),
+        (63, 65, 64),
+        (1, 896, 896),
+        (130, 257, 66),
+        (197, 128, 1),
+    ] {
+        let a = randn(&mut rng, m * k);
+        let b = randn(&mut rng, k * n);
+        let got = cpu.gemm(&a, &b, m, n, k).unwrap();
+        let want = matmul_ref(&a, &b, m, n, k);
+        let err = max_abs_diff(&got, &want);
+        assert!(err < 1e-3, "{m}x{n}x{k}: err {err}");
+    }
+}
+
+#[test]
+fn cpu_backend_bit_identical_across_pool_widths_and_exact_on_integers() {
+    // Integer-valued operands make the blocked accumulation exact, so
+    // the backend must *bit*-match the reference, at every pool width.
+    let (m, n, k) = (200, 96, 131);
+    let a: Vec<f32> = (0..m * k).map(|i| ((i * 7 % 13) as f32) - 6.0).collect();
+    let b: Vec<f32> = (0..k * n).map(|i| ((i * 5 % 11) as f32) - 5.0).collect();
+    let want = matmul_ref(&a, &b, m, n, k);
+    for width in [1usize, 2, 8] {
+        let cpu = CpuBackend::new().with_pool(Arc::new(DsePool::new(width)));
+        let got = cpu.gemm(&a, &b, m, n, k).unwrap();
+        assert_eq!(got, want, "width {width}");
+    }
+}
+
+#[test]
+fn auto_selection_falls_back_to_cpu_when_artifacts_are_absent() {
+    // The acceptance case: artifacts directory configured but missing
+    // (every CI/offline checkout) — the data job must complete via the
+    // CPU backend with full energy accounting, not die with "no
+    // artifact engine".
+    let cfg = quick_cfg();
+    let missing = std::env::temp_dir().join("versal_gemm_no_such_artifacts");
+    let _ = std::fs::remove_dir_all(&missing);
+    let mut coord = Coordinator::start(&cfg, dse_engine(&cfg), Some(missing), 2);
+    let g = Gemm::new(96, 160, 64);
+    let mut rng = Rng::new(5);
+    let a = randn(&mut rng, g.m * g.k);
+    let b = randn(&mut rng, g.k * g.n);
+    let mut job = GemmJob::with_data(0, g, Objective::EnergyEfficiency, a.clone(), b.clone());
+    job.validate = true;
+    let results = coord.run_batch(vec![job]);
+    assert_eq!(results.len(), 1);
+    let r = &results[0];
+    assert!(r.error.is_none(), "auto fallback failed: {:?}", r.error);
+    assert_eq!(coord.backend_name(), "cpu");
+    assert!(r.plan.is_some());
+    assert!(r.validation_err.expect("validated") < 1e-3);
+    assert_eq!(r.c.as_deref().map(|c| c.len()), Some(g.m * g.n));
+    assert_energy_consistent(r);
+    let s = coord.stats();
+    assert_eq!((s.executed_jobs, s.jobs_completed), (1, 1));
+    assert!(s.executed_energy_j > 0.0 && s.executed_gflops_per_w > 0.0);
+}
+
+#[test]
+fn executed_energy_fields_consistent_across_a_batch() {
+    let cfg = quick_cfg();
+    let opts = CoordinatorOptions {
+        backend: BackendChoice::Cpu,
+        ..CoordinatorOptions::default()
+    };
+    let mut coord = Coordinator::start_with(&cfg, dse_engine(&cfg), None, 2, opts);
+    let mut rng = Rng::new(7);
+    let jobs: Vec<GemmJob> = (0..6u64)
+        .map(|i| {
+            let g = Gemm::new(64 * (1 + i as usize % 3), 128, 96);
+            let a = randn(&mut rng, g.m * g.k);
+            let b = randn(&mut rng, g.k * g.n);
+            GemmJob::with_data(i, g, Objective::Throughput, a, b)
+        })
+        .collect();
+    let results = coord.run_batch(jobs);
+    assert_eq!(results.len(), 6);
+    let mut total_energy = 0.0;
+    for r in &results {
+        assert!(r.error.is_none(), "job {}: {:?}", r.id, r.error);
+        assert_energy_consistent(r);
+        total_energy += r.energy_j.unwrap();
+    }
+    let s = coord.stats();
+    assert!((s.executed_energy_j - total_energy).abs() / total_energy < 1e-9);
+    assert!(s.executed_gflops_per_w > 0.0);
+}
+
+#[test]
+fn sim_backend_serves_plan_quality_measurements() {
+    // `--backend sim`: numerics via the CPU path, but exec_time/power
+    // are the simulated VCK190 measurement of the selected mapping.
+    let cfg = quick_cfg();
+    let opts = CoordinatorOptions {
+        backend: BackendChoice::Sim,
+        ..CoordinatorOptions::default()
+    };
+    let mut coord = Coordinator::start_with(&cfg, dse_engine(&cfg), None, 2, opts);
+    let g = Gemm::new(256, 512, 256);
+    let mut rng = Rng::new(11);
+    let a = randn(&mut rng, g.m * g.k);
+    let b = randn(&mut rng, g.k * g.n);
+    let mut job = GemmJob::with_data(0, g, Objective::Throughput, a, b);
+    job.validate = true;
+    let results = coord.run_batch(vec![job]);
+    assert_eq!(results.len(), 1);
+    let r = &results[0];
+    assert!(r.error.is_none(), "sim backend failed: {:?}", r.error);
+    assert_eq!(coord.backend_name(), "sim");
+    assert!(r.validation_err.expect("validated") < 1e-3);
+    assert_energy_consistent(r);
+    // The stamped execution time is the plan's simulated board latency,
+    // not host wall-clock.
+    let plan = r.plan.expect("plan");
+    let exec = r.exec_time.unwrap().as_secs_f64();
+    let sim = VersalSim::new(&cfg);
+    let mea = sim
+        .evaluate(
+            &g,
+            &plan.tiling,
+            versal_gemm::versal::BufferPlacement::UramFirst,
+        )
+        .expect("plan was buildable");
+    // Duration has ns resolution, so allow the rounding of
+    // from_secs_f64 on a ~100 µs latency.
+    assert!(
+        (exec - mea.latency_s).abs() / mea.latency_s < 1e-4,
+        "exec {exec} != simulated latency {}",
+        mea.latency_s
+    );
+    assert!((r.avg_power_w.unwrap() - mea.power_w).abs() / mea.power_w < 0.25);
+}
+
+#[test]
+fn sim_backend_direct_trait_surface() {
+    let cfg = quick_cfg();
+    let sim = SimBackend::new(VersalSim::new(&cfg));
+    assert_eq!(sim.name(), "sim");
+    assert!(sim.supports(&Gemm::new(64, 64, 64)));
+    let mut rng = Rng::new(13);
+    let (m, n, k) = (64, 70, 33);
+    let a = randn(&mut rng, m * k);
+    let b = randn(&mut rng, k * n);
+    let got = sim.gemm(&a, &b, m, n, k).unwrap();
+    assert!(max_abs_diff(&got, &matmul_ref(&a, &b, m, n, k)) < 1e-3);
+}

@@ -21,7 +21,8 @@ use versal_gemm::workloads::{training_workloads, Gemm};
 
 /// The AOT artifacts and a linked PJRT runtime are optional in the
 /// offline environment: when either is missing these integration tests
-/// skip (plan-only coordination is covered by `coordinator_props`).
+/// skip (the always-available CPU execution backend is covered by
+/// `backend_equivalence`, plan coordination by `coordinator_props`).
 fn engine() -> Option<GemmEngine> {
     let p = Path::new("artifacts");
     if !p.join("manifest.json").exists() {

@@ -3,11 +3,13 @@
 //! The real crate links libxla and compiles AOT HLO artifacts on the
 //! PJRT CPU client. The offline crate set cannot link it, so this stub
 //! mirrors the API surface `versal_gemm::runtime` uses and fails at
-//! [`PjRtClient::cpu`] with a descriptive error. Callers already treat
-//! a failed client/engine load as "execution disabled, plan-only mode",
-//! so the rest of the framework (DSE, coordinator planning, simulator,
-//! reports) runs unaffected. Swap this path dependency for the real
-//! `xla` crate to enable the PJRT execution path.
+//! [`PjRtClient::cpu`] with a descriptive error. A failed client/engine
+//! load makes the coordinator's `auto` backend selection fall back to
+//! the always-available CPU execution backend
+//! (`runtime::backend::CpuBackend`), so the full framework — DSE,
+//! coordinator planning *and* data-job execution, simulator, reports —
+//! runs unaffected. Swap this path dependency for the real `xla` crate
+//! to enable the PJRT execution path.
 
 /// Error type mirroring xla-rs's; only ever Debug/Display-formatted.
 #[derive(Debug, Clone)]
