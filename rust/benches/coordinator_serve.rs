@@ -19,7 +19,9 @@ use versal_gemm::dse::Objective;
 use versal_gemm::features::FeatureSet;
 use versal_gemm::models::Predictors;
 use versal_gemm::report::Lab;
+use versal_gemm::server::safe_rate;
 use versal_gemm::util::bench::once;
+use versal_gemm::util::json::{num, obj, s};
 use versal_gemm::workloads::{training_workloads, Gemm};
 
 fn main() -> anyhow::Result<()> {
@@ -72,6 +74,7 @@ fn main() -> anyhow::Result<()> {
     };
     let cold_jobs: Vec<GemmJob> = (0..8u64).map(job_at).collect();
     let warm_jobs: Vec<GemmJob> = (8..200u64).map(job_at).collect();
+    let serving_started = std::time::Instant::now();
     let mut results = once("serve 8 cold plan jobs (8 unique plans)", || {
         coord.run_batch(cold_jobs)
     });
@@ -190,6 +193,37 @@ fn main() -> anyhow::Result<()> {
             burst_wall <= lead_s * 2.0 + 0.05,
             "burst wall {burst_wall:.3}s not ~1 cold plan ({lead_s:.3}s)"
         );
+    }
+    // Perf record (ROADMAP "missing perf record"): persist the smoke
+    // numbers so CI runs leave a diffable snapshot at the repo root.
+    if smoke {
+        let final_stats = coord.stats();
+        let wall = serving_started.elapsed().as_secs_f64();
+        let total_jobs = results.len() + burst_results.len();
+        let snapshot = obj(vec![
+            ("bench", s("coordinator_serve")),
+            ("mode", s("smoke")),
+            ("jobs", num(total_jobs as f64)),
+            ("wall_s", num(wall)),
+            ("jobs_per_s", num(safe_rate(total_jobs as f64, wall))),
+            ("plans_per_s", num(safe_rate(final_stats.cache_misses as f64, wall))),
+            ("cold_plan_ms", num(cold_med * 1e3)),
+            ("warm_plan_us", num(warm_med * 1e6)),
+            ("plan_p50_ms", num(final_stats.plan_p50_ms)),
+            ("burst_wall_ms", num(burst_wall * 1e3)),
+            ("burst_leader_ms", num(lead_s * 1e3)),
+            ("cache_hits", num(final_stats.cache_hits as f64)),
+            ("cache_misses", num(final_stats.cache_misses as f64)),
+            ("cache_hit_rate", num(final_stats.cache_hit_rate)),
+            ("coalesced_plans", num(final_stats.coalesced_plans as f64)),
+            ("queue_depth_peak", num(final_stats.queue_depth_peak as f64)),
+            ("executed_jobs", num(final_stats.executed_jobs as f64)),
+            ("executed_energy_j", num(final_stats.executed_energy_j)),
+            ("executed_gflops_per_w", num(final_stats.executed_gflops_per_w)),
+            ("simulated_energy_j", num(final_stats.simulated_energy_j)),
+        ]);
+        std::fs::write("BENCH_serve.json", snapshot.to_string_pretty())?;
+        println!("\nwrote BENCH_serve.json ({total_jobs} jobs in {wall:.2}s)");
     }
     coord.shutdown();
     Ok(())

@@ -382,6 +382,10 @@ pub struct Coordinator {
     /// a result.
     rejected: VecDeque<JobResult>,
     pending: u64,
+    /// Drain mode (`begin_drain`): admission is closed — new submits are
+    /// refused — while in-flight jobs run to completion. The serving
+    /// daemon's ready → draining transition maps onto this flag.
+    draining: bool,
 }
 
 impl Coordinator {
@@ -621,6 +625,7 @@ impl Coordinator {
             cache_path: options.cache_path,
             rejected: VecDeque::new(),
             pending: 0,
+            draining: false,
         }
     }
 
@@ -642,6 +647,10 @@ impl Coordinator {
     /// thread, and completes from the single shared exploration.
     pub fn submit(&mut self, job: GemmJob) {
         self.pending += 1;
+        if self.draining {
+            self.refuse(job, "coordinator draining: admission closed");
+            return;
+        }
         let Some(tx) = self.job_tx.clone() else {
             self.refuse(job, "coordinator already shut down");
             return;
@@ -698,6 +707,79 @@ impl Coordinator {
                 Some(r)
             }
             Err(_) => None,
+        }
+    }
+
+    /// Nonblocking counterpart of `next_result`: a completed job if one
+    /// is ready, `None` otherwise (including when nothing is pending).
+    /// The daemon tick loop polls this between socket sweeps.
+    pub fn try_next_result(&mut self) -> Option<JobResult> {
+        if self.pending == 0 {
+            return None;
+        }
+        if let Some(r) = self.rejected.pop_front() {
+            self.pending -= 1;
+            return Some(r);
+        }
+        match self.result_rx.try_recv() {
+            Ok(r) => {
+                self.pending -= 1;
+                Some(r)
+            }
+            Err(_) => None,
+        }
+    }
+
+    /// Enter drain mode: admission closes (subsequent `submit`s are
+    /// refused with an error result) while everything already admitted
+    /// — queued, parked, or executing — runs to completion. Unlike
+    /// `shutdown` this raises no cancellation: in-flight explorations
+    /// finish and their plans land in the cache, so a drain-then-persist
+    /// sequence warm-starts the next process.
+    pub fn begin_drain(&mut self) {
+        self.draining = true;
+    }
+
+    pub fn is_draining(&self) -> bool {
+        self.draining
+    }
+
+    /// Results still owed to callers (submitted minus delivered).
+    pub fn pending(&self) -> u64 {
+        self.pending
+    }
+
+    /// Whether one more admitted job would fit without blocking.
+    pub fn queue_room(&self) -> bool {
+        self.gauge.depth() < self.gauge.limit()
+    }
+
+    /// Configured full-queue policy (Block | Reject).
+    pub fn admission(&self) -> Admission {
+        self.gauge.policy()
+    }
+
+    /// Persist the plan cache now, without shutting down. Returns true
+    /// when a cache path is configured and the save succeeded; used by
+    /// the daemon's drain path so an interrupt after drain still leaves
+    /// a warm-startable cache even if the process dies before `shutdown`.
+    pub fn persist_cache(&self) -> bool {
+        let Some(path) = &self.cache_path else {
+            return false;
+        };
+        match self.cache.save(path) {
+            Ok(()) => {
+                eprintln!(
+                    "coordinator: persisted {} cached plans to {}",
+                    self.cache.len(),
+                    path.display()
+                );
+                true
+            }
+            Err(e) => {
+                eprintln!("coordinator: failed to persist plan cache: {e}");
+                false
+            }
         }
     }
 
@@ -810,15 +892,9 @@ impl Coordinator {
             self.gauge.release(1);
             self.refuse(pj.job, "coordinator shut down while plan was in flight");
         }
-        if let Some(path) = self.cache_path.take() {
-            match self.cache.save(&path) {
-                Ok(()) => eprintln!(
-                    "coordinator: persisted {} cached plans to {}",
-                    self.cache.len(),
-                    path.display()
-                ),
-                Err(e) => eprintln!("coordinator: failed to persist plan cache: {e}"),
-            }
+        if self.cache_path.is_some() {
+            self.persist_cache();
+            self.cache_path = None;
         }
     }
 }
@@ -1120,6 +1196,73 @@ mod tests {
         // Ids are returned sorted by run_batch.
         let ids: Vec<u64> = results.iter().map(|r| r.id).collect();
         assert_eq!(ids, vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn drain_closes_admission_and_finishes_in_flight() {
+        let cfg = quick_cfg();
+        let mut coord = coordinator(&cfg);
+        for i in 0..4u64 {
+            coord.submit(GemmJob::plan_only(
+                i,
+                Gemm::new(256 * (1 + (i as usize % 2)), 1024, 512),
+                Objective::Throughput,
+            ));
+        }
+        coord.begin_drain();
+        assert!(coord.is_draining());
+        // Post-drain submit is refused with an error result, but the
+        // four admitted jobs still complete with real plans.
+        coord.submit(GemmJob::plan_only(
+            99,
+            Gemm::new(768, 1024, 512),
+            Objective::Throughput,
+        ));
+        let mut ok = 0;
+        let mut refused = 0;
+        while let Some(r) = coord.next_result() {
+            if r.id == 99 {
+                let err = r.error.as_deref().unwrap_or("");
+                assert!(err.contains("draining"), "unexpected error: {err}");
+                refused += 1;
+            } else {
+                assert!(r.error.is_none(), "job {} failed: {:?}", r.id, r.error);
+                assert!(r.plan.is_some());
+                ok += 1;
+            }
+        }
+        assert_eq!((ok, refused), (4, 1));
+        assert_eq!(coord.pending(), 0);
+    }
+
+    #[test]
+    fn try_next_result_is_nonblocking() {
+        let cfg = quick_cfg();
+        let mut coord = coordinator(&cfg);
+        // Nothing pending: immediate None.
+        assert!(coord.try_next_result().is_none());
+        coord.submit(GemmJob::plan_only(
+            1,
+            Gemm::new(512, 1024, 512),
+            Objective::Throughput,
+        ));
+        // Poll until the planner finishes; each call must return fast.
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(60);
+        let r = loop {
+            let t = std::time::Instant::now();
+            let polled = coord.try_next_result();
+            assert!(
+                t.elapsed() < std::time::Duration::from_secs(5),
+                "try_next_result blocked"
+            );
+            if let Some(r) = polled {
+                break r;
+            }
+            assert!(std::time::Instant::now() < deadline, "job never completed");
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        };
+        assert!(r.error.is_none());
+        assert_eq!(coord.pending(), 0);
     }
 
     #[test]

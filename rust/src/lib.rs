@@ -19,10 +19,11 @@
 //! See `DESIGN.md` (repo root) for the system inventory, the
 //! DSE→coordinator planning-path diagram (bounded admission,
 //! single-flight plan coalescing, and the sharded plan cache), the
-//! execution-backend layer and its energy formula (§3), the compiled
-//! forest-inference engine (§4: the arena layout and row-blocked
-//! traversal behind `Predictors::predict_rows`), and the
-//! per-figure/table experiment index.
+//! execution-backend layer and its energy formula (§3), the serving
+//! daemon and its wire protocol (§4), the compiled forest-inference
+//! engine (§5: the arena layout and row-blocked traversal behind
+//! `Predictors::predict_rows`), and the per-figure/table experiment
+//! index.
 
 pub mod analytical;
 pub mod coordinator;
@@ -36,6 +37,7 @@ pub mod metrics;
 pub mod models;
 pub mod report;
 pub mod runtime;
+pub mod server;
 pub mod tiling;
 pub mod util;
 pub mod versal;

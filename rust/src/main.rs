@@ -4,7 +4,7 @@
 //! * `dataset`  — offline phase: generate the ~6000-design dataset;
 //! * `train`    — fit the L/P/R GBDT models (optionally with search);
 //! * `dse`      — online phase: Pareto-optimal mapping for one GEMM;
-//! * `report`   — regenerate any paper figure/table (see DESIGN.md §6);
+//! * `report`   — regenerate any paper figure/table (see DESIGN.md §7);
 //! * `serve`    — boot the coordinator and stream GEMM jobs through the
 //!   selected execution backend (PJRT over the AOT Pallas kernels when
 //!   artifacts exist, the blocked CPU GEMM otherwise, or the VCK190
@@ -12,15 +12,20 @@
 //! * `validate` — numerics check of the PJRT runtime vs the reference.
 
 use std::path::PathBuf;
+use std::time::{Duration, Instant};
 
 use versal_gemm::config::Config;
-use versal_gemm::coordinator::{Admission, BackendChoice, Coordinator, CoordinatorOptions, GemmJob};
+use versal_gemm::coordinator::{Admission, BackendChoice, Coordinator, CoordinatorOptions};
 use versal_gemm::dataset::Dataset;
 use versal_gemm::dse::Objective;
 use versal_gemm::features::FeatureSet;
 use versal_gemm::models::Predictors;
 use versal_gemm::report::{render, Lab};
 use versal_gemm::runtime::{matmul_ref, max_abs_diff, GemmEngine};
+use versal_gemm::server::client::Client;
+use versal_gemm::server::daemon::{Daemon, DaemonOptions};
+use versal_gemm::server::state::{self, StateFile};
+use versal_gemm::server::{demo_job_specs, demo_jobs, safe_rate, Endpoint};
 use versal_gemm::util::cli::Args;
 use versal_gemm::util::rng::Rng;
 use versal_gemm::versal::{BufferPlacement, VersalSim};
@@ -38,9 +43,26 @@ SUBCOMMANDS:
   dse       --gemm MxNxK [--objective throughput|energy] [--data-dir data]
   report    <fig1|fig3|fig4|fig6|fig7|fig8|fig9|fig10|table2|table3|model-quality|all>
             [--data-dir data] [--out file]
-  serve     [--jobs N] [--artifacts artifacts] [--data-dir data]
+  serve     run the demo job stream through an in-process coordinator
+            (drains + persists the plan cache on SIGINT/SIGTERM), or
+            manage the socket daemon via an action:
+    serve start    spawn the daemon in the background, wait until ready
+    serve run      run the daemon in the foreground (what `start` spawns)
+    serve stop     graceful shutdown (drain, persist cache, exit)
+    serve status   PID + live stats of the running daemon
+    serve submit   push --jobs N demo jobs through the socket client
+    serve drain    close admission, finish in-flight, persist the cache
+  serve options:
+            [--jobs N] [--plan-only] [--artifacts artifacts] [--data-dir data]
+            [--state-dir DIR]          daemon state/log/socket dir
+                                       (default: .versal-gemm)
+            [--socket path|tcp://host:port] daemon endpoint
+                                       (default: <state-dir>/daemon.sock)
+            [--force]                  take over a live daemon (start/run)
+            [--quick-lab]              small in-memory dataset/model (CI smoke)
             [--planners N] [--cache-shards N] [--cache-capacity N]
-            [--plan-cache file.json]   persist/warm the plan cache across restarts
+            [--plan-cache file.json|none] persist/warm the plan cache
+                                       (daemon default: <state-dir>/plan-cache.json)
             [--max-queue N]            bound on queued + coalesced-parked jobs
             [--admission block|reject] full-queue policy (default: block)
             [--dse-threads N]          width of the process-wide DSE worker pool
@@ -209,14 +231,48 @@ fn cmd_report(args: &Args, cfg: Config, data_dir: PathBuf) -> anyhow::Result<()>
 }
 
 fn cmd_serve(args: &Args, cfg: Config, data_dir: PathBuf) -> anyhow::Result<()> {
-    let n_jobs = args.opt_usize("jobs", 24)?;
-    let artifacts = PathBuf::from(args.opt_or("artifacts", "artifacts"));
-    let n_planners = args.opt_usize("planners", 2)?;
+    match args.positional.first().map(String::as_str) {
+        None => serve_inline(args, cfg, data_dir),
+        Some("start") => serve_start(args),
+        Some("run") => serve_run(args, cfg, data_dir),
+        Some("stop") => serve_stop(args),
+        Some("status") => serve_status(args),
+        Some("submit") => serve_submit(args),
+        Some("drain") => serve_drain(args),
+        Some(other) => anyhow::bail!(
+            "unknown serve action `{other}` (start|run|stop|status|submit|drain, \
+             or no action for the in-process demo stream)"
+        ),
+    }
+}
+
+/// Daemon state directory and socket endpoint from the common options.
+fn serve_paths(args: &Args) -> (PathBuf, Endpoint) {
+    let state_dir = PathBuf::from(args.opt_or("state-dir", ".versal-gemm"));
+    let endpoint = match args.opt("socket") {
+        Some(text) => Endpoint::parse(text),
+        None => Endpoint::Unix(state_dir.join("daemon.sock")),
+    };
+    (state_dir, endpoint)
+}
+
+/// Coordinator options shared by the inline path and the daemon.
+/// `default_cache` is the plan-cache path used when `--plan-cache` is
+/// absent (`--plan-cache none` disables persistence entirely).
+fn coordinator_options(
+    args: &Args,
+    default_cache: Option<PathBuf>,
+) -> anyhow::Result<CoordinatorOptions> {
     let defaults = CoordinatorOptions::default();
-    let options = CoordinatorOptions {
+    let cache_path = match args.opt("plan-cache") {
+        Some("none") => None,
+        Some(p) => Some(PathBuf::from(p)),
+        None => default_cache,
+    };
+    Ok(CoordinatorOptions {
         n_shards: args.opt_usize("cache-shards", defaults.n_shards)?,
         cache_capacity: args.opt_usize("cache-capacity", defaults.cache_capacity)?,
-        cache_path: args.opt("plan-cache").map(PathBuf::from),
+        cache_path,
         max_queue_depth: args.opt_usize("max-queue", defaults.max_queue_depth)?,
         admission: match args.opt("admission") {
             Some(text) => Admission::parse(text)?,
@@ -227,36 +283,71 @@ fn cmd_serve(args: &Args, cfg: Config, data_dir: PathBuf) -> anyhow::Result<()> 
             n => Some(n),
         },
         backend: BackendChoice::parse(args.opt_or("backend", "auto"))?,
-    };
+    })
+}
+
+/// Small in-memory lab (reduced dataset/model) for CI smoke runs —
+/// mirrors the `--smoke` configuration of `benches/coordinator_serve`.
+fn quick_lab() -> Lab {
+    let mut cfg = Config::default();
+    cfg.dataset.top_k = 12;
+    cfg.dataset.bottom_k = 8;
+    cfg.dataset.random_k = 60;
+    cfg.train.n_trees = 120;
+    cfg.train.learning_rate = 0.15;
+    let ds = Dataset::generate(&cfg, &training_workloads());
+    let predictors = Predictors::train(&ds, &cfg, FeatureSet::SetIAndII);
+    Lab::in_memory(cfg, ds, predictors)
+}
+
+/// `serve` with no action: the demo job stream through an in-process
+/// coordinator. SIGINT/SIGTERM route through the drain path — submits
+/// stop, in-flight jobs finish, the plan cache persists, and the final
+/// summary reflects what actually ran (a second signal cancels hard).
+fn serve_inline(args: &Args, cfg: Config, data_dir: PathBuf) -> anyhow::Result<()> {
+    let n_jobs = args.opt_usize("jobs", 24)?;
+    let artifacts = PathBuf::from(args.opt_or("artifacts", "artifacts"));
+    let n_planners = args.opt_usize("planners", 2)?;
+    let options = coordinator_options(args, None)?;
     let lab = Lab::prepare(cfg.clone(), data_dir)?;
-    let engine = lab.engine();
-    let mut coord = Coordinator::start_with(&cfg, engine, Some(artifacts), n_planners, options);
+    let mut coord =
+        Coordinator::start_with(&cfg, lab.engine(), Some(artifacts), n_planners, options);
+
+    state::install_signal_handlers();
+    let sig0 = state::signals_received();
 
     // A small LLM-inference-like job stream over the eval workloads.
-    let wl = eval_workloads();
-    let mut rng = Rng::new(2025);
-    let mut jobs = Vec::new();
-    for i in 0..n_jobs {
-        let w = &wl[rng.below(6)]; // small/medium layers for quick serving
-        let g = w.gemm;
-        let a: Vec<f32> = (0..g.m * g.k).map(|_| rng.normal() as f32).collect();
-        let b: Vec<f32> = (0..g.k * g.n).map(|_| rng.normal() as f32).collect();
-        let mut job = GemmJob::with_data(
-            i as u64,
-            g,
-            if i % 2 == 0 {
-                Objective::Throughput
-            } else {
-                Objective::EnergyEfficiency
-            },
-            a,
-            b,
-        );
-        job.validate = i % 5 == 0;
-        jobs.push(job);
+    let jobs = demo_jobs(n_jobs, false);
+    let total = jobs.len();
+    let started = Instant::now();
+    let mut results = Vec::with_capacity(total);
+    let mut interrupted = false;
+    for job in jobs {
+        if state::signals_received() > sig0 {
+            interrupted = true;
+            break;
+        }
+        coord.submit(job);
+        while let Some(r) = coord.try_next_result() {
+            results.push(r);
+        }
     }
-    let started = std::time::Instant::now();
-    let results = coord.run_batch(jobs);
+    if interrupted {
+        eprintln!("serve: interrupted — draining in-flight jobs");
+        coord.begin_drain();
+    }
+    let mut cancelled = false;
+    while coord.pending() > 0 {
+        if !cancelled && state::signals_received() > sig0 + 1 {
+            eprintln!("serve: second signal — cancelling in-flight work");
+            coord.shutdown(); // remaining jobs surface as error results
+            cancelled = true;
+        }
+        match coord.try_next_result() {
+            Some(r) => results.push(r),
+            None => std::thread::sleep(Duration::from_millis(2)),
+        }
+    }
     let wall = started.elapsed();
     let mut ok = 0usize;
     for r in &results {
@@ -271,8 +362,9 @@ fn cmd_serve(args: &Args, cfg: Config, data_dir: PathBuf) -> anyhow::Result<()> 
     }
     let stats = coord.stats();
     println!(
-        "served {ok}/{} jobs in {:.2}s via backend `{}` — exec throughput \
-         {:.2} GFLOP/s, executed energy {:.2} J ({:.2} GFLOPS/W aggregate), \
+        "served {ok}/{} jobs in {:.2}s via backend `{}` — {:.2} jobs/s, \
+         exec throughput {:.2} GFLOP/s, executed energy {:.2} J \
+         ({:.2} GFLOPS/W aggregate), \
          cache {} hits / {} misses / {} evictions ({:.0}% hit rate), \
          {} coalesced plans / {} rejected jobs / queue peak {}, \
          p50 plan latency {:.3} ms, dse pool {} threads / stage-2 gate \
@@ -281,6 +373,7 @@ fn cmd_serve(args: &Args, cfg: Config, data_dir: PathBuf) -> anyhow::Result<()> 
         results.len(),
         wall.as_secs_f64(),
         coord.backend_name(),
+        safe_rate(results.len() as f64, wall.as_secs_f64()),
         stats.executed_gflops(),
         stats.executed_energy_j,
         stats.executed_gflops_per_w,
@@ -299,6 +392,245 @@ fn cmd_serve(args: &Args, cfg: Config, data_dir: PathBuf) -> anyhow::Result<()> 
         stats.simulated_energy_j
     );
     coord.shutdown();
+    Ok(())
+}
+
+/// Foreground daemon (what `serve start` spawns).
+fn serve_run(args: &Args, cfg: Config, data_dir: PathBuf) -> anyhow::Result<()> {
+    let (state_dir, endpoint) = serve_paths(args);
+    let lab = if args.flag("quick-lab") {
+        quick_lab()
+    } else {
+        Lab::prepare(cfg, data_dir)?
+    };
+    let cfg = lab.cfg.clone();
+    let default_cache = state_dir.join("plan-cache.json");
+    let mut opts = DaemonOptions::new(endpoint, state_dir);
+    opts.coordinator = coordinator_options(args, Some(default_cache))?;
+    opts.n_planners = args.opt_usize("planners", 2)?;
+    opts.artifacts = Some(PathBuf::from(args.opt_or("artifacts", "artifacts")));
+    opts.log_rotate_bytes = args.opt_u64("log-rotate-bytes", 1 << 20)?;
+    opts.force = args.flag("force");
+    state::install_signal_handlers();
+    let daemon = Daemon::start(&cfg, lab.engine(), opts)?;
+    let summary = daemon.run()?;
+    println!(
+        "daemon exit: {} submitted / {} completed / {} failed / {} dropped \
+         in {:.1}s ({:.2} jobs/s)",
+        summary.jobs_submitted,
+        summary.jobs_completed,
+        summary.jobs_failed,
+        summary.results_dropped,
+        summary.uptime.as_secs_f64(),
+        safe_rate(summary.jobs_completed as f64, summary.uptime.as_secs_f64())
+    );
+    Ok(())
+}
+
+/// Spawn `serve run` detached (own session, output to daemon.out) and
+/// wait until its socket answers a stats request.
+fn serve_start(args: &Args) -> anyhow::Result<()> {
+    let (state_dir, endpoint) = serve_paths(args);
+    let state_path = state_dir.join("daemon.json");
+    if let Some(prev) = StateFile::load(&state_path)? {
+        if state::pid_alive(prev.pid) && !args.flag("force") {
+            anyhow::bail!(
+                "daemon already running (pid {} on {}); use `serve stop` or --force",
+                prev.pid,
+                prev.socket
+            );
+        }
+    }
+    std::fs::create_dir_all(&state_dir)?;
+    let exe = std::env::current_exe()?;
+    let mut cmd = std::process::Command::new(exe);
+    cmd.arg("serve").arg("run");
+    for (k, v) in &args.options {
+        if k == "socket" || k == "state-dir" {
+            continue; // re-appended in normalized form below
+        }
+        cmd.arg(format!("--{k}={v}"));
+    }
+    for f in &args.flags {
+        if f != "foreground" {
+            cmd.arg(format!("--{f}"));
+        }
+    }
+    cmd.arg(format!("--state-dir={}", state_dir.display()));
+    cmd.arg(format!("--socket={}", endpoint.label()));
+    let out = std::fs::File::create(state_dir.join("daemon.out"))?;
+    cmd.stdin(std::process::Stdio::null());
+    cmd.stdout(out.try_clone()?);
+    cmd.stderr(out);
+    #[cfg(unix)]
+    unsafe {
+        use std::os::unix::process::CommandExt;
+        // Detach from our session so the daemon survives this shell.
+        cmd.pre_exec(|| {
+            unsafe { state::sys::setsid() };
+            Ok(())
+        });
+    }
+    let mut child = cmd.spawn()?;
+    // Startup covers dataset generation + model training on a cold
+    // data dir, hence the generous default.
+    let timeout = Duration::from_secs(args.opt_u64("start-timeout", 300)?);
+    let deadline = Instant::now() + timeout;
+    loop {
+        if let Some(status) = child.try_wait()? {
+            anyhow::bail!(
+                "daemon exited during startup ({status}); see {}/daemon.out",
+                state_dir.display()
+            );
+        }
+        match Client::connect(&endpoint) {
+            Ok(mut c) => {
+                let s = c.stats()?;
+                println!(
+                    "daemon started (pid {}) on {} — state {}",
+                    child.id(),
+                    endpoint.label(),
+                    s.state
+                );
+                return Ok(());
+            }
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    return Err(e.context(format!(
+                        "daemon not ready within {}s; see {}/daemon.out",
+                        timeout.as_secs(),
+                        state_dir.display()
+                    )));
+                }
+                std::thread::sleep(Duration::from_millis(100));
+            }
+        }
+    }
+}
+
+/// Graceful stop: SHUTDOWN over the socket (drain + cache persist),
+/// SIGTERM as fallback (the daemon drains on signals too), then wait
+/// for the PID to exit.
+fn serve_stop(args: &Args) -> anyhow::Result<()> {
+    let (state_dir, endpoint) = serve_paths(args);
+    let state_path = state_dir.join("daemon.json");
+    let Some(prev) = StateFile::load(&state_path)? else {
+        println!("no daemon: state file {} not found", state_path.display());
+        return Ok(());
+    };
+    if !state::pid_alive(prev.pid) {
+        println!("stale daemon state (pid {} is dead); cleaning up", prev.pid);
+        StateFile::remove(&state_path);
+        if let Endpoint::Unix(p) = &endpoint {
+            let _ = std::fs::remove_file(p);
+        }
+        return Ok(());
+    }
+    match Client::connect(&Endpoint::parse(&prev.socket)) {
+        Ok(mut c) => {
+            let _ = c.shutdown();
+        }
+        Err(_) => {
+            state::terminate(prev.pid);
+        }
+    }
+    let timeout = Duration::from_secs(args.opt_u64("stop-timeout", 120)?);
+    let deadline = Instant::now() + timeout;
+    while state::pid_alive(prev.pid) {
+        anyhow::ensure!(
+            Instant::now() < deadline,
+            "daemon (pid {}) still alive {}s after shutdown request",
+            prev.pid,
+            timeout.as_secs()
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    println!("daemon (pid {}) stopped", prev.pid);
+    Ok(())
+}
+
+fn serve_status(args: &Args) -> anyhow::Result<()> {
+    let (state_dir, _) = serve_paths(args);
+    let state_path = state_dir.join("daemon.json");
+    let Some(prev) = StateFile::load(&state_path)? else {
+        println!("no daemon (state file {} not found)", state_path.display());
+        return Ok(());
+    };
+    let alive = state::pid_alive(prev.pid);
+    println!(
+        "daemon pid {} on {} (v{}) — {}",
+        prev.pid,
+        prev.socket,
+        prev.version,
+        if alive { "alive" } else { "DEAD (stale state file)" }
+    );
+    if !alive {
+        return Ok(());
+    }
+    let mut c = Client::connect(&Endpoint::parse(&prev.socket))?;
+    let s = c.stats()?;
+    println!("state {} (up {:.1}s)", s.state, s.uptime_s);
+    for (k, v) in &s.fields {
+        println!("  {k:<24} {v:.3}");
+    }
+    Ok(())
+}
+
+/// Push the demo job stream through a running daemon's socket.
+fn serve_submit(args: &Args) -> anyhow::Result<()> {
+    let (_, endpoint) = serve_paths(args);
+    let n_jobs = args.opt_usize("jobs", 24)?;
+    let plan_only = args.flag("plan-only");
+    let mut client = Client::connect_retry(&endpoint, Duration::from_secs(10))?;
+    let specs = demo_job_specs(n_jobs, plan_only);
+    let started = Instant::now();
+    let results = client.submit_burst(&specs)?;
+    let wall = started.elapsed();
+    let mut ok = 0usize;
+    for r in &results {
+        match &r.error {
+            None => ok += 1,
+            Some(e) => eprintln!("job {} failed: {e}", r.id),
+        }
+        if let Some(err) = r.validation_err {
+            anyhow::ensure!(err < 1e-2, "validation failed on job {}: {err}", r.id);
+        }
+    }
+    let energy: f64 = results.iter().filter_map(|r| r.energy_j).sum();
+    let s = client.stats()?;
+    println!(
+        "submitted {} jobs over {}: {ok} ok / {} failed in {:.2}s \
+         ({:.2} jobs/s), executed energy {:.2} J; daemon state {}, \
+         {:.0} lifetime completed, {:.0}% cache hit rate",
+        results.len(),
+        endpoint.label(),
+        results.len() - ok,
+        wall.as_secs_f64(),
+        safe_rate(results.len() as f64, wall.as_secs_f64()),
+        energy,
+        s.state,
+        s.get("jobs_completed").unwrap_or(0.0),
+        100.0 * s.get("cache_hit_rate").unwrap_or(0.0)
+    );
+    anyhow::ensure!(ok == results.len(), "{} jobs failed", results.len() - ok);
+    Ok(())
+}
+
+fn serve_drain(args: &Args) -> anyhow::Result<()> {
+    let (_, endpoint) = serve_paths(args);
+    let mut client = Client::connect(&endpoint)?;
+    let s = client.drain()?;
+    println!(
+        "drained: state {} after {:.1}s — {:.0} completed / {:.0} failed, \
+         {:.2} jobs/s lifetime, executed energy {:.2} J, {:.0}% cache hit rate",
+        s.state,
+        s.uptime_s,
+        s.get("jobs_completed").unwrap_or(0.0),
+        s.get("jobs_failed").unwrap_or(0.0),
+        safe_rate(s.get("jobs_completed").unwrap_or(0.0), s.uptime_s),
+        s.get("executed_energy_j").unwrap_or(0.0),
+        100.0 * s.get("cache_hit_rate").unwrap_or(0.0)
+    );
     Ok(())
 }
 

@@ -1,0 +1,163 @@
+//! Client library for the serving daemon — the layer the `serve
+//! submit|stats|drain|stop` subcommands (and the CI smoke job) sit on.
+//!
+//! The client side is deliberately blocking: one request/response (or
+//! one pipelined burst) per call, against a daemon that never blocks on
+//! writes (it queues frames per connection), so "write the whole burst,
+//! then read all results" cannot deadlock.
+
+use std::io::{Read, Write};
+use std::time::{Duration, Instant};
+
+use anyhow::Context;
+
+use super::protocol::{
+    encode_frame, encode_submit, Frame, FrameReader, JobSpec, WireResult, WireStats,
+};
+use super::{Endpoint, NetStream};
+
+pub struct Client {
+    stream: NetStream,
+    reader: FrameReader,
+}
+
+impl Client {
+    pub fn connect(ep: &Endpoint) -> anyhow::Result<Client> {
+        let stream = NetStream::connect(ep)
+            .with_context(|| format!("connecting to daemon at {}", ep.label()))?;
+        Ok(Client {
+            stream,
+            reader: FrameReader::new(),
+        })
+    }
+
+    /// Connect, retrying until `timeout` — for `serve start` waiting on
+    /// a freshly spawned daemon to bind its socket.
+    pub fn connect_retry(ep: &Endpoint, timeout: Duration) -> anyhow::Result<Client> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            match Client::connect(ep) {
+                Ok(c) => return Ok(c),
+                Err(e) => {
+                    if Instant::now() >= deadline {
+                        return Err(e.context(format!(
+                            "daemon did not come up within {:.1}s",
+                            timeout.as_secs_f64()
+                        )));
+                    }
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+            }
+        }
+    }
+
+    pub fn send(&mut self, frame: &Frame) -> anyhow::Result<()> {
+        self.stream.write_all(&encode_frame(frame))?;
+        Ok(())
+    }
+
+    /// Submit one job (encoded straight from the borrowed spec, so
+    /// operand buffers are not cloned).
+    pub fn submit(&mut self, spec: &JobSpec) -> anyhow::Result<()> {
+        self.stream.write_all(&encode_submit(spec))?;
+        Ok(())
+    }
+
+    /// Blocking read of the next frame; `None` on clean EOF.
+    pub fn recv_opt(&mut self) -> anyhow::Result<Option<Frame>> {
+        let mut buf = [0u8; 16 << 10];
+        loop {
+            if let Some(frame) = self.reader.next_frame()? {
+                return Ok(Some(frame));
+            }
+            match self.stream.read(&mut buf) {
+                Ok(0) => {
+                    // EOF with a partial frame buffered means truncation.
+                    anyhow::ensure!(
+                        self.reader.buffered() == 0,
+                        "connection closed mid-frame ({} bytes buffered)",
+                        self.reader.buffered()
+                    );
+                    return Ok(None);
+                }
+                Ok(n) => self.reader.push(&buf[..n]),
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e.into()),
+            }
+        }
+    }
+
+    fn recv(&mut self) -> anyhow::Result<Frame> {
+        self.recv_opt()?
+            .ok_or_else(|| anyhow::anyhow!("daemon closed the connection"))
+    }
+
+    /// Next job result, skipping unrelated frames; daemon-reported
+    /// protocol errors become `Err`.
+    pub fn next_result(&mut self) -> anyhow::Result<WireResult> {
+        loop {
+            match self.recv()? {
+                Frame::Result(r) => return Ok(r),
+                Frame::Error { job_id, message } => {
+                    anyhow::bail!("daemon error (job {job_id}): {message}")
+                }
+                _ => continue, // stray Stats/Drained/Ack from earlier requests
+            }
+        }
+    }
+
+    /// Pipeline a burst: write every SUBMIT, then collect exactly one
+    /// result per spec (any completion order).
+    pub fn submit_burst(&mut self, specs: &[JobSpec]) -> anyhow::Result<Vec<WireResult>> {
+        for spec in specs {
+            self.submit(spec)?;
+        }
+        let mut out = Vec::with_capacity(specs.len());
+        for _ in 0..specs.len() {
+            out.push(self.next_result()?);
+        }
+        out.sort_by_key(|r| r.id);
+        Ok(out)
+    }
+
+    pub fn stats(&mut self) -> anyhow::Result<WireStats> {
+        self.send(&Frame::StatsReq)?;
+        loop {
+            match self.recv()? {
+                Frame::Stats(s) => return Ok(s),
+                Frame::Error { message, .. } => anyhow::bail!("daemon error: {message}"),
+                _ => continue,
+            }
+        }
+    }
+
+    /// Ask the daemon to drain; blocks until it reports quiescence
+    /// (straggler Result frames for our own jobs are passed over).
+    pub fn drain(&mut self) -> anyhow::Result<WireStats> {
+        self.send(&Frame::Drain)?;
+        loop {
+            match self.recv()? {
+                Frame::Drained(s) => return Ok(s),
+                Frame::Error { message, .. } => anyhow::bail!("daemon error: {message}"),
+                _ => continue,
+            }
+        }
+    }
+
+    /// Drain, then stop the daemon. `Ack` and EOF both count as success
+    /// (the daemon may exit before our final read).
+    pub fn shutdown(&mut self) -> anyhow::Result<()> {
+        self.send(&Frame::Shutdown)?;
+        loop {
+            match self.recv_opt() {
+                Ok(Some(Frame::Ack)) | Ok(None) => return Ok(()),
+                Ok(Some(Frame::Error { message, .. })) => {
+                    anyhow::bail!("daemon error: {message}")
+                }
+                Ok(Some(_)) => continue,
+                // Connection reset while the daemon exits is success too.
+                Err(_) => return Ok(()),
+            }
+        }
+    }
+}

@@ -1,0 +1,714 @@
+//! The serving daemon: one nonblocking accept/tick loop that owns a
+//! [`Coordinator`] and speaks [`super::protocol`] to any number of
+//! clients.
+//!
+//! Lifecycle state machine (DESIGN.md §4):
+//!
+//! ```text
+//!   start ──▶ ready ──▶ draining ──▶ stopped
+//!              │            ▲
+//!              └── DRAIN/SHUTDOWN frame, SIGINT, or SIGTERM
+//! ```
+//!
+//! * **ready** — submits admitted, results streamed as they complete.
+//! * **draining** — admission closed ([`Coordinator::begin_drain`]);
+//!   queued-but-unsubmitted specs are refused with error results;
+//!   in-flight jobs run to completion. Once quiescent the plan cache is
+//!   persisted and every DRAIN waiter gets a `Drained` frame — this path
+//!   also serves SIGINT/SIGTERM, so an interrupted daemon persists its
+//!   cache and reports honest final stats instead of dying mid-flight.
+//! * **stopped** — socket closed, state file removed, process exits.
+//!
+//! Backpressure maps client traffic onto the coordinator's
+//! `QueueGauge`: under `Admission::Block` the daemon defers submits
+//! while the queue is full *and* stops reading any connection whose
+//! spec backlog exceeds [`MAX_PENDING_SUBMITS`] — the kernel socket
+//! buffer fills and the client's writes block, end to end. Under
+//! `Admission::Reject` specs are submitted eagerly and refusals come
+//! back as error results over the wire.
+//!
+//! A client that disconnects mid-stream loses nothing but its own
+//! result delivery: its in-flight jobs complete on the coordinator
+//! (plans land in the cache for everyone else) and the undeliverable
+//! results are counted in `results_dropped`.
+
+use std::collections::{HashMap, VecDeque};
+use std::io::{Read, Write};
+use std::path::PathBuf;
+use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
+
+use crate::config::Config;
+use crate::coordinator::{Admission, Coordinator, CoordinatorOptions};
+use crate::dse::DseEngine;
+
+use super::protocol::{encode_frame, Frame, FrameReader, JobSpec, WireResult, WireStats};
+use super::state::{self, StateFile};
+use super::{Endpoint, Listener, NetStream};
+
+/// Per-connection cap on decoded-but-unsubmitted specs; beyond it the
+/// daemon stops reading that socket (client-side backpressure).
+pub const MAX_PENDING_SUBMITS: usize = 64;
+
+/// Read chunk per connection per tick.
+const READ_BUF: usize = 64 << 10;
+
+/// How the daemon is wired together.
+#[derive(Debug, Clone)]
+pub struct DaemonOptions {
+    pub endpoint: Endpoint,
+    /// Directory for the state file, log, and default plan cache.
+    pub state_dir: PathBuf,
+    pub coordinator: CoordinatorOptions,
+    pub n_planners: usize,
+    pub artifacts: Option<PathBuf>,
+    /// Tick period of the accept/pump loop.
+    pub tick: Duration,
+    /// Rotate the daemon log once it reaches this size.
+    pub log_rotate_bytes: u64,
+    /// Take over from a live daemon (SIGTERM it) instead of refusing.
+    pub force: bool,
+}
+
+impl DaemonOptions {
+    pub fn new(endpoint: Endpoint, state_dir: PathBuf) -> DaemonOptions {
+        DaemonOptions {
+            endpoint,
+            state_dir,
+            coordinator: CoordinatorOptions::default(),
+            n_planners: 2,
+            artifacts: None,
+            tick: Duration::from_millis(2),
+            log_rotate_bytes: 1 << 20,
+            force: false,
+        }
+    }
+
+    pub fn state_file_path(&self) -> PathBuf {
+        self.state_dir.join("daemon.json")
+    }
+
+    pub fn log_path(&self) -> PathBuf {
+        self.state_dir.join("daemon.log")
+    }
+}
+
+/// Daemon lifecycle position (the wire `stats.state` field).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DaemonState {
+    Ready,
+    Draining,
+    Stopped,
+}
+
+impl DaemonState {
+    pub fn label(&self) -> &'static str {
+        match self {
+            DaemonState::Ready => "ready",
+            DaemonState::Draining => "draining",
+            DaemonState::Stopped => "stopped",
+        }
+    }
+}
+
+/// Final accounting returned by [`Daemon::run`].
+#[derive(Debug, Clone, Copy)]
+pub struct DaemonSummary {
+    pub uptime: Duration,
+    pub jobs_submitted: u64,
+    pub jobs_completed: u64,
+    pub jobs_failed: u64,
+    pub results_dropped: u64,
+}
+
+/// Size-rotating line logger (mirrors to stderr).
+pub struct Logger {
+    path: PathBuf,
+    max_bytes: u64,
+}
+
+impl Logger {
+    pub fn new(path: PathBuf, max_bytes: u64) -> Logger {
+        Logger {
+            path,
+            max_bytes: max_bytes.max(1),
+        }
+    }
+
+    pub fn log(&self, line: &str) {
+        if let Ok(md) = std::fs::metadata(&self.path) {
+            if md.len() >= self.max_bytes {
+                let _ = std::fs::rename(&self.path, self.path.with_extension("log.1"));
+            }
+        }
+        let ts = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_secs())
+            .unwrap_or(0);
+        if let Ok(mut f) = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&self.path)
+        {
+            let _ = writeln!(f, "[{ts}] {line}");
+        }
+        eprintln!("daemon: {line}");
+    }
+}
+
+/// Where a daemon-global job id routes back to.
+struct Route {
+    conn_id: u64,
+    client_id: u64,
+}
+
+/// One connected client.
+struct Conn {
+    id: u64,
+    stream: NetStream,
+    reader: FrameReader,
+    /// Encoded frames awaiting (possibly partial) write.
+    outbox: VecDeque<Vec<u8>>,
+    /// Bytes of `outbox.front()` already written.
+    out_pos: usize,
+    /// Decoded SUBMITs not yet handed to the coordinator.
+    pending_submits: VecDeque<JobSpec>,
+    /// Owed a `Drained` frame when the drain completes.
+    drain_waiter: bool,
+    /// Owed an `Ack` just before the daemon stops.
+    stop_waiter: bool,
+    /// Flush the outbox, then close (protocol error path).
+    closing: bool,
+    dead: bool,
+}
+
+impl Conn {
+    fn send(&mut self, frame: &Frame) {
+        if !self.dead {
+            self.outbox.push_back(encode_frame(frame));
+        }
+    }
+}
+
+/// The daemon. Construct with [`Daemon::start`], then either call
+/// [`Daemon::run`] on the current thread (it blocks until stopped) or
+/// hand it to a thread.
+pub struct Daemon {
+    opts: DaemonOptions,
+    coord: Coordinator,
+    listener: Listener,
+    logger: Logger,
+    conns: Vec<Conn>,
+    routes: HashMap<u64, Route>,
+    next_job_id: u64,
+    next_conn_id: u64,
+    state: DaemonState,
+    started: Instant,
+    /// Signal count already acted upon.
+    signals_seen: u64,
+    /// Drain has completed (cache persisted, waiters notified).
+    drained: bool,
+    shutdown_after_drain: bool,
+    /// Grace deadline for flushing final frames before exit.
+    stop_deadline: Option<Instant>,
+    jobs_submitted: u64,
+    results_dropped: u64,
+}
+
+impl Daemon {
+    /// Bind the socket, claim the state file (with stale-PID recovery
+    /// and `--force` takeover), and boot the coordinator.
+    pub fn start(cfg: &Config, engine: DseEngine, opts: DaemonOptions) -> anyhow::Result<Daemon> {
+        std::fs::create_dir_all(&opts.state_dir)?;
+        let logger = Logger::new(opts.log_path(), opts.log_rotate_bytes);
+        let state_path = opts.state_file_path();
+
+        if let Some(prev) = StateFile::load(&state_path)? {
+            let alive = prev.pid != std::process::id() && state::pid_alive(prev.pid);
+            if alive && !opts.force {
+                anyhow::bail!(
+                    "daemon already running (pid {} on {}); use `serve stop` or --force",
+                    prev.pid,
+                    prev.socket
+                );
+            }
+            if alive {
+                logger.log(&format!("--force: terminating running daemon pid {}", prev.pid));
+                state::terminate(prev.pid);
+                let deadline = Instant::now() + Duration::from_secs(5);
+                while state::pid_alive(prev.pid) && Instant::now() < deadline {
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+                anyhow::ensure!(
+                    !state::pid_alive(prev.pid),
+                    "pid {} did not exit within 5s of SIGTERM",
+                    prev.pid
+                );
+            } else {
+                logger.log(&format!(
+                    "recovering from stale state file (pid {} is dead)",
+                    prev.pid
+                ));
+            }
+            StateFile::remove(&state_path);
+        }
+
+        // A crashed daemon leaves its socket inode behind; bind() would
+        // fail with AddrInUse, so clear it once ownership is settled.
+        if let Endpoint::Unix(path) = &opts.endpoint {
+            let _ = std::fs::remove_file(path);
+        }
+        let listener = Listener::bind(&opts.endpoint)?;
+
+        let coord = Coordinator::start_with(
+            cfg,
+            engine,
+            opts.artifacts.clone(),
+            opts.n_planners,
+            opts.coordinator.clone(),
+        );
+        StateFile::current(opts.endpoint.label()).save(&state_path)?;
+        logger.log(&format!(
+            "listening on {} (backend `{}`, {} planners)",
+            opts.endpoint.label(),
+            coord.backend_name(),
+            opts.n_planners.max(1)
+        ));
+
+        Ok(Daemon {
+            signals_seen: state::signals_received(),
+            opts,
+            coord,
+            listener,
+            logger,
+            conns: Vec::new(),
+            routes: HashMap::new(),
+            next_job_id: 0,
+            next_conn_id: 0,
+            state: DaemonState::Ready,
+            started: Instant::now(),
+            drained: false,
+            shutdown_after_drain: false,
+            stop_deadline: None,
+            jobs_submitted: 0,
+            results_dropped: 0,
+        })
+    }
+
+    /// Serve until stopped (SHUTDOWN frame, or drain triggered by
+    /// SIGINT/SIGTERM). Consumes the daemon; cleans up socket and state
+    /// file on the way out.
+    pub fn run(mut self) -> anyhow::Result<DaemonSummary> {
+        while self.state != DaemonState::Stopped {
+            self.check_signals();
+            self.accept_new();
+            let frames = self.read_conns();
+            for (idx, frame) in frames {
+                self.handle_frame(idx, frame);
+            }
+            self.pump_submits();
+            self.pump_results();
+            self.maybe_finish_drain();
+            self.flush_writes();
+            // Keep a dead conn around while it still has decoded submits
+            // (deferred by backpressure) so its jobs are not lost.
+            self.conns
+                .retain(|c| !c.dead || !c.pending_submits.is_empty());
+            self.maybe_stop();
+            if self.state != DaemonState::Stopped {
+                std::thread::sleep(self.opts.tick);
+            }
+        }
+
+        // Final stats *before* shutdown cancels anything, so the log
+        // reflects what was actually served.
+        let stats = self.coord.stats();
+        self.coord.shutdown();
+        while self.coord.try_next_result().is_some() {
+            self.results_dropped += 1; // no client left to route these to
+        }
+        if let Endpoint::Unix(path) = &self.opts.endpoint {
+            let _ = std::fs::remove_file(path);
+        }
+        StateFile::remove(&self.opts.state_file_path());
+        let summary = DaemonSummary {
+            uptime: self.started.elapsed(),
+            jobs_submitted: self.jobs_submitted,
+            jobs_completed: stats.jobs_completed,
+            jobs_failed: stats.jobs_failed,
+            results_dropped: self.results_dropped,
+        };
+        self.logger.log(&format!(
+            "stopped after {:.1}s: {} submitted, {} completed, {} failed, {} results dropped",
+            summary.uptime.as_secs_f64(),
+            summary.jobs_submitted,
+            summary.jobs_completed,
+            summary.jobs_failed,
+            summary.results_dropped
+        ));
+        Ok(summary)
+    }
+
+    /// First SIGINT/SIGTERM drains (cache persisted, honest stats);
+    /// a second one stops hard.
+    fn check_signals(&mut self) {
+        let n = state::signals_received();
+        if n == self.signals_seen {
+            return;
+        }
+        self.signals_seen = n;
+        if self.state == DaemonState::Ready {
+            self.logger.log("signal received: draining before exit");
+            self.begin_drain(true);
+        } else {
+            self.logger.log("second signal: stopping without drain");
+            self.state = DaemonState::Stopped;
+        }
+    }
+
+    fn accept_new(&mut self) {
+        loop {
+            match self.listener.accept() {
+                Ok(Some(stream)) => {
+                    let id = self.next_conn_id;
+                    self.next_conn_id += 1;
+                    self.conns.push(Conn {
+                        id,
+                        stream,
+                        reader: FrameReader::new(),
+                        outbox: VecDeque::new(),
+                        out_pos: 0,
+                        pending_submits: VecDeque::new(),
+                        drain_waiter: false,
+                        stop_waiter: false,
+                        closing: false,
+                        dead: false,
+                    });
+                }
+                Ok(None) => break,
+                Err(e) => {
+                    self.logger.log(&format!("accept failed: {e}"));
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Sweep every connection for readable bytes and decode complete
+    /// frames. Returns `(conn index, frame)` pairs; handling is a
+    /// separate phase so frame handlers can borrow `self` freely.
+    fn read_conns(&mut self) -> Vec<(usize, Frame)> {
+        let mut out = Vec::new();
+        let mut buf = [0u8; READ_BUF];
+        for (idx, conn) in self.conns.iter_mut().enumerate() {
+            if conn.dead || conn.closing {
+                continue;
+            }
+            // Backpressure: a client that has outrun the coordinator
+            // keeps its bytes in the kernel buffer until we catch up.
+            if conn.pending_submits.len() >= MAX_PENDING_SUBMITS {
+                continue;
+            }
+            loop {
+                match conn.stream.read(&mut buf) {
+                    Ok(0) => {
+                        conn.dead = true; // clean disconnect
+                        break;
+                    }
+                    Ok(n) => {
+                        conn.reader.push(&buf[..n]);
+                        if n < buf.len() {
+                            break;
+                        }
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        conn.dead = true;
+                        break;
+                    }
+                }
+            }
+            // Decode even after EOF: bytes the client pushed before
+            // disconnecting were received in full — their jobs still run
+            // (plans warm the cache); only result delivery is dropped.
+            loop {
+                match conn.reader.next_frame() {
+                    Ok(Some(frame)) => out.push((idx, frame)),
+                    Ok(None) => break,
+                    Err(e) => {
+                        // Malformed stream: report, flush, close. The
+                        // daemon itself never panics on bad bytes.
+                        conn.send(&Frame::Error {
+                            job_id: 0,
+                            message: e.to_string(),
+                        });
+                        conn.closing = true;
+                        break;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    fn handle_frame(&mut self, idx: usize, frame: Frame) {
+        match frame {
+            Frame::Submit(spec) => {
+                if self.state == DaemonState::Ready {
+                    self.conns[idx].pending_submits.push_back(spec);
+                } else {
+                    let wire = WireResult::refused(
+                        spec.id,
+                        spec.gemm(),
+                        "daemon draining: admission closed",
+                    );
+                    self.conns[idx].send(&Frame::Result(wire));
+                }
+            }
+            Frame::StatsReq => {
+                let stats = self.wire_stats();
+                self.conns[idx].send(&Frame::Stats(stats));
+            }
+            Frame::Drain => {
+                if self.drained {
+                    let stats = self.wire_stats();
+                    self.conns[idx].send(&Frame::Drained(stats));
+                } else {
+                    self.begin_drain(false);
+                    self.conns[idx].drain_waiter = true;
+                }
+            }
+            Frame::Shutdown => {
+                self.begin_drain(true);
+                if self.drained {
+                    self.conns[idx].send(&Frame::Ack);
+                } else {
+                    self.conns[idx].stop_waiter = true;
+                }
+            }
+            // Server-to-client kinds arriving at the server: protocol
+            // violation; tell the client and hang up.
+            Frame::Result(_) | Frame::Stats(_) | Frame::Drained(_) | Frame::Ack => {
+                self.conns[idx].send(&Frame::Error {
+                    job_id: 0,
+                    message: "protocol violation: server-only frame kind".to_string(),
+                });
+                self.conns[idx].closing = true;
+            }
+            Frame::Error { job_id, message } => {
+                self.logger
+                    .log(&format!("client error (job {job_id}): {message}"));
+            }
+        }
+    }
+
+    /// Hand queued specs to the coordinator. Under `Admission::Block`
+    /// defer while the queue is full — the daemon is the coordinator's
+    /// only submitter, so checking `queue_room` first cannot race.
+    fn pump_submits(&mut self) {
+        if self.state != DaemonState::Ready {
+            return;
+        }
+        // Dead connections are not skipped: their decoded submits still
+        // run (the results are dropped at routing time).
+        for conn in &mut self.conns {
+            while !conn.pending_submits.is_empty() {
+                if self.coord.admission() == Admission::Block && !self.coord.queue_room() {
+                    return; // try again next tick; reads stay gated
+                }
+                let spec = conn.pending_submits.pop_front().unwrap();
+                let gid = self.next_job_id;
+                self.next_job_id += 1;
+                let route = Route { conn_id: conn.id, client_id: spec.id };
+                self.routes.insert(gid, route);
+                self.jobs_submitted += 1;
+                self.coord.submit(spec.into_job(gid));
+            }
+        }
+    }
+
+    /// Stream completed jobs back to their submitters. Results whose
+    /// connection is gone are dropped (counted), never wedging the loop.
+    fn pump_results(&mut self) {
+        while let Some(r) = self.coord.try_next_result() {
+            let Some(route) = self.routes.remove(&r.id) else {
+                self.results_dropped += 1;
+                continue;
+            };
+            let wire = WireResult::from_result(route.client_id, &r);
+            match self
+                .conns
+                .iter_mut()
+                .find(|c| c.id == route.conn_id && !c.dead)
+            {
+                Some(conn) => conn.send(&Frame::Result(wire)),
+                None => self.results_dropped += 1,
+            }
+        }
+    }
+
+    fn begin_drain(&mut self, shutdown_after: bool) {
+        self.shutdown_after_drain |= shutdown_after;
+        if self.state != DaemonState::Ready {
+            return;
+        }
+        self.state = DaemonState::Draining;
+        self.coord.begin_drain();
+        self.logger.log("draining: admission closed");
+        // Specs decoded but not yet submitted will never run: refuse
+        // them now so every submitted id still gets exactly one result.
+        for conn in &mut self.conns {
+            while let Some(spec) = conn.pending_submits.pop_front() {
+                let wire = WireResult::refused(
+                    spec.id,
+                    spec.gemm(),
+                    "daemon draining: admission closed",
+                );
+                conn.send(&Frame::Result(wire));
+            }
+        }
+    }
+
+    /// Once a drain quiesces: persist the plan cache (the satellite fix
+    /// — interrupts must not lose it), answer drain/stop waiters, and
+    /// arm the stop deadline when a shutdown was requested.
+    fn maybe_finish_drain(&mut self) {
+        if self.state != DaemonState::Draining || self.drained || self.coord.pending() > 0 {
+            return;
+        }
+        self.drained = true;
+        self.coord.persist_cache();
+        let stats = self.wire_stats();
+        self.logger.log(&format!(
+            "drained: {} completed, {} failed, cache hit rate {:.0}%",
+            stats.get("jobs_completed").unwrap_or(0.0),
+            stats.get("jobs_failed").unwrap_or(0.0),
+            100.0 * stats.get("cache_hit_rate").unwrap_or(0.0)
+        ));
+        for conn in &mut self.conns {
+            if conn.drain_waiter {
+                conn.drain_waiter = false;
+                conn.send(&Frame::Drained(stats.clone()));
+            }
+            if conn.stop_waiter {
+                conn.stop_waiter = false;
+                conn.send(&Frame::Ack);
+            }
+        }
+        if self.shutdown_after_drain {
+            self.stop_deadline = Some(Instant::now() + Duration::from_secs(1));
+        }
+    }
+
+    fn flush_writes(&mut self) {
+        for conn in &mut self.conns {
+            if conn.dead {
+                continue;
+            }
+            while let Some(front) = conn.outbox.front() {
+                match conn.stream.write(&front[conn.out_pos..]) {
+                    Ok(n) => {
+                        conn.out_pos += n;
+                        if conn.out_pos >= front.len() {
+                            conn.outbox.pop_front();
+                            conn.out_pos = 0;
+                        }
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        conn.dead = true; // EPIPE etc: client went away
+                        break;
+                    }
+                }
+            }
+            if conn.closing && conn.outbox.is_empty() {
+                conn.dead = true;
+            }
+        }
+    }
+
+    /// After a shutdown-drain: stop once final frames are flushed (or
+    /// the grace deadline passes).
+    fn maybe_stop(&mut self) {
+        if !(self.drained && self.shutdown_after_drain) {
+            return;
+        }
+        let flushed = self.conns.iter().all(|c| c.dead || c.outbox.is_empty());
+        let expired = self
+            .stop_deadline
+            .map(|d| Instant::now() >= d)
+            .unwrap_or(false);
+        if flushed || expired {
+            self.state = DaemonState::Stopped;
+        }
+    }
+
+    fn wire_stats(&self) -> WireStats {
+        let s = self.coord.stats();
+        let fields: Vec<(&str, f64)> = vec![
+            ("jobs_submitted", self.jobs_submitted as f64),
+            ("jobs_completed", s.jobs_completed as f64),
+            ("jobs_failed", s.jobs_failed as f64),
+            ("jobs_pending", self.coord.pending() as f64),
+            ("cache_hits", s.cache_hits as f64),
+            ("cache_misses", s.cache_misses as f64),
+            ("cache_hit_rate", s.cache_hit_rate),
+            ("cache_evictions", s.cache_evictions as f64),
+            ("coalesced_plans", s.coalesced_plans as f64),
+            ("rejected_jobs", s.rejected_jobs as f64),
+            ("queue_depth_peak", s.queue_depth_peak as f64),
+            ("plan_p50_ms", s.plan_p50_ms),
+            ("executed_jobs", s.executed_jobs as f64),
+            ("executed_energy_j", s.executed_energy_j),
+            ("executed_gflops_per_w", s.executed_gflops_per_w),
+            ("simulated_energy_j", s.simulated_energy_j),
+            ("dse_pool_threads", s.dse_pool_threads as f64),
+            ("results_dropped", self.results_dropped as f64),
+            ("connections", self.conns.iter().filter(|c| !c.dead).count() as f64),
+        ];
+        WireStats {
+            state: self.state.label().to_string(),
+            uptime_s: self.started.elapsed().as_secs_f64(),
+            fields: fields
+                .into_iter()
+                .map(|(k, v)| (k.to_string(), v))
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("versal-gemm-daemon-{}-{name}", std::process::id()))
+    }
+
+    #[test]
+    fn logger_rotates_at_threshold() {
+        let dir = tmp("logrot");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("daemon.log");
+        let logger = Logger::new(path.clone(), 128);
+        for i in 0..40 {
+            logger.log(&format!("line {i} padding padding padding"));
+        }
+        let rotated = path.with_extension("log.1");
+        assert!(rotated.exists(), "no rotated log at {}", rotated.display());
+        assert!(path.exists());
+        // The live file restarted from (near) zero after rotation.
+        assert!(std::fs::metadata(&path).unwrap().len() < 256 + 128);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn options_paths_derive_from_state_dir() {
+        let opts = DaemonOptions::new(Endpoint::parse("/tmp/x.sock"), PathBuf::from("/tmp/sd"));
+        assert_eq!(opts.state_file_path(), PathBuf::from("/tmp/sd/daemon.json"));
+        assert_eq!(opts.log_path(), PathBuf::from("/tmp/sd/daemon.log"));
+        assert_eq!(DaemonState::Draining.label(), "draining");
+    }
+}

@@ -1,0 +1,251 @@
+//! Serving subsystem: a socket daemon over the coordinator.
+//!
+//! Layering (see DESIGN.md §4 "Serving daemon & wire protocol"):
+//!
+//! * [`protocol`] — length-prefixed binary frames (SUBMIT / RESULT /
+//!   STATS / DRAIN / SHUTDOWN) with version byte and job-id correlation;
+//! * [`state`] — PID/state file, stale-PID detection, signal capture;
+//! * [`daemon`] — the accept/tick loop that owns a [`crate::coordinator::
+//!   Coordinator`] and the drain state machine ready → draining → stopped;
+//! * [`client`] — the library the CLI subcommands (`serve submit`,
+//!   `serve stats`, `serve drain`, `serve stop`) are built on.
+//!
+//! The daemon listens on a Unix socket by default; `tcp://host:port`
+//! endpoints are accepted everywhere a socket path is (load generators
+//! on another host). All sockets run nonblocking off a single tick loop
+//! — with a handful of clients and DSE-bound job service times, epoll
+//! would buy nothing over a 2 ms tick.
+
+pub mod client;
+pub mod daemon;
+pub mod protocol;
+pub mod state;
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+
+use crate::coordinator::GemmJob;
+use crate::dse::Objective;
+use crate::util::rng::Rng;
+use crate::workloads::eval_workloads;
+
+use protocol::JobSpec;
+
+/// Where the daemon listens / the client connects.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Endpoint {
+    Unix(PathBuf),
+    Tcp(String),
+}
+
+impl Endpoint {
+    /// `tcp://host:port` or a filesystem path for a Unix socket.
+    pub fn parse(text: &str) -> Endpoint {
+        match text.strip_prefix("tcp://") {
+            Some(addr) => Endpoint::Tcp(addr.to_string()),
+            None => Endpoint::Unix(PathBuf::from(text)),
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            Endpoint::Unix(p) => p.display().to_string(),
+            Endpoint::Tcp(addr) => format!("tcp://{addr}"),
+        }
+    }
+}
+
+/// Listening half, nonblocking: `accept` returns `Ok(None)` when no
+/// client is waiting so the daemon tick loop never stalls on it.
+pub enum Listener {
+    Unix(UnixListener),
+    Tcp(TcpListener),
+}
+
+impl Listener {
+    pub fn bind(ep: &Endpoint) -> std::io::Result<Listener> {
+        match ep {
+            Endpoint::Unix(path) => {
+                let l = UnixListener::bind(path)?;
+                l.set_nonblocking(true)?;
+                Ok(Listener::Unix(l))
+            }
+            Endpoint::Tcp(addr) => {
+                let l = TcpListener::bind(addr)?;
+                l.set_nonblocking(true)?;
+                Ok(Listener::Tcp(l))
+            }
+        }
+    }
+
+    pub fn accept(&self) -> std::io::Result<Option<NetStream>> {
+        let stream = match self {
+            Listener::Unix(l) => match l.accept() {
+                Ok((s, _)) => NetStream::Unix(s),
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return Ok(None),
+                Err(e) => return Err(e),
+            },
+            Listener::Tcp(l) => match l.accept() {
+                Ok((s, _)) => NetStream::Tcp(s),
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return Ok(None),
+                Err(e) => return Err(e),
+            },
+        };
+        stream.set_nonblocking(true)?;
+        Ok(Some(stream))
+    }
+}
+
+/// One connected socket, Unix or TCP, behind a uniform Read/Write.
+pub enum NetStream {
+    Unix(UnixStream),
+    Tcp(TcpStream),
+}
+
+impl NetStream {
+    pub fn connect(ep: &Endpoint) -> std::io::Result<NetStream> {
+        match ep {
+            Endpoint::Unix(path) => UnixStream::connect(path).map(NetStream::Unix),
+            Endpoint::Tcp(addr) => TcpStream::connect(addr).map(NetStream::Tcp),
+        }
+    }
+
+    pub fn set_nonblocking(&self, nb: bool) -> std::io::Result<()> {
+        match self {
+            NetStream::Unix(s) => s.set_nonblocking(nb),
+            NetStream::Tcp(s) => s.set_nonblocking(nb),
+        }
+    }
+}
+
+impl Read for NetStream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            NetStream::Unix(s) => s.read(buf),
+            NetStream::Tcp(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for NetStream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            NetStream::Unix(s) => s.write(buf),
+            NetStream::Tcp(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            NetStream::Unix(s) => s.flush(),
+            NetStream::Tcp(s) => s.flush(),
+        }
+    }
+}
+
+/// Rate that stays finite: `0` for the zero-work and sub-millisecond
+/// cases instead of `inf`/`NaN` (ISSUE 6 satellite — an empty drain
+/// must print zeros).
+pub fn safe_rate(n: f64, secs: f64) -> f64 {
+    if n > 0.0 && secs > 1e-9 {
+        n / secs
+    } else {
+        0.0
+    }
+}
+
+/// The demo LLM-inference-like job stream over the small/medium eval
+/// workloads — identical draws to the pre-daemon `serve` loop, so the
+/// socket path and the in-process `run_batch` path serve byte-identical
+/// job streams (the acceptance-parity check depends on this).
+pub fn demo_job_specs(n_jobs: usize, plan_only: bool) -> Vec<JobSpec> {
+    let wl = eval_workloads();
+    let mut rng = Rng::new(2025);
+    let mut specs = Vec::with_capacity(n_jobs);
+    for i in 0..n_jobs {
+        let w = &wl[rng.below(6)]; // small/medium layers for quick serving
+        let g = w.gemm;
+        let objective = if i % 2 == 0 {
+            Objective::Throughput
+        } else {
+            Objective::EnergyEfficiency
+        };
+        let (a, b, validate) = if plan_only {
+            (None, None, false)
+        } else {
+            let a: Vec<f32> = (0..g.m * g.k).map(|_| rng.normal() as f32).collect();
+            let b: Vec<f32> = (0..g.k * g.n).map(|_| rng.normal() as f32).collect();
+            (Some(a), Some(b), i % 5 == 0)
+        };
+        specs.push(JobSpec {
+            id: i as u64,
+            m: g.m,
+            n: g.n,
+            k: g.k,
+            objective,
+            validate,
+            a,
+            b,
+        });
+    }
+    specs
+}
+
+/// The same stream as coordinator jobs, for the in-process serve path.
+pub fn demo_jobs(n_jobs: usize, plan_only: bool) -> Vec<GemmJob> {
+    demo_job_specs(n_jobs, plan_only)
+        .into_iter()
+        .map(|spec| {
+            let id = spec.id;
+            spec.into_job(id)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn endpoint_parse_and_label() {
+        assert_eq!(
+            Endpoint::parse("/tmp/d.sock"),
+            Endpoint::Unix(PathBuf::from("/tmp/d.sock"))
+        );
+        assert_eq!(
+            Endpoint::parse("tcp://127.0.0.1:7000"),
+            Endpoint::Tcp("127.0.0.1:7000".to_string())
+        );
+        assert_eq!(Endpoint::parse("tcp://h:1").label(), "tcp://h:1");
+        assert_eq!(Endpoint::parse("/a/b").label(), "/a/b");
+    }
+
+    #[test]
+    fn safe_rate_guards_degenerate_cases() {
+        assert_eq!(safe_rate(0.0, 0.0), 0.0);
+        assert_eq!(safe_rate(10.0, 0.0), 0.0);
+        assert_eq!(safe_rate(0.0, 5.0), 0.0);
+        assert!((safe_rate(10.0, 2.0) - 5.0).abs() < 1e-12);
+        assert!(safe_rate(1.0, f64::NAN.max(0.0)).is_finite());
+    }
+
+    #[test]
+    fn demo_streams_agree_between_spec_and_job_form() {
+        let specs = demo_job_specs(10, false);
+        let jobs = demo_jobs(10, false);
+        assert_eq!(specs.len(), jobs.len());
+        for (s, j) in specs.iter().zip(&jobs) {
+            assert_eq!(s.id, j.id);
+            assert_eq!(s.gemm(), j.gemm);
+            assert_eq!(s.objective, j.objective);
+            assert_eq!(s.validate, j.validate);
+            assert_eq!(s.a, j.a);
+            assert_eq!(s.b, j.b);
+        }
+        // Every fifth data job validates; plan-only never does.
+        assert!(jobs[0].validate && jobs[5].validate && !jobs[1].validate);
+        assert!(demo_jobs(6, true).iter().all(|j| !j.validate && j.a.is_none()));
+    }
+}

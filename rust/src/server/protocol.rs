@@ -1,0 +1,1014 @@
+//! Wire protocol of the serving daemon — length-prefixed binary frames.
+//!
+//! Every message on the socket is one frame:
+//!
+//! ```text
+//!   offset  size  field
+//!   0       4     payload length N (u32 LE, excludes this 6-byte header)
+//!   4       1     protocol version (PROTOCOL_VERSION)
+//!   5       1     frame kind (K_SUBMIT .. K_ERROR)
+//!   6       N     payload (kind-specific, little-endian scalars)
+//! ```
+//!
+//! Design rules, in order of importance:
+//!
+//! * **No panic on malformed bytes.** Every decode path goes through
+//!   [`Scan`], which returns [`ProtocolError`] on truncation, bad
+//!   discriminants, invalid UTF-8, or trailing garbage. A daemon fed
+//!   `/dev/urandom` must answer with an ERROR frame and close the
+//!   connection, never abort.
+//! * **Torn reads are normal.** [`FrameReader`] buffers partial frames
+//!   across arbitrarily small socket reads and yields complete frames
+//!   only; a frame split at any byte boundary reassembles identically.
+//! * **Bounded allocation.** The declared payload length is checked
+//!   against [`MAX_FRAME_LEN`] *before* any buffering commitment, and
+//!   every embedded length (strings, f32 vectors, stats entries) is
+//!   validated against the bytes actually present before allocating.
+//! * **Versioned.** The version byte is checked before the kind, so a
+//!   future incompatible revision surfaces as [`ProtocolError::
+//!   BadVersion`] instead of a misparse.
+//!
+//! Job-id correlation: SUBMIT carries the client's job id and the
+//! matching RESULT echoes it back, so a client may pipeline many
+//! submits and match the result stream in any completion order.
+
+use std::fmt;
+
+use crate::coordinator::{GemmJob, JobResult};
+use crate::dse::Objective;
+use crate::workloads::Gemm;
+
+/// Current wire-protocol revision (the version byte of every frame).
+pub const PROTOCOL_VERSION: u8 = 1;
+
+/// Hard ceiling on one frame's payload (256 MiB) — large enough for a
+/// 2048x2048 FP32 operand pair with headroom, small enough that a
+/// corrupt length prefix cannot drive an unbounded allocation.
+pub const MAX_FRAME_LEN: usize = 256 << 20;
+
+/// Bytes of frame header preceding the payload.
+pub const HEADER_LEN: usize = 6;
+
+/// Sanity bound on counted collections inside payloads (stats entries).
+const MAX_STATS_FIELDS: usize = 4096;
+
+pub const K_SUBMIT: u8 = 1;
+pub const K_RESULT: u8 = 2;
+pub const K_STATS_REQ: u8 = 3;
+pub const K_STATS: u8 = 4;
+pub const K_DRAIN: u8 = 5;
+pub const K_DRAINED: u8 = 6;
+pub const K_SHUTDOWN: u8 = 7;
+pub const K_ACK: u8 = 8;
+pub const K_ERROR: u8 = 9;
+
+/// Codec failure. Recoverable at the connection level (close + report),
+/// never via panic.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ProtocolError {
+    /// Payload shorter than the structure it declares.
+    Truncated,
+    /// Declared payload length exceeds [`MAX_FRAME_LEN`].
+    Oversized { len: usize },
+    /// Version byte differs from [`PROTOCOL_VERSION`].
+    BadVersion { version: u8 },
+    /// Unknown frame kind byte.
+    BadKind { kind: u8 },
+    /// A field held an invalid value (bad discriminant, bad UTF-8, an
+    /// embedded length larger than the payload).
+    BadPayload { what: &'static str },
+    /// Payload longer than the structure it declares (corruption).
+    TrailingBytes { n: usize },
+}
+
+impl fmt::Display for ProtocolError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ProtocolError::Truncated => write!(f, "frame payload truncated"),
+            ProtocolError::Oversized { len } => {
+                write!(f, "frame payload of {len} bytes exceeds the {MAX_FRAME_LEN}-byte limit")
+            }
+            ProtocolError::BadVersion { version } => {
+                write!(f, "unsupported protocol version {version} (expected {PROTOCOL_VERSION})")
+            }
+            ProtocolError::BadKind { kind } => write!(f, "unknown frame kind {kind}"),
+            ProtocolError::BadPayload { what } => write!(f, "malformed frame payload: {what}"),
+            ProtocolError::TrailingBytes { n } => {
+                write!(f, "{n} trailing bytes after frame payload")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ProtocolError {}
+
+/// One GEMM request as it travels the wire. The client-side analogue of
+/// [`GemmJob`]: the daemon rewrites `id` to a daemon-global id before
+/// submission and maps it back on the way out.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobSpec {
+    pub id: u64,
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    pub objective: Objective,
+    /// Validate the executed result against the reference GEMM.
+    pub validate: bool,
+    pub a: Option<Vec<f32>>,
+    pub b: Option<Vec<f32>>,
+}
+
+impl JobSpec {
+    pub fn plan_only(id: u64, m: usize, n: usize, k: usize, objective: Objective) -> JobSpec {
+        JobSpec {
+            id,
+            m,
+            n,
+            k,
+            objective,
+            validate: false,
+            a: None,
+            b: None,
+        }
+    }
+
+    pub fn gemm(&self) -> Gemm {
+        Gemm::new(self.m, self.n, self.k)
+    }
+
+    /// Convert into a coordinator job under a (possibly rewritten) id.
+    pub fn into_job(self, id: u64) -> GemmJob {
+        let gemm = self.gemm();
+        GemmJob {
+            id,
+            gemm,
+            objective: self.objective,
+            a: self.a,
+            b: self.b,
+            validate: self.validate,
+        }
+    }
+}
+
+/// One completed job as it travels the wire: [`JobResult`] minus the
+/// output matrix (results stream back accounting + metrics; operands
+/// and products stay on the daemon side).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireResult {
+    pub id: u64,
+    pub m: u64,
+    pub n: u64,
+    pub k: u64,
+    pub cache_hit: bool,
+    pub coalesced: bool,
+    pub plan_time_us: u64,
+    pub exec_time_us: Option<u64>,
+    pub energy_j: Option<f64>,
+    pub avg_power_w: Option<f64>,
+    pub gflops_per_w: Option<f64>,
+    pub validation_err: Option<f32>,
+    /// Selected mapping's label (absent when planning failed).
+    pub tiling: Option<String>,
+    pub n_aie: u32,
+    pub error: Option<String>,
+}
+
+impl WireResult {
+    pub fn ok(&self) -> bool {
+        self.error.is_none()
+    }
+
+    /// Project a coordinator result onto the wire under the client's id.
+    pub fn from_result(client_id: u64, r: &JobResult) -> WireResult {
+        WireResult {
+            id: client_id,
+            m: r.gemm.m as u64,
+            n: r.gemm.n as u64,
+            k: r.gemm.k as u64,
+            cache_hit: r.cache_hit,
+            coalesced: r.coalesced,
+            plan_time_us: r.plan_time.as_micros() as u64,
+            exec_time_us: r.exec_time.map(|d| d.as_micros() as u64),
+            energy_j: r.energy_j,
+            avg_power_w: r.avg_power_w,
+            gflops_per_w: r.gflops_per_w,
+            validation_err: r.validation_err,
+            tiling: r.plan.map(|p| p.tiling.label()),
+            n_aie: r.plan.map(|p| p.tiling.n_aie() as u32).unwrap_or(0),
+            error: r.error.clone(),
+        }
+    }
+
+    /// A daemon-side refusal (admission closed while draining): the job
+    /// never reached the coordinator.
+    pub fn refused(id: u64, gemm: Gemm, why: &str) -> WireResult {
+        WireResult {
+            id,
+            m: gemm.m as u64,
+            n: gemm.n as u64,
+            k: gemm.k as u64,
+            cache_hit: false,
+            coalesced: false,
+            plan_time_us: 0,
+            exec_time_us: None,
+            energy_j: None,
+            avg_power_w: None,
+            gflops_per_w: None,
+            validation_err: None,
+            tiling: None,
+            n_aie: 0,
+            error: Some(why.to_string()),
+        }
+    }
+}
+
+/// Daemon/service counters as they travel the wire: a self-describing
+/// list of named values plus the daemon's lifecycle state, so stats can
+/// grow fields without a protocol revision.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct WireStats {
+    /// Daemon state machine position: "ready" / "draining" / "stopped".
+    pub state: String,
+    pub uptime_s: f64,
+    pub fields: Vec<(String, f64)>,
+}
+
+impl WireStats {
+    pub fn get(&self, name: &str) -> Option<f64> {
+        self.fields
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| *v)
+    }
+}
+
+/// Every message the daemon and its clients exchange.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// Client → daemon: submit one job.
+    Submit(JobSpec),
+    /// Daemon → client: one completed job (streamed, any order).
+    Result(WireResult),
+    /// Client → daemon: request a stats snapshot.
+    StatsReq,
+    /// Daemon → client: stats snapshot.
+    Stats(WireStats),
+    /// Client → daemon: close admission, finish in-flight jobs, persist
+    /// the plan cache; answered with `Drained` once quiescent.
+    Drain,
+    /// Daemon → client: drain completed; payload is the final stats.
+    Drained(WireStats),
+    /// Client → daemon: drain, then exit the process. Answered with
+    /// `Ack` just before the daemon stops.
+    Shutdown,
+    /// Daemon → client: generic acknowledgement.
+    Ack,
+    /// Daemon → client: protocol-level failure. `job_id` is 0 when the
+    /// error is not attributable to a specific submission.
+    Error { job_id: u64, message: String },
+}
+
+// ---------------------------------------------------------------------------
+// encode
+
+fn put_u8(out: &mut Vec<u8>, v: u8) {
+    out.push(v);
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_string(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn put_opt_u64(out: &mut Vec<u8>, v: Option<u64>) {
+    match v {
+        Some(x) => {
+            put_u8(out, 1);
+            put_u64(out, x);
+        }
+        None => put_u8(out, 0),
+    }
+}
+
+fn put_opt_f64(out: &mut Vec<u8>, v: Option<f64>) {
+    match v {
+        Some(x) => {
+            put_u8(out, 1);
+            put_f64(out, x);
+        }
+        None => put_u8(out, 0),
+    }
+}
+
+fn put_opt_f32(out: &mut Vec<u8>, v: Option<f32>) {
+    match v {
+        Some(x) => {
+            put_u8(out, 1);
+            put_f32(out, x);
+        }
+        None => put_u8(out, 0),
+    }
+}
+
+fn put_opt_string(out: &mut Vec<u8>, v: Option<&str>) {
+    match v {
+        Some(s) => {
+            put_u8(out, 1);
+            put_string(out, s);
+        }
+        None => put_u8(out, 0),
+    }
+}
+
+fn put_f32_vec(out: &mut Vec<u8>, v: &[f32]) {
+    put_u64(out, v.len() as u64);
+    for x in v {
+        put_f32(out, *x);
+    }
+}
+
+fn objective_byte(o: Objective) -> u8 {
+    match o {
+        Objective::Throughput => 0,
+        Objective::EnergyEfficiency => 1,
+    }
+}
+
+fn frame_bytes(kind: u8, payload: Vec<u8>) -> Vec<u8> {
+    debug_assert!(payload.len() <= MAX_FRAME_LEN);
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+    put_u32(&mut out, payload.len() as u32);
+    put_u8(&mut out, PROTOCOL_VERSION);
+    put_u8(&mut out, kind);
+    out.extend_from_slice(&payload);
+    out
+}
+
+fn submit_payload(spec: &JobSpec) -> Vec<u8> {
+    let mut p = Vec::new();
+    put_u64(&mut p, spec.id);
+    put_u64(&mut p, spec.m as u64);
+    put_u64(&mut p, spec.n as u64);
+    put_u64(&mut p, spec.k as u64);
+    put_u8(&mut p, objective_byte(spec.objective));
+    let mut flags = 0u8;
+    if spec.validate {
+        flags |= 1;
+    }
+    if spec.a.is_some() {
+        flags |= 2;
+    }
+    if spec.b.is_some() {
+        flags |= 4;
+    }
+    put_u8(&mut p, flags);
+    if let Some(a) = &spec.a {
+        put_f32_vec(&mut p, a);
+    }
+    if let Some(b) = &spec.b {
+        put_f32_vec(&mut p, b);
+    }
+    p
+}
+
+fn result_payload(r: &WireResult) -> Vec<u8> {
+    let mut p = Vec::new();
+    put_u64(&mut p, r.id);
+    put_u64(&mut p, r.m);
+    put_u64(&mut p, r.n);
+    put_u64(&mut p, r.k);
+    let mut flags = 0u8;
+    if r.cache_hit {
+        flags |= 1;
+    }
+    if r.coalesced {
+        flags |= 2;
+    }
+    put_u8(&mut p, flags);
+    put_u64(&mut p, r.plan_time_us);
+    put_opt_u64(&mut p, r.exec_time_us);
+    put_opt_f64(&mut p, r.energy_j);
+    put_opt_f64(&mut p, r.avg_power_w);
+    put_opt_f64(&mut p, r.gflops_per_w);
+    put_opt_f32(&mut p, r.validation_err);
+    put_opt_string(&mut p, r.tiling.as_deref());
+    put_u32(&mut p, r.n_aie);
+    put_opt_string(&mut p, r.error.as_deref());
+    p
+}
+
+fn stats_payload(s: &WireStats) -> Vec<u8> {
+    let mut p = Vec::new();
+    put_string(&mut p, &s.state);
+    put_f64(&mut p, s.uptime_s);
+    put_u32(&mut p, s.fields.len() as u32);
+    for (name, value) in &s.fields {
+        put_string(&mut p, name);
+        put_f64(&mut p, *value);
+    }
+    p
+}
+
+/// Encode one frame to its on-wire bytes.
+pub fn encode_frame(frame: &Frame) -> Vec<u8> {
+    match frame {
+        Frame::Submit(spec) => frame_bytes(K_SUBMIT, submit_payload(spec)),
+        Frame::Result(r) => frame_bytes(K_RESULT, result_payload(r)),
+        Frame::StatsReq => frame_bytes(K_STATS_REQ, Vec::new()),
+        Frame::Stats(s) => frame_bytes(K_STATS, stats_payload(s)),
+        Frame::Drain => frame_bytes(K_DRAIN, Vec::new()),
+        Frame::Drained(s) => frame_bytes(K_DRAINED, stats_payload(s)),
+        Frame::Shutdown => frame_bytes(K_SHUTDOWN, Vec::new()),
+        Frame::Ack => frame_bytes(K_ACK, Vec::new()),
+        Frame::Error { job_id, message } => {
+            let mut p = Vec::new();
+            put_u64(&mut p, *job_id);
+            put_string(&mut p, message);
+            frame_bytes(K_ERROR, p)
+        }
+    }
+}
+
+/// Encode a SUBMIT frame directly from a borrowed spec (avoids cloning
+/// operand buffers into a [`Frame`] first).
+pub fn encode_submit(spec: &JobSpec) -> Vec<u8> {
+    frame_bytes(K_SUBMIT, submit_payload(spec))
+}
+
+// ---------------------------------------------------------------------------
+// decode
+
+/// Bounds-checked little-endian payload reader. Every accessor returns
+/// `ProtocolError` instead of panicking.
+struct Scan<'a> {
+    b: &'a [u8],
+}
+
+impl<'a> Scan<'a> {
+    fn new(b: &'a [u8]) -> Scan<'a> {
+        Scan { b }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], ProtocolError> {
+        if self.b.len() < n {
+            return Err(ProtocolError::Truncated);
+        }
+        let (head, rest) = self.b.split_at(n);
+        self.b = rest;
+        Ok(head)
+    }
+
+    fn u8(&mut self) -> Result<u8, ProtocolError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, ProtocolError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, ProtocolError> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    fn f32(&mut self) -> Result<f32, ProtocolError> {
+        let b = self.take(4)?;
+        Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn f64(&mut self) -> Result<f64, ProtocolError> {
+        let b = self.take(8)?;
+        Ok(f64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    fn string(&mut self) -> Result<String, ProtocolError> {
+        let n = self.u32()? as usize;
+        if n > self.b.len() {
+            return Err(ProtocolError::Truncated);
+        }
+        let raw = self.take(n)?;
+        String::from_utf8(raw.to_vec()).map_err(|_| ProtocolError::BadPayload {
+            what: "invalid UTF-8 in string field",
+        })
+    }
+
+    fn opt_u64(&mut self) -> Result<Option<u64>, ProtocolError> {
+        match self.u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(self.u64()?)),
+            _ => Err(ProtocolError::BadPayload {
+                what: "invalid option tag",
+            }),
+        }
+    }
+
+    fn opt_f64(&mut self) -> Result<Option<f64>, ProtocolError> {
+        match self.u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(self.f64()?)),
+            _ => Err(ProtocolError::BadPayload {
+                what: "invalid option tag",
+            }),
+        }
+    }
+
+    fn opt_f32(&mut self) -> Result<Option<f32>, ProtocolError> {
+        match self.u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(self.f32()?)),
+            _ => Err(ProtocolError::BadPayload {
+                what: "invalid option tag",
+            }),
+        }
+    }
+
+    fn opt_string(&mut self) -> Result<Option<String>, ProtocolError> {
+        match self.u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(self.string()?)),
+            _ => Err(ProtocolError::BadPayload {
+                what: "invalid option tag",
+            }),
+        }
+    }
+
+    fn f32_vec(&mut self) -> Result<Vec<f32>, ProtocolError> {
+        let n = self.u64()? as usize;
+        let need = n.checked_mul(4).ok_or(ProtocolError::BadPayload {
+            what: "f32 vector length overflow",
+        })?;
+        if need > self.b.len() {
+            return Err(ProtocolError::Truncated);
+        }
+        let raw = self.take(need)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    fn objective(&mut self) -> Result<Objective, ProtocolError> {
+        match self.u8()? {
+            0 => Ok(Objective::Throughput),
+            1 => Ok(Objective::EnergyEfficiency),
+            _ => Err(ProtocolError::BadPayload {
+                what: "invalid objective discriminant",
+            }),
+        }
+    }
+
+    /// Payloads describe their exact extent; leftovers mean corruption.
+    fn finish(self) -> Result<(), ProtocolError> {
+        if self.b.is_empty() {
+            Ok(())
+        } else {
+            Err(ProtocolError::TrailingBytes { n: self.b.len() })
+        }
+    }
+}
+
+fn decode_submit(payload: &[u8]) -> Result<JobSpec, ProtocolError> {
+    let mut s = Scan::new(payload);
+    let id = s.u64()?;
+    let m = s.u64()? as usize;
+    let n = s.u64()? as usize;
+    let k = s.u64()? as usize;
+    let objective = s.objective()?;
+    let flags = s.u8()?;
+    if flags & !0b111 != 0 {
+        return Err(ProtocolError::BadPayload {
+            what: "unknown submit flag bits",
+        });
+    }
+    let a = if flags & 2 != 0 { Some(s.f32_vec()?) } else { None };
+    let b = if flags & 4 != 0 { Some(s.f32_vec()?) } else { None };
+    s.finish()?;
+    Ok(JobSpec {
+        id,
+        m,
+        n,
+        k,
+        objective,
+        validate: flags & 1 != 0,
+        a,
+        b,
+    })
+}
+
+fn decode_result(payload: &[u8]) -> Result<WireResult, ProtocolError> {
+    let mut s = Scan::new(payload);
+    let id = s.u64()?;
+    let m = s.u64()?;
+    let n = s.u64()?;
+    let k = s.u64()?;
+    let flags = s.u8()?;
+    if flags & !0b11 != 0 {
+        return Err(ProtocolError::BadPayload {
+            what: "unknown result flag bits",
+        });
+    }
+    let plan_time_us = s.u64()?;
+    let exec_time_us = s.opt_u64()?;
+    let energy_j = s.opt_f64()?;
+    let avg_power_w = s.opt_f64()?;
+    let gflops_per_w = s.opt_f64()?;
+    let validation_err = s.opt_f32()?;
+    let tiling = s.opt_string()?;
+    let n_aie = s.u32()?;
+    let error = s.opt_string()?;
+    s.finish()?;
+    Ok(WireResult {
+        id,
+        m,
+        n,
+        k,
+        cache_hit: flags & 1 != 0,
+        coalesced: flags & 2 != 0,
+        plan_time_us,
+        exec_time_us,
+        energy_j,
+        avg_power_w,
+        gflops_per_w,
+        validation_err,
+        tiling,
+        n_aie,
+        error,
+    })
+}
+
+fn decode_stats(payload: &[u8]) -> Result<WireStats, ProtocolError> {
+    let mut s = Scan::new(payload);
+    let state = s.string()?;
+    let uptime_s = s.f64()?;
+    let count = s.u32()? as usize;
+    if count > MAX_STATS_FIELDS {
+        return Err(ProtocolError::BadPayload {
+            what: "stats field count out of range",
+        });
+    }
+    let mut fields = Vec::with_capacity(count.min(256));
+    for _ in 0..count {
+        let name = s.string()?;
+        let value = s.f64()?;
+        fields.push((name, value));
+    }
+    s.finish()?;
+    Ok(WireStats {
+        state,
+        uptime_s,
+        fields,
+    })
+}
+
+fn decode_empty(kind: u8, payload: &[u8]) -> Result<Frame, ProtocolError> {
+    Scan::new(payload).finish()?;
+    Ok(match kind {
+        K_STATS_REQ => Frame::StatsReq,
+        K_DRAIN => Frame::Drain,
+        K_SHUTDOWN => Frame::Shutdown,
+        _ => Frame::Ack,
+    })
+}
+
+/// Decode one frame's payload given its (already validated) kind byte.
+pub fn decode_frame(kind: u8, payload: &[u8]) -> Result<Frame, ProtocolError> {
+    match kind {
+        K_SUBMIT => Ok(Frame::Submit(decode_submit(payload)?)),
+        K_RESULT => Ok(Frame::Result(decode_result(payload)?)),
+        K_STATS => Ok(Frame::Stats(decode_stats(payload)?)),
+        K_DRAINED => Ok(Frame::Drained(decode_stats(payload)?)),
+        K_STATS_REQ | K_DRAIN | K_SHUTDOWN | K_ACK => decode_empty(kind, payload),
+        K_ERROR => {
+            let mut s = Scan::new(payload);
+            let job_id = s.u64()?;
+            let message = s.string()?;
+            s.finish()?;
+            Ok(Frame::Error { job_id, message })
+        }
+        other => Err(ProtocolError::BadKind { kind: other }),
+    }
+}
+
+/// Incremental frame reassembler: push raw socket bytes in, pop complete
+/// frames out. Handles torn reads (any split), rejects oversized and
+/// mis-versioned frames before buffering their payload.
+#[derive(Debug, Default)]
+pub struct FrameReader {
+    buf: Vec<u8>,
+    pos: usize,
+}
+
+/// Compact the consumed prefix once it crosses this threshold.
+const COMPACT_AT: usize = 64 << 10;
+
+impl FrameReader {
+    pub fn new() -> FrameReader {
+        FrameReader::default()
+    }
+
+    /// Append raw bytes read from the socket.
+    pub fn push(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Bytes buffered but not yet consumed as frames.
+    pub fn buffered(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Pop the next complete frame, `Ok(None)` if more bytes are needed.
+    /// After an error the stream is unrecoverable: the caller should
+    /// report and close the connection.
+    pub fn next_frame(&mut self) -> Result<Option<Frame>, ProtocolError> {
+        let avail = &self.buf[self.pos..];
+        if avail.len() < HEADER_LEN {
+            return Ok(None);
+        }
+        let len = u32::from_le_bytes([avail[0], avail[1], avail[2], avail[3]]) as usize;
+        if len > MAX_FRAME_LEN {
+            return Err(ProtocolError::Oversized { len });
+        }
+        let version = avail[4];
+        if version != PROTOCOL_VERSION {
+            return Err(ProtocolError::BadVersion { version });
+        }
+        let kind = avail[5];
+        if avail.len() < HEADER_LEN + len {
+            return Ok(None); // torn read: wait for the rest
+        }
+        let frame = decode_frame(kind, &avail[HEADER_LEN..HEADER_LEN + len])?;
+        self.pos += HEADER_LEN + len;
+        if self.pos >= COMPACT_AT {
+            self.buf.drain(..self.pos);
+            self.pos = 0;
+        }
+        Ok(Some(frame))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn sample_spec(id: u64, with_data: bool) -> JobSpec {
+        JobSpec {
+            id,
+            m: 64,
+            n: 96,
+            k: 32,
+            objective: Objective::EnergyEfficiency,
+            validate: true,
+            a: with_data.then(|| (0..64 * 32).map(|i| i as f32 * 0.5).collect()),
+            b: with_data.then(|| (0..32 * 96).map(|i| -(i as f32)).collect()),
+        }
+    }
+
+    fn sample_result(id: u64) -> WireResult {
+        WireResult {
+            id,
+            m: 64,
+            n: 96,
+            k: 32,
+            cache_hit: true,
+            coalesced: false,
+            plan_time_us: 1234,
+            exec_time_us: Some(987),
+            energy_j: Some(0.25),
+            avg_power_w: Some(31.5),
+            gflops_per_w: None,
+            validation_err: Some(1e-6),
+            tiling: Some("P=4x4x2 B=2x2x1".to_string()),
+            n_aie: 32,
+            error: None,
+        }
+    }
+
+    fn sample_stats() -> WireStats {
+        WireStats {
+            state: "ready".to_string(),
+            uptime_s: 12.75,
+            fields: vec![
+                ("jobs_completed".to_string(), 42.0),
+                ("cache_hit_rate".to_string(), 0.5),
+            ],
+        }
+    }
+
+    fn roundtrip(frame: &Frame) -> Frame {
+        let bytes = encode_frame(frame);
+        let mut rd = FrameReader::new();
+        rd.push(&bytes);
+        let out = rd.next_frame().expect("decode").expect("complete");
+        assert_eq!(rd.buffered(), 0);
+        out
+    }
+
+    #[test]
+    fn all_kinds_roundtrip() {
+        let frames = vec![
+            Frame::Submit(sample_spec(7, true)),
+            Frame::Submit(sample_spec(8, false)),
+            Frame::Result(sample_result(7)),
+            Frame::StatsReq,
+            Frame::Stats(sample_stats()),
+            Frame::Drain,
+            Frame::Drained(sample_stats()),
+            Frame::Shutdown,
+            Frame::Ack,
+            Frame::Error {
+                job_id: 3,
+                message: "queue full".to_string(),
+            },
+        ];
+        for f in &frames {
+            assert_eq!(&roundtrip(f), f, "frame {f:?} did not round-trip");
+        }
+    }
+
+    #[test]
+    fn torn_reads_reassemble_byte_by_byte() {
+        let frame = Frame::Submit(sample_spec(5, true));
+        let bytes = encode_frame(&frame);
+        let mut rd = FrameReader::new();
+        for (i, byte) in bytes.iter().enumerate() {
+            rd.push(std::slice::from_ref(byte));
+            let got = rd.next_frame().expect("no error mid-stream");
+            if i + 1 < bytes.len() {
+                assert!(got.is_none(), "yielded a frame at byte {i} of {}", bytes.len());
+            } else {
+                assert_eq!(got, Some(frame.clone()));
+            }
+        }
+    }
+
+    #[test]
+    fn random_split_points_reassemble() {
+        // Property: a frame stream split at arbitrary boundaries decodes
+        // to the same frame sequence.
+        crate::util::forall(
+            0xfeed,
+            60,
+            |rng| {
+                let frames = vec![
+                    Frame::Submit(sample_spec(rng.below(100) as u64, rng.below(2) == 0)),
+                    Frame::Result(sample_result(rng.below(100) as u64)),
+                    Frame::Stats(sample_stats()),
+                    Frame::Ack,
+                ];
+                let chunk = 1 + rng.below(97);
+                (frames, chunk)
+            },
+            |(frames, chunk)| {
+                let mut bytes = Vec::new();
+                for f in frames {
+                    bytes.extend_from_slice(&encode_frame(f));
+                }
+                let mut rd = FrameReader::new();
+                let mut got = Vec::new();
+                for piece in bytes.chunks(*chunk) {
+                    rd.push(piece);
+                    while let Some(f) = rd.next_frame().expect("decode") {
+                        got.push(f);
+                    }
+                }
+                assert_eq!(&got, frames);
+            },
+        );
+    }
+
+    #[test]
+    fn oversized_frame_is_rejected_before_buffering() {
+        let mut rd = FrameReader::new();
+        let mut header = Vec::new();
+        put_u32(&mut header, (MAX_FRAME_LEN + 1) as u32);
+        put_u8(&mut header, PROTOCOL_VERSION);
+        put_u8(&mut header, K_SUBMIT);
+        rd.push(&header);
+        assert_eq!(
+            rd.next_frame(),
+            Err(ProtocolError::Oversized {
+                len: MAX_FRAME_LEN + 1
+            })
+        );
+    }
+
+    #[test]
+    fn unknown_version_surfaces_before_kind() {
+        let mut rd = FrameReader::new();
+        // Version 9 with an *invalid* kind too: version must win.
+        rd.push(&[0, 0, 0, 0, 9, 0xEE]);
+        assert_eq!(rd.next_frame(), Err(ProtocolError::BadVersion { version: 9 }));
+    }
+
+    #[test]
+    fn unknown_kind_is_rejected() {
+        let mut rd = FrameReader::new();
+        rd.push(&[0, 0, 0, 0, PROTOCOL_VERSION, 0xEE]);
+        assert_eq!(rd.next_frame(), Err(ProtocolError::BadKind { kind: 0xEE }));
+    }
+
+    #[test]
+    fn malformed_payloads_error_without_panic() {
+        // Bad objective discriminant.
+        let mut p = Vec::new();
+        put_u64(&mut p, 1);
+        put_u64(&mut p, 8);
+        put_u64(&mut p, 8);
+        put_u64(&mut p, 8);
+        put_u8(&mut p, 7); // objective: invalid
+        put_u8(&mut p, 0);
+        assert!(matches!(
+            decode_frame(K_SUBMIT, &p),
+            Err(ProtocolError::BadPayload { .. })
+        ));
+        // Truncated: declared string longer than payload.
+        let mut p = Vec::new();
+        put_u64(&mut p, 0);
+        put_u32(&mut p, 1000); // error-message length with no bytes behind it
+        assert_eq!(decode_frame(K_ERROR, &p), Err(ProtocolError::Truncated));
+        // Trailing garbage after an empty-payload kind.
+        assert_eq!(
+            decode_frame(K_DRAIN, &[1, 2, 3]),
+            Err(ProtocolError::TrailingBytes { n: 3 })
+        );
+        // f32 vector whose element count cannot fit the payload.
+        let mut p = Vec::new();
+        put_u64(&mut p, 2);
+        put_u64(&mut p, 4);
+        put_u64(&mut p, 4);
+        put_u64(&mut p, 4);
+        put_u8(&mut p, 0);
+        put_u8(&mut p, 2 | 4); // has A and B
+        put_u64(&mut p, u64::MAX / 8); // absurd element count
+        assert!(matches!(
+            decode_frame(K_SUBMIT, &p),
+            Err(ProtocolError::Truncated) | Err(ProtocolError::BadPayload { .. })
+        ));
+    }
+
+    #[test]
+    fn garbage_streams_never_panic() {
+        // Fuzz-lite: random byte soup must yield Ok(None)/Err, never panic.
+        let mut rng = Rng::new(0xbad5eed);
+        for _ in 0..200 {
+            let n = rng.below(512);
+            let bytes: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+            let mut rd = FrameReader::new();
+            rd.push(&bytes);
+            // Drain until the reader stalls or errors; both are fine.
+            loop {
+                match rd.next_frame() {
+                    Ok(Some(_)) => continue,
+                    Ok(None) | Err(_) => break,
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn long_streams_compact_their_buffer() {
+        let frame = Frame::Result(sample_result(1));
+        let bytes = encode_frame(&frame);
+        let mut rd = FrameReader::new();
+        for _ in 0..2000 {
+            rd.push(&bytes);
+            assert_eq!(rd.next_frame().unwrap(), Some(frame.clone()));
+        }
+        // The consumed prefix must not grow without bound.
+        assert!(rd.buf.len() < COMPACT_AT + bytes.len());
+    }
+
+    #[test]
+    fn spec_job_conversion_preserves_fields() {
+        let spec = sample_spec(3, true);
+        let job = spec.clone().into_job(99);
+        assert_eq!(job.id, 99);
+        assert_eq!(job.gemm, Gemm::new(64, 96, 32));
+        assert_eq!(job.objective, Objective::EnergyEfficiency);
+        assert!(job.validate);
+        assert_eq!(job.a.as_ref().map(Vec::len), Some(64 * 32));
+        assert_eq!(job.b.as_ref().map(Vec::len), Some(32 * 96));
+    }
+}

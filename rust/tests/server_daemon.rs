@@ -1,0 +1,235 @@
+//! Daemon lifecycle integration tests (ISSUE 6): socket submit / stats
+//! / drain / stop, accounting parity with the in-process batch path,
+//! plan-cache warm-start across daemon restarts, stale-PID recovery,
+//! and client-disconnect resilience.
+
+use std::path::PathBuf;
+use std::sync::OnceLock;
+use std::time::{Duration, Instant};
+
+use versal_gemm::config::Config;
+use versal_gemm::coordinator::{Coordinator, CoordinatorOptions};
+use versal_gemm::dataset::Dataset;
+use versal_gemm::dse::{DseEngine, Objective};
+use versal_gemm::features::FeatureSet;
+use versal_gemm::models::Predictors;
+use versal_gemm::server::client::Client;
+use versal_gemm::server::daemon::{Daemon, DaemonOptions, DaemonSummary};
+use versal_gemm::server::protocol::JobSpec;
+use versal_gemm::server::state::StateFile;
+use versal_gemm::server::{demo_job_specs, demo_jobs, Endpoint};
+use versal_gemm::workloads::training_workloads;
+
+/// A PID beyond Linux's pid_max (2^22): guaranteed not alive.
+const DEAD_PID: u32 = 0x3FF_FFFF;
+
+/// One shared reduced dataset + model for every test (the offline phase
+/// is the expensive part; the daemon under test is cheap).
+fn lab() -> &'static (Config, DseEngine) {
+    static LAB: OnceLock<(Config, DseEngine)> = OnceLock::new();
+    LAB.get_or_init(|| {
+        let mut cfg = Config::default();
+        cfg.dataset.top_k = 10;
+        cfg.dataset.bottom_k = 6;
+        cfg.dataset.random_k = 30;
+        cfg.train.n_trees = 60;
+        cfg.train.learning_rate = 0.2;
+        let wl: Vec<_> = training_workloads().into_iter().take(4).collect();
+        let ds = Dataset::generate(&cfg, &wl);
+        let engine =
+            DseEngine::new(Predictors::train(&ds, &cfg, FeatureSet::SetIAndII), &cfg.board);
+        (cfg, engine)
+    })
+}
+
+fn test_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("versal-gemm-it-{}-{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn daemon_opts(dir: &std::path::Path, cache: bool) -> DaemonOptions {
+    let mut opts = DaemonOptions::new(Endpoint::Unix(dir.join("daemon.sock")), dir.to_path_buf());
+    opts.coordinator = CoordinatorOptions {
+        cache_path: cache.then(|| dir.join("plan-cache.json")),
+        ..CoordinatorOptions::default()
+    };
+    opts.n_planners = 2;
+    opts
+}
+
+fn spawn_daemon(opts: DaemonOptions) -> std::thread::JoinHandle<anyhow::Result<DaemonSummary>> {
+    let (cfg, engine) = lab();
+    let daemon = Daemon::start(cfg, engine.clone(), opts).expect("daemon start");
+    std::thread::spawn(move || daemon.run())
+}
+
+fn connect(dir: &std::path::Path) -> Client {
+    Client::connect_retry(&Endpoint::Unix(dir.join("daemon.sock")), Duration::from_secs(30))
+        .expect("connect to daemon")
+}
+
+#[test]
+fn lifecycle_submit_stats_drain_stop_and_warm_restart() {
+    let dir = test_dir("lifecycle");
+    let handle = spawn_daemon(daemon_opts(&dir, true));
+    let mut client = connect(&dir);
+
+    // --- K-job socket burst, plan-only demo stream ---------------------
+    let specs = demo_job_specs(12, true);
+    let wire = client.submit_burst(&specs).expect("burst");
+    assert_eq!(wire.len(), 12);
+    let ids: Vec<u64> = wire.iter().map(|r| r.id).collect();
+    assert_eq!(ids, (0..12).collect::<Vec<u64>>());
+    for r in &wire {
+        assert!(r.ok(), "job {} failed over the wire: {:?}", r.id, r.error);
+        assert!(r.tiling.is_some() && r.n_aie > 0, "job {} has no plan", r.id);
+    }
+
+    // --- acceptance: accounting parity with in-process run_batch -------
+    // Same 12-job stream through a fresh coordinator (no cache file):
+    // completed/failed/coalesced/cache-miss counts must match. Valid
+    // comparison because both paths submit the whole stream before the
+    // first cold DSE resolves (socket decode latency << exploration).
+    let (cfg, engine) = lab();
+    let mut coord = Coordinator::start(cfg, engine.clone(), None, 2);
+    let batch = coord.run_batch(demo_jobs(12, true));
+    let bstats = coord.stats();
+    coord.shutdown();
+    let stats = client.stats().expect("stats");
+    assert_eq!(stats.state, "ready");
+    assert_eq!(stats.get("jobs_completed"), Some(bstats.jobs_completed as f64));
+    assert_eq!(stats.get("jobs_failed"), Some(bstats.jobs_failed as f64));
+    assert_eq!(stats.get("cache_misses"), Some(bstats.cache_misses as f64));
+    assert_eq!(stats.get("coalesced_plans"), Some(bstats.coalesced_plans as f64));
+    let wire_hits = wire.iter().filter(|r| r.cache_hit).count();
+    let batch_hits = batch.iter().filter(|r| r.cache_hit).count();
+    assert_eq!(wire_hits, batch_hits, "cache-hit split diverged");
+
+    // --- drain: admission closes, cache persists -----------------------
+    let drained = client.drain().expect("drain");
+    assert_eq!(drained.state, "draining");
+    assert_eq!(drained.get("jobs_pending"), Some(0.0));
+    let cache_file = dir.join("plan-cache.json");
+    assert!(cache_file.exists(), "drain did not persist the plan cache");
+
+    // Post-drain submits are refused with an error result.
+    let spec = JobSpec::plan_only(777, 512, 1024, 512, Objective::Throughput);
+    client.submit(&spec).expect("send refused submit");
+    let refused = client.next_result().expect("refusal result");
+    assert_eq!(refused.id, 777);
+    let why = refused.error.expect("refusal carries an error");
+    assert!(why.contains("draining"), "unexpected refusal: {why}");
+
+    // --- stop: daemon exits, state/socket files cleaned ----------------
+    client.shutdown().expect("shutdown");
+    let summary = handle.join().unwrap().expect("daemon run");
+    // The post-drain refusal was answered by the daemon itself and
+    // never reached the coordinator, so it shows up in neither count.
+    assert_eq!(summary.jobs_submitted, 12);
+    assert_eq!(summary.jobs_completed, 12);
+    assert_eq!(summary.jobs_failed, 0);
+    assert!(!dir.join("daemon.json").exists(), "state file not removed");
+    assert!(!dir.join("daemon.sock").exists(), "socket not removed");
+    assert!(dir.join("daemon.log").exists(), "daemon wrote no log");
+
+    // --- acceptance: restart warm-starts from the persisted cache ------
+    let handle = spawn_daemon(daemon_opts(&dir, true));
+    let mut client = connect(&dir);
+    let rewire = client.submit_burst(&demo_job_specs(12, true)).expect("warm burst");
+    assert!(rewire.iter().all(|r| r.ok()));
+    let hits = rewire.iter().filter(|r| r.cache_hit).count();
+    assert!(hits > 0, "no cache hits after warm start");
+    assert_eq!(hits, 12, "every resubmitted plan should be warm");
+    let stats = client.stats().expect("stats");
+    assert!(stats.get("cache_hits").unwrap_or(0.0) >= 12.0);
+    assert_eq!(stats.get("cache_misses"), Some(0.0));
+    client.shutdown().expect("shutdown 2");
+    handle.join().unwrap().expect("daemon run 2");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn stale_pid_is_recovered_and_live_pid_refused() {
+    let dir = test_dir("stale");
+    // Simulated crash: a state file whose PID is guaranteed dead, plus
+    // the leftover socket inode bind() would otherwise trip over.
+    StateFile {
+        pid: DEAD_PID,
+        socket: dir.join("daemon.sock").display().to_string(),
+        started_unix: 0,
+        version: "0.0.0".to_string(),
+    }
+    .save(&dir.join("daemon.json"))
+    .unwrap();
+    std::fs::write(dir.join("daemon.sock"), b"").unwrap();
+
+    let handle = spawn_daemon(daemon_opts(&dir, false));
+    let mut client = connect(&dir);
+    // The new daemon owns the state file now.
+    let owned = StateFile::load(&dir.join("daemon.json")).unwrap().unwrap();
+    assert_eq!(owned.pid, std::process::id());
+    client.shutdown().expect("shutdown");
+    handle.join().unwrap().expect("daemon run");
+
+    // A state file naming a live PID (init) refuses without --force.
+    StateFile {
+        pid: 1,
+        socket: "elsewhere.sock".to_string(),
+        started_unix: 0,
+        version: "0.0.0".to_string(),
+    }
+    .save(&dir.join("daemon.json"))
+    .unwrap();
+    let (cfg, engine) = lab();
+    let err = Daemon::start(cfg, engine.clone(), daemon_opts(&dir, false))
+        .err()
+        .expect("start against a live pid must fail");
+    assert!(err.to_string().contains("already running"), "unexpected error: {err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn client_disconnect_mid_result_does_not_wedge_the_daemon() {
+    let dir = test_dir("disconnect");
+    let handle = spawn_daemon(daemon_opts(&dir, false));
+
+    // Client 1 pushes four jobs and vanishes before results stream back
+    // (cold DSE takes far longer than the disconnect).
+    let mut ghost = connect(&dir);
+    for spec in demo_job_specs(4, true) {
+        ghost.submit(&spec).expect("ghost submit");
+    }
+    drop(ghost);
+
+    // Client 2 must still be served on the same accept loop.
+    let mut client = connect(&dir);
+    let specs = vec![
+        JobSpec::plan_only(100, 640, 1536, 640, Objective::Throughput),
+        JobSpec::plan_only(101, 640, 1536, 640, Objective::EnergyEfficiency),
+    ];
+    let results = client.submit_burst(&specs).expect("burst after ghost");
+    assert_eq!(results.len(), 2);
+    assert!(results.iter().all(|r| r.ok()));
+
+    // The ghost's jobs were received in full, so they run to completion
+    // (warming the cache); only their result delivery is dropped.
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        let stats = client.stats().expect("stats");
+        if stats.get("jobs_completed") == Some(6.0) {
+            assert_eq!(stats.get("jobs_failed"), Some(0.0));
+            break;
+        }
+        assert!(Instant::now() < deadline, "ghost jobs never completed: {:?}", stats.fields);
+        std::thread::sleep(Duration::from_millis(50));
+    }
+
+    client.shutdown().expect("shutdown");
+    let summary = handle.join().unwrap().expect("daemon run");
+    assert_eq!(summary.jobs_submitted, 6);
+    assert_eq!(summary.jobs_completed, 6);
+    assert_eq!(summary.results_dropped, 4, "ghost results should be dropped");
+    let _ = std::fs::remove_dir_all(&dir);
+}
