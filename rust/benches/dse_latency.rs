@@ -21,7 +21,9 @@
 //! dataset/model, fewer iterations, the first two workloads, and
 //! report-only timing (shared runners are too noisy to hard-gate a
 //! measured ratio; the bit-identical output asserts and the pool
-//! thread-count bound are the smoke gates).
+//! thread-count bound are the smoke gates). Smoke also writes
+//! `BENCH_dse.json` — aggregate candidates/s and the stage-2 gate skip
+//! rate — for CI's perf-trajectory artifact.
 use std::time::Instant;
 
 use versal_gemm::config::Config;
@@ -32,6 +34,7 @@ use versal_gemm::models::Predictors;
 use versal_gemm::report::Lab;
 use versal_gemm::tiling::enumerate_candidates;
 use versal_gemm::util::bench::{bench, report, report_throughput};
+use versal_gemm::util::json::{num, obj, s};
 use versal_gemm::workloads::{eval_workloads, training_workloads, Gemm};
 
 fn main() -> anyhow::Result<()> {
@@ -246,5 +249,24 @@ fn main() -> anyhow::Result<()> {
         pool.n_threads()
     );
     assert!(pool.peak_active() <= pool.n_threads());
+
+    if smoke {
+        // Perf trajectory (ROADMAP): persist the smoke numbers so every
+        // CI run leaves a diffable DSE throughput snapshot at the repo
+        // root, next to BENCH_serve.json / BENCH_gemm.json.
+        let snapshot = obj(vec![
+            ("bench", s("dse_latency")),
+            ("mode", s("smoke")),
+            ("candidates_per_s", num(total_cands as f64 / wall.as_secs_f64().max(1e-12))),
+            ("gate_skip_rate", num(total_gated as f64 / (total_cands as f64).max(1.0))),
+            ("total_candidates", num(total_cands as f64)),
+            ("pool_threads", num(pool.n_threads() as f64)),
+            ("forest_speedup", num(speedup)),
+            ("gated_speedup", num(gate_speedup)),
+            ("worst_dse_median_s", num(worst)),
+        ]);
+        std::fs::write("BENCH_dse.json", snapshot.to_string_pretty())?;
+        println!("\nwrote BENCH_dse.json (aggregate candidate throughput + gate skip rate)");
+    }
     Ok(())
 }

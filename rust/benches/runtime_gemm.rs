@@ -1,57 +1,175 @@
-//! Bench: L3 execution hot path — the pluggable backends behind
-//! `runtime::backend`.
+//! Bench: L3 execution hot path — the packed-panel CPU microkernel
+//! behind `runtime::backend` vs the legacy blocked oracle.
 //!
-//! Section 1 exercises the always-available CPU backend (blocked tiled
-//! GEMM, row panels on the shared DSE pool) against the reference
-//! GEMM. Section 2 serves data jobs through a coordinator with
-//! `--backend cpu` and asserts the per-job energy accounting
-//! (`energy_j` / `avg_power_w` / `gflops_per_w`) is present, finite,
-//! and mutually consistent. Section 3 is the original PJRT tiled
-//! executor over the AOT Pallas artifacts (requires `make artifacts`).
+//! Section 1 gates numerics (always asserted, smoke included): the
+//! packed-panel GEMM must match `matmul_ref` within the k·eps forward-
+//! error bound and agree *bitwise* with the legacy blocked loop and the
+//! reference on integer-valued operands. Section 2 sweeps GFLOPS per
+//! kernel profile × pool width {1, 4} against `gemm_blocked_legacy`
+//! (timing is report-only in smoke; CI gates on the emitted
+//! `BENCH_gemm.json` instead). Section 3 (non-smoke) is the acceptance
+//! assert: ≥3x single-thread GFLOPS over the legacy path on 1024³ with
+//! ulp-scaled numerics vs `matmul_ref`. Section 4 serves data jobs
+//! through a coordinator with `--backend cpu` and asserts the per-job
+//! energy accounting plus the new kernel-profile/packed-GFLOPS stats
+//! surface. Section 5 is the original PJRT tiled executor over the AOT
+//! Pallas artifacts (requires `make artifacts`).
 //!
-//! `--smoke` (CI on every PR) runs sections 1–2 only with reduced
-//! shapes and a tiny in-memory model, so the execution path and the
-//! energy fields are covered even where no artifacts exist.
+//! `--smoke` (CI on every PR) runs sections 1–2 and 4 with reduced
+//! shapes and writes the perf-trajectory snapshot `BENCH_gemm.json`.
+use std::sync::Arc;
+
 use versal_gemm::config::Config;
 use versal_gemm::coordinator::{BackendChoice, Coordinator, CoordinatorOptions, GemmJob};
 use versal_gemm::dataset::Dataset;
-use versal_gemm::dse::{DseEngine, Objective};
+use versal_gemm::dse::{DseEngine, DsePool, Objective};
 use versal_gemm::features::FeatureSet;
 use versal_gemm::models::Predictors;
-use versal_gemm::runtime::backend::{CpuBackend, ExecBackend};
-use versal_gemm::runtime::{matmul_ref, max_abs_diff, GemmEngine};
+use versal_gemm::runtime::backend::{gemm_blocked_legacy, CpuBackend, ExecBackend};
+use versal_gemm::runtime::microkernel::KernelProfile;
+use versal_gemm::runtime::{matmul_ref, GemmEngine};
 use versal_gemm::util::bench::{bench, once, report, report_throughput};
+use versal_gemm::util::json::{num, obj, s};
 use versal_gemm::util::rng::Rng;
 use versal_gemm::workloads::{training_workloads, Gemm};
 
+fn randn(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() as f32).collect()
+}
+
+fn randi(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| (rng.below(13) as f32) - 6.0).collect()
+}
+
+/// Elementwise `|got - want| <= k · eps · Σ|a||b|` — the standard
+/// forward-error bound for a k-term f32 dot product, i.e. an ulp-scaled
+/// tolerance that adapts to operand magnitude instead of a fixed 1e-3.
+fn assert_ulp_scaled(got: &[f32], want: &[f32], bound: &[f32], k: usize, what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: shape mismatch");
+    for (i, ((g, w), b)) in got.iter().zip(want).zip(bound).enumerate() {
+        let tol = (k as f32) * f32::EPSILON * b + f32::MIN_POSITIVE;
+        assert!((g - w).abs() <= tol, "{what}: element {i}: got {g} want {w} (tol {tol})");
+    }
+}
+
+/// `Σ|a||b|` per output element: the magnitude scale of each dot
+/// product, used to size the ulp tolerance above.
+fn abs_bound(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+    let aa: Vec<f32> = a.iter().map(|v| v.abs()).collect();
+    let ab: Vec<f32> = b.iter().map(|v| v.abs()).collect();
+    matmul_ref(&aa, &ab, m, n, k)
+}
+
+fn median_gflops(stats: &versal_gemm::util::bench::BenchStats, flops: f64) -> f64 {
+    flops / 1e9 / stats.median.as_secs_f64()
+}
+
 fn main() -> anyhow::Result<()> {
     let smoke = std::env::args().any(|a| a == "--smoke");
-
-    // ---- 1. CPU backend: blocked tiled GEMM on the shared pool ---------
-    println!("== bench: cpu execution backend (blocked tiled GEMM, DsePool row panels) ==");
-    let cpu = CpuBackend::new();
     let mut rng = Rng::new(3);
-    let shapes: &[(usize, usize, usize)] = if smoke {
-        &[(128, 128, 128), (70, 50, 90)]
-    } else {
-        &[(128, 128, 128), (256, 256, 256), (32, 896, 896), (512, 512, 512)]
-    };
-    for &(m, n, k) in shapes {
-        let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
-        let b: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
-        let flops = 2.0 * (m * n * k) as f64;
+
+    // ---- 1. numerics gates: packed-panel vs reference + legacy oracle --
+    println!("== bench: packed-panel cpu microkernel — numerics gates ==");
+    let cpu = CpuBackend::new(); // generic profile, global pool
+    for &(m, n, k) in &[(96usize, 80usize, 72usize), (128, 128, 128), (70, 50, 90)] {
+        let a = randn(&mut rng, m * k);
+        let b = randn(&mut rng, k * n);
         let got = cpu.gemm(&a, &b, m, n, k)?;
-        let err = max_abs_diff(&got, &matmul_ref(&a, &b, m, n, k));
-        assert!(err < 1e-2, "cpu backend numerics {m}x{n}x{k}: err {err}");
-        let (warmup, iters) = if smoke { (1, 3) } else { (2, 8) };
-        let stats = bench(warmup, iters, || {
-            std::hint::black_box(cpu.gemm(&a, &b, m, n, k).unwrap());
+        let want = matmul_ref(&a, &b, m, n, k);
+        assert_ulp_scaled(&got, &want, &abs_bound(&a, &b, m, n, k), k, "packed vs ref");
+        // Integer operands are exact in f32: packed, legacy, and the
+        // reference must agree to the bit.
+        let ai = randi(&mut rng, m * k);
+        let bi = randi(&mut rng, k * n);
+        let pi = cpu.gemm(&ai, &bi, m, n, k)?;
+        assert_eq!(pi, gemm_blocked_legacy(&ai, &bi, m, n, k), "{m}x{n}x{k} vs legacy");
+        assert_eq!(pi, matmul_ref(&ai, &bi, m, n, k), "{m}x{n}x{k} vs ref");
+    }
+    println!("numerics gates OK (ulp-scaled vs ref, bitwise vs legacy on integers)");
+
+    // ---- 2. GFLOPS per kernel profile × pool width ---------------------
+    let (m, n, k) = if smoke { (256, 256, 256) } else { (512, 512, 512) };
+    println!("== bench: microkernel GFLOPS per profile × pool width ({m}x{n}x{k}) ==");
+    let a = randn(&mut rng, m * k);
+    let b = randn(&mut rng, k * n);
+    let flops = 2.0 * (m * n * k) as f64;
+    let (warmup, iters) = if smoke { (1, 3) } else { (2, 6) };
+    let legacy_stats = bench(warmup, iters, || {
+        std::hint::black_box(gemm_blocked_legacy(&a, &b, m, n, k));
+    });
+    let legacy_gflops = median_gflops(&legacy_stats, flops);
+    report_throughput("legacy blocked loop (oracle)", &legacy_stats, flops / 1e9, "GFLOP");
+    let mut sweep: Vec<(String, f64)> = Vec::new();
+    let mut microkernel_gflops = 0.0;
+    for profile in [
+        KernelProfile::generic(),
+        KernelProfile::l2_small(),
+        KernelProfile::l2_large(),
+    ] {
+        for width in [1usize, 4] {
+            let backend = CpuBackend::new()
+                .with_profile(profile)
+                .with_pool(Arc::new(DsePool::new(width)));
+            let stats = bench(warmup, iters, || {
+                std::hint::black_box(backend.gemm(&a, &b, m, n, k).unwrap());
+            });
+            let gflops = median_gflops(&stats, flops);
+            let label = format!("packed {} (pool width {width})", profile.name);
+            report_throughput(&label, &stats, flops / 1e9, "GFLOP");
+            if profile.name == "generic" && width == 1 {
+                microkernel_gflops = gflops;
+            }
+            let key = format!("{}_w{}_gflops", profile.name.replace('-', "_"), width);
+            sweep.push((key, gflops));
+        }
+    }
+    let auto_profile = KernelProfile::detect();
+    println!(
+        "single-thread generic {microkernel_gflops:.2} GFLOP/s vs legacy {legacy_gflops:.2} \
+         GFLOP/s ({:.1}x); auto profile resolves to `{}`",
+        microkernel_gflops / legacy_gflops.max(1e-12),
+        auto_profile.name
+    );
+
+    // ---- 3. acceptance: ≥3x single-thread over legacy on 1024³ ---------
+    if !smoke {
+        let (m, n, k) = (1024usize, 1024usize, 1024usize);
+        println!("== bench: acceptance — packed vs legacy, single thread, {m}x{n}x{k} ==");
+        let a = randn(&mut rng, m * k);
+        let b = randn(&mut rng, k * n);
+        let flops = 2.0 * (m * n * k) as f64;
+        let solo = CpuBackend::new()
+            .with_profile(auto_profile)
+            .with_pool(Arc::new(DsePool::new(1)));
+        let got = solo.gemm(&a, &b, m, n, k)?;
+        assert_ulp_scaled(
+            &got,
+            &matmul_ref(&a, &b, m, n, k),
+            &abs_bound(&a, &b, m, n, k),
+            k,
+            "packed 1024^3 vs ref",
+        );
+        let micro_stats = bench(1, 3, || {
+            std::hint::black_box(solo.gemm(&a, &b, m, n, k).unwrap());
         });
-        report(&format!("cpu gemm {m}x{n}x{k}"), &stats);
-        report_throughput("  throughput", &stats, flops / 1e9, "GFLOP");
+        let legacy_stats = bench(1, 2, || {
+            std::hint::black_box(gemm_blocked_legacy(&a, &b, m, n, k));
+        });
+        let micro = median_gflops(&micro_stats, flops);
+        let legacy = median_gflops(&legacy_stats, flops);
+        println!(
+            "single-thread {m}x{n}x{k}: packed ({}) {micro:.2} GFLOP/s vs legacy \
+             {legacy:.2} GFLOP/s — {:.1}x (acceptance floor: 3x)",
+            auto_profile.name,
+            micro / legacy.max(1e-12)
+        );
+        assert!(
+            micro >= 3.0 * legacy,
+            "packed-panel microkernel not >=3x legacy: {micro:.2} vs {legacy:.2} GFLOP/s"
+        );
     }
 
-    // ---- 2. serving energy accounting over the CPU backend -------------
+    // ---- 4. serving energy accounting over the CPU backend -------------
     println!("== bench: coordinator data jobs + per-job energy accounting (backend cpu) ==");
     let mut cfg = Config::default();
     cfg.dataset.top_k = 10;
@@ -104,21 +222,50 @@ fn main() -> anyhow::Result<()> {
     assert_eq!(stats.executed_jobs, n_jobs);
     assert!(stats.executed_energy_j > 0.0);
     assert!(stats.executed_gflops_per_w > 0.0);
+    // Satellite: the selected kernel profile and packed-panel GFLOPS
+    // are visible in the stats surface operators read.
+    let profile = coord.kernel_profile().expect("kernel profile");
+    assert_eq!(stats.cpu_kernel_profile, profile);
+    assert!(stats.cpu_gemm_gflops > 0.0, "packed-panel GFLOPS missing from stats");
     println!(
-        "backend `{}`: {} jobs, {:.2} GFLOP/s, {:.3} J total, {:.2} GFLOPS/W aggregate",
+        "backend `{}` (profile {profile}): {} jobs, {:.2} GFLOP/s executed, packed-panel \
+         {:.2} GFLOP/s host, {:.3} J total, {:.2} GFLOPS/W aggregate",
         coord.backend_name(),
         stats.executed_jobs,
         stats.executed_gflops(),
+        stats.cpu_gemm_gflops,
         stats.executed_energy_j,
         stats.executed_gflops_per_w
     );
     coord.shutdown();
+
     if smoke {
-        println!("smoke OK: cpu backend numerics + energy accounting");
+        // Perf trajectory (ROADMAP): persist the smoke numbers so every
+        // CI run leaves a diffable GFLOPS snapshot at the repo root,
+        // next to BENCH_serve.json / BENCH_dse.json. CI's
+        // perf-trajectory step fails the build when microkernel_gflops
+        // regresses below legacy_gflops.
+        let mut fields = vec![
+            ("bench", s("runtime_gemm")),
+            ("mode", s("smoke")),
+            ("shape", s(&format!("{m}x{n}x{k}"))),
+            ("microkernel_gflops", num(microkernel_gflops)),
+            ("legacy_gflops", num(legacy_gflops)),
+            ("speedup_vs_legacy", num(microkernel_gflops / legacy_gflops.max(1e-12))),
+            ("profile_auto", s(auto_profile.name)),
+            ("coordinator_cpu_gemm_gflops", num(stats.cpu_gemm_gflops)),
+        ];
+        for (key, gflops) in &sweep {
+            fields.push((key.as_str(), num(*gflops)));
+        }
+        let snapshot = obj(fields);
+        std::fs::write("BENCH_gemm.json", snapshot.to_string_pretty())?;
+        println!("\nwrote BENCH_gemm.json (profiles × widths sweep at {m}x{n}x{k})");
+        println!("smoke OK: packed-panel numerics + energy accounting");
         return Ok(());
     }
 
-    // ---- 3. PJRT tiled executor over the AOT artifacts -----------------
+    // ---- 5. PJRT tiled executor over the AOT artifacts -----------------
     let engine = GemmEngine::load(std::path::Path::new("artifacts"))?;
     println!("== bench: PJRT tiled GEMM executor (platform {}) ==", engine.platform());
     let mut rng = Rng::new(3);

@@ -77,6 +77,7 @@ use crate::dse::{DseEngine, DsePool, Objective};
 use crate::models::Prediction;
 pub use crate::runtime::backend::BackendChoice;
 use crate::runtime::backend::{make_backend, ExecBackend};
+pub use crate::runtime::microkernel::CpuProfileChoice;
 use crate::runtime::{matmul_ref, max_abs_diff};
 use crate::tiling::Tiling;
 use crate::util::lock_unpoisoned;
@@ -229,6 +230,19 @@ pub struct CoordinatorStats {
     pub executed_jobs: u64,
     pub executed_flops: f64,
     pub exec_time_s: f64,
+    /// FLOPs executed through the packed-panel CPU microkernel (cpu and
+    /// sim backends; 0 under pjrt) and the host wall-clock they took —
+    /// the sim backend stamps board-side latency into `exec_time_s`, so
+    /// these track actual host kernel time separately.
+    pub cpu_gemm_flops: f64,
+    pub cpu_gemm_time_s: f64,
+    /// Packed-panel microkernel throughput, GFLOP/s of host time
+    /// (derived at read time; 0.0 before any cpu/sim-executed job).
+    pub cpu_gemm_gflops: f64,
+    /// Selected CPU [`KernelProfile`](crate::runtime::microkernel::KernelProfile)
+    /// name ("generic" / "l2-small" / "l2-large"; "" under pjrt or
+    /// before the executor built its backend).
+    pub cpu_kernel_profile: &'static str,
     /// Energy drawn by executed jobs (J): the sum of each job's
     /// power-trace integral (`JobResult::energy_j`).
     pub executed_energy_j: f64,
@@ -300,6 +314,10 @@ pub struct CoordinatorOptions {
     /// the artifacts load and falls back to the always-available CPU
     /// backend otherwise.
     pub backend: BackendChoice,
+    /// Packed-panel kernel blocking for the cpu/sim backends
+    /// (`serve --cpu-profile generic|l2-small|l2-large|auto`). `Auto`
+    /// probes the L2 size once at startup; ignored by pjrt.
+    pub cpu_profile: CpuProfileChoice,
 }
 
 impl Default for CoordinatorOptions {
@@ -312,6 +330,7 @@ impl Default for CoordinatorOptions {
             admission: Admission::Block,
             dse_threads: None,
             backend: BackendChoice::Auto,
+            cpu_profile: CpuProfileChoice::Auto,
         }
     }
 }
@@ -376,6 +395,10 @@ pub struct Coordinator {
     /// / "cpu" / "sim", or "none" when construction failed) — set once
     /// at executor startup.
     backend_name: Arc<OnceLock<String>>,
+    /// Resolved packed-panel kernel profile name — set once at executor
+    /// startup for backends that run the CPU microkernel (cpu, sim);
+    /// never set under pjrt.
+    kernel_profile: Arc<OnceLock<&'static str>>,
     cache_path: Option<PathBuf>,
     /// Jobs refused at submit time (pool gone / shut down / admission
     /// reject); drained ahead of channel results so every submit yields
@@ -531,8 +554,11 @@ impl Coordinator {
         let board = cfg.board.clone();
         let exec_sim = Arc::clone(&sim);
         let backend_choice = options.backend;
+        let cpu_profile_choice = options.cpu_profile;
         let backend_name = Arc::new(OnceLock::new());
         let exec_backend_name = Arc::clone(&backend_name);
+        let kernel_profile = Arc::new(OnceLock::new());
+        let exec_kernel_profile = Arc::clone(&kernel_profile);
         let executor = std::thread::spawn(move || {
             let reconfig = ReconfigModel::default();
             let mut current_mapping: Option<Tiling> = None;
@@ -541,19 +567,25 @@ impl Coordinator {
             // backend when no artifacts load, so data jobs execute in
             // every checkout; an explicit `pjrt` that cannot load
             // surfaces its error on every data job instead.
-            let backend: Option<Box<dyn ExecBackend>> =
-                match make_backend(backend_choice, artifacts_dir.as_deref(), (*exec_sim).clone())
-                {
-                    Ok(b) => {
-                        let _ = exec_backend_name.set(b.name().to_string());
-                        Some(b)
+            let backend: Option<Box<dyn ExecBackend>> = match make_backend(
+                backend_choice,
+                cpu_profile_choice,
+                artifacts_dir.as_deref(),
+                (*exec_sim).clone(),
+            ) {
+                Ok(b) => {
+                    let _ = exec_backend_name.set(b.name().to_string());
+                    if let Some(p) = b.kernel_profile() {
+                        let _ = exec_kernel_profile.set(p);
                     }
-                    Err(e) => {
-                        eprintln!("coordinator: no execution backend ({e}); executing is disabled");
-                        let _ = exec_backend_name.set(format!("none ({e})"));
-                        None
-                    }
-                };
+                    Some(b)
+                }
+                Err(e) => {
+                    eprintln!("coordinator: no execution backend ({e}); executing is disabled");
+                    let _ = exec_backend_name.set(format!("none ({e})"));
+                    None
+                }
+            };
             let session = BeamSession::default();
             // Dynamic batching: drain whatever is queued, group by
             // mapping, then by the artifact variant the backend picks.
@@ -622,6 +654,7 @@ impl Coordinator {
             gauge,
             cancel,
             backend_name,
+            kernel_profile,
             cache_path: options.cache_path,
             rejected: VecDeque::new(),
             pending: 0,
@@ -634,6 +667,12 @@ impl Coordinator {
     /// the executor thread has built it).
     pub fn backend_name(&self) -> &str {
         self.backend_name.get().map(String::as_str).unwrap_or("starting")
+    }
+
+    /// Packed-panel kernel profile the executor's backend selected —
+    /// `None` under pjrt or until the executor thread has started.
+    pub fn kernel_profile(&self) -> Option<&'static str> {
+        self.kernel_profile.get().copied()
     }
 
     /// Enqueue a job. Never panics: if the coordinator is shut down, the
@@ -846,6 +885,12 @@ impl Coordinator {
         s.dse_pool_threads = self.dse.pool_threads() as u64;
         s.executed_gflops_per_w = if s.executed_energy_j > 0.0 {
             s.executed_flops / 1e9 / s.executed_energy_j
+        } else {
+            0.0
+        };
+        s.cpu_kernel_profile = self.kernel_profile.get().copied().unwrap_or("");
+        s.cpu_gemm_gflops = if s.cpu_gemm_time_s > 0.0 {
+            s.cpu_gemm_flops / s.cpu_gemm_time_s / 1e9
         } else {
             0.0
         };
@@ -1135,6 +1180,13 @@ fn execute_job(
             s.executed_jobs += 1;
             s.executed_flops += g.flops();
             s.exec_time_s += exec_s;
+            if backend.kernel_profile().is_some() {
+                // Host-side microkernel throughput: the sim backend
+                // stamps board latency into exec_time, so the packed-
+                // panel GFLOPS figure needs the host wall-clock.
+                s.cpu_gemm_flops += g.flops();
+                s.cpu_gemm_time_s += host_elapsed.as_secs_f64();
+            }
             s.executed_energy_j += planned.result.energy_j.unwrap_or(0.0);
         }
     }

@@ -15,7 +15,9 @@ use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
 use versal_gemm::config::Config;
-use versal_gemm::coordinator::{Admission, BackendChoice, Coordinator, CoordinatorOptions};
+use versal_gemm::coordinator::{
+    Admission, BackendChoice, Coordinator, CoordinatorOptions, CpuProfileChoice,
+};
 use versal_gemm::dataset::Dataset;
 use versal_gemm::dse::Objective;
 use versal_gemm::features::FeatureSet;
@@ -69,6 +71,9 @@ SUBCOMMANDS:
                                        (default: PALLAS_DSE_THREADS, else cores)
             [--backend pjrt|cpu|sim|auto] execution backend (default: auto =
                                        PJRT if the artifacts load, else CPU)
+            [--cpu-profile generic|l2-small|l2-large|auto] packed-panel kernel
+                                       blocking for cpu/sim (default: auto =
+                                       probe L2 size once at startup)
   validate  [--artifacts artifacts]            PJRT runtime vs reference GEMM
   sweep     --model qwen|llama|deit [--seqs 32,64,..] per-layer mapping sweep
   info                                         board + workload summary
@@ -283,6 +288,7 @@ fn coordinator_options(
             n => Some(n),
         },
         backend: BackendChoice::parse(args.opt_or("backend", "auto"))?,
+        cpu_profile: CpuProfileChoice::parse(args.opt_or("cpu-profile", "auto"))?,
     })
 }
 
@@ -362,7 +368,8 @@ fn serve_inline(args: &Args, cfg: Config, data_dir: PathBuf) -> anyhow::Result<(
     }
     let stats = coord.stats();
     println!(
-        "served {ok}/{} jobs in {:.2}s via backend `{}` — {:.2} jobs/s, \
+        "served {ok}/{} jobs in {:.2}s via backend `{}` (kernel profile {}, \
+         packed-panel {:.2} GFLOP/s) — {:.2} jobs/s, \
          exec throughput {:.2} GFLOP/s, executed energy {:.2} J \
          ({:.2} GFLOPS/W aggregate), \
          cache {} hits / {} misses / {} evictions ({:.0}% hit rate), \
@@ -373,6 +380,8 @@ fn serve_inline(args: &Args, cfg: Config, data_dir: PathBuf) -> anyhow::Result<(
         results.len(),
         wall.as_secs_f64(),
         coord.backend_name(),
+        coord.kernel_profile().unwrap_or("-"),
+        stats.cpu_gemm_gflops,
         safe_rate(results.len() as f64, wall.as_secs_f64()),
         stats.executed_gflops(),
         stats.executed_energy_j,
@@ -569,7 +578,7 @@ fn serve_status(args: &Args) -> anyhow::Result<()> {
     }
     let mut c = Client::connect(&Endpoint::parse(&prev.socket))?;
     let s = c.stats()?;
-    println!("state {} (up {:.1}s)", s.state, s.uptime_s);
+    println!("state {} (up {:.1}s), backend {}", s.state, s.uptime_s, s.backend);
     for (k, v) in &s.fields {
         println!("  {k:<24} {v:.3}");
     }

@@ -10,11 +10,11 @@
 //!
 //! * [`PjrtBackend`] — the original path: tiles streamed through the
 //!   AOT-compiled Pallas artifacts on the PJRT CPU client;
-//! * [`CpuBackend`] — always available: a blocked tiled GEMM over the
-//!   same [`extract_tile`]/[`accumulate_tile`] primitives the PJRT
-//!   executor composes, parallelized over row panels on the shared
-//!   process-wide [`DsePool`] so execution honors the same worker
-//!   budget as planning instead of spawning its own threads;
+//! * [`CpuBackend`] — always available: a GotoBLAS2-style packed-panel
+//!   GEMM (see [`crate::runtime::microkernel`]) whose MC row-panel
+//!   tasks fan out as cooperative turns on the shared process-wide
+//!   [`DsePool`], so execution honors the same worker budget as
+//!   planning instead of spawning its own threads;
 //! * [`SimBackend`] — executes via [`CpuBackend`] for real numerics but
 //!   stamps the result with a [`VersalSim`] measurement, so the serving
 //!   path reports the latency/power the *selected mapping* would
@@ -32,6 +32,10 @@ use std::sync::{Arc, Mutex};
 use anyhow::{anyhow, bail, Result};
 
 use crate::dse::DsePool;
+use crate::runtime::microkernel::{
+    pack_a, pack_b, packed_block, packed_gemm_serial, with_a_panel, with_b_panel,
+    CpuProfileChoice, KernelProfile,
+};
 use crate::runtime::{accumulate_tile, extract_tile, pick_variant, GemmEngine};
 use crate::tiling::Tiling;
 use crate::util::lock_unpoisoned;
@@ -57,6 +61,14 @@ pub trait ExecBackend {
     /// compiled executables across same-variant jobs; others have no
     /// variant notion).
     fn variant_hint(&self, _m: usize, _n: usize, _k: usize) -> Option<usize> {
+        None
+    }
+
+    /// Selected CPU [`KernelProfile`] name — `Some` for backends whose
+    /// numerics run through the packed-panel microkernel (cpu, sim),
+    /// `None` for PJRT. Surfaced in stats and the serve summary so
+    /// operators can see which profile a daemon is running.
+    fn kernel_profile(&self) -> Option<&'static str> {
         None
     }
 
@@ -106,14 +118,20 @@ impl BackendChoice {
 /// when an artifacts directory is configured and falls back to the
 /// always-available CPU backend (logged); explicit `Pjrt` propagates
 /// the load error so a misconfigured deployment fails loudly.
+/// `cpu_profile` selects the packed-panel blocking for the cpu/sim
+/// paths (`Auto` probes L2 once); it is ignored by PJRT.
 pub fn make_backend(
     choice: BackendChoice,
+    cpu_profile: CpuProfileChoice,
     artifacts_dir: Option<&Path>,
     sim: VersalSim,
 ) -> Result<Box<dyn ExecBackend>> {
     match choice {
-        BackendChoice::Cpu => Ok(Box::new(CpuBackend::new())),
-        BackendChoice::Sim => Ok(Box::new(SimBackend::new(sim))),
+        BackendChoice::Cpu => Ok(Box::new(CpuBackend::new().with_profile(cpu_profile.resolve()))),
+        BackendChoice::Sim => Ok(Box::new(SimBackend::with_cpu(
+            CpuBackend::new().with_profile(cpu_profile.resolve()),
+            sim,
+        ))),
         BackendChoice::Pjrt => {
             let dir = artifacts_dir
                 .ok_or_else(|| anyhow!("backend `pjrt` requires an artifacts directory"))?;
@@ -128,7 +146,7 @@ pub fn make_backend(
                     }
                 }
             }
-            Ok(Box::new(CpuBackend::new()))
+            Ok(Box::new(CpuBackend::new().with_profile(cpu_profile.resolve())))
         }
     }
 }
@@ -161,26 +179,31 @@ impl ExecBackend for PjrtBackend {
     }
 }
 
-/// Default CPU block dimension: 64 keeps one A/B/C tile trio (~48 KB)
-/// inside L1/L2 while giving row panels enough work per pool turn.
-const CPU_TILE: usize = 64;
-
-/// GEMMs at or below this total MAC count run inline — the pool
-/// round-trip costs more than the whole product (one 64-cube). Gated
-/// on *total* work, not per-panel work: a tall-skinny GEMM with many
-/// small panels still amortizes one `run_scoped` fan-out across all of
-/// them.
+/// GEMMs at or below this total MAC count run inline unconditionally —
+/// the pool round-trip costs more than the whole product (one 64-cube).
 const CPU_INLINE_MACS: usize = 64 * 64 * 64;
 
-/// Always-available host execution: blocked tiled GEMM over
-/// [`extract_tile`]/[`accumulate_tile`], row panels fanned out as
-/// cooperative tasks on the shared [`DsePool`] (execution and planning
-/// draw from the same process-wide worker budget; a panel per turn
-/// keeps concurrent explorations interleaving).
+/// Minimum MACs one fanned-out (jc, pc) turn must carry for the pool
+/// dispatch to pay for itself. This is *per-panel* work — rows-per-MC-
+/// panel × clamped-NC columns × clamped-KC depth — not total work: the
+/// old total-MAC gate let tall-skinny shapes (large m, tiny n·k) fan
+/// out turns worth only a few thousand MACs each, where the `run_scoped`
+/// round-trip dominated. A 64-cube of work per turn (~0.5 MFLOP,
+/// hundreds of µs) safely amortizes the ~µs dispatch.
+const CPU_MIN_PANEL_MACS: usize = 64 * 64 * 64;
+
+/// Always-available host execution: GotoBLAS2-style packed-panel GEMM
+/// (see [`crate::runtime::microkernel`]). The caller packs each KC×NC
+/// B panel once into its thread-local scratch, then the MC×KC A-panel
+/// tasks fan out as cooperative turns on the shared [`DsePool`] — each
+/// worker packs its own A panel into *its* thread-local scratch and
+/// writes a disjoint row block of C, so execution and planning draw
+/// from the same process-wide worker budget and the hot path allocates
+/// nothing after warm-up.
 pub struct CpuBackend {
     /// `None` routes through the process-global pool.
     pool: Option<Arc<DsePool>>,
-    tile: usize,
+    profile: KernelProfile,
 }
 
 impl Default for CpuBackend {
@@ -190,10 +213,13 @@ impl Default for CpuBackend {
 }
 
 impl CpuBackend {
+    /// Default construction uses the `generic` profile — deterministic
+    /// everywhere; callers that want the L2 probe pass
+    /// `CpuProfileChoice::Auto.resolve()` via [`CpuBackend::with_profile`].
     pub fn new() -> CpuBackend {
         CpuBackend {
             pool: None,
-            tile: CPU_TILE,
+            profile: KernelProfile::generic(),
         }
     }
 
@@ -203,12 +229,36 @@ impl CpuBackend {
         self
     }
 
+    /// Select the packed-panel blocking parameters.
+    pub fn with_profile(mut self, profile: KernelProfile) -> CpuBackend {
+        self.profile = profile;
+        self
+    }
+
+    pub fn profile(&self) -> &KernelProfile {
+        &self.profile
+    }
+
     fn pool(&self) -> &DsePool {
         match &self.pool {
             Some(p) => p,
             None => DsePool::global(),
         }
     }
+}
+
+/// The PR-5 blocked tiled GEMM (64-tiles over
+/// [`extract_tile`]/[`accumulate_tile`]), kept verbatim and serial as
+/// the comparison oracle for `benches/runtime_gemm.rs` and CI's
+/// microkernel-vs-legacy perf gate. Not reachable from any serving
+/// path: [`CpuBackend::gemm`] drives the packed-panel microkernel.
+pub fn gemm_blocked_legacy(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+    const TILE: usize = 64;
+    let mut c = vec![0f32; m * n];
+    for (idx, panel) in c.chunks_mut(TILE * n).enumerate() {
+        gemm_panel(a, b, m, n, k, idx * TILE, TILE, panel);
+    }
+    c
 }
 
 /// `C_tile = A_tile @ B_tile` for square `t`-tiles (overwrites `c`).
@@ -230,10 +280,7 @@ fn tile_kernel(a: &[f32], b: &[f32], t: usize, c: &mut [f32]) {
     }
 }
 
-/// Per-thread A/B/C tile scratch, reused across panels, jobs, and the
-/// process lifetime of whichever thread computes panels (pool workers
-/// and the executor thread) — the same TLS pattern as the DSE worker
-/// scratch, so the serving hot path allocates nothing per panel.
+/// Per-thread A/B/C tile scratch for the legacy oracle path.
 #[derive(Default)]
 struct TileScratch {
     a: Vec<f32>,
@@ -288,53 +335,72 @@ impl ExecBackend for CpuBackend {
         if a.len() != m * k || b.len() != k * n {
             bail!("operand shapes do not match {m}x{n}x{k}");
         }
+        let p = self.profile;
         let mut c = vec![0f32; m * n];
-        let tile = self.tile;
-        let n_panels = m.div_ceil(tile);
-        let serial = |c: &mut [f32]| {
-            for p in 0..n_panels {
-                let r0 = p * tile;
-                let end = ((p + 1) * tile * n).min(m * n);
-                gemm_panel(a, b, m, n, k, r0, tile, &mut c[r0 * n..end]);
-            }
-        };
-        // Decide serial vs fan-out before touching the pool, so tiny
-        // GEMMs never lazily spin up the global worker threads.
-        if n_panels <= 1 || m * n * k <= CPU_INLINE_MACS {
-            serial(&mut c);
+        let n_panels = m.div_ceil(p.mc);
+        // Fan-out decision from *per-panel* work: what one pool turn
+        // actually computes is an MC-row × min(NC,n) × min(KC,k) block,
+        // so that product — not m·n·k — must clear the dispatch cost.
+        // Decided before touching the pool, so GEMMs that stay serial
+        // never lazily spin up the global worker threads.
+        let panel_macs = p.mc.min(m) * p.nc.min(n) * p.kc.min(k);
+        if n_panels <= 1 || m * n * k <= CPU_INLINE_MACS || panel_macs < CPU_MIN_PANEL_MACS {
+            packed_gemm_serial(&p, a, b, m, n, k, &mut c);
             return Ok(c);
         }
         let pool = self.pool();
         if pool.n_threads() == 1 {
-            serial(&mut c);
+            packed_gemm_serial(&p, a, b, m, n, k, &mut c);
             return Ok(c);
         }
-        // One cooperative pool turn per row panel: panels are disjoint
-        // slices of C, each claimed exactly once off the shared counter,
-        // so the result is bit-identical for any pool width.
-        let next = AtomicUsize::new(0);
-        let panics = {
-            let panels: Vec<Mutex<(usize, &mut [f32])>> = c
-                .chunks_mut(tile * n)
-                .enumerate()
-                .map(Mutex::new)
-                .collect();
-            let n_tasks = pool.n_threads().min(n_panels);
-            pool.run_scoped(n_tasks, |_| {
-                let p = next.fetch_add(1, Ordering::SeqCst);
-                if p >= n_panels {
-                    return false;
+        // Outer jc/pc loops run on the calling thread, which packs the
+        // B panel once into its TLS scratch; the MC-row A panels of
+        // each (jc, pc) step fan out as cooperative pool turns. The
+        // (jc, pc, ic) decomposition is a pure function of shape and
+        // profile, panels are disjoint row blocks of C each claimed
+        // exactly once off the shared counter, and pc steps accumulate
+        // sequentially — so the result is bit-identical to the serial
+        // path for any pool width and any worker interleaving.
+        for jc in (0..n).step_by(p.nc) {
+            let nc_eff = p.nc.min(n - jc);
+            for pc in (0..k).step_by(p.kc) {
+                let kc_eff = p.kc.min(k - pc);
+                let panics = with_b_panel(|bbuf| {
+                    pack_b(b, n, pc, jc, kc_eff, nc_eff, bbuf);
+                    let bpanel: &[f32] = bbuf;
+                    let next = AtomicUsize::new(0);
+                    let panels: Vec<Mutex<(usize, &mut [f32])>> = c
+                        .chunks_mut(p.mc * n)
+                        .enumerate()
+                        .map(Mutex::new)
+                        .collect();
+                    let n_tasks = pool.n_threads().min(n_panels);
+                    pool.run_scoped(n_tasks, |_| {
+                        let pi = next.fetch_add(1, Ordering::SeqCst);
+                        if pi >= n_panels {
+                            return false;
+                        }
+                        let mut guard = lock_unpoisoned(&panels[pi]);
+                        let (idx, chunk) = &mut *guard;
+                        let ic = *idx * p.mc;
+                        let mc_eff = p.mc.min(m - ic);
+                        with_a_panel(|abuf| {
+                            pack_a(a, k, ic, pc, mc_eff, kc_eff, abuf);
+                            packed_block(abuf, bpanel, kc_eff, mc_eff, nc_eff, chunk, n, jc);
+                        });
+                        true
+                    })
+                });
+                if panics > 0 {
+                    bail!("cpu backend worker panicked executing {m}x{n}x{k}");
                 }
-                let mut guard = lock_unpoisoned(&panels[p]);
-                let (idx, panel) = &mut *guard;
-                gemm_panel(a, b, m, n, k, *idx * tile, tile, panel);
-                true
-            })
-        };
-        if panics > 0 {
-            bail!("cpu backend worker panicked executing {m}x{n}x{k}");
+            }
         }
         Ok(c)
+    }
+
+    fn kernel_profile(&self) -> Option<&'static str> {
+        Some(self.profile.name)
     }
 }
 
@@ -367,6 +433,10 @@ impl ExecBackend for SimBackend {
 
     fn gemm(&self, a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Result<Vec<f32>> {
         self.cpu.gemm(a, b, m, n, k)
+    }
+
+    fn kernel_profile(&self) -> Option<&'static str> {
+        self.cpu.kernel_profile()
     }
 
     fn board_measurement(&self, g: &Gemm, t: &Tiling) -> Option<Measurement> {
@@ -418,23 +488,60 @@ mod tests {
 
     #[test]
     fn cpu_backend_identical_across_pool_widths() {
-        // Panel decomposition is fixed, so any worker interleaving
-        // produces bit-identical output.
+        // The (jc, pc, ic) decomposition is fixed, so any worker
+        // interleaving produces bit-identical output. Shape sized to
+        // actually fan out (multiple MC panels, panel work above the
+        // per-panel floor for every profile).
         let mut rng = Rng::new(5);
         let (m, n, k) = (300, 129, 170);
         let a = randn(&mut rng, m * k);
         let b = randn(&mut rng, k * n);
-        let base = CpuBackend::new()
-            .with_pool(Arc::new(DsePool::new(1)))
-            .gemm(&a, &b, m, n, k)
-            .unwrap();
-        for width in [2usize, 4, 8] {
-            let got = CpuBackend::new()
-                .with_pool(Arc::new(DsePool::new(width)))
+        for profile in [KernelProfile::l2_small(), KernelProfile::generic()] {
+            let base = CpuBackend::new()
+                .with_profile(profile)
+                .with_pool(Arc::new(DsePool::new(1)))
                 .gemm(&a, &b, m, n, k)
                 .unwrap();
-            assert_eq!(got, base, "width {width}");
+            for width in [2usize, 4, 8] {
+                let got = CpuBackend::new()
+                    .with_profile(profile)
+                    .with_pool(Arc::new(DsePool::new(width)))
+                    .gemm(&a, &b, m, n, k)
+                    .unwrap();
+                assert_eq!(got, base, "profile {} width {width}", profile.name);
+            }
         }
+    }
+
+    #[test]
+    fn cpu_backend_matches_legacy_oracle_on_integers() {
+        // Integer-valued operands are exact in f32, so the packed
+        // microkernel and the legacy blocked loop must agree bitwise.
+        let mut rng = Rng::new(17);
+        let (m, n, k) = (130, 96, 150);
+        let a: Vec<f32> = (0..m * k).map(|_| (rng.below(9) as f32) - 4.0).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| (rng.below(9) as f32) - 4.0).collect();
+        let packed = CpuBackend::new().gemm(&a, &b, m, n, k).unwrap();
+        let legacy = gemm_blocked_legacy(&a, &b, m, n, k);
+        assert_eq!(packed, legacy);
+        assert_eq!(packed, matmul_ref(&a, &b, m, n, k));
+    }
+
+    #[test]
+    fn tall_skinny_shapes_stay_serial_but_correct() {
+        // The per-panel-work gate: large m with tiny n·k used to fan
+        // out µs-scale turns; now it must run serially (observable only
+        // as "no pool spin-up", so assert numerics on a 1-thread pool —
+        // identical either way — and that the gate math says serial).
+        let p = KernelProfile::generic();
+        let (m, n, k) = (4096, 8, 8);
+        assert!(p.mc.min(m) * p.nc.min(n) * p.kc.min(k) < CPU_MIN_PANEL_MACS);
+        let mut rng = Rng::new(19);
+        let a = randn(&mut rng, m * k);
+        let b = randn(&mut rng, k * n);
+        let got = CpuBackend::new().gemm(&a, &b, m, n, k).unwrap();
+        let err = max_abs_diff(&got, &matmul_ref(&a, &b, m, n, k));
+        assert!(err < 1e-3, "err {err}");
     }
 
     #[test]
@@ -451,12 +558,31 @@ mod tests {
     fn auto_without_artifacts_is_cpu_and_explicit_pjrt_fails_loudly() {
         let cfg = Config::default();
         let missing = Path::new("definitely/not/artifacts");
-        let b = make_backend(BackendChoice::Auto, Some(missing), VersalSim::new(&cfg)).unwrap();
+        let auto = CpuProfileChoice::Auto;
+        let b =
+            make_backend(BackendChoice::Auto, auto, Some(missing), VersalSim::new(&cfg)).unwrap();
         assert_eq!(b.name(), "cpu");
-        let b = make_backend(BackendChoice::Auto, None, VersalSim::new(&cfg)).unwrap();
+        assert!(b.kernel_profile().is_some());
+        let b = make_backend(BackendChoice::Auto, auto, None, VersalSim::new(&cfg)).unwrap();
         assert_eq!(b.name(), "cpu");
-        assert!(make_backend(BackendChoice::Pjrt, Some(missing), VersalSim::new(&cfg)).is_err());
-        assert!(make_backend(BackendChoice::Pjrt, None, VersalSim::new(&cfg)).is_err());
+        let pjrt = make_backend(BackendChoice::Pjrt, auto, Some(missing), VersalSim::new(&cfg));
+        assert!(pjrt.is_err());
+        assert!(make_backend(BackendChoice::Pjrt, auto, None, VersalSim::new(&cfg)).is_err());
+    }
+
+    #[test]
+    fn explicit_profile_choice_reaches_the_backend() {
+        let cfg = Config::default();
+        for (choice, want) in [
+            (CpuProfileChoice::Generic, "generic"),
+            (CpuProfileChoice::L2Small, "l2-small"),
+            (CpuProfileChoice::L2Large, "l2-large"),
+        ] {
+            let b = make_backend(BackendChoice::Cpu, choice, None, VersalSim::new(&cfg)).unwrap();
+            assert_eq!(b.kernel_profile(), Some(want));
+            let b = make_backend(BackendChoice::Sim, choice, None, VersalSim::new(&cfg)).unwrap();
+            assert_eq!(b.kernel_profile(), Some(want), "sim delegates to cpu");
+        }
     }
 
     #[test]

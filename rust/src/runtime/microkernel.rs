@@ -1,0 +1,624 @@
+//! GotoBLAS2-style packed-panel GEMM core for the CPU backend
+//! (DESIGN.md §3): cache-blocked packing plus a fixed-size
+//! autovectorizable microkernel.
+//!
+//! The three-level pipeline (arXiv:2404.15043, the paper's own SOTA
+//! baseline) decomposes `C[m,n] += A[m,k] @ B[k,n]` as
+//!
+//! ```text
+//! for jc in 0..n  step NC          # B column block   → L3
+//!   for pc in 0..k  step KC        # pack B[pc:, jc:] → KC×NC panel
+//!     for ic in 0..m  step MC      # pack A[ic:, pc:] → MC×KC panel (L2)
+//!       for jr in 0..NC step NR    #   B sliver: KC×NR (streams from L3)
+//!         for ir in 0..MC step MR  #   A sliver: MR×KC (hot in L2)
+//!           microkernel: MR×NR register tile over KC
+//! ```
+//!
+//! Both panels are repacked into *microkernel order*: the A panel as
+//! MR-row slivers (for each `k`, the MR column values are adjacent) and
+//! the B panel as NR-column slivers (for each `k`, the NR row values
+//! are adjacent), so the inner loop reads both operands with stride 1
+//! regardless of the original matrix shapes. Ragged M/N edges are
+//! zero-padded at pack time into full MR/NR slivers — the microkernel
+//! always computes a full register tile and a masked tail write-back
+//! discards the padded lanes, which keeps the floating-point reduction
+//! order identical for interior and edge tiles (bit-controlled output).
+//! K is never padded: the reduction loop runs exactly `kc_eff` steps.
+//!
+//! ## Autovectorization contract
+//!
+//! The microkernel promises rustc/LLVM exactly the shape they
+//! auto-vectorize on stable: a `[[f32; NR]; MR]` accumulator whose
+//! inner loops have compile-time trip counts (MR = NR = 8), operands
+//! delivered through `chunks_exact` so every slice has a
+//! length known to the optimizer (no bounds checks survive), and no
+//! data-dependent branches in the loop body (the legacy kernel's
+//! `if av == 0.0 { continue }` defeated SIMD). Each `acc[i][j] += ai *
+//! b[j]` row update lowers to f32x8 fused multiply-adds on any x86-64
+//! target with AVX/FMA and to 2×f32x4 on baseline SSE2/NEON.
+//!
+//! Blocking parameters live in [`KernelProfile`] — selectable per
+//! backend via `--cpu-profile` (see [`CpuProfileChoice`]), with `auto`
+//! probing the L2 size once at startup.
+
+use std::cell::RefCell;
+use std::sync::OnceLock;
+
+use anyhow::{bail, Result};
+
+/// Microkernel register-tile rows. Fixed at compile time: the
+/// accumulator array shape is what makes the kernel autovectorize.
+pub const MR: usize = 8;
+/// Microkernel register-tile columns (one f32x8 vector per row).
+pub const NR: usize = 8;
+
+/// Cache-blocking parameters for the packed-panel pipeline. MR/NR are
+/// compile-time constants (the register tile is baked into the
+/// microkernel); MC/KC/NC select how much of each operand stays
+/// resident per cache level:
+///
+/// * `kc × NR` B sliver — L1-resident, streamed per microkernel call;
+/// * `mc × kc` packed A panel — L2-resident (the profile's knob);
+/// * `kc × nc` packed B panel — L3-resident.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KernelProfile {
+    /// Stable identifier surfaced in stats and the serve summary.
+    pub name: &'static str,
+    /// Register-tile rows (= [`MR`]; kept in the profile for display).
+    pub mr: usize,
+    /// Register-tile columns (= [`NR`]).
+    pub nr: usize,
+    /// A-panel rows per pack (multiple of MR).
+    pub mc: usize,
+    /// Reduction depth per packed panel pair.
+    pub kc: usize,
+    /// B-panel columns per pack (multiple of NR).
+    pub nc: usize,
+}
+
+impl KernelProfile {
+    /// Middle-of-the-road blocking: 128 KiB A panel, 4 MiB B panel —
+    /// safe on any core with ≥256 KiB of private L2.
+    pub fn generic() -> KernelProfile {
+        KernelProfile {
+            name: "generic",
+            mr: MR,
+            nr: NR,
+            mc: 128,
+            kc: 256,
+            nc: 4096,
+        }
+    }
+
+    /// Small-L2 cores (≤256 KiB): 32 KiB A panel, 1 MiB B panel.
+    pub fn l2_small() -> KernelProfile {
+        KernelProfile {
+            name: "l2-small",
+            mr: MR,
+            nr: NR,
+            mc: 64,
+            kc: 128,
+            nc: 2048,
+        }
+    }
+
+    /// Big-L2 cores (≥1 MiB): 512 KiB A panel, 8 MiB B panel.
+    pub fn l2_large() -> KernelProfile {
+        KernelProfile {
+            name: "l2-large",
+            mr: MR,
+            nr: NR,
+            mc: 256,
+            kc: 512,
+            nc: 4096,
+        }
+    }
+
+    /// Probe the per-core L2 size once (process-wide) and pick the
+    /// matching profile; unreadable/absent sysfs falls back to
+    /// [`KernelProfile::generic`]. The result is cached in a
+    /// `OnceLock`, so `auto` costs one sysfs read per process.
+    pub fn detect() -> KernelProfile {
+        static DETECTED: OnceLock<KernelProfile> = OnceLock::new();
+        *DETECTED.get_or_init(|| match probe_l2_bytes() {
+            Some(bytes) if bytes >= 1024 * 1024 => KernelProfile::l2_large(),
+            Some(bytes) if bytes <= 256 * 1024 => KernelProfile::l2_small(),
+            _ => KernelProfile::generic(),
+        })
+    }
+}
+
+/// Per-core L2 data/unified cache size from Linux sysfs, `None` when
+/// the hierarchy is unreadable (non-Linux, restricted container).
+fn probe_l2_bytes() -> Option<usize> {
+    for idx in 0..8 {
+        let base = format!("/sys/devices/system/cpu/cpu0/cache/index{idx}");
+        let Ok(level) = std::fs::read_to_string(format!("{base}/level")) else {
+            continue;
+        };
+        if level.trim() != "2" {
+            continue;
+        }
+        if let Ok(ty) = std::fs::read_to_string(format!("{base}/type")) {
+            if ty.trim() == "Instruction" {
+                continue;
+            }
+        }
+        let size = std::fs::read_to_string(format!("{base}/size")).ok()?;
+        return parse_cache_size(&size);
+    }
+    None
+}
+
+/// Parse sysfs cache sizes like `512K` / `1024K` / `2M` into bytes.
+fn parse_cache_size(text: &str) -> Option<usize> {
+    let t = text.trim();
+    let (digits, mult) = match t.as_bytes().last()? {
+        b'K' | b'k' => (&t[..t.len() - 1], 1024usize),
+        b'M' | b'm' => (&t[..t.len() - 1], 1024 * 1024),
+        _ => (t, 1),
+    };
+    digits.parse::<usize>().ok().map(|v| v.saturating_mul(mult))
+}
+
+/// Which [`KernelProfile`] the CPU backend runs
+/// (`CoordinatorOptions::cpu_profile`, `serve --cpu-profile`).
+/// Precedence: an explicit named profile always wins; `auto` (the
+/// default) defers to the one-time L2 probe in
+/// [`KernelProfile::detect`], which itself falls back to `generic`
+/// when the cache hierarchy is unreadable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CpuProfileChoice {
+    Generic,
+    L2Small,
+    L2Large,
+    /// Probe L2 size once at startup, then behave like the named
+    /// profile it resolved to.
+    #[default]
+    Auto,
+}
+
+impl CpuProfileChoice {
+    pub fn parse(text: &str) -> Result<CpuProfileChoice> {
+        match text {
+            "generic" => Ok(CpuProfileChoice::Generic),
+            "l2-small" => Ok(CpuProfileChoice::L2Small),
+            "l2-large" => Ok(CpuProfileChoice::L2Large),
+            "auto" => Ok(CpuProfileChoice::Auto),
+            other => bail!("unknown cpu profile `{other}` (generic|l2-small|l2-large|auto)"),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            CpuProfileChoice::Generic => "generic",
+            CpuProfileChoice::L2Small => "l2-small",
+            CpuProfileChoice::L2Large => "l2-large",
+            CpuProfileChoice::Auto => "auto",
+        }
+    }
+
+    /// The concrete blocking this choice runs with.
+    pub fn resolve(&self) -> KernelProfile {
+        match self {
+            CpuProfileChoice::Generic => KernelProfile::generic(),
+            CpuProfileChoice::L2Small => KernelProfile::l2_small(),
+            CpuProfileChoice::L2Large => KernelProfile::l2_large(),
+            CpuProfileChoice::Auto => KernelProfile::detect(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// packing
+
+thread_local! {
+    /// Per-thread packed A panel, reused across panels/jobs for the
+    /// thread's lifetime — pool workers and the executor thread each
+    /// own one, so the hot path allocates nothing after warm-up.
+    static A_PANEL: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+    /// Per-thread packed B panel. A *separate* TLS cell from the A
+    /// panel on purpose: the fan-out path holds the caller's B borrow
+    /// across `run_scoped` while each worker (possibly the same
+    /// thread) borrows its own A scratch.
+    static B_PANEL: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Run `f` with this thread's reusable A-panel buffer.
+pub fn with_a_panel<R>(f: impl FnOnce(&mut Vec<f32>) -> R) -> R {
+    A_PANEL.with(|cell| f(&mut cell.borrow_mut()))
+}
+
+/// Run `f` with this thread's reusable B-panel buffer.
+pub fn with_b_panel<R>(f: impl FnOnce(&mut Vec<f32>) -> R) -> R {
+    B_PANEL.with(|cell| f(&mut cell.borrow_mut()))
+}
+
+/// Pack the `mc_eff × kc_eff` block of row-major `a` (`m×k_dim`, top
+/// left at `(ic, pc)`) into MR-row slivers: sliver `s` stores, for each
+/// reduction step `kk`, the MR adjacent values `A[ic + s·MR + r][pc +
+/// kk]`. Rows past `mc_eff` are zero-filled so every sliver is full
+/// height.
+pub fn pack_a(
+    a: &[f32],
+    k_dim: usize,
+    ic: usize,
+    pc: usize,
+    mc_eff: usize,
+    kc_eff: usize,
+    out: &mut Vec<f32>,
+) {
+    let slivers = mc_eff.div_ceil(MR);
+    out.clear();
+    out.resize(slivers * MR * kc_eff, 0.0);
+    for s in 0..slivers {
+        let sliver = &mut out[s * MR * kc_eff..(s + 1) * MR * kc_eff];
+        let rows = MR.min(mc_eff - s * MR);
+        for r in 0..rows {
+            let row = ic + s * MR + r;
+            let src = &a[row * k_dim + pc..row * k_dim + pc + kc_eff];
+            for (kk, &v) in src.iter().enumerate() {
+                sliver[kk * MR + r] = v;
+            }
+        }
+    }
+}
+
+/// Pack the `kc_eff × nc_eff` block of row-major `b` (`k×n_dim`, top
+/// left at `(pc, jc)`) into NR-column slivers: sliver `s` stores, for
+/// each reduction step `kk`, the NR adjacent values `B[pc + kk][jc +
+/// s·NR + c]`. Columns past `nc_eff` are zero-filled.
+pub fn pack_b(
+    b: &[f32],
+    n_dim: usize,
+    pc: usize,
+    jc: usize,
+    kc_eff: usize,
+    nc_eff: usize,
+    out: &mut Vec<f32>,
+) {
+    let slivers = nc_eff.div_ceil(NR);
+    out.clear();
+    out.resize(slivers * NR * kc_eff, 0.0);
+    for kk in 0..kc_eff {
+        let row = pc + kk;
+        let src = &b[row * n_dim + jc..row * n_dim + jc + nc_eff];
+        for s in 0..slivers {
+            let cols = NR.min(nc_eff - s * NR);
+            let dst = &mut out[s * NR * kc_eff + kk * NR..][..cols];
+            dst.copy_from_slice(&src[s * NR..s * NR + cols]);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// microkernel
+
+/// The register-tile reduction shared by the interior and tail paths:
+/// `MR×NR` accumulator over `kc` steps of packed slivers. See the
+/// module docs for the autovectorization contract this body upholds.
+#[inline(always)]
+fn accumulate(kc: usize, ap: &[f32], bp: &[f32]) -> [[f32; NR]; MR] {
+    let mut acc = [[0.0f32; NR]; MR];
+    let a_steps = ap[..kc * MR].chunks_exact(MR);
+    let b_steps = bp[..kc * NR].chunks_exact(NR);
+    for (a, b) in a_steps.zip(b_steps) {
+        for i in 0..MR {
+            let ai = a[i];
+            let row = &mut acc[i];
+            for j in 0..NR {
+                row[j] += ai * b[j];
+            }
+        }
+    }
+    acc
+}
+
+/// Interior microkernel: `C[0..MR][0..NR] += Ap · Bp` where `c` points
+/// at the tile's top-left element and rows are `ldc` apart. `ap`/`bp`
+/// are one packed A/B sliver (`kc×MR` / `kc×NR`).
+#[inline]
+pub fn microkernel(kc: usize, ap: &[f32], bp: &[f32], c: &mut [f32], ldc: usize) {
+    let acc = accumulate(kc, ap, bp);
+    for (i, acc_row) in acc.iter().enumerate() {
+        let row = &mut c[i * ldc..i * ldc + NR];
+        for j in 0..NR {
+            row[j] += acc_row[j];
+        }
+    }
+}
+
+/// Masked tail microkernel for ragged M/N edges: the reduction is the
+/// *same* full-tile `accumulate` (padded lanes hold zeros from pack
+/// time), only the write-back is masked to the valid `mr_eff × nr_eff`
+/// region — identical rounding to the interior path, bit-controlled
+/// output.
+#[inline]
+pub fn microkernel_tail(
+    kc: usize,
+    ap: &[f32],
+    bp: &[f32],
+    c: &mut [f32],
+    ldc: usize,
+    mr_eff: usize,
+    nr_eff: usize,
+) {
+    let acc = accumulate(kc, ap, bp);
+    for (i, acc_row) in acc.iter().enumerate().take(mr_eff) {
+        let row = &mut c[i * ldc..i * ldc + nr_eff];
+        for (cv, av) in row.iter_mut().zip(acc_row) {
+            *cv += av;
+        }
+    }
+}
+
+/// Multiply one packed A panel (`mc_eff×kc_eff`) by one packed B panel
+/// (`kc_eff×nc_eff`), accumulating into the C block whose top-left
+/// element is `c[col0]`; `c` must cover `mc_eff` rows of stride `ldc`.
+/// Loop order jr→ir keeps each B sliver hot while the A panel streams
+/// from L2.
+#[allow(clippy::too_many_arguments)]
+pub fn packed_block(
+    apanel: &[f32],
+    bpanel: &[f32],
+    kc_eff: usize,
+    mc_eff: usize,
+    nc_eff: usize,
+    c: &mut [f32],
+    ldc: usize,
+    col0: usize,
+) {
+    debug_assert!(col0 + nc_eff <= ldc);
+    debug_assert!(c.len() >= mc_eff * ldc);
+    let m_slivers = mc_eff.div_ceil(MR);
+    let n_slivers = nc_eff.div_ceil(NR);
+    for js in 0..n_slivers {
+        let bp = &bpanel[js * NR * kc_eff..(js + 1) * NR * kc_eff];
+        let nr_eff = NR.min(nc_eff - js * NR);
+        for is in 0..m_slivers {
+            let ap = &apanel[is * MR * kc_eff..(is + 1) * MR * kc_eff];
+            let mr_eff = MR.min(mc_eff - is * MR);
+            let c0 = is * MR * ldc + col0 + js * NR;
+            if mr_eff == MR && nr_eff == NR {
+                microkernel(kc_eff, ap, bp, &mut c[c0..], ldc);
+            } else {
+                microkernel_tail(kc_eff, ap, bp, &mut c[c0..], ldc, mr_eff, nr_eff);
+            }
+        }
+    }
+}
+
+/// Serial three-level packed GEMM: `c += a @ b` for row-major f32
+/// operands (callers pass a zeroed `c` for a plain product). This is
+/// both the single-thread path of `CpuBackend` and the per-(jc,pc)
+/// body its pool fan-out distributes — the (jc, pc, ic) decomposition
+/// is a pure function of the shape and profile, so serial and fanned
+/// executions produce bit-identical output.
+pub fn packed_gemm_serial(
+    p: &KernelProfile,
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    c: &mut [f32],
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    for jc in (0..n).step_by(p.nc) {
+        let nc_eff = p.nc.min(n - jc);
+        for pc in (0..k).step_by(p.kc) {
+            let kc_eff = p.kc.min(k - pc);
+            with_b_panel(|bbuf| {
+                pack_b(b, n, pc, jc, kc_eff, nc_eff, bbuf);
+                for ic in (0..m).step_by(p.mc) {
+                    let mc_eff = p.mc.min(m - ic);
+                    with_a_panel(|abuf| {
+                        pack_a(a, k, ic, pc, mc_eff, kc_eff, abuf);
+                        packed_block(
+                            abuf,
+                            bbuf,
+                            kc_eff,
+                            mc_eff,
+                            nc_eff,
+                            &mut c[ic * n..(ic + mc_eff) * n],
+                            n,
+                            jc,
+                        );
+                    });
+                }
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{matmul_ref, max_abs_diff};
+    use crate::util::rng::Rng;
+
+    fn randn(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    fn packed(p: &KernelProfile, a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+        let mut c = vec![0.0f32; m * n];
+        packed_gemm_serial(p, a, b, m, n, k, &mut c);
+        c
+    }
+
+    #[test]
+    fn profiles_are_mr_nr_aligned_and_distinct() {
+        let all = [
+            KernelProfile::generic(),
+            KernelProfile::l2_small(),
+            KernelProfile::l2_large(),
+        ];
+        for p in &all {
+            assert_eq!(p.mr, MR);
+            assert_eq!(p.nr, NR);
+            assert_eq!(p.mc % MR, 0, "{}: MC must be a multiple of MR", p.name);
+            assert_eq!(p.nc % NR, 0, "{}: NC must be a multiple of NR", p.name);
+            assert!(p.kc > 0);
+        }
+        assert_ne!(all[0], all[1]);
+        assert_ne!(all[1], all[2]);
+    }
+
+    #[test]
+    fn profile_choice_parses_and_resolves() {
+        for (text, label) in [
+            ("generic", "generic"),
+            ("l2-small", "l2-small"),
+            ("l2-large", "l2-large"),
+            ("auto", "auto"),
+        ] {
+            let c = CpuProfileChoice::parse(text).unwrap();
+            assert_eq!(c.label(), label);
+        }
+        assert!(CpuProfileChoice::parse("huge").is_err());
+        assert_eq!(CpuProfileChoice::default(), CpuProfileChoice::Auto);
+        // Auto resolves to one of the three named profiles on any host.
+        let auto = CpuProfileChoice::Auto.resolve();
+        assert!(["generic", "l2-small", "l2-large"].contains(&auto.name));
+        // And resolves identically on repeat calls (OnceLock).
+        assert_eq!(auto, CpuProfileChoice::Auto.resolve());
+    }
+
+    #[test]
+    fn cache_size_parsing() {
+        assert_eq!(parse_cache_size("512K\n"), Some(512 * 1024));
+        assert_eq!(parse_cache_size("1024K"), Some(1024 * 1024));
+        assert_eq!(parse_cache_size("2M"), Some(2 * 1024 * 1024));
+        assert_eq!(parse_cache_size("65536"), Some(65536));
+        assert_eq!(parse_cache_size("junk"), None);
+    }
+
+    #[test]
+    fn pack_a_layout_and_padding() {
+        // 3×2 block of a 4×5 matrix at (1,2): one MR sliver, rows 3..MR
+        // zero-padded, per-k values adjacent.
+        let a: Vec<f32> = (0..20).map(|v| v as f32).collect();
+        let mut out = Vec::new();
+        pack_a(&a, 5, 1, 2, 3, 2, &mut out);
+        assert_eq!(out.len(), MR * 2);
+        for kk in 0..2 {
+            for r in 0..MR {
+                let want = if r < 3 { a[(1 + r) * 5 + 2 + kk] } else { 0.0 };
+                assert_eq!(out[kk * MR + r], want, "kk={kk} r={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn pack_b_layout_and_padding() {
+        // 2×10 block of a 3×12 matrix at (1,1): two NR slivers, cols
+        // 10.. zero-padded in the second sliver.
+        let b: Vec<f32> = (0..36).map(|v| v as f32).collect();
+        let mut out = Vec::new();
+        pack_b(&b, 12, 1, 1, 2, 10, &mut out);
+        assert_eq!(out.len(), 2 * NR * 2);
+        for kk in 0..2 {
+            for c in 0..2 * NR {
+                let s = c / NR;
+                let want = if c < 10 { b[(1 + kk) * 12 + 1 + c] } else { 0.0 };
+                assert_eq!(out[s * NR * 2 + kk * NR + (c % NR)], want, "kk={kk} c={c}");
+            }
+        }
+    }
+
+    #[test]
+    fn microkernel_matches_scalar_tile() {
+        let mut rng = Rng::new(7);
+        let kc = 17;
+        let ap = randn(&mut rng, kc * MR);
+        let bp = randn(&mut rng, kc * NR);
+        let ldc = NR + 3;
+        let mut c = vec![0.5f32; MR * ldc];
+        let before = c.clone();
+        microkernel(kc, &ap, &bp, &mut c, ldc);
+        for i in 0..MR {
+            for j in 0..NR {
+                let mut want = before[i * ldc + j];
+                for kk in 0..kc {
+                    want += ap[kk * MR + i] * bp[kk * NR + j];
+                }
+                let got = c[i * ldc + j];
+                assert!((got - want).abs() <= 1e-4 * want.abs().max(1.0), "({i},{j})");
+            }
+        }
+        // Lanes past NR in each row are untouched.
+        for i in 0..MR {
+            for j in NR..ldc {
+                assert_eq!(c[i * ldc + j], 0.5, "({i},{j}) clobbered");
+            }
+        }
+    }
+
+    #[test]
+    fn tail_microkernel_masks_writeback_exactly() {
+        let mut rng = Rng::new(8);
+        let kc = 9;
+        let ap = randn(&mut rng, kc * MR);
+        let bp = randn(&mut rng, kc * NR);
+        let (mr_eff, nr_eff) = (3, 5);
+        let ldc = NR;
+        let mut full = vec![0.0f32; MR * ldc];
+        microkernel(kc, &ap, &bp, &mut full, ldc);
+        let mut tail = vec![7.0f32; MR * ldc];
+        microkernel_tail(kc, &ap, &bp, &mut tail, ldc, mr_eff, nr_eff);
+        for i in 0..MR {
+            for j in 0..NR {
+                if i < mr_eff && j < nr_eff {
+                    // Same reduction as the interior kernel, bit-exact.
+                    assert_eq!(tail[i * ldc + j], 7.0 + full[i * ldc + j], "({i},{j})");
+                } else {
+                    assert_eq!(tail[i * ldc + j], 7.0, "({i},{j}) clobbered");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn packed_gemm_matches_reference_across_uneven_shapes() {
+        let p = KernelProfile::l2_small(); // smallest blocks → most edges
+        let mut rng = Rng::new(21);
+        for (m, n, k) in [
+            (1, 1, 1),
+            (1, 17, 131),
+            (31, 1, 7),
+            (9, 9, 9),
+            (MR + 1, NR + 1, 3),
+            (67, 129, 130),
+            (200, 96, 131),
+        ] {
+            let a = randn(&mut rng, m * k);
+            let b = randn(&mut rng, k * n);
+            let got = packed(&p, &a, &b, m, n, k);
+            let want = matmul_ref(&a, &b, m, n, k);
+            let err = max_abs_diff(&got, &want);
+            assert!(err < 1e-3, "{m}x{n}x{k}: err {err}");
+        }
+    }
+
+    #[test]
+    fn profiles_agree_bitwise_on_integer_operands() {
+        // Integer-valued f32 operands make every product and partial
+        // sum exact, so blocking cannot change the result at all.
+        let mut rng = Rng::new(22);
+        let (m, n, k) = (130, 70, 300); // crosses MC/KC/NC for all profiles
+        let a: Vec<f32> = (0..m * k).map(|_| (rng.below(13) as f32) - 6.0).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| (rng.below(13) as f32) - 6.0).collect();
+        let want = matmul_ref(&a, &b, m, n, k);
+        for p in [
+            KernelProfile::generic(),
+            KernelProfile::l2_small(),
+            KernelProfile::l2_large(),
+        ] {
+            let got = packed(&p, &a, &b, m, n, k);
+            assert_eq!(got, want, "profile {}", p.name);
+        }
+    }
+}

@@ -11,10 +11,13 @@
 //!
 //! The PJRT engine is one of several execution paths: [`backend`]
 //! abstracts it behind the [`backend::ExecBackend`] trait next to an
-//! always-available blocked CPU GEMM and a simulator-stamped variant,
-//! so the coordinator executes data jobs even when no artifacts exist.
+//! always-available packed-panel CPU GEMM (built on [`microkernel`],
+//! the GotoBLAS2-style blocking + autovectorized register-tile kernel)
+//! and a simulator-stamped variant, so the coordinator executes data
+//! jobs even when no artifacts exist.
 
 pub mod backend;
+pub mod microkernel;
 
 use anyhow::{anyhow, bail, Context, Result};
 use std::path::{Path, PathBuf};

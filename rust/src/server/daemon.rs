@@ -662,13 +662,19 @@ impl Daemon {
             ("executed_jobs", s.executed_jobs as f64),
             ("executed_energy_j", s.executed_energy_j),
             ("executed_gflops_per_w", s.executed_gflops_per_w),
+            ("cpu_gemm_gflops", s.cpu_gemm_gflops),
             ("simulated_energy_j", s.simulated_energy_j),
             ("dse_pool_threads", s.dse_pool_threads as f64),
             ("results_dropped", self.results_dropped as f64),
             ("connections", self.conns.iter().filter(|c| !c.dead).count() as f64),
         ];
+        let backend = match self.coord.kernel_profile() {
+            Some(p) => format!("{} (profile {p})", self.coord.backend_name()),
+            None => self.coord.backend_name().to_string(),
+        };
         WireStats {
             state: self.state.label().to_string(),
+            backend,
             uptime_s: self.started.elapsed().as_secs_f64(),
             fields: fields
                 .into_iter()

@@ -39,7 +39,10 @@ use crate::dse::Objective;
 use crate::workloads::Gemm;
 
 /// Current wire-protocol revision (the version byte of every frame).
-pub const PROTOCOL_VERSION: u8 = 1;
+/// v2 added the `backend` descriptor string to STATS/DRAINED payloads;
+/// the bump makes a v1 peer fail with `BadVersion` instead of
+/// misparsing the reshaped payload.
+pub const PROTOCOL_VERSION: u8 = 2;
 
 /// Hard ceiling on one frame's payload (256 MiB) — large enough for a
 /// 2048x2048 FP32 operand pair with headroom, small enough that a
@@ -229,6 +232,11 @@ impl WireResult {
 pub struct WireStats {
     /// Daemon state machine position: "ready" / "draining" / "stopped".
     pub state: String,
+    /// Human-readable execution-backend descriptor, e.g.
+    /// `cpu (profile l2-large)` — backend name plus the selected packed-
+    /// panel kernel profile when one applies ("starting" until the
+    /// executor has built its backend).
+    pub backend: String,
     pub uptime_s: f64,
     pub fields: Vec<(String, f64)>,
 }
@@ -416,6 +424,7 @@ fn result_payload(r: &WireResult) -> Vec<u8> {
 fn stats_payload(s: &WireStats) -> Vec<u8> {
     let mut p = Vec::new();
     put_string(&mut p, &s.state);
+    put_string(&mut p, &s.backend);
     put_f64(&mut p, s.uptime_s);
     put_u32(&mut p, s.fields.len() as u32);
     for (name, value) in &s.fields {
@@ -660,6 +669,7 @@ fn decode_result(payload: &[u8]) -> Result<WireResult, ProtocolError> {
 fn decode_stats(payload: &[u8]) -> Result<WireStats, ProtocolError> {
     let mut s = Scan::new(payload);
     let state = s.string()?;
+    let backend = s.string()?;
     let uptime_s = s.f64()?;
     let count = s.u32()? as usize;
     if count > MAX_STATS_FIELDS {
@@ -676,6 +686,7 @@ fn decode_stats(payload: &[u8]) -> Result<WireStats, ProtocolError> {
     s.finish()?;
     Ok(WireStats {
         state,
+        backend,
         uptime_s,
         fields,
     })
@@ -808,6 +819,7 @@ mod tests {
     fn sample_stats() -> WireStats {
         WireStats {
             state: "ready".to_string(),
+            backend: "cpu (profile l2-large)".to_string(),
             uptime_s: 12.75,
             fields: vec![
                 ("jobs_completed".to_string(), 42.0),

@@ -15,7 +15,9 @@ use versal_gemm::dse::{DseEngine, DsePool, Objective};
 use versal_gemm::features::FeatureSet;
 use versal_gemm::models::Predictors;
 use versal_gemm::runtime::backend::{CpuBackend, ExecBackend, SimBackend};
+use versal_gemm::runtime::microkernel::KernelProfile;
 use versal_gemm::runtime::{matmul_ref, max_abs_diff};
+use versal_gemm::util::forall;
 use versal_gemm::util::rng::Rng;
 use versal_gemm::versal::VersalSim;
 use versal_gemm::workloads::{training_workloads, Gemm};
@@ -99,6 +101,117 @@ fn cpu_backend_bit_identical_across_pool_widths_and_exact_on_integers() {
         let got = cpu.gemm(&a, &b, m, n, k).unwrap();
         assert_eq!(got, want, "width {width}");
     }
+}
+
+/// Dimension pool for the packed-GEMM property tests: degenerate 1s,
+/// primes, and values straddling the MR/NR (8), KC, and MC block
+/// boundaries of every kernel profile.
+const DIM_POOL: [usize; 12] = [1, 3, 7, 13, 31, 65, 97, 127, 129, 131, 200, 257];
+
+fn pick_shape(rng: &mut Rng) -> (usize, usize, usize) {
+    (
+        DIM_POOL[rng.below(DIM_POOL.len())],
+        DIM_POOL[rng.below(DIM_POOL.len())],
+        DIM_POOL[rng.below(DIM_POOL.len())],
+    )
+}
+
+/// Integer-valued f32 operands in [-6, 6]: every product and partial
+/// sum is an integer well below 2^24, so GEMM is exact and any two
+/// correct evaluation orders must agree to the bit.
+fn randi(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| (rng.below(13) as f32) - 6.0).collect()
+}
+
+/// Forward-error bound for a k-term f32 dot product: per-element
+/// tolerance `k · eps · Σ|a||b| + MIN_POSITIVE`, i.e. ulp-scaled to the
+/// operand magnitude rather than a fixed absolute epsilon.
+fn assert_within_ulp_bound(got: &[f32], a: &[f32], b: &[f32], m: usize, n: usize, k: usize) {
+    let want = matmul_ref(a, b, m, n, k);
+    let aa: Vec<f32> = a.iter().map(|v| v.abs()).collect();
+    let ab: Vec<f32> = b.iter().map(|v| v.abs()).collect();
+    let bound = matmul_ref(&aa, &ab, m, n, k);
+    for (i, ((g, w), s)) in got.iter().zip(&want).zip(&bound).enumerate() {
+        let tol = (k as f32) * f32::EPSILON * s + f32::MIN_POSITIVE;
+        assert!((g - w).abs() <= tol, "{m}x{n}x{k} element {i}: got {g} want {w} (tol {tol})");
+    }
+}
+
+#[test]
+fn packed_gemm_property_matches_reference_within_ulp_bound() {
+    // Property: for any shape drawn from the boundary-heavy dimension
+    // pool (m/n/k = 1, primes, non-multiples of MR/NR/KC), the packed
+    // three-level pipeline stays within the k·eps forward-error bound
+    // of the naive reference — under both the smallest and largest
+    // blocking profiles so pack-time padding edges are exercised.
+    for profile in [KernelProfile::l2_small(), KernelProfile::l2_large()] {
+        let cpu = CpuBackend::new().with_profile(profile);
+        forall(4242, 16, pick_shape, |&(m, n, k)| {
+            let mut rng = Rng::new((m * 1_000_003 + n * 1009 + k) as u64);
+            let a = randn(&mut rng, m * k);
+            let b = randn(&mut rng, k * n);
+            let got = cpu.gemm(&a, &b, m, n, k).unwrap();
+            assert_within_ulp_bound(&got, &a, &b, m, n, k);
+        });
+    }
+}
+
+#[test]
+fn packed_gemm_property_bit_identical_across_pool_widths() {
+    // Property: the (jc, pc, ic) work decomposition is fixed by shape
+    // and profile, never by thread count, so integer operands (exact
+    // arithmetic) must give *bit*-identical results at every width.
+    // l2-small blocking makes even modest shapes span several MC/KC/NC
+    // blocks so the fan-out path really runs.
+    let profile = KernelProfile::l2_small();
+    forall(
+        7171,
+        6,
+        |rng| {
+            let (m, n, k) = pick_shape(rng);
+            (m + 64, n + 32, k + 64) // shift up: cross MC/KC boundaries
+        },
+        |&(m, n, k)| {
+            let mut rng = Rng::new((m * 31 + n * 17 + k) as u64);
+            let a = randi(&mut rng, m * k);
+            let b = randi(&mut rng, k * n);
+            let base = CpuBackend::new()
+                .with_profile(profile)
+                .with_pool(Arc::new(DsePool::new(1)))
+                .gemm(&a, &b, m, n, k)
+                .unwrap();
+            assert_eq!(base, matmul_ref(&a, &b, m, n, k), "{m}x{n}x{k} vs ref");
+            for width in [2usize, 8] {
+                let got = CpuBackend::new()
+                    .with_profile(profile)
+                    .with_pool(Arc::new(DsePool::new(width)))
+                    .gemm(&a, &b, m, n, k)
+                    .unwrap();
+                assert_eq!(got, base, "{m}x{n}x{k} at width {width}");
+            }
+        },
+    );
+}
+
+#[test]
+fn packed_gemm_property_profiles_agree_bitwise_on_integer_operands() {
+    // Property: blocking profiles reorder the loop nest but never the
+    // per-element accumulation order over k, so on exact (integer)
+    // operands generic and l2-large — opposite ends of the blocking
+    // spectrum — must agree to the bit, and both with the reference.
+    forall(9090, 10, pick_shape, |&(m, n, k)| {
+        let mut rng = Rng::new((m * 131 + n * 13 + k) as u64);
+        let a = randi(&mut rng, m * k);
+        let b = randi(&mut rng, k * n);
+        let want = matmul_ref(&a, &b, m, n, k);
+        for profile in [KernelProfile::generic(), KernelProfile::l2_large()] {
+            let got = CpuBackend::new()
+                .with_profile(profile)
+                .gemm(&a, &b, m, n, k)
+                .unwrap();
+            assert_eq!(got, want, "{m}x{n}x{k} profile {}", profile.name);
+        }
+    });
 }
 
 #[test]
