@@ -1,4 +1,4 @@
-//! END-TO-END driver (DESIGN.md §7): serve the GEMM working set of a
+//! END-TO-END driver (DESIGN.md §8): serve the GEMM working set of a
 //! real small-transformer inference trace through the full stack.
 //!
 //! All three layers compose here:

@@ -242,6 +242,7 @@ pub struct CoordinatorStats {
     /// Selected CPU [`KernelProfile`](crate::runtime::microkernel::KernelProfile)
     /// name ("generic" / "l2-small" / "l2-large"; "" under pjrt or
     /// before the executor built its backend).
+    // lint:allow(stats-parity) non-numeric; surfaced in the WireStats backend label instead
     pub cpu_kernel_profile: &'static str,
     /// Energy drawn by executed jobs (J): the sum of each job's
     /// power-trace integral (`JobResult::energy_j`).

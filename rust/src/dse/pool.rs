@@ -92,6 +92,35 @@ struct ScopeState {
     panics: AtomicUsize,
 }
 
+/// Caller-thread fallback for a pool whose workers all failed to spawn:
+/// drive every task's turns round-robin until each one finishes, with
+/// the same panic containment as a worker turn. Returns the panic count.
+fn run_inline(n_tasks: usize, turn: &(dyn Fn(usize) -> bool + Sync)) -> usize {
+    let mut live: Vec<bool> = vec![true; n_tasks];
+    let mut panics = 0usize;
+    let mut remaining = n_tasks;
+    while remaining > 0 {
+        for i in 0..n_tasks {
+            if !live[i] {
+                continue;
+            }
+            match catch_unwind(AssertUnwindSafe(|| turn(i))) {
+                Ok(true) => {} // task wants another turn
+                Ok(false) => {
+                    live[i] = false;
+                    remaining -= 1;
+                }
+                Err(_) => {
+                    live[i] = false;
+                    remaining -= 1;
+                    panics += 1;
+                }
+            }
+        }
+    }
+    panics
+}
+
 fn finish_task(scope: &ScopeState, panicked: bool) {
     if panicked {
         scope.panics.fetch_add(1, Ordering::SeqCst);
@@ -167,15 +196,21 @@ impl DsePool {
             active: AtomicUsize::new(0),
             peak_active: AtomicUsize::new(0),
         });
-        let workers = (0..n_threads)
-            .map(|i| {
+        // Spawn failures (thread exhaustion under load) degrade the pool
+        // instead of panicking the serve path: whatever workers did start
+        // carry the queue, and a fully thread-starved pool falls back to
+        // running turns inline on the caller (see `run_scoped`).
+        let workers: Vec<std::thread::JoinHandle<()>> = (0..n_threads)
+            .filter_map(|i| {
                 let shared = Arc::clone(&shared);
                 std::thread::Builder::new()
                     .name(format!("dse-pool-{i}"))
                     .spawn(move || worker_loop(&shared))
-                    .expect("spawn dse pool worker")
+                    .map_err(|e| eprintln!("dse pool: worker {i} failed to spawn: {e}"))
+                    .ok()
             })
             .collect();
+        let n_threads = workers.len().max(1);
         DsePool {
             shared,
             workers,
@@ -248,6 +283,12 @@ impl DsePool {
         if n_tasks == 0 {
             return 0;
         }
+        if self.workers.is_empty() {
+            // Degraded pool (every spawn failed): run the turns inline on
+            // the caller, round-robin like the queue would, so scoped work
+            // still completes instead of blocking on a latch nobody drains.
+            return run_inline(n_tasks, &turn);
+        }
         let scope = Arc::new(ScopeState {
             remaining: Mutex::new(n_tasks),
             done: Condvar::new(),
@@ -294,6 +335,25 @@ impl Drop for DsePool {
 mod tests {
     use super::*;
     use std::sync::atomic::AtomicBool;
+
+    #[test]
+    fn inline_fallback_runs_every_task_and_counts_panics() {
+        // The degraded-pool path: multi-turn tasks finish, panics are
+        // contained and counted, exactly like a worker-driven scope.
+        let turns: Vec<AtomicUsize> = (0..4).map(|_| AtomicUsize::new(0)).collect();
+        let panics = run_inline(4, &|i| {
+            let t = turns[i].fetch_add(1, Ordering::SeqCst);
+            if i == 3 && t == 1 {
+                panic!("inline turn panic");
+            }
+            t < 2 // three turns per task
+        });
+        assert_eq!(panics, 1);
+        for (i, t) in turns.iter().enumerate() {
+            let expect = if i == 3 { 2 } else { 3 };
+            assert_eq!(t.load(Ordering::SeqCst), expect, "task {i}");
+        }
+    }
 
     #[test]
     fn run_scoped_executes_every_task_once() {

@@ -20,10 +20,11 @@
 //! DSE→coordinator planning-path diagram (bounded admission,
 //! single-flight plan coalescing, and the sharded plan cache), the
 //! execution-backend layer and its energy formula (§3), the serving
-//! daemon and its wire protocol (§4), the compiled forest-inference
-//! engine (§5: the arena layout and row-blocked traversal behind
-//! `Predictors::predict_rows`), and the per-figure/table experiment
-//! index.
+//! daemon and its wire protocol (§4), the project lint pass and the
+//! invariants it enforces (§5: `cargo run -- lint`, the [`lint`]
+//! module), the compiled forest-inference engine (§6: the arena layout
+//! and row-blocked traversal behind `Predictors::predict_rows`), and
+//! the per-figure/table experiment index.
 
 pub mod analytical;
 pub mod coordinator;
@@ -33,6 +34,7 @@ pub mod dse;
 pub mod features;
 pub mod gbdt;
 pub mod gpu;
+pub mod lint;
 pub mod metrics;
 pub mod models;
 pub mod report;

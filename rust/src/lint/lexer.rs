@@ -1,0 +1,472 @@
+//! Token-level Rust lexer for `pallas-lint`.
+//!
+//! This formalizes the ad-hoc "delimiter-lexer scan" used to verify PRs 4-7
+//! into a first-class, tested component. It is *not* a full Rust parser: it
+//! produces a flat token stream that is precise about the things a lint rule
+//! must never get wrong — string/char literals (so `".unwrap()"` inside a
+//! string is not a finding), nested block comments, raw strings with hash
+//! fences, and the `'a` lifetime vs `'a'` char ambiguity. Everything that is
+//! not an identifier, literal, or comment is a single-byte `Punct` token,
+//! which is all the rule engine needs for structural matching (brace depth,
+//! call-argument spans, attribute brackets).
+//!
+//! No external crates: the lexer works byte-wise over UTF-8 source. This is
+//! safe because every byte the lexer dispatches on is ASCII and UTF-8
+//! continuation bytes can never alias an ASCII delimiter.
+
+/// Token classification. Deliberately coarse: rules match on identifier text
+/// and punct bytes, and only need literals/comments to be correctly skipped.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (including raw identifiers, minus the `r#`).
+    Ident,
+    /// A lifetime such as `'a` or `'static` (leading quote included in span).
+    Lifetime,
+    /// Numeric literal (integer or float, any base, with suffixes).
+    Num,
+    /// String literal: `"..."`, `r"..."`, `r#"..."#`, `b"..."`, `br#"..."#`.
+    Str,
+    /// Char or byte-char literal: `'x'`, `'\n'`, `b'x'`.
+    Char,
+    /// A single punctuation byte (`.`, `(`, `{`, `!`, `#`, ...).
+    Punct(u8),
+    /// Line or block comment, text included (waivers live here).
+    Comment,
+}
+
+/// One token: kind plus byte span and 1-based start line.
+#[derive(Debug, Clone, Copy)]
+pub struct Tok {
+    pub kind: TokKind,
+    /// Byte offset of the first byte of the token.
+    pub start: usize,
+    /// Byte offset one past the last byte of the token.
+    pub end: usize,
+    /// 1-based line number of `start`.
+    pub line: u32,
+}
+
+impl Tok {
+    /// The token's text within `src` (the same string passed to `lex`).
+    pub fn text<'a>(&self, src: &'a str) -> &'a str {
+        &src[self.start..self.end]
+    }
+
+    /// True for `Punct(b)` tokens matching the given byte.
+    pub fn is_punct(&self, b: u8) -> bool {
+        self.kind == TokKind::Punct(b)
+    }
+}
+
+fn is_ident_start(b: u8) -> bool {
+    b.is_ascii_alphabetic() || b == b'_' || b >= 0x80
+}
+
+fn is_ident_cont(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_' || b >= 0x80
+}
+
+/// Lex `src` into a flat token stream. Whitespace is dropped; comments are
+/// kept (the waiver scanner reads them). The lexer never fails: malformed
+/// input (unterminated string, stray byte) degrades to best-effort tokens
+/// that end at EOF, which is the right behavior for a linter that must not
+/// panic on the code it is checking.
+pub fn lex(src: &str) -> Vec<Tok> {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut toks = Vec::with_capacity(n / 4);
+    let mut i = 0usize;
+    let mut line = 1u32;
+
+    // Count newlines in b[from..to] — used after consuming a multi-line token.
+    let count_lines = |from: usize, to: usize| -> u32 {
+        b[from..to].iter().filter(|&&c| c == b'\n').count() as u32
+    };
+
+    while i < n {
+        let c = b[i];
+        // Whitespace.
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_ascii_whitespace() {
+            i += 1;
+            continue;
+        }
+        let start = i;
+        let start_line = line;
+
+        // Comments.
+        if c == b'/' && i + 1 < n && b[i + 1] == b'/' {
+            while i < n && b[i] != b'\n' {
+                i += 1;
+            }
+            toks.push(Tok { kind: TokKind::Comment, start, end: i, line: start_line });
+            continue;
+        }
+        if c == b'/' && i + 1 < n && b[i + 1] == b'*' {
+            // Block comments nest in Rust.
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if i + 1 < n && b[i] == b'/' && b[i + 1] == b'*' {
+                    depth += 1;
+                    i += 2;
+                } else if i + 1 < n && b[i] == b'*' && b[i + 1] == b'/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            line += count_lines(start, i);
+            toks.push(Tok { kind: TokKind::Comment, start, end: i, line: start_line });
+            continue;
+        }
+
+        // Plain string literal.
+        if c == b'"' {
+            i += 1;
+            while i < n {
+                match b[i] {
+                    b'\\' => i = (i + 2).min(n),
+                    b'"' => {
+                        i += 1;
+                        break;
+                    }
+                    _ => i += 1,
+                }
+            }
+            line += count_lines(start, i);
+            toks.push(Tok { kind: TokKind::Str, start, end: i, line: start_line });
+            continue;
+        }
+
+        // Char literal or lifetime.
+        if c == b'\'' {
+            if i + 1 < n && b[i + 1] == b'\\' {
+                // Escaped char literal: '\n', '\u{1F600}', '\''.
+                i += 2; // quote + backslash
+                if i < n {
+                    i += 1; // the escape head byte (n, u, ', \, x, ...)
+                }
+                // Consume to the closing quote (covers \u{...} and \xNN).
+                while i < n && b[i] != b'\'' {
+                    i += 1;
+                }
+                i = (i + 1).min(n);
+                toks.push(Tok { kind: TokKind::Char, start, end: i, line: start_line });
+                continue;
+            }
+            if i + 1 < n && is_ident_start(b[i + 1]) {
+                // Either a lifetime ('a, 'static) or a char ('a', 'é').
+                let mut j = i + 1;
+                while j < n && is_ident_cont(b[j]) {
+                    j += 1;
+                }
+                if j < n && b[j] == b'\'' {
+                    i = j + 1;
+                    toks.push(Tok { kind: TokKind::Char, start, end: i, line: start_line });
+                } else {
+                    i = j;
+                    toks.push(Tok { kind: TokKind::Lifetime, start, end: i, line: start_line });
+                }
+                continue;
+            }
+            // Non-identifier single char: '(' , ' ' , '.' ...
+            let mut j = i + 1;
+            if j < n {
+                // Advance one full UTF-8 scalar.
+                j += 1;
+                while j < n && (b[j] & 0xC0) == 0x80 {
+                    j += 1;
+                }
+            }
+            if j < n && b[j] == b'\'' {
+                j += 1;
+            }
+            i = j;
+            toks.push(Tok { kind: TokKind::Char, start, end: i, line: start_line });
+            continue;
+        }
+
+        // Identifier-ish: may actually start a raw string (r"..", r#".."#),
+        // byte string (b".."), byte char (b'x'), or raw identifier (r#ident).
+        if is_ident_start(c) {
+            let mut j = i;
+            while j < n && is_ident_cont(b[j]) {
+                j += 1;
+            }
+            let word = &src[i..j];
+            let next = if j < n { b[j] } else { 0 };
+
+            // Raw identifier r#ident — re-lex the part after r#.
+            if word == "r" && next == b'#' && j + 1 < n && is_ident_start(b[j + 1]) {
+                let mut k = j + 1;
+                while k < n && is_ident_cont(b[k]) {
+                    k += 1;
+                }
+                i = k;
+                toks.push(Tok { kind: TokKind::Ident, start, end: i, line: start_line });
+                continue;
+            }
+
+            // Raw / byte string heads.
+            let raw = matches!(word, "r" | "br" | "rb");
+            if raw && (next == b'"' || next == b'#') {
+                // Count hash fence.
+                let mut k = j;
+                let mut hashes = 0usize;
+                while k < n && b[k] == b'#' {
+                    hashes += 1;
+                    k += 1;
+                }
+                if k < n && b[k] == b'"' {
+                    k += 1;
+                    // Scan for `"` followed by `hashes` hashes.
+                    'scan: while k < n {
+                        if b[k] == b'"' {
+                            let mut h = 0usize;
+                            while k + 1 + h < n && b[k + 1 + h] == b'#' && h < hashes {
+                                h += 1;
+                            }
+                            if h == hashes {
+                                k += 1 + hashes;
+                                break 'scan;
+                            }
+                        }
+                        k += 1;
+                    }
+                    line += count_lines(start, k);
+                    i = k;
+                    toks.push(Tok { kind: TokKind::Str, start, end: i, line: start_line });
+                    continue;
+                }
+                // `r#` not followed by a quote fell through above (raw ident
+                // handled earlier); treat as plain ident + punct stream.
+            }
+            if word == "b" && next == b'"' {
+                // Byte string: same scan as a plain string.
+                let mut k = j + 1;
+                while k < n {
+                    match b[k] {
+                        b'\\' => k = (k + 2).min(n),
+                        b'"' => {
+                            k += 1;
+                            break;
+                        }
+                        _ => k += 1,
+                    }
+                }
+                line += count_lines(start, k);
+                i = k;
+                toks.push(Tok { kind: TokKind::Str, start, end: i, line: start_line });
+                continue;
+            }
+            if word == "b" && next == b'\'' {
+                // Byte char: b'x' or b'\n'.
+                let mut k = j + 1;
+                if k < n && b[k] == b'\\' {
+                    k = (k + 2).min(n);
+                } else if k < n {
+                    k += 1;
+                }
+                while k < n && b[k] != b'\'' {
+                    k += 1;
+                }
+                i = (k + 1).min(n);
+                toks.push(Tok { kind: TokKind::Char, start, end: i, line: start_line });
+                continue;
+            }
+
+            i = j;
+            toks.push(Tok { kind: TokKind::Ident, start, end: i, line: start_line });
+            continue;
+        }
+
+        // Numbers. `.` joins only when followed by a digit and no dot has
+        // been consumed yet, so `0..10` and `x.0.min(y)` split correctly.
+        if c.is_ascii_digit() {
+            let mut j = i + 1;
+            let mut seen_dot = false;
+            let hex = c == b'0' && j < n && (b[j] == b'x' || b[j] == b'X');
+            while j < n {
+                let d = b[j];
+                if d.is_ascii_alphanumeric() || d == b'_' {
+                    // Exponent sign: 1e-3, 2.5E+7 (not in hex literals).
+                    if !hex
+                        && (d == b'e' || d == b'E')
+                        && j + 1 < n
+                        && (b[j + 1] == b'+' || b[j + 1] == b'-')
+                        && j + 2 < n
+                        && b[j + 2].is_ascii_digit()
+                    {
+                        j += 2;
+                    }
+                    j += 1;
+                } else if d == b'.'
+                    && !seen_dot
+                    && !hex
+                    && j + 1 < n
+                    && b[j + 1].is_ascii_digit()
+                {
+                    seen_dot = true;
+                    j += 1;
+                } else {
+                    break;
+                }
+            }
+            i = j;
+            toks.push(Tok { kind: TokKind::Num, start, end: i, line: start_line });
+            continue;
+        }
+
+        // Everything else: one punct byte.
+        i += 1;
+        toks.push(Tok { kind: TokKind::Punct(c), start, end: i, line: start_line });
+    }
+
+    toks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<TokKind> {
+        lex(src).iter().map(|t| t.kind).collect()
+    }
+
+    fn texts<'a>(src: &'a str) -> Vec<&'a str> {
+        lex(src).iter().map(|t| t.text(src)).collect()
+    }
+
+    #[test]
+    fn idents_and_puncts() {
+        assert_eq!(
+            texts("foo.bar()"),
+            vec!["foo", ".", "bar", "(", ")"],
+        );
+        assert_eq!(
+            kinds("foo.bar()"),
+            vec![
+                TokKind::Ident,
+                TokKind::Punct(b'.'),
+                TokKind::Ident,
+                TokKind::Punct(b'('),
+                TokKind::Punct(b')'),
+            ],
+        );
+    }
+
+    #[test]
+    fn string_hides_code() {
+        let src = r#"let s = "x.unwrap()"; s.len()"#;
+        let toks = lex(src);
+        let idents: Vec<&str> = toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text(src))
+            .collect();
+        assert_eq!(idents, vec!["let", "s", "s", "len"]);
+        assert!(toks.iter().any(|t| t.kind == TokKind::Str));
+    }
+
+    #[test]
+    fn raw_strings_with_fences() {
+        let src = "let s = r#\"contains \"quotes\" and lock().unwrap()\"#; done()";
+        let toks = lex(src);
+        let idents: Vec<&str> = toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text(src))
+            .collect();
+        assert_eq!(idents, vec!["let", "s", "done"]);
+    }
+
+    #[test]
+    fn byte_strings_and_byte_chars() {
+        let src = "f(b\"bytes\", b'x', b'\\n')";
+        let toks = lex(src);
+        assert_eq!(
+            toks.iter().filter(|t| t.kind == TokKind::Str).count(),
+            1
+        );
+        assert_eq!(
+            toks.iter().filter(|t| t.kind == TokKind::Char).count(),
+            2
+        );
+    }
+
+    #[test]
+    fn lifetime_vs_char() {
+        let src = "fn f<'a>(x: &'a str) { let c = 'a'; let s = 'static_lt; }";
+        // 'static_lt is not valid Rust but exercises the long-lifetime path.
+        let toks = lex(src);
+        let lifetimes = toks.iter().filter(|t| t.kind == TokKind::Lifetime).count();
+        let chars = toks.iter().filter(|t| t.kind == TokKind::Char).count();
+        assert_eq!(lifetimes, 3, "'a twice plus 'static_lt");
+        assert_eq!(chars, 1, "only 'a' is a char");
+    }
+
+    #[test]
+    fn nested_block_comments_and_lines() {
+        let src = "a\n/* outer /* inner */ still */\nb";
+        let toks = lex(src);
+        assert_eq!(toks.len(), 3);
+        assert_eq!(toks[0].line, 1);
+        assert_eq!(toks[1].kind, TokKind::Comment);
+        assert_eq!(toks[2].text(src), "b");
+        assert_eq!(toks[2].line, 3);
+    }
+
+    #[test]
+    fn line_comment_carries_text() {
+        let src = "x // lint:allow(nan-ordering) benchmark data\ny";
+        let toks = lex(src);
+        assert_eq!(toks[1].kind, TokKind::Comment);
+        assert!(toks[1].text(src).contains("lint:allow(nan-ordering)"));
+        assert_eq!(toks[2].line, 2);
+    }
+
+    #[test]
+    fn numbers_do_not_glom_ranges() {
+        assert_eq!(texts("0..10"), vec!["0", ".", ".", "10"]);
+        assert_eq!(texts("1.5e-3_f64"), vec!["1.5e-3_f64"]);
+        assert_eq!(texts("0xffu8"), vec!["0xffu8"]);
+        // A float method call splits after the fractional part.
+        assert_eq!(texts("1.0.max(2.0)"), vec!["1.0", ".", "max", "(", "2.0", ")"]);
+    }
+
+    #[test]
+    fn raw_identifiers() {
+        let src = "let r#type = 1;";
+        let toks = lex(src);
+        assert_eq!(toks[1].kind, TokKind::Ident);
+        assert_eq!(toks[1].text(src), "r#type");
+    }
+
+    #[test]
+    fn multiline_string_tracks_lines() {
+        let src = "let s = \"one\ntwo\";\nnext";
+        let toks = lex(src);
+        let next = toks.iter().find(|t| t.text(src) == "next").unwrap();
+        assert_eq!(next.line, 3);
+    }
+
+    #[test]
+    fn unterminated_string_does_not_panic() {
+        let src = "let s = \"never closed";
+        let toks = lex(src);
+        assert_eq!(toks.last().unwrap().kind, TokKind::Str);
+    }
+
+    #[test]
+    fn utf8_in_strings_and_comments() {
+        let src = "// héllo wörld\nlet s = \"日本語\"; ok";
+        let toks = lex(src);
+        assert!(toks.iter().any(|t| t.text(src) == "ok"));
+    }
+}

@@ -1,0 +1,698 @@
+//! `pallas-lint` — project-native static analysis for the serving stack.
+//!
+//! PRs 2, 3, and 5 each re-fixed the same bug classes by hand (NaN-unsafe
+//! `partial_cmp` orderings, panics on serve-critical paths, raw mutex
+//! locking), and PRs 4–7 were verified with an ad-hoc delimiter-lexer scan.
+//! This module formalizes that scan into a first-class subsystem: a
+//! token-level lexer ([`lexer`]), a [`Rule`] engine with project-specific
+//! invariant checks ([`rules`]), and table/JSON reporting ([`report`]).
+//! `cargo run -- lint` runs it over the repo; the `lint_clean` integration
+//! test asserts the repo itself is clean at HEAD.
+//!
+//! ## Waivers
+//!
+//! A finding can be waived in place with a plain (non-doc) comment on the
+//! finding's line or the line directly above it:
+//!
+//! ```text
+//! // lint:allow(stats-parity) non-numeric; carried in the backend label
+//! ```
+//!
+//! The rule id must name a real rule and a reason is mandatory — a
+//! malformed, unknown, or reasonless waiver is itself reported (rule
+//! `waiver-syntax`, which cannot be waived). Doc comments (`///`, `//!`)
+//! are never parsed for waivers, so rule documentation can show the syntax
+//! freely.
+//!
+//! ## Baseline
+//!
+//! `lint-baseline.json` at the repo root carries `{file, rule, count}`
+//! entries that tolerate pre-existing findings during incremental adoption.
+//! It ships empty: new findings must be fixed or waived, not baselined
+//! (the file exists so a future large-scale rule landing has a ratchet).
+
+pub mod lexer;
+pub mod report;
+pub mod rules;
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+use lexer::{lex, Tok, TokKind};
+
+/// Engine-level pseudo-rule for malformed/unknown/reasonless waivers.
+pub const WAIVER_SYNTAX: &str = "waiver-syntax";
+
+/// An inline `lint:allow` annotation parsed from a plain comment.
+#[derive(Debug, Clone)]
+pub struct Waiver {
+    /// 1-based line of the comment (its first line, for block comments).
+    pub line: u32,
+    /// Rule ids listed inside the parentheses.
+    pub rules: Vec<String>,
+    /// Free-text justification after the closing parenthesis.
+    pub reason: String,
+    /// False when the `(rule, ...)` list never closed.
+    pub well_formed: bool,
+}
+
+/// One lexed source file plus the derived facts every rule needs:
+/// the non-comment token stream, `#[cfg(test)]`/`#[test]` byte spans,
+/// and inline waivers.
+#[derive(Debug)]
+pub struct SourceFile {
+    /// Path relative to the repo root, forward slashes.
+    pub rel: String,
+    pub text: String,
+    pub toks: Vec<Tok>,
+    /// Indices into `toks` of non-comment tokens (the structural stream
+    /// rules do pattern matching over).
+    pub code: Vec<usize>,
+    /// Byte spans of test-only items (attribute start to item end).
+    pub test_spans: Vec<(usize, usize)>,
+    pub waivers: Vec<Waiver>,
+}
+
+impl SourceFile {
+    pub fn new(rel: &str, text: &str) -> SourceFile {
+        let toks = lex(text);
+        let code: Vec<usize> = toks
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.kind != TokKind::Comment)
+            .map(|(i, _)| i)
+            .collect();
+        let test_spans = find_test_spans(text, &toks, &code);
+        let waivers = find_waivers(text, &toks);
+        SourceFile {
+            rel: rel.to_string(),
+            text: text.to_string(),
+            toks,
+            code,
+            test_spans,
+            waivers,
+        }
+    }
+
+    /// Number of non-comment tokens.
+    pub fn n_code(&self) -> usize {
+        self.code.len()
+    }
+
+    /// The `ci`-th non-comment token.
+    pub fn ctok(&self, ci: usize) -> &Tok {
+        &self.toks[self.code[ci]]
+    }
+
+    /// Text of the `ci`-th non-comment token.
+    pub fn ctext(&self, ci: usize) -> &str {
+        self.ctok(ci).text(&self.text)
+    }
+
+    /// True when the `ci`-th code token is the identifier `word`.
+    pub fn is_ident(&self, ci: usize, word: &str) -> bool {
+        ci < self.n_code()
+            && self.ctok(ci).kind == TokKind::Ident
+            && self.ctext(ci) == word
+    }
+
+    /// True when byte offset `pos` falls inside a test-only item.
+    pub fn in_test(&self, pos: usize) -> bool {
+        self.test_spans.iter().any(|&(s, e)| pos >= s && pos < e)
+    }
+
+    /// Code index of the delimiter matching the opener at `open_ci`
+    /// (`(`/`[`/`{`). Returns `None` on unbalanced input.
+    pub fn matching(&self, open_ci: usize) -> Option<usize> {
+        let (open, close) = match self.ctok(open_ci).kind {
+            TokKind::Punct(b'(') => (b'(', b')'),
+            TokKind::Punct(b'[') => (b'[', b']'),
+            TokKind::Punct(b'{') => (b'{', b'}'),
+            _ => return None,
+        };
+        let mut depth = 0i64;
+        for ci in open_ci..self.n_code() {
+            match self.ctok(ci).kind {
+                TokKind::Punct(b) if b == open => depth += 1,
+                TokKind::Punct(b) if b == close => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return Some(ci);
+                    }
+                }
+                _ => {}
+            }
+        }
+        None
+    }
+}
+
+/// Byte spans of items guarded by a test attribute: `#[test]`,
+/// `#[cfg(test)]`, `#[cfg(all(test, ...))]`. An attribute mentioning
+/// `not` (e.g. `#[cfg(not(test))]`) is treated as non-test. Coarse but
+/// exact for this repo's usage, and errs toward *checking* code.
+fn find_test_spans(src: &str, toks: &[Tok], code: &[usize]) -> Vec<(usize, usize)> {
+    let n = code.len();
+    let tok = |ci: usize| -> &Tok { &toks[code[ci]] };
+    let text = |ci: usize| -> &str { tok(ci).text(src) };
+
+    // Scan one attribute starting at `ci` (which must be `#`); returns
+    // (code index past the closing `]`, attribute mentions test, mentions not).
+    let scan_attr = |ci: usize| -> Option<(usize, bool, bool)> {
+        if !tok(ci).is_punct(b'#') || ci + 1 >= n || !tok(ci + 1).is_punct(b'[') {
+            return None;
+        }
+        let mut depth = 0i64;
+        let mut has_test = false;
+        let mut has_not = false;
+        let mut j = ci + 1;
+        while j < n {
+            match tok(j).kind {
+                TokKind::Punct(b'[') | TokKind::Punct(b'(') => depth += 1,
+                TokKind::Punct(b']') | TokKind::Punct(b')') => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return Some((j + 1, has_test, has_not));
+                    }
+                }
+                TokKind::Ident => match text(j) {
+                    "test" => has_test = true,
+                    "not" => has_not = true,
+                    _ => {}
+                },
+                _ => {}
+            }
+            j += 1;
+        }
+        Some((n, has_test, has_not))
+    };
+
+    let mut spans = Vec::new();
+    let mut ci = 0usize;
+    while ci < n {
+        let Some((mut after, has_test, has_not)) = scan_attr(ci) else {
+            ci += 1;
+            continue;
+        };
+        if !has_test || has_not {
+            ci = after;
+            continue;
+        }
+        let span_start = tok(ci).start;
+        // Skip any further attributes stacked on the same item.
+        while let Some((next, _, _)) = scan_attr(after) {
+            after = next;
+        }
+        // Find the item end: first `;` at delimiter depth 0, or the brace
+        // block matching the first `{` at depth 0.
+        let mut depth = 0i64;
+        let mut j = after;
+        let mut end = src.len();
+        while j < n {
+            match tok(j).kind {
+                TokKind::Punct(b'(') | TokKind::Punct(b'[') => depth += 1,
+                TokKind::Punct(b')') | TokKind::Punct(b']') => depth -= 1,
+                TokKind::Punct(b';') if depth <= 0 => {
+                    end = tok(j).end;
+                    break;
+                }
+                TokKind::Punct(b'{') if depth <= 0 => {
+                    let mut braces = 0i64;
+                    while j < n {
+                        match tok(j).kind {
+                            TokKind::Punct(b'{') => braces += 1,
+                            TokKind::Punct(b'}') => {
+                                braces -= 1;
+                                if braces == 0 {
+                                    break;
+                                }
+                            }
+                            _ => {}
+                        }
+                        j += 1;
+                    }
+                    end = if j < n { tok(j).end } else { src.len() };
+                    break;
+                }
+                _ => {}
+            }
+            j += 1;
+        }
+        spans.push((span_start, end));
+        ci = after;
+    }
+    spans
+}
+
+/// Parse `lint:allow(rule, ...) reason` waivers out of plain comments.
+/// Doc comments are skipped so documentation can quote the syntax.
+fn find_waivers(src: &str, toks: &[Tok]) -> Vec<Waiver> {
+    let mut out = Vec::new();
+    for t in toks.iter().filter(|t| t.kind == TokKind::Comment) {
+        let text = t.text(src);
+        if text.starts_with("///")
+            || text.starts_with("//!")
+            || text.starts_with("/**")
+            || text.starts_with("/*!")
+        {
+            continue;
+        }
+        let Some(pos) = text.find("lint:allow") else {
+            continue;
+        };
+        let rest = &text[pos + "lint:allow".len()..];
+        let close = rest.find(')');
+        let well_formed = rest.starts_with('(') && close.is_some();
+        let (rules, reason) = match (well_formed, close) {
+            (true, Some(c)) => {
+                let ids: Vec<String> = rest[1..c]
+                    .split(',')
+                    .map(|s| s.trim().to_string())
+                    .filter(|s| !s.is_empty())
+                    .collect();
+                let mut reason = rest[c + 1..].trim();
+                // Block comments: drop the trailing `*/` from the reason.
+                if let Some(stripped) = reason.strip_suffix("*/") {
+                    reason = stripped.trim();
+                }
+                (ids, reason.to_string())
+            }
+            _ => (Vec::new(), String::new()),
+        };
+        out.push(Waiver {
+            line: t.line,
+            rules,
+            reason,
+            well_formed,
+        });
+    }
+    out
+}
+
+/// The scanned source set a lint run operates on.
+#[derive(Debug)]
+pub struct Repo {
+    pub root: PathBuf,
+    pub files: Vec<SourceFile>,
+}
+
+/// Directories scanned relative to the repo root. `rust/vendor` is
+/// deliberately absent: vendored shims follow upstream style.
+const SCAN_ROOTS: [&str; 4] = ["rust/src", "rust/benches", "rust/tests", "examples"];
+
+impl Repo {
+    /// Walk the standard source roots under `root` and lex every `.rs`
+    /// file. Deterministic order (sorted by relative path).
+    pub fn load(root: &Path) -> std::io::Result<Repo> {
+        let mut files = Vec::new();
+        for top in SCAN_ROOTS {
+            let dir = root.join(top);
+            if dir.is_dir() {
+                walk(&dir, root, &mut files)?;
+            }
+        }
+        files.sort_by(|a, b| a.rel.cmp(&b.rel));
+        Ok(Repo {
+            root: root.to_path_buf(),
+            files,
+        })
+    }
+
+    /// Build a repo from in-memory `(relative-path, source)` pairs —
+    /// the fixture entry point rule tests use.
+    pub fn from_sources(sources: &[(&str, &str)]) -> Repo {
+        Repo {
+            root: PathBuf::new(),
+            files: sources
+                .iter()
+                .map(|(rel, text)| SourceFile::new(rel, text))
+                .collect(),
+        }
+    }
+
+    /// The file whose relative path ends with `suffix`, if any.
+    pub fn file_ending(&self, suffix: &str) -> Option<&SourceFile> {
+        self.files.iter().find(|f| f.rel.ends_with(suffix))
+    }
+}
+
+fn walk(dir: &Path, root: &Path, out: &mut Vec<SourceFile>) -> std::io::Result<()> {
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(dir)?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .collect();
+    entries.sort();
+    for path in entries {
+        let name = path
+            .file_name()
+            .map(|n| n.to_string_lossy().to_string())
+            .unwrap_or_default();
+        if name.starts_with('.') || name == "vendor" || name == "target" {
+            continue;
+        }
+        if path.is_dir() {
+            walk(&path, root, out)?;
+        } else if name.ends_with(".rs") {
+            let text = std::fs::read_to_string(&path)?;
+            let rel = path
+                .strip_prefix(root)
+                .unwrap_or(&path)
+                .to_string_lossy()
+                .replace('\\', "/");
+            out.push(SourceFile::new(&rel, &text));
+        }
+    }
+    Ok(())
+}
+
+/// One reported violation, anchored at `file:line`.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: u32,
+    pub message: String,
+    /// Suppressed by an inline `lint:allow` on this or the previous line.
+    pub waived: bool,
+    /// Absorbed by a `lint-baseline.json` allowance.
+    pub baselined: bool,
+}
+
+/// A project-invariant check over the whole scanned repo.
+pub trait Rule {
+    /// Stable kebab-case id used in waivers, the baseline, and reports.
+    fn id(&self) -> &'static str;
+    /// One-line description for the rule table.
+    fn describe(&self) -> &'static str;
+    fn check(&self, repo: &Repo, out: &mut Vec<Finding>);
+}
+
+/// A `{file, rule, count}` allowance from `lint-baseline.json`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BaselineEntry {
+    pub file: String,
+    pub rule: String,
+    pub count: usize,
+}
+
+/// Checked-in allowances for pre-existing findings. Ships empty; see
+/// the module docs for the ratchet policy.
+#[derive(Debug, Clone, Default)]
+pub struct Baseline {
+    pub entries: Vec<BaselineEntry>,
+}
+
+impl Baseline {
+    pub fn empty() -> Baseline {
+        Baseline::default()
+    }
+
+    /// Load from `path`; a missing file is an empty baseline.
+    pub fn load(path: &Path) -> anyhow::Result<Baseline> {
+        if !path.exists() {
+            return Ok(Baseline::empty());
+        }
+        let text = std::fs::read_to_string(path)?;
+        Baseline::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> anyhow::Result<Baseline> {
+        let v = Json::parse(text).map_err(|e| anyhow::anyhow!("baseline: {e}"))?;
+        let mut entries = Vec::new();
+        let items = v
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("baseline: missing `entries` array"))?;
+        for it in items {
+            entries.push(BaselineEntry {
+                file: it.req_str("file")?.to_string(),
+                rule: it.req_str("rule")?.to_string(),
+                count: it.req_usize("count")?,
+            });
+        }
+        Ok(Baseline { entries })
+    }
+}
+
+/// The outcome of one lint run: every finding (flags set), plus the rule
+/// table and scan size for reporting.
+#[derive(Debug)]
+pub struct LintReport {
+    pub findings: Vec<Finding>,
+    pub files_scanned: usize,
+    pub rules: Vec<(&'static str, &'static str)>,
+}
+
+impl LintReport {
+    /// Findings that are neither waived nor baselined — the set that
+    /// fails the build.
+    pub fn unwaived(&self) -> impl Iterator<Item = &Finding> {
+        self.findings.iter().filter(|f| !f.waived && !f.baselined)
+    }
+
+    pub fn count_unwaived(&self) -> usize {
+        self.unwaived().count()
+    }
+
+    pub fn count_waived(&self) -> usize {
+        self.findings.iter().filter(|f| f.waived).count()
+    }
+
+    pub fn count_baselined(&self) -> usize {
+        self.findings.iter().filter(|f| f.baselined).count()
+    }
+}
+
+/// Run every rule over `repo`, then apply waivers and the baseline.
+pub fn run(repo: &Repo, baseline: &Baseline) -> LintReport {
+    let rules = rules::all_rules();
+    let mut findings = Vec::new();
+    for r in &rules {
+        r.check(repo, &mut findings);
+    }
+
+    // Engine-level waiver validation: a waiver that cannot take effect
+    // must be loud, not silently useless.
+    let known: BTreeSet<&str> = rules.iter().map(|r| r.id()).collect();
+    for f in &repo.files {
+        for w in &f.waivers {
+            if !w.well_formed {
+                findings.push(Finding {
+                    rule: WAIVER_SYNTAX,
+                    file: f.rel.clone(),
+                    line: w.line,
+                    message: "malformed waiver — expected `lint:allow(rule-id) reason`"
+                        .to_string(),
+                    waived: false,
+                    baselined: false,
+                });
+                continue;
+            }
+            for id in &w.rules {
+                if !known.contains(id.as_str()) {
+                    findings.push(Finding {
+                        rule: WAIVER_SYNTAX,
+                        file: f.rel.clone(),
+                        line: w.line,
+                        message: format!("waiver names unknown rule `{id}`"),
+                        waived: false,
+                        baselined: false,
+                    });
+                }
+            }
+            if w.reason.is_empty() {
+                findings.push(Finding {
+                    rule: WAIVER_SYNTAX,
+                    file: f.rel.clone(),
+                    line: w.line,
+                    message: "waiver has no reason — say why the finding is acceptable"
+                        .to_string(),
+                    waived: false,
+                    baselined: false,
+                });
+            }
+        }
+    }
+
+    findings.sort_by(|a, b| {
+        a.file
+            .cmp(&b.file)
+            .then(a.line.cmp(&b.line))
+            .then(a.rule.cmp(b.rule))
+            .then(a.message.cmp(&b.message))
+    });
+    findings.dedup_by(|a, b| a.file == b.file && a.line == b.line && a.rule == b.rule);
+
+    // Waivers: same line or the line directly above. `waiver-syntax`
+    // findings cannot be waived.
+    let by_rel: BTreeMap<&str, &SourceFile> =
+        repo.files.iter().map(|f| (f.rel.as_str(), f)).collect();
+    for f in &mut findings {
+        if f.rule == WAIVER_SYNTAX {
+            continue;
+        }
+        if let Some(sf) = by_rel.get(f.file.as_str()) {
+            f.waived = sf.waivers.iter().any(|w| {
+                w.well_formed
+                    && !w.reason.is_empty()
+                    && w.rules.iter().any(|r| r == f.rule)
+                    && (w.line == f.line || w.line + 1 == f.line)
+            });
+        }
+    }
+
+    // Baseline: each `{file, rule, count}` entry absorbs up to `count`
+    // unwaived findings of that rule in that file.
+    let mut allow: BTreeMap<(&str, &str), usize> = BTreeMap::new();
+    for e in &baseline.entries {
+        *allow.entry((e.file.as_str(), e.rule.as_str())).or_insert(0) += e.count;
+    }
+    for f in &mut findings {
+        if f.waived {
+            continue;
+        }
+        if let Some(n) = allow.get_mut(&(f.file.as_str(), f.rule)) {
+            if *n > 0 {
+                *n -= 1;
+                f.baselined = true;
+            }
+        }
+    }
+
+    LintReport {
+        findings,
+        files_scanned: repo.files.len(),
+        rules: rules.iter().map(|r| (r.id(), r.describe())).collect(),
+    }
+}
+
+/// Convenience: walk `root`, then [`run`].
+pub fn run_at(root: &Path, baseline: &Baseline) -> std::io::Result<LintReport> {
+    Ok(run(&Repo::load(root)?, baseline))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn test_spans_cover_cfg_test_mod_and_test_fn() {
+        let src = "\
+pub fn live() -> u32 { 1 }
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() { assert_eq!(super::live(), 1); }
+}
+";
+        let sf = SourceFile::new("rust/src/x.rs", src);
+        let live_pos = src.find("fn live").expect("live");
+        let assert_pos = src.find("assert_eq").expect("assert");
+        assert!(!sf.in_test(live_pos));
+        assert!(sf.in_test(assert_pos));
+    }
+
+    #[test]
+    fn test_span_on_single_item_ends_at_brace() {
+        let src = "\
+#[test]
+fn t() { helper(); }
+
+pub fn after() -> u32 { 2 }
+";
+        let sf = SourceFile::new("rust/src/x.rs", src);
+        assert!(sf.in_test(src.find("helper").expect("helper")));
+        assert!(!sf.in_test(src.find("after").expect("after")));
+    }
+
+    #[test]
+    fn cfg_not_test_is_not_a_test_span() {
+        let src = "\
+#[cfg(not(test))]
+pub fn live() { risky(); }
+";
+        let sf = SourceFile::new("rust/src/x.rs", src);
+        assert!(!sf.in_test(src.find("risky").expect("risky")));
+    }
+
+    #[test]
+    fn waivers_parse_rules_and_reason() {
+        let src = "\
+// lint:allow(stats-parity) carried in the backend label
+let x = 1; // lint:allow(nan-ordering, panic-freedom) fixture data
+// lint:allow(panic-freedom
+// lint:allow(panic-freedom)
+";
+        let sf = SourceFile::new("rust/src/x.rs", src);
+        assert_eq!(sf.waivers.len(), 4);
+        assert_eq!(sf.waivers[0].rules, vec!["stats-parity"]);
+        assert_eq!(sf.waivers[0].reason, "carried in the backend label");
+        assert_eq!(sf.waivers[1].line, 2);
+        assert_eq!(sf.waivers[1].rules.len(), 2);
+        assert!(!sf.waivers[2].well_formed, "unclosed list is malformed");
+        assert!(sf.waivers[3].well_formed);
+        assert!(sf.waivers[3].reason.is_empty());
+    }
+
+    #[test]
+    fn doc_comments_never_carry_waivers() {
+        let src = "/// lint:allow(panic-freedom) not a real waiver\nfn f() {}\n";
+        let sf = SourceFile::new("rust/src/x.rs", src);
+        assert!(sf.waivers.is_empty());
+    }
+
+    #[test]
+    fn engine_reports_waiver_syntax_problems() {
+        let src = "\
+// lint:allow(no-such-rule) misspelled
+// lint:allow(panic-freedom)
+fn f() {}
+";
+        let repo = Repo::from_sources(&[("rust/src/x.rs", src)]);
+        let report = run(&repo, &Baseline::empty());
+        let ws: Vec<&Finding> = report
+            .findings
+            .iter()
+            .filter(|f| f.rule == WAIVER_SYNTAX)
+            .collect();
+        assert_eq!(ws.len(), 2, "{ws:?}");
+        assert!(ws[0].message.contains("no-such-rule"));
+        assert!(ws[1].message.contains("no reason"));
+        assert_eq!(report.count_unwaived(), 2);
+    }
+
+    #[test]
+    fn baseline_absorbs_counted_findings() {
+        let src = "pub fn f(x: Option<u32>) -> u32 { x.unwrap() }\n";
+        let repo = Repo::from_sources(&[("rust/src/server/fx.rs", src)]);
+        let baseline = Baseline::parse(
+            r#"{"version": 1, "entries": [
+                {"file": "rust/src/server/fx.rs", "rule": "panic-freedom", "count": 1}
+            ]}"#,
+        )
+        .expect("parse baseline");
+        let report = run(&repo, &baseline);
+        assert_eq!(report.count_unwaived(), 0, "{:?}", report.findings);
+        assert_eq!(report.count_baselined(), 1);
+        // Without the baseline the same repo fails.
+        assert_eq!(run(&repo, &Baseline::empty()).count_unwaived(), 1);
+    }
+
+    #[test]
+    fn baseline_missing_file_is_empty() {
+        let b = Baseline::load(Path::new("/nonexistent/lint-baseline.json"))
+            .expect("missing baseline is empty");
+        assert!(b.entries.is_empty());
+    }
+
+    #[test]
+    fn matching_delimiters() {
+        let sf = SourceFile::new("x.rs", "f(a, (b), [c{d}])");
+        // code tokens: f ( a , ( b ) , [ c { d } ] )
+        assert_eq!(sf.matching(1), Some(14));
+        assert_eq!(sf.matching(4), Some(6));
+        assert_eq!(sf.matching(8), Some(13));
+        assert_eq!(sf.matching(10), Some(12));
+    }
+}

@@ -1,0 +1,128 @@
+//! Rendering for lint results: the human table `cargo run -- lint`
+//! prints, and the JSON document CI uploads as an artifact.
+
+use crate::util::json::{arr, num, obj, s, Json};
+use crate::util::table::Table;
+
+use super::{Finding, LintReport};
+
+/// Schema version of the JSON report.
+pub const REPORT_VERSION: u64 = 1;
+
+fn status(f: &Finding) -> &'static str {
+    if f.waived {
+        "waived"
+    } else if f.baselined {
+        "baselined"
+    } else {
+        "FAIL"
+    }
+}
+
+/// Human-readable table: one row per finding plus a summary line.
+pub fn render_table(report: &LintReport) -> String {
+    let mut out = String::new();
+    if report.findings.is_empty() {
+        out.push_str(&format!(
+            "lint: clean — {} files scanned, {} rules, no findings\n",
+            report.files_scanned,
+            report.rules.len()
+        ));
+        return out;
+    }
+    let mut t = Table::new("lint findings", &["location", "rule", "status", "message"]);
+    for f in &report.findings {
+        t.row(vec![
+            format!("{}:{}", f.file, f.line),
+            f.rule.to_string(),
+            status(f).to_string(),
+            f.message.clone(),
+        ]);
+    }
+    out.push_str(&t.render());
+    out.push_str(&format!(
+        "\n{} failing, {} waived, {} baselined ({} files scanned, {} rules)\n",
+        report.count_unwaived(),
+        report.count_waived(),
+        report.count_baselined(),
+        report.files_scanned,
+        report.rules.len()
+    ));
+    out
+}
+
+/// Machine-readable report (CI artifact). Findings keep their waived /
+/// baselined flags so the artifact shows the full picture, not just
+/// what failed.
+pub fn render_json(report: &LintReport) -> String {
+    let findings: Vec<Json> = report
+        .findings
+        .iter()
+        .map(|f| {
+            obj(vec![
+                ("file", s(&f.file)),
+                ("line", num(f.line as f64)),
+                ("rule", s(f.rule)),
+                ("status", s(status(f))),
+                ("message", s(&f.message)),
+            ])
+        })
+        .collect();
+    let rules: Vec<Json> = report
+        .rules
+        .iter()
+        .map(|(id, desc)| obj(vec![("id", s(id)), ("describes", s(desc))]))
+        .collect();
+    obj(vec![
+        ("version", num(REPORT_VERSION as f64)),
+        ("files_scanned", num(report.files_scanned as f64)),
+        ("failing", num(report.count_unwaived() as f64)),
+        ("waived", num(report.count_waived() as f64)),
+        ("baselined", num(report.count_baselined() as f64)),
+        ("rules", arr(rules)),
+        ("findings", arr(findings)),
+    ])
+    .to_string_pretty()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{run, Baseline, Repo};
+    use super::*;
+    use crate::util::json::Json;
+
+    fn sample() -> LintReport {
+        let src = "pub fn f(x: Option<u32>) -> u32 { x.unwrap() }\n";
+        let repo = Repo::from_sources(&[("rust/src/server/fx.rs", src)]);
+        run(&repo, &Baseline::empty())
+    }
+
+    #[test]
+    fn table_lists_findings_with_anchors() {
+        let text = render_table(&sample());
+        assert!(text.contains("rust/src/server/fx.rs:1"), "{text}");
+        assert!(text.contains("panic-freedom"), "{text}");
+        assert!(text.contains("1 failing"), "{text}");
+    }
+
+    #[test]
+    fn clean_repo_renders_clean_line() {
+        let repo = Repo::from_sources(&[("rust/src/x.rs", "pub fn f() {}\n")]);
+        let text = render_table(&run(&repo, &Baseline::empty()));
+        assert!(text.contains("clean"), "{text}");
+    }
+
+    #[test]
+    fn json_report_roundtrips_and_counts() {
+        let text = render_json(&sample());
+        let v = Json::parse(&text).expect("report is valid json");
+        assert_eq!(v.get("failing").and_then(Json::as_u64), Some(1));
+        let findings = v.get("findings").and_then(Json::as_arr).expect("findings");
+        assert_eq!(findings.len(), 1);
+        assert_eq!(
+            findings[0].get("rule").and_then(Json::as_str),
+            Some("panic-freedom")
+        );
+        assert_eq!(findings[0].get("line").and_then(Json::as_u64), Some(1));
+    }
+}

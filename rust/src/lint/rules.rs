@@ -1,0 +1,1161 @@
+//! The project-specific rule set.
+//!
+//! Every rule matches over the lexed token stream of [`SourceFile`]s —
+//! no regexes over raw text, so string literals and comments can never
+//! produce findings. Rules are registered in [`all_rules`]; ids are
+//! stable (waivers and the baseline reference them).
+//!
+//! | id                  | invariant                                           |
+//! |---------------------|-----------------------------------------------------|
+//! | nan-ordering        | float orderings go through `total_cmp`              |
+//! | panic-freedom       | no panics on serve-critical paths                   |
+//! | lock-hygiene        | `lock_unpoisoned` only, and no lock-order cycles    |
+//! | wire-exhaustiveness | protocol frame kinds encode, decode, and round-trip |
+//! | stats-parity        | every coordinator stat reaches the wire             |
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::lexer::TokKind;
+use super::{Finding, Repo, Rule, SourceFile};
+
+pub fn all_rules() -> Vec<Box<dyn Rule>> {
+    vec![
+        Box::new(NanOrdering),
+        Box::new(PanicFreedom),
+        Box::new(LockHygiene),
+        Box::new(WireExhaustiveness),
+        Box::new(StatsParity),
+    ]
+}
+
+fn push(out: &mut Vec<Finding>, rule: &'static str, sf: &SourceFile, line: u32, message: String) {
+    out.push(Finding {
+        rule,
+        file: sf.rel.clone(),
+        line,
+        message,
+        waived: false,
+        baselined: false,
+    });
+}
+
+// ---------------------------------------------------------------------------
+// nan-ordering
+// ---------------------------------------------------------------------------
+
+/// The PR 2/3/5 bug class: `partial_cmp(..).unwrap()` panics on NaN, and
+/// a `partial_cmp`-based comparator handed to `sort_by`/`max_by`/`min_by`
+/// is not a total order (NaN can win or panic). `f64::total_cmp` is the
+/// project-wide ordering. Applies everywhere, tests included — a test
+/// that panics on NaN data hides the regression the rule exists to catch.
+struct NanOrdering;
+
+const SORTERS: [&str; 4] = ["sort_by", "sort_unstable_by", "max_by", "min_by"];
+
+impl Rule for NanOrdering {
+    fn id(&self) -> &'static str {
+        "nan-ordering"
+    }
+
+    fn describe(&self) -> &'static str {
+        "float orderings must use total_cmp (no partial_cmp().unwrap(), \
+         no partial_cmp comparators in sort_by/max_by/min_by)"
+    }
+
+    fn check(&self, repo: &Repo, out: &mut Vec<Finding>) {
+        for sf in &repo.files {
+            let n = sf.n_code();
+            for ci in 0..n {
+                // partial_cmp( .. ).unwrap( / .expect(
+                if sf.is_ident(ci, "partial_cmp") && ci + 1 < n && sf.ctok(ci + 1).is_punct(b'(')
+                {
+                    if let Some(close) = sf.matching(ci + 1) {
+                        if close + 3 < n
+                            && sf.ctok(close + 1).is_punct(b'.')
+                            && (sf.is_ident(close + 2, "unwrap")
+                                || sf.is_ident(close + 2, "expect"))
+                            && sf.ctok(close + 3).is_punct(b'(')
+                        {
+                            push(
+                                out,
+                                self.id(),
+                                sf,
+                                sf.ctok(ci).line,
+                                "NaN-unsafe `partial_cmp(..).unwrap()` — use `total_cmp`"
+                                    .to_string(),
+                            );
+                        }
+                    }
+                }
+                // .sort_by(|a, b| .. partial_cmp ..) and friends
+                if sf.ctok(ci).kind == TokKind::Ident
+                    && SORTERS.contains(&sf.ctext(ci))
+                    && ci > 0
+                    && sf.ctok(ci - 1).is_punct(b'.')
+                    && ci + 1 < n
+                    && sf.ctok(ci + 1).is_punct(b'(')
+                {
+                    if let Some(close) = sf.matching(ci + 1) {
+                        let uses_partial =
+                            (ci + 2..close).any(|j| sf.is_ident(j, "partial_cmp"));
+                        if uses_partial {
+                            push(
+                                out,
+                                self.id(),
+                                sf,
+                                sf.ctok(ci).line,
+                                format!(
+                                    "float comparator in `{}` uses partial_cmp — \
+                                     use `total_cmp`",
+                                    sf.ctext(ci)
+                                ),
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// panic-freedom
+// ---------------------------------------------------------------------------
+
+/// Serve-critical modules must not panic: a planner/executor/daemon
+/// thread that unwinds poisons locks and wedges the serving loop. Typed
+/// errors, `let .. else`, or `util::lock_unpoisoned` instead. Test code
+/// (`#[cfg(test)]`, `#[test]`) is exempt.
+struct PanicFreedom;
+
+const SERVE_DIRS: [&str; 4] = [
+    "rust/src/server/",
+    "rust/src/coordinator/",
+    "rust/src/runtime/",
+    "rust/src/dse/",
+];
+
+const PANIC_MACROS: [&str; 4] = ["panic", "unreachable", "todo", "unimplemented"];
+
+impl Rule for PanicFreedom {
+    fn id(&self) -> &'static str {
+        "panic-freedom"
+    }
+
+    fn describe(&self) -> &'static str {
+        "no unwrap()/expect()/panic!/unreachable! in server/, coordinator/, \
+         runtime/, dse/ outside #[cfg(test)]"
+    }
+
+    fn check(&self, repo: &Repo, out: &mut Vec<Finding>) {
+        for sf in &repo.files {
+            if !SERVE_DIRS.iter().any(|d| sf.rel.starts_with(d)) {
+                continue;
+            }
+            let n = sf.n_code();
+            for ci in 0..n {
+                let tok = sf.ctok(ci);
+                if tok.kind != TokKind::Ident || sf.in_test(tok.start) {
+                    continue;
+                }
+                let word = sf.ctext(ci);
+                let after_dot = ci > 0 && sf.ctok(ci - 1).is_punct(b'.');
+                if word == "unwrap"
+                    && after_dot
+                    && ci + 2 < n
+                    && sf.ctok(ci + 1).is_punct(b'(')
+                    && sf.ctok(ci + 2).is_punct(b')')
+                {
+                    push(
+                        out,
+                        self.id(),
+                        sf,
+                        tok.line,
+                        "`.unwrap()` on a serve-critical path — return a typed \
+                         error, use `let .. else`, or `util::lock_unpoisoned`"
+                            .to_string(),
+                    );
+                } else if word == "expect" && after_dot && ci + 1 < n
+                    && sf.ctok(ci + 1).is_punct(b'(')
+                {
+                    push(
+                        out,
+                        self.id(),
+                        sf,
+                        tok.line,
+                        "`.expect(..)` on a serve-critical path — return a typed error"
+                            .to_string(),
+                    );
+                } else if PANIC_MACROS.contains(&word)
+                    && ci + 1 < n
+                    && sf.ctok(ci + 1).is_punct(b'!')
+                {
+                    push(
+                        out,
+                        self.id(),
+                        sf,
+                        tok.line,
+                        format!("`{word}!` on a serve-critical path — return a typed error"),
+                    );
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// lock-hygiene
+// ---------------------------------------------------------------------------
+
+/// Two checks. (a) Raw `.lock().unwrap()` / `.lock().expect(..)` must
+/// route through `util::lock_unpoisoned` so a panicking holder cannot
+/// cascade `PoisonError` panics. (b) A static lock-acquisition-order
+/// graph over the named mutexes each function body acquires via
+/// `lock_unpoisoned`: an edge A→B means B was acquired while A's guard
+/// was plausibly live; a cycle across the repo flags a potential
+/// deadlock (coordinator stats vs flight table vs cache shard vs pool
+/// latch). Guard liveness is approximated from tokens — let-bound
+/// guards live to the end of their block, temporaries to the end of
+/// their statement (or the `{` of an `if`/`while` body) — which
+/// under-approximates `match` scrutinee lifetimes and ignores early
+/// `drop()`, both erring toward fewer false cycles.
+struct LockHygiene;
+
+/// One `lock_unpoisoned(..)` call site inside a function body.
+struct Acq {
+    /// Module-qualified lock name, e.g. `coordinator::stats`.
+    name: String,
+    /// Code index of the `lock_unpoisoned` identifier.
+    ci: usize,
+    line: u32,
+    /// Code index bounding the guard's plausible live range (inclusive).
+    end_ci: usize,
+}
+
+impl Rule for LockHygiene {
+    fn id(&self) -> &'static str {
+        "lock-hygiene"
+    }
+
+    fn describe(&self) -> &'static str {
+        "mutex access via util::lock_unpoisoned only, and the static \
+         lock-acquisition-order graph must be acyclic"
+    }
+
+    fn check(&self, repo: &Repo, out: &mut Vec<Finding>) {
+        self.check_raw_locks(repo, out);
+        self.check_lock_order(repo, out);
+    }
+}
+
+impl LockHygiene {
+    fn check_raw_locks(&self, repo: &Repo, out: &mut Vec<Finding>) {
+        for sf in &repo.files {
+            let n = sf.n_code();
+            for ci in 0..n {
+                // . lock ( ) . unwrap|expect (
+                if !sf.is_ident(ci, "lock") || ci == 0 || !sf.ctok(ci - 1).is_punct(b'.') {
+                    continue;
+                }
+                if sf.in_test(sf.ctok(ci).start) {
+                    continue;
+                }
+                if ci + 5 < n
+                    && sf.ctok(ci + 1).is_punct(b'(')
+                    && sf.ctok(ci + 2).is_punct(b')')
+                    && sf.ctok(ci + 3).is_punct(b'.')
+                    && (sf.is_ident(ci + 4, "unwrap") || sf.is_ident(ci + 4, "expect"))
+                    && sf.ctok(ci + 5).is_punct(b'(')
+                {
+                    push(
+                        out,
+                        self.id(),
+                        sf,
+                        sf.ctok(ci).line,
+                        format!(
+                            "raw `.lock().{}(..)` — route through `util::lock_unpoisoned`",
+                            sf.ctext(ci + 4)
+                        ),
+                    );
+                }
+            }
+        }
+    }
+
+    fn check_lock_order(&self, repo: &Repo, out: &mut Vec<Finding>) {
+        // Edge (held, acquired) -> first site proving it.
+        let mut edges: BTreeMap<(String, String), (String, u32)> = BTreeMap::new();
+        for sf in &repo.files {
+            for (open, close) in fn_bodies(sf) {
+                let acqs = acquisitions(sf, open, close);
+                for a in &acqs {
+                    for b in &acqs {
+                        if b.ci <= a.ci || b.ci > a.end_ci {
+                            continue;
+                        }
+                        if a.name == b.name {
+                            if !sf.in_test(sf.ctok(b.ci).start) {
+                                push(
+                                    out,
+                                    self.id(),
+                                    sf,
+                                    b.line,
+                                    format!(
+                                        "lock `{}` re-acquired while its guard is \
+                                         still held (self-deadlock)",
+                                        b.name
+                                    ),
+                                );
+                            }
+                        } else {
+                            edges
+                                .entry((a.name.clone(), b.name.clone()))
+                                .or_insert_with(|| (sf.rel.clone(), b.line));
+                        }
+                    }
+                }
+            }
+        }
+
+        let mut adj: BTreeMap<&str, BTreeSet<&str>> = BTreeMap::new();
+        for (held, acquired) in edges.keys() {
+            adj.entry(held.as_str()).or_default().insert(acquired.as_str());
+        }
+        let mut color: BTreeMap<&str, u8> = BTreeMap::new();
+        let mut stack: Vec<&str> = Vec::new();
+        let mut cycles: Vec<Vec<String>> = Vec::new();
+        let nodes: Vec<&str> = adj.keys().copied().collect();
+        for node in nodes {
+            if color.get(node).copied().unwrap_or(0) == 0 {
+                dfs_cycles(node, &adj, &mut color, &mut stack, &mut cycles);
+            }
+        }
+        // Dedupe rotations of the same cycle.
+        let mut seen: BTreeSet<Vec<String>> = BTreeSet::new();
+        for cycle in cycles {
+            let mut key = cycle.clone();
+            key.sort();
+            if !seen.insert(key) {
+                continue;
+            }
+            let closing = (
+                cycle.last().cloned().unwrap_or_default(),
+                cycle.first().cloned().unwrap_or_default(),
+            );
+            let (file, line) = match edges.get(&closing) {
+                Some((f, l)) => (f.clone(), *l),
+                None => (String::new(), 0),
+            };
+            let path = {
+                let mut p = cycle.join(" -> ");
+                p.push_str(" -> ");
+                p.push_str(&cycle[0]);
+                p
+            };
+            out.push(Finding {
+                rule: self.id(),
+                file,
+                line,
+                message: format!("lock-order cycle (potential deadlock): {path}"),
+                waived: false,
+                baselined: false,
+            });
+        }
+    }
+}
+
+fn dfs_cycles<'a>(
+    node: &'a str,
+    adj: &BTreeMap<&'a str, BTreeSet<&'a str>>,
+    color: &mut BTreeMap<&'a str, u8>,
+    stack: &mut Vec<&'a str>,
+    cycles: &mut Vec<Vec<String>>,
+) {
+    color.insert(node, 1);
+    stack.push(node);
+    if let Some(next) = adj.get(node) {
+        for &nb in next {
+            match color.get(nb).copied().unwrap_or(0) {
+                0 => dfs_cycles(nb, adj, color, stack, cycles),
+                1 => {
+                    if let Some(pos) = stack.iter().position(|s| *s == nb) {
+                        cycles.push(stack[pos..].iter().map(|s| s.to_string()).collect());
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    stack.pop();
+    color.insert(node, 2);
+}
+
+/// `rust/src/coordinator/mod.rs` -> `coordinator`,
+/// `rust/src/coordinator/cache.rs` -> `coordinator/cache`,
+/// `rust/benches/dse_latency.rs` -> `rust/benches/dse_latency`.
+fn module_key(rel: &str) -> String {
+    let s = rel.strip_prefix("rust/src/").unwrap_or(rel);
+    let s = s.strip_suffix(".rs").unwrap_or(s);
+    let s = s.strip_suffix("/mod").unwrap_or(s);
+    s.to_string()
+}
+
+/// Every `fn` body in the file as `(open_brace_ci, close_brace_ci)`.
+/// Nested fns yield their own (overlapping) entries; the duplicate
+/// edges that produces are deduped by the engine.
+fn fn_bodies(sf: &SourceFile) -> Vec<(usize, usize)> {
+    let n = sf.n_code();
+    let mut out = Vec::new();
+    let mut ci = 0usize;
+    while ci < n {
+        if sf.is_ident(ci, "fn")
+            && ci + 1 < n
+            && sf.ctok(ci + 1).kind == TokKind::Ident
+        {
+            let mut depth = 0i64;
+            let mut j = ci + 2;
+            while j < n {
+                match sf.ctok(j).kind {
+                    TokKind::Punct(b'(') | TokKind::Punct(b'[') => depth += 1,
+                    TokKind::Punct(b')') | TokKind::Punct(b']') => depth -= 1,
+                    TokKind::Punct(b';') if depth <= 0 => break, // trait method, no body
+                    TokKind::Punct(b'{') if depth <= 0 => {
+                        if let Some(close) = sf.matching(j) {
+                            out.push((j, close));
+                        }
+                        break;
+                    }
+                    _ => {}
+                }
+                j += 1;
+            }
+        }
+        ci += 1;
+    }
+    out
+}
+
+/// Collect `lock_unpoisoned(..)` acquisitions inside one body with their
+/// approximated guard live ranges.
+fn acquisitions(sf: &SourceFile, open: usize, close: usize) -> Vec<Acq> {
+    // Brace nesting level per code index across the body (body interior
+    // is level >= 1; a `}` carries the level it returns to).
+    let mut level = vec![0i64; close + 1 - open];
+    let mut d = 0i64;
+    for (k, ci) in (open..=close).enumerate() {
+        match sf.ctok(ci).kind {
+            TokKind::Punct(b'{') => {
+                level[k] = d;
+                d += 1;
+            }
+            TokKind::Punct(b'}') => {
+                d -= 1;
+                level[k] = d;
+            }
+            _ => level[k] = d,
+        }
+    }
+    let lvl = |ci: usize| level[ci - open];
+
+    let mut out = Vec::new();
+    for ci in open + 1..close {
+        if !sf.is_ident(ci, "lock_unpoisoned")
+            || ci + 1 >= close
+            || !sf.ctok(ci + 1).is_punct(b'(')
+        {
+            continue;
+        }
+        let Some(close_p) = sf.matching(ci + 1) else {
+            continue;
+        };
+        let Some(name) = lock_name(sf, ci + 2, close_p) else {
+            continue;
+        };
+        let name = format!("{}::{}", module_key(&sf.rel), name);
+        let end_ci = if is_let_bound(sf, open, ci, close_p) {
+            // Guard lives to the end of its enclosing block.
+            let d0 = lvl(ci);
+            let mut j = close_p + 1;
+            while j < close && lvl(j) >= d0 {
+                j += 1;
+            }
+            j
+        } else {
+            // Temporary: lives to the end of the statement; an `if`/
+            // `while` body brace at statement depth ends it early
+            // (conservative for `match` scrutinees — see rule docs).
+            let mut paren = 0i64;
+            let mut brace = 0i64;
+            let mut j = close_p + 1;
+            while j < close {
+                match sf.ctok(j).kind {
+                    TokKind::Punct(b'(') | TokKind::Punct(b'[') => paren += 1,
+                    TokKind::Punct(b')') | TokKind::Punct(b']') => {
+                        paren -= 1;
+                        if paren < 0 {
+                            break; // closes an enclosing call/index
+                        }
+                    }
+                    TokKind::Punct(b'{') => {
+                        if paren == 0 && brace == 0 {
+                            break;
+                        }
+                        brace += 1;
+                    }
+                    TokKind::Punct(b'}') => {
+                        brace -= 1;
+                        if brace < 0 {
+                            break; // tail expression; block closed
+                        }
+                    }
+                    TokKind::Punct(b';') if paren == 0 && brace == 0 => break,
+                    _ => {}
+                }
+                j += 1;
+            }
+            j
+        };
+        out.push(Acq {
+            name,
+            ci,
+            line: sf.ctok(ci).line,
+            end_ci,
+        });
+    }
+    out
+}
+
+/// The mutex being locked, from the call's argument tokens: the last
+/// field access (`&self.exec_stats` -> `exec_stats`, `self.shard(k)` ->
+/// `shard`), else the first plain identifier (`&job_rx` -> `job_rx`).
+fn lock_name(sf: &SourceFile, from: usize, to: usize) -> Option<String> {
+    let mut field: Option<&str> = None;
+    for ci in from..to {
+        if sf.ctok(ci).kind == TokKind::Ident
+            && ci > from
+            && sf.ctok(ci - 1).is_punct(b'.')
+        {
+            field = Some(sf.ctext(ci));
+        }
+    }
+    if let Some(f) = field {
+        return Some(f.to_string());
+    }
+    for ci in from..to {
+        if sf.ctok(ci).kind == TokKind::Ident {
+            let w = sf.ctext(ci);
+            if w != "self" && w != "mut" {
+                return Some(w.to_string());
+            }
+        }
+    }
+    None
+}
+
+/// `let [mut] name = [path::]lock_unpoisoned(..);` — the guard is bound
+/// and the call is the entire initializer (a trailing `;` right after
+/// the close paren, no `*`/method chain in between).
+fn is_let_bound(sf: &SourceFile, body_open: usize, ci: usize, close_p: usize) -> bool {
+    if close_p + 1 >= sf.n_code() || !sf.ctok(close_p + 1).is_punct(b';') {
+        return false;
+    }
+    // Walk back over a `util::`-style path prefix: consume `:` freely,
+    // and an identifier only when the token to its right (already
+    // consumed) is a `:` — i.e. it is a path segment, not the binding.
+    let mut k = ci;
+    while k > body_open + 1 {
+        let prev = sf.ctok(k - 1);
+        if prev.is_punct(b':') {
+            k -= 1;
+        } else if prev.kind == TokKind::Ident && sf.ctok(k).is_punct(b':') {
+            k -= 1;
+        } else {
+            break;
+        }
+    }
+    // Expect `= <ident> [mut] let` walking back from k.
+    if k <= body_open + 3 || !sf.ctok(k - 1).is_punct(b'=') {
+        return false;
+    }
+    if sf.ctok(k - 2).kind != TokKind::Ident {
+        return false;
+    }
+    sf.is_ident(k - 3, "let")
+        || (sf.is_ident(k - 3, "mut") && k >= body_open + 4 && sf.is_ident(k - 4, "let"))
+}
+
+// ---------------------------------------------------------------------------
+// wire-exhaustiveness
+// ---------------------------------------------------------------------------
+
+/// Every `K_*` frame-kind constant in `server/protocol.rs` must appear
+/// in both `encode_frame` and `decode_frame`, and every `Frame` variant
+/// must be exercised by a test (the round-trip suite) — a frame kind
+/// that encodes but silently fails to decode is a wire-protocol bug the
+/// type system cannot see.
+struct WireExhaustiveness;
+
+impl Rule for WireExhaustiveness {
+    fn id(&self) -> &'static str {
+        "wire-exhaustiveness"
+    }
+
+    fn describe(&self) -> &'static str {
+        "every frame-kind constant appears in encode_frame, decode_frame, \
+         and a round-trip test"
+    }
+
+    fn check(&self, repo: &Repo, out: &mut Vec<Finding>) {
+        let Some(sf) = repo.file_ending("server/protocol.rs") else {
+            return;
+        };
+        let n = sf.n_code();
+
+        // pub const K_XXX: .. = ..;
+        let mut kinds: Vec<(String, u32)> = Vec::new();
+        for ci in 0..n {
+            if sf.is_ident(ci, "const")
+                && ci + 1 < n
+                && sf.ctok(ci + 1).kind == TokKind::Ident
+                && sf.ctext(ci + 1).starts_with("K_")
+            {
+                kinds.push((sf.ctext(ci + 1).to_string(), sf.ctok(ci + 1).line));
+            }
+        }
+
+        for (fn_name, what) in [("encode_frame", "encoded"), ("decode_frame", "decoded")] {
+            let Some((open, close)) = fn_body(sf, fn_name) else {
+                push(
+                    out,
+                    self.id(),
+                    sf,
+                    1,
+                    format!("protocol is missing `fn {fn_name}`"),
+                );
+                continue;
+            };
+            let body: BTreeSet<&str> = (open..close)
+                .filter(|&ci| sf.ctok(ci).kind == TokKind::Ident)
+                .map(|ci| sf.ctext(ci))
+                .collect();
+            for (k, line) in &kinds {
+                if !body.contains(k.as_str()) {
+                    push(
+                        out,
+                        self.id(),
+                        sf,
+                        *line,
+                        format!("frame kind `{k}` is never {what} ({fn_name})"),
+                    );
+                }
+            }
+        }
+
+        // Every Frame variant must appear as `Frame::Variant` inside a
+        // test span (the round-trip suite).
+        for (variant, line) in enum_variants(sf, "Frame") {
+            let covered = (0..n).any(|ci| {
+                sf.is_ident(ci, &variant)
+                    && ci >= 3
+                    && sf.ctok(ci - 1).is_punct(b':')
+                    && sf.ctok(ci - 2).is_punct(b':')
+                    && sf.is_ident(ci - 3, "Frame")
+                    && sf.in_test(sf.ctok(ci).start)
+            });
+            if !covered {
+                push(
+                    out,
+                    self.id(),
+                    sf,
+                    line,
+                    format!("`Frame::{variant}` is not exercised by a round-trip test"),
+                );
+            }
+        }
+    }
+}
+
+/// Body range of `fn name` as code indices `(open_brace, close_brace)`.
+fn fn_body(sf: &SourceFile, name: &str) -> Option<(usize, usize)> {
+    let n = sf.n_code();
+    for ci in 0..n {
+        if sf.is_ident(ci, "fn") && ci + 1 < n && sf.is_ident(ci + 1, name) {
+            let mut depth = 0i64;
+            let mut j = ci + 2;
+            while j < n {
+                match sf.ctok(j).kind {
+                    TokKind::Punct(b'(') | TokKind::Punct(b'[') => depth += 1,
+                    TokKind::Punct(b')') | TokKind::Punct(b']') => depth -= 1,
+                    TokKind::Punct(b';') if depth <= 0 => return None,
+                    TokKind::Punct(b'{') if depth <= 0 => {
+                        return sf.matching(j).map(|close| (j, close));
+                    }
+                    _ => {}
+                }
+                j += 1;
+            }
+        }
+    }
+    None
+}
+
+/// Variant names (and lines) of `enum name { .. }`: identifiers at the
+/// top nesting level of the enum body, skipping payload fields.
+fn enum_variants(sf: &SourceFile, name: &str) -> Vec<(String, u32)> {
+    let n = sf.n_code();
+    let mut head = None;
+    for ci in 0..n {
+        if sf.is_ident(ci, "enum") && ci + 1 < n && sf.is_ident(ci + 1, name) {
+            head = Some(ci);
+            break;
+        }
+    }
+    let Some(head) = head else {
+        return Vec::new();
+    };
+    let mut open = None;
+    for ci in head..n {
+        if sf.ctok(ci).is_punct(b'{') {
+            open = Some(ci);
+            break;
+        }
+    }
+    let Some(open) = open else {
+        return Vec::new();
+    };
+    let Some(close) = sf.matching(open) else {
+        return Vec::new();
+    };
+    let mut out = Vec::new();
+    let mut depth = 0i64;
+    for ci in open + 1..close {
+        match sf.ctok(ci).kind {
+            TokKind::Punct(b'{') | TokKind::Punct(b'(') | TokKind::Punct(b'[') => depth += 1,
+            TokKind::Punct(b'}') | TokKind::Punct(b')') | TokKind::Punct(b']') => depth -= 1,
+            TokKind::Ident if depth == 0 => {
+                let prev = sf.ctok(ci - 1);
+                if prev.is_punct(b'{') || prev.is_punct(b',') {
+                    out.push((sf.ctext(ci).to_string(), sf.ctok(ci).line));
+                }
+            }
+            _ => {}
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// stats-parity
+// ---------------------------------------------------------------------------
+
+/// Every field of `CoordinatorStats` must be surfaced to daemon clients
+/// (named in `server/daemon.rs` outside tests — in practice the
+/// `wire_stats` field list) or carry an explicit waiver. Serving metrics
+/// that exist but never reach the wire rot silently.
+struct StatsParity;
+
+impl Rule for StatsParity {
+    fn id(&self) -> &'static str {
+        "stats-parity"
+    }
+
+    fn describe(&self) -> &'static str {
+        "every CoordinatorStats field is surfaced in WireStats (server/daemon.rs) \
+         or explicitly waived"
+    }
+
+    fn check(&self, repo: &Repo, out: &mut Vec<Finding>) {
+        let Some(coord) = repo.file_ending("coordinator/mod.rs") else {
+            return;
+        };
+        let Some(daemon) = repo.file_ending("server/daemon.rs") else {
+            return;
+        };
+        let fields = struct_fields(coord, "CoordinatorStats");
+        if fields.is_empty() {
+            return;
+        }
+        let mut surfaced: BTreeSet<String> = BTreeSet::new();
+        for t in &daemon.toks {
+            if daemon.in_test(t.start) {
+                continue;
+            }
+            match t.kind {
+                TokKind::Ident => {
+                    surfaced.insert(t.text(&daemon.text).to_string());
+                }
+                TokKind::Str => {
+                    if let Some(inner) = str_inner(t.text(&daemon.text)) {
+                        surfaced.insert(inner.to_string());
+                    }
+                }
+                _ => {}
+            }
+        }
+        for (field, line) in fields {
+            if !surfaced.contains(&field) {
+                push(
+                    out,
+                    self.id(),
+                    coord,
+                    line,
+                    format!(
+                        "CoordinatorStats.{field} is not surfaced in WireStats \
+                         (server/daemon.rs) — add it to wire_stats or waive"
+                    ),
+                );
+            }
+        }
+    }
+}
+
+/// Field names (and lines) of `struct name { .. }`: identifiers at the
+/// top nesting level followed by `:` and preceded by `pub`, `{`, or `,`.
+fn struct_fields(sf: &SourceFile, name: &str) -> Vec<(String, u32)> {
+    let n = sf.n_code();
+    let mut head = None;
+    for ci in 0..n {
+        if sf.is_ident(ci, "struct") && ci + 1 < n && sf.is_ident(ci + 1, name) {
+            head = Some(ci);
+            break;
+        }
+    }
+    let Some(head) = head else {
+        return Vec::new();
+    };
+    let mut open = None;
+    for ci in head..n {
+        if sf.ctok(ci).is_punct(b'{') {
+            open = Some(ci);
+            break;
+        }
+        if sf.ctok(ci).is_punct(b';') {
+            return Vec::new(); // unit or tuple struct
+        }
+    }
+    let Some(open) = open else {
+        return Vec::new();
+    };
+    let Some(close) = sf.matching(open) else {
+        return Vec::new();
+    };
+    let mut out = Vec::new();
+    let mut depth = 0i64;
+    for ci in open + 1..close {
+        match sf.ctok(ci).kind {
+            TokKind::Punct(b'{') | TokKind::Punct(b'(') | TokKind::Punct(b'[')
+            | TokKind::Punct(b'<') => depth += 1,
+            TokKind::Punct(b'}') | TokKind::Punct(b')') | TokKind::Punct(b']')
+            | TokKind::Punct(b'>') => depth -= 1,
+            TokKind::Ident if depth == 0 => {
+                let word = sf.ctext(ci);
+                let prev = sf.ctok(ci - 1);
+                let prev_ok = prev.is_punct(b'{')
+                    || prev.is_punct(b',')
+                    || (prev.kind == TokKind::Ident && sf.ctext(ci - 1) == "pub");
+                let next_is_colon = ci + 1 < n
+                    && sf.ctok(ci + 1).is_punct(b':')
+                    && !(ci + 2 < n && sf.ctok(ci + 2).is_punct(b':'));
+                if word != "pub" && prev_ok && next_is_colon {
+                    out.push((word.to_string(), sf.ctok(ci).line));
+                }
+            }
+            _ => {}
+        }
+    }
+    out
+}
+
+/// Contents of a string-literal token (`"x"`, `r#"x"#`, `b"x"`).
+fn str_inner(text: &str) -> Option<&str> {
+    let first = text.find('"')?;
+    let last = text.rfind('"')?;
+    if last > first {
+        Some(&text[first + 1..last])
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{run, Baseline, Finding, Repo};
+
+    /// `(file, line)` anchors of every unwaived finding for `rule`.
+    fn anchors(repo: &Repo, rule: &str) -> Vec<(String, u32)> {
+        run(repo, &Baseline::empty())
+            .findings
+            .into_iter()
+            .filter(|f| f.rule == rule && !f.waived)
+            .map(|f| (f.file, f.line))
+            .collect()
+    }
+
+    fn waived(repo: &Repo, rule: &str) -> Vec<Finding> {
+        run(repo, &Baseline::empty())
+            .findings
+            .into_iter()
+            .filter(|f| f.rule == rule && f.waived)
+            .collect()
+    }
+
+    #[test]
+    fn nan_ordering_fires_on_known_bad() {
+        let src = "\
+pub fn worst(xs: &mut Vec<f64>) -> Option<f64> {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let safe = xs.to_vec();
+    let mut ok = safe.clone();
+    ok.sort_by(|a, b| a.total_cmp(b));
+    xs.iter()
+        .cloned()
+        .max_by(|a, b| a.partial_cmp(b).expect(\"cmp\"))
+}
+";
+        // Bench path: the directories PRs 2-5 never swept are in scope.
+        let repo = Repo::from_sources(&[("rust/benches/fx.rs", src)]);
+        assert_eq!(
+            anchors(&repo, "nan-ordering"),
+            vec![
+                ("rust/benches/fx.rs".to_string(), 2),
+                ("rust/benches/fx.rs".to_string(), 8),
+            ]
+        );
+        // Nothing else fires: benches are not serve-critical dirs.
+        assert_eq!(run(&repo, &Baseline::empty()).count_unwaived(), 2);
+    }
+
+    #[test]
+    fn panic_freedom_fires_outside_tests_in_serve_dirs_only() {
+        let bad = "\
+pub fn f(x: Option<u32>) -> u32 {
+    x.unwrap()
+}
+pub fn g(x: Option<u32>) -> u32 {
+    x.expect(\"present\")
+}
+pub fn h(kind: u8) -> u8 {
+    match kind {
+        1 => 1,
+        _ => unreachable!(\"bad kind\"),
+    }
+}
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn fine_in_tests() {
+        Some(1u32).unwrap();
+        panic!(\"also fine\");
+    }
+}
+";
+        let repo = Repo::from_sources(&[
+            ("rust/src/server/fx.rs", bad),
+            // Same code outside the serve-critical dirs: no findings.
+            ("rust/src/report/fx.rs", bad),
+        ]);
+        assert_eq!(
+            anchors(&repo, "panic-freedom"),
+            vec![
+                ("rust/src/server/fx.rs".to_string(), 2),
+                ("rust/src/server/fx.rs".to_string(), 5),
+                ("rust/src/server/fx.rs".to_string(), 10),
+            ]
+        );
+    }
+
+    #[test]
+    fn panic_freedom_respects_waiver_on_line_above() {
+        let src = "\
+pub fn f(x: Option<u32>) -> u32 {
+    // lint:allow(panic-freedom) invariant: caller checked is_some
+    x.unwrap()
+}
+";
+        let repo = Repo::from_sources(&[("rust/src/dse/fx.rs", src)]);
+        assert!(anchors(&repo, "panic-freedom").is_empty());
+        let w = waived(&repo, "panic-freedom");
+        assert_eq!(w.len(), 1);
+        assert_eq!(w[0].line, 3);
+    }
+
+    #[test]
+    fn lock_hygiene_flags_raw_locks_not_helpers() {
+        let src = "\
+use std::sync::Mutex;
+pub struct S { m: Mutex<u32> }
+impl S {
+    pub fn bad(&self) -> u32 {
+        *self.m.lock().unwrap()
+    }
+    pub fn also_bad(&self) -> u32 {
+        *self.m.lock().expect(\"poisoned\")
+    }
+    fn lock(&self) -> u32 {
+        self.locked_helper()
+    }
+    pub fn fine(&self) -> u32 {
+        self.lock()
+    }
+}
+";
+        let repo = Repo::from_sources(&[("examples/fx.rs", src)]);
+        assert_eq!(
+            anchors(&repo, "lock-hygiene"),
+            vec![
+                ("examples/fx.rs".to_string(), 5),
+                ("examples/fx.rs".to_string(), 8),
+            ]
+        );
+    }
+
+    #[test]
+    fn lock_order_cycle_detected() {
+        let src = "\
+use std::sync::Mutex;
+use crate::util::lock_unpoisoned;
+pub struct S { a: Mutex<u32>, b: Mutex<u32> }
+impl S {
+    pub fn ab(&self) -> u32 {
+        let ga = lock_unpoisoned(&self.a);
+        let gb = lock_unpoisoned(&self.b);
+        *ga + *gb
+    }
+    pub fn ba(&self) -> u32 {
+        let gb = lock_unpoisoned(&self.b);
+        let ga = lock_unpoisoned(&self.a);
+        *ga + *gb
+    }
+}
+";
+        let repo = Repo::from_sources(&[("rust/src/coordinator/fx.rs", src)]);
+        let found = anchors(&repo, "lock-hygiene");
+        assert_eq!(found.len(), 1, "exactly one cycle: {found:?}");
+        let report = run(&repo, &Baseline::empty());
+        let msg = &report
+            .findings
+            .iter()
+            .find(|f| f.rule == "lock-hygiene")
+            .expect("cycle finding")
+            .message;
+        assert!(msg.contains("cycle"), "{msg}");
+        assert!(msg.contains("coordinator/fx::a") && msg.contains("coordinator/fx::b"));
+    }
+
+    #[test]
+    fn lock_order_disjoint_scopes_are_clean() {
+        // The plan_and_flush shape: guards in sibling blocks never overlap.
+        let src = "\
+use std::sync::Mutex;
+use crate::util::lock_unpoisoned;
+pub struct S { a: Mutex<u32>, b: Mutex<u32> }
+impl S {
+    pub fn f(&self) -> u32 {
+        let x = {
+            let ga = lock_unpoisoned(&self.a);
+            *ga
+        };
+        let gb = lock_unpoisoned(&self.b);
+        x + *gb
+    }
+    pub fn g(&self) -> u32 {
+        lock_unpoisoned(&self.b).wrapping_add(1);
+        let ga = lock_unpoisoned(&self.a);
+        *ga
+    }
+}
+";
+        let repo = Repo::from_sources(&[("rust/src/coordinator/fx.rs", src)]);
+        assert!(anchors(&repo, "lock-hygiene").is_empty());
+    }
+
+    #[test]
+    fn lock_order_self_reacquire_detected() {
+        let src = "\
+use std::sync::Mutex;
+use crate::util::lock_unpoisoned;
+pub struct S { a: Mutex<u32> }
+impl S {
+    pub fn f(&self) -> u32 {
+        let g1 = lock_unpoisoned(&self.a);
+        let g2 = lock_unpoisoned(&self.a);
+        *g1 + *g2
+    }
+}
+";
+        let repo = Repo::from_sources(&[("rust/src/dse/fx.rs", src)]);
+        assert_eq!(
+            anchors(&repo, "lock-hygiene"),
+            vec![("rust/src/dse/fx.rs".to_string(), 7)]
+        );
+    }
+
+    #[test]
+    fn wire_exhaustiveness_fires_on_gaps() {
+        let src = "\
+pub const K_A: u8 = 1;
+pub const K_B: u8 = 2;
+pub enum Frame { A, B(u32) }
+pub fn encode_frame(f: &Frame) -> u8 {
+    match f {
+        Frame::A => K_A,
+        Frame::B(_) => 0,
+    }
+}
+pub fn decode_frame(k: u8) -> Option<Frame> {
+    match k {
+        K_A => Some(Frame::A),
+        K_B => Some(Frame::B(0)),
+        _ => None,
+    }
+}
+#[cfg(test)]
+mod tests {
+    use super::*;
+    #[test]
+    fn roundtrip_a() {
+        let f = Frame::A;
+        assert!(decode_frame(encode_frame(&f)).is_some());
+    }
+}
+";
+        let repo = Repo::from_sources(&[("rust/src/server/protocol.rs", src)]);
+        let found = anchors(&repo, "wire-exhaustiveness");
+        // K_B never encoded (line 2); Frame::B never round-tripped (line 3).
+        assert_eq!(
+            found,
+            vec![
+                ("rust/src/server/protocol.rs".to_string(), 2),
+                ("rust/src/server/protocol.rs".to_string(), 3),
+            ]
+        );
+    }
+
+    #[test]
+    fn stats_parity_fires_and_respects_waiver() {
+        let coord = "\
+pub struct CoordinatorStats {
+    pub jobs_completed: u64,
+    pub hidden_metric: f64,
+    // lint:allow(stats-parity) derived at read time from the others
+    pub derived_metric: f64,
+}
+";
+        let daemon = "\
+pub fn wire_stats() -> Vec<(String, f64)> {
+    vec![(\"jobs_completed\".to_string(), 1.0)]
+}
+";
+        let repo = Repo::from_sources(&[
+            ("rust/src/coordinator/mod.rs", coord),
+            ("rust/src/server/daemon.rs", daemon),
+        ]);
+        assert_eq!(
+            anchors(&repo, "stats-parity"),
+            vec![("rust/src/coordinator/mod.rs".to_string(), 3)]
+        );
+        let w = waived(&repo, "stats-parity");
+        assert_eq!(w.len(), 1);
+        assert!(w[0].message.contains("derived_metric"));
+    }
+}

@@ -4,12 +4,14 @@
 //! * `dataset`  — offline phase: generate the ~6000-design dataset;
 //! * `train`    — fit the L/P/R GBDT models (optionally with search);
 //! * `dse`      — online phase: Pareto-optimal mapping for one GEMM;
-//! * `report`   — regenerate any paper figure/table (see DESIGN.md §7);
+//! * `report`   — regenerate any paper figure/table (see DESIGN.md §8);
 //! * `serve`    — boot the coordinator and stream GEMM jobs through the
 //!   selected execution backend (PJRT over the AOT Pallas kernels when
 //!   artifacts exist, the blocked CPU GEMM otherwise, or the VCK190
 //!   simulator via `--backend sim`);
-//! * `validate` — numerics check of the PJRT runtime vs the reference.
+//! * `validate` — numerics check of the PJRT runtime vs the reference;
+//! * `lint`     — project-native static analysis of the serving-stack
+//!   invariants (see DESIGN.md §5); run before pushing.
 
 use std::path::PathBuf;
 use std::time::{Duration, Instant};
@@ -76,6 +78,10 @@ SUBCOMMANDS:
                                        probe L2 size once at startup)
   validate  [--artifacts artifacts]            PJRT runtime vs reference GEMM
   sweep     --model qwen|llama|deit [--seqs 32,64,..] per-layer mapping sweep
+  lint      [--format table|json] [--out report.json] [--baseline file]
+            static analysis of the serving-stack invariants (nan-ordering,
+            panic-freedom, lock-hygiene, wire-exhaustiveness, stats-parity);
+            exits nonzero on unwaived findings
   info                                         board + workload summary
 
 COMMON OPTIONS:
@@ -106,6 +112,7 @@ fn run(args: &Args) -> anyhow::Result<()> {
         Some("serve") => cmd_serve(args, cfg, data_dir),
         Some("validate") => cmd_validate(args),
         Some("sweep") => cmd_sweep(args, cfg, data_dir),
+        Some("lint") => cmd_lint(args),
         Some("info") => cmd_info(&cfg),
         _ => {
             print!("{USAGE}");
@@ -715,6 +722,34 @@ fn cmd_sweep(args: &Args, cfg: Config, data_dir: PathBuf) -> anyhow::Result<()> 
             );
         }
     }
+    Ok(())
+}
+
+/// Run the project lint rules over the repo (see DESIGN.md §5). Always
+/// prints the selected format; `--out` additionally writes the JSON
+/// report (the CI artifact). Exits nonzero when any finding is neither
+/// waived nor baselined.
+fn cmd_lint(args: &Args) -> anyhow::Result<()> {
+    use versal_gemm::lint::{self, report as lint_report, Baseline};
+    let root = PathBuf::from(args.opt_or("root", "."));
+    let baseline_path = root.join(args.opt_or("baseline", "lint-baseline.json"));
+    let baseline = Baseline::load(&baseline_path)?;
+    let report = lint::run_at(&root, &baseline)?;
+    let json = lint_report::render_json(&report);
+    if let Some(path) = args.opt("out") {
+        std::fs::write(path, &json)?;
+        eprintln!("wrote lint report to {path}");
+    }
+    match args.opt_or("format", "table") {
+        "json" => println!("{json}"),
+        _ => print!("{}", lint_report::render_table(&report)),
+    }
+    let failing = report.count_unwaived();
+    anyhow::ensure!(
+        failing == 0,
+        "lint: {failing} unwaived finding(s) — fix them, waive with \
+         `// lint:allow(rule-id) reason`, or baseline"
+    );
     Ok(())
 }
 

@@ -1,4 +1,4 @@
-//! One renderer per paper figure/table (DESIGN.md §7 experiment index).
+//! One renderer per paper figure/table (DESIGN.md §8 experiment index).
 
 use crate::analytical::AriesPolicy;
 use crate::dse::compare::tradeoff_stats;

@@ -1,5 +1,5 @@
 //! Report generation: regenerates every table and figure of the paper's
-//! evaluation as ASCII tables/plots (see DESIGN.md §7 for the index).
+//! evaluation as ASCII tables/plots (see DESIGN.md §8 for the index).
 //!
 //! [`Lab`] is the shared experiment context: it loads (or generates and
 //! caches) the offline-phase dataset and the trained predictors, so

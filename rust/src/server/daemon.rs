@@ -516,7 +516,9 @@ impl Daemon {
                 if self.coord.admission() == Admission::Block && !self.coord.queue_room() {
                     return; // try again next tick; reads stay gated
                 }
-                let spec = conn.pending_submits.pop_front().unwrap();
+                let Some(spec) = conn.pending_submits.pop_front() else {
+                    break; // emptied between the loop check and here
+                };
                 let gid = self.next_job_id;
                 self.next_job_id += 1;
                 let route = Route { conn_id: conn.id, client_id: spec.id };
@@ -660,10 +662,21 @@ impl Daemon {
             ("queue_depth_peak", s.queue_depth_peak as f64),
             ("plan_p50_ms", s.plan_p50_ms),
             ("executed_jobs", s.executed_jobs as f64),
+            ("executed_flops", s.executed_flops),
+            ("exec_time_s", s.exec_time_s),
             ("executed_energy_j", s.executed_energy_j),
             ("executed_gflops_per_w", s.executed_gflops_per_w),
+            ("cpu_gemm_flops", s.cpu_gemm_flops),
+            ("cpu_gemm_time_s", s.cpu_gemm_time_s),
             ("cpu_gemm_gflops", s.cpu_gemm_gflops),
             ("simulated_energy_j", s.simulated_energy_j),
+            ("reconfigs", s.reconfigs as f64),
+            ("simulated_reconfig_s", s.simulated_reconfig_s),
+            ("forest_compile_ms", s.forest_compile_ms),
+            ("predict_rows_per_s", s.predict_rows_per_s),
+            ("gate_rows_total", s.gate_rows_total as f64),
+            ("gate_rows_skipped", s.gate_rows_skipped as f64),
+            ("gate_skip_rate", s.gate_skip_rate),
             ("dse_pool_threads", s.dse_pool_threads as f64),
             ("results_dropped", self.results_dropped as f64),
             ("connections", self.conns.iter().filter(|c| !c.dead).count() as f64),

@@ -2,7 +2,7 @@
 //! parsing, ASCII table rendering, and a tiny property-testing helper.
 //!
 //! All hand-rolled: the offline crate set has no serde facade, clap,
-//! rand, or proptest (see DESIGN.md §6 on vendored dependencies).
+//! rand, or proptest (see DESIGN.md §7 on vendored dependencies).
 
 pub mod bench;
 pub mod cli;

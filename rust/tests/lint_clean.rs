@@ -1,0 +1,59 @@
+//! Self-application: the repo must be lint-clean at HEAD.
+//!
+//! This is the tier-1 enforcement point for the serving-stack
+//! invariants — `cargo test` fails if anyone reintroduces a
+//! NaN-unsafe ordering, a panic on a serve-critical path, a raw
+//! mutex lock, a wire-protocol gap, or an unsurfaced coordinator
+//! stat. Fix the finding, waive it in place with
+//! `// lint:allow(rule-id) reason`, or (exceptionally) baseline it.
+
+use std::path::Path;
+
+use versal_gemm::lint::{run_at, Baseline};
+
+fn repo_root() -> &'static Path {
+    // CARGO_MANIFEST_DIR is the repo root (Cargo.toml lives there and
+    // points into rust/src).
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+}
+
+#[test]
+fn repo_is_lint_clean_at_head() {
+    let root = repo_root();
+    let baseline = Baseline::load(&root.join("lint-baseline.json")).expect("baseline parses");
+    let report = run_at(root, &baseline).expect("walk repo");
+    assert!(
+        report.files_scanned > 30,
+        "scan looks wrong: only {} files found under {}",
+        report.files_scanned,
+        root.display()
+    );
+    let failing: Vec<String> = report
+        .unwaived()
+        .map(|f| format!("{}:{} [{}] {}", f.file, f.line, f.rule, f.message))
+        .collect();
+    assert!(
+        failing.is_empty(),
+        "repo is not lint-clean ({} finding(s)):\n  {}",
+        failing.len(),
+        failing.join("\n  ")
+    );
+}
+
+#[test]
+fn panic_freedom_is_not_baselined_in_server() {
+    // The serve path burned down its unwrap debt in this PR; the
+    // baseline must not quietly re-absorb it.
+    let baseline =
+        Baseline::load(&repo_root().join("lint-baseline.json")).expect("baseline parses");
+    let offenders: Vec<&str> = baseline
+        .entries
+        .iter()
+        .filter(|e| e.rule == "panic-freedom" && e.file.starts_with("rust/src/server/"))
+        .map(|e| e.file.as_str())
+        .collect();
+    assert!(
+        offenders.is_empty(),
+        "panic-freedom baselined in server/: {offenders:?}"
+    );
+}
