@@ -218,6 +218,12 @@ fn main() -> anyhow::Result<()> {
             ("coalesced_plans", num(final_stats.coalesced_plans as f64)),
             ("queue_depth_peak", num(final_stats.queue_depth_peak as f64)),
             ("executed_jobs", num(final_stats.executed_jobs as f64)),
+            // Resilience counters (ISSUE 9): plan-only smoke traffic
+            // should leave all of these at 0 — a nonzero value in the
+            // snapshot diff means the pass-through path regressed.
+            ("retries_total", num(final_stats.retries_total as f64)),
+            ("timeouts_total", num(final_stats.timeouts_total as f64)),
+            ("failovers_total", num(final_stats.failovers_total as f64)),
             ("executed_energy_j", num(final_stats.executed_energy_j)),
             ("executed_gflops_per_w", num(final_stats.executed_gflops_per_w)),
             ("simulated_energy_j", num(final_stats.simulated_energy_j)),

@@ -76,8 +76,9 @@ use crate::coordinator::flight::{ClaimOutcome, FlightTable, ParkedJob, QueueGaug
 use crate::dse::{DseEngine, DsePool, Objective};
 use crate::models::Prediction;
 pub use crate::runtime::backend::BackendChoice;
-use crate::runtime::backend::{make_backend, ExecBackend};
+pub use crate::runtime::faults::FaultPlan;
 pub use crate::runtime::microkernel::CpuProfileChoice;
+use crate::runtime::resilient::{ExecRequest, ResilientExec, ResilientOptions};
 use crate::runtime::{matmul_ref, max_abs_diff};
 use crate::tiling::Tiling;
 use crate::util::lock_unpoisoned;
@@ -98,6 +99,10 @@ pub struct GemmJob {
     pub b: Option<Vec<f32>>,
     /// Validate the PJRT result against the Rust reference GEMM.
     pub validate: bool,
+    /// Per-attempt execution deadline (ms). `None` falls back to
+    /// `CoordinatorOptions::job_deadline_ms`; with both unset the
+    /// backend call runs unsupervised (inline pass-through).
+    pub deadline_ms: Option<u64>,
 }
 
 impl GemmJob {
@@ -109,6 +114,7 @@ impl GemmJob {
             a: None,
             b: None,
             validate: false,
+            deadline_ms: None,
         }
     }
 
@@ -126,6 +132,7 @@ impl GemmJob {
             a: Some(a),
             b: Some(b),
             validate: false,
+            deadline_ms: None,
         }
     }
 }
@@ -167,6 +174,15 @@ pub struct JobResult {
     pub validation_err: Option<f32>,
     pub c: Option<Vec<f32>>,
     pub error: Option<String>,
+    /// Execution retries this job consumed (0 for plan-only jobs and
+    /// first-attempt successes). On failure, `error` carries the *last*
+    /// attempt's error plus this count.
+    pub retries: u32,
+    /// Whether any execution attempt was killed by its deadline.
+    pub timed_out: bool,
+    /// The backend tier that produced the final outcome — the honest
+    /// executor after failover, not the tier selection started from.
+    pub backend_used: Option<&'static str>,
 }
 
 impl JobResult {
@@ -193,6 +209,9 @@ impl JobResult {
             validation_err: None,
             c: None,
             error: Some(why.to_string()),
+            retries: 0,
+            timed_out: false,
+            backend_used: None,
         }
     }
 }
@@ -276,6 +295,18 @@ pub struct CoordinatorStats {
     /// `gate_rows_skipped / gate_rows_total` (0.0 before any cold plan):
     /// the fraction of candidate rows that paid only 5/7 of the forest.
     pub gate_skip_rate: f64,
+    /// Execution retries across all jobs (resilient chain, transient
+    /// errors retried with decorrelated-jitter backoff).
+    pub retries_total: u64,
+    /// Execution attempts killed by their deadline (watchdog expiry).
+    pub timeouts_total: u64,
+    /// Runtime breaker trips that had a live lower tier to demote to —
+    /// `auto`'s adaptive failovers, not startup build fallbacks.
+    pub failovers_total: u64,
+    /// Faults the `--faults` injector actually fired (0 in production).
+    pub faults_injected: u64,
+    /// Live tiers whose circuit breaker is not Closed (0 = healthy).
+    pub breaker_state: u64,
 }
 
 impl CoordinatorStats {
@@ -319,6 +350,15 @@ pub struct CoordinatorOptions {
     /// (`serve --cpu-profile generic|l2-small|l2-large|auto`). `Auto`
     /// probes the L2 size once at startup; ignored by pjrt.
     pub cpu_profile: CpuProfileChoice,
+    /// Default per-attempt execution deadline (ms) for jobs that do not
+    /// carry their own (`serve --job-deadline-ms`; `None` = no deadline,
+    /// backend calls run inline and unsupervised).
+    pub job_deadline_ms: Option<u64>,
+    /// Execution retries allowed per job (`serve --retry-budget`).
+    pub retry_budget: u32,
+    /// Deterministic fault-injection plan (`serve --faults <spec>` /
+    /// `PALLAS_FAULTS`); `None` in production.
+    pub faults: Option<FaultPlan>,
 }
 
 impl Default for CoordinatorOptions {
@@ -332,6 +372,9 @@ impl Default for CoordinatorOptions {
             dse_threads: None,
             backend: BackendChoice::Auto,
             cpu_profile: CpuProfileChoice::Auto,
+            job_deadline_ms: None,
+            retry_budget: 3,
+            faults: None,
         }
     }
 }
@@ -556,37 +599,42 @@ impl Coordinator {
         let exec_sim = Arc::clone(&sim);
         let backend_choice = options.backend;
         let cpu_profile_choice = options.cpu_profile;
+        let resilient_opts = ResilientOptions {
+            job_deadline_ms: options.job_deadline_ms,
+            retry_budget: options.retry_budget,
+            faults: options.faults.clone(),
+            ..ResilientOptions::default()
+        };
         let backend_name = Arc::new(OnceLock::new());
         let exec_backend_name = Arc::clone(&backend_name);
         let kernel_profile = Arc::new(OnceLock::new());
         let exec_kernel_profile = Arc::clone(&kernel_profile);
+        let exec_cancel = Arc::clone(&cancel);
         let executor = std::thread::spawn(move || {
             let reconfig = ReconfigModel::default();
             let mut current_mapping: Option<Tiling> = None;
-            // The execution backend lives entirely inside this thread
-            // (PJRT handles are not Send). `Auto` falls back to the CPU
-            // backend when no artifacts load, so data jobs execute in
-            // every checkout; an explicit `pjrt` that cannot load
-            // surfaces its error on every data job instead.
-            let backend: Option<Box<dyn ExecBackend>> = match make_backend(
+            // Execution backends live entirely inside this thread (PJRT
+            // handles are not Send). The resilient chain wraps the
+            // capability chain with deadlines, retries, and breaker
+            // failover: `auto` demotes pjrt→cpu→sim at runtime instead
+            // of probing once at startup, and an explicit tier that
+            // cannot build surfaces its error on every data job.
+            let mut resilient = ResilientExec::new(
                 backend_choice,
                 cpu_profile_choice,
                 artifacts_dir.as_deref(),
                 (*exec_sim).clone(),
-            ) {
-                Ok(b) => {
-                    let _ = exec_backend_name.set(b.name().to_string());
-                    if let Some(p) = b.kernel_profile() {
-                        let _ = exec_kernel_profile.set(p);
-                    }
-                    Some(b)
-                }
-                Err(e) => {
-                    eprintln!("coordinator: no execution backend ({e}); executing is disabled");
-                    let _ = exec_backend_name.set(format!("none ({e})"));
-                    None
-                }
-            };
+                resilient_opts,
+            )
+            .with_cancel(exec_cancel);
+            let name = resilient.backend_name();
+            if name.starts_with("none") {
+                eprintln!("coordinator: no execution backend ({name}); executing is disabled");
+            }
+            let _ = exec_backend_name.set(name);
+            if let Some(p) = resilient.kernel_profile() {
+                let _ = exec_kernel_profile.set(p);
+            }
             let session = BeamSession::default();
             // Dynamic batching: drain whatever is queued, group by
             // mapping, then by the artifact variant the backend picks.
@@ -607,9 +655,8 @@ impl Coordinator {
                 // (PJRT only; other backends have no variant notion).
                 queue.sort_by_key(|p| {
                     let tiling = p.result.plan.map(|pl| pl.tiling);
-                    let variant = backend.as_ref().and_then(|b| {
-                        b.variant_hint(p.job.gemm.m, p.job.gemm.n, p.job.gemm.k)
-                    });
+                    let variant =
+                        resilient.variant_hint(p.job.gemm.m, p.job.gemm.n, p.job.gemm.k);
                     (tiling.map(|t| (t.p_m, t.p_n, t.p_k, t.b_m, t.b_n, t.b_k)), variant)
                 });
                 for mut planned in queue.drain(..) {
@@ -629,12 +676,24 @@ impl Coordinator {
                         }
                     }
                     execute_job(
-                        backend.as_deref(),
+                        &mut resilient,
                         &exec_sim,
                         &session,
                         &exec_stats,
                         &mut planned,
                     );
+                    // Publish the resilience counters while they are
+                    // fresh (absolute values; the executor is the only
+                    // writer, so assignment is race-free).
+                    {
+                        let c = resilient.counters();
+                        let mut s = lock_unpoisoned(&exec_stats);
+                        s.retries_total = c.retries_total;
+                        s.timeouts_total = c.timeouts_total;
+                        s.failovers_total = c.failovers_total;
+                        s.faults_injected = c.faults_injected;
+                        s.breaker_state = c.breaker_state;
+                    }
                     finalize_result(&exec_stats, &planned.result);
                     exec_gauge.release(1); // execution done: free the admission slot
                     let _ = result_tx.send(planned.result);
@@ -993,6 +1052,9 @@ impl PlanOutcome {
             validation_err: None,
             c: None,
             error,
+            retries: 0,
+            timed_out: false,
+            backend_used: None,
         }
     }
 }
@@ -1105,7 +1167,7 @@ fn plan_and_flush(ctx: &PlannerCtx, job: GemmJob) -> Vec<PlannedJob> {
 /// through a synthesized BEAM trace, so `energy_j ≈ avg_power_w *
 /// exec_time` by construction.
 fn execute_job(
-    backend: Option<&dyn ExecBackend>,
+    resilient: &mut ResilientExec,
     sim: &VersalSim,
     session: &BeamSession,
     stats: &Mutex<CoordinatorStats>,
@@ -1124,34 +1186,28 @@ fn execute_job(
         }
     };
     let g = job.gemm;
-    let Some(backend) = backend else {
-        planned.result.error =
-            Some("no execution backend (backend construction failed at start)".into());
-        return;
-    };
-    if !backend.supports(&g) {
-        planned.result.error = Some(format!(
-            "backend `{}` does not support {}",
-            backend.name(),
-            g.label()
-        ));
-        return;
-    }
     if a.len() != g.m * g.k || b.len() != g.k * g.n {
         planned.result.error = Some("operand size mismatch".into());
         return;
     }
-    let started = Instant::now();
-    match backend.gemm(a, b, g.m, g.n, g.k) {
-        Err(e) => planned.result.error = Some(e.to_string()),
+    let report = resilient.execute(&ExecRequest {
+        a,
+        b,
+        g,
+        tiling: planned.result.plan.map(|p| p.tiling),
+        deadline_ms: job.deadline_ms,
+    });
+    planned.result.retries = report.retries;
+    planned.result.timed_out = report.timed_out;
+    planned.result.backend_used = report.backend_used;
+    match report.result {
+        Err(e) => planned.result.error = Some(e),
         Ok(c) => {
-            let host_elapsed = started.elapsed();
-            // The sim backend reports the board-side latency/power of
-            // the selected mapping instead of host wall-clock.
-            let board_m = planned
-                .result
-                .plan
-                .and_then(|p| backend.board_measurement(&g, &p.tiling));
+            // Host wall-clock of the winning attempt's GEMM; the sim
+            // backend's board measurement (stamped by the tier that
+            // executed, supervised or inline) overrides it below.
+            let host_elapsed = report.exec_time;
+            let board_m = report.measurement;
             let elapsed = board_m
                 .map(|m| Duration::from_secs_f64(m.latency_s))
                 .unwrap_or(host_elapsed);
@@ -1181,7 +1237,7 @@ fn execute_job(
             s.executed_jobs += 1;
             s.executed_flops += g.flops();
             s.exec_time_s += exec_s;
-            if backend.kernel_profile().is_some() {
+            if report.kernel_profile.is_some() {
                 // Host-side microkernel throughput: the sim backend
                 // stamps board latency into exec_time, so the packed-
                 // panel GFLOPS figure needs the host wall-clock.
@@ -1595,6 +1651,49 @@ mod tests {
             results[0].error
         );
         assert!(coord.backend_name().starts_with("none"));
+    }
+
+    #[test]
+    fn retry_budget_exhaustion_fails_with_last_error_and_retry_count() {
+        // Satellite regression: a job whose every attempt hits an
+        // injected transient fault must fail with the *last* backend
+        // error plus the retry count — not a generic "job failed".
+        let cfg = quick_cfg();
+        let plan = FaultPlan::parse("err:p=1;seed:5").expect("valid spec");
+        let opts = CoordinatorOptions {
+            backend: BackendChoice::Cpu,
+            cpu_profile: CpuProfileChoice::Generic,
+            retry_budget: 2,
+            faults: Some(plan),
+            ..CoordinatorOptions::default()
+        };
+        let mut coord = Coordinator::start_with(&cfg, dse_engine(&cfg), None, 2, opts);
+        let g = Gemm::new(64, 64, 64);
+        let results = coord.run_batch(vec![GemmJob::with_data(
+            0,
+            g,
+            Objective::Throughput,
+            vec![1f32; g.m * g.k],
+            vec![1f32; g.k * g.n],
+        )]);
+        assert_eq!(results.len(), 1);
+        let r = &results[0];
+        let err = r.error.as_deref().unwrap_or("");
+        assert!(
+            err.contains("after 2 retries"),
+            "missing retry count: {err}"
+        );
+        assert!(
+            err.contains("injected transient fault"),
+            "missing last backend error: {err}"
+        );
+        assert_eq!(r.retries, 2);
+        assert!(!r.timed_out);
+        assert_eq!(r.backend_used, Some("cpu"));
+        let s = coord.stats();
+        assert_eq!(s.jobs_failed, 1);
+        assert_eq!(s.retries_total, 2);
+        assert!(s.faults_injected >= 3, "got {}", s.faults_injected);
     }
 
     #[test]

@@ -12,6 +12,7 @@
 //! | lock-hygiene        | `lock_unpoisoned` only, and no lock-order cycles    |
 //! | wire-exhaustiveness | protocol frame kinds encode, decode, and round-trip |
 //! | stats-parity        | every coordinator stat reaches the wire             |
+//! | bounded-sleep       | serving loops sleep only via `util::backoff`        |
 
 use std::collections::{BTreeMap, BTreeSet};
 
@@ -25,6 +26,7 @@ pub fn all_rules() -> Vec<Box<dyn Rule>> {
         Box::new(LockHygiene),
         Box::new(WireExhaustiveness),
         Box::new(StatsParity),
+        Box::new(BoundedSleep),
     ]
 }
 
@@ -877,6 +879,62 @@ fn str_inner(text: &str) -> Option<&str> {
     }
 }
 
+// ---------------------------------------------------------------------------
+// bounded-sleep
+// ---------------------------------------------------------------------------
+
+/// Serving-path code must not call a literal `sleep`: a raw
+/// `thread::sleep` ignores shutdown cancellation and turns every wait
+/// into a fixed stall the drain state machine cannot interrupt. Waits
+/// route through `util::backoff::pause` (plain bounded waits) or
+/// `util::backoff::cancellable_sleep` (shutdown-aware); `util/` itself
+/// is out of scope, so `backoff.rs` is the single sanctioned call site.
+/// Test code is exempt — tests may pace themselves however they like.
+struct BoundedSleep;
+
+const SLEEP_DIRS: [&str; 3] = [
+    "rust/src/server/",
+    "rust/src/coordinator/",
+    "rust/src/runtime/",
+];
+
+impl Rule for BoundedSleep {
+    fn id(&self) -> &'static str {
+        "bounded-sleep"
+    }
+
+    fn describe(&self) -> &'static str {
+        "no raw `sleep` in server/, coordinator/, runtime/ outside tests — \
+         route waits through util::backoff::pause or cancellable_sleep"
+    }
+
+    fn check(&self, repo: &Repo, out: &mut Vec<Finding>) {
+        for sf in &repo.files {
+            if !SLEEP_DIRS.iter().any(|d| sf.rel.starts_with(d)) {
+                continue;
+            }
+            let n = sf.n_code();
+            for ci in 0..n {
+                let tok = sf.ctok(ci);
+                if tok.kind != TokKind::Ident || sf.in_test(tok.start) {
+                    continue;
+                }
+                if sf.ctext(ci) == "sleep" {
+                    push(
+                        out,
+                        self.id(),
+                        sf,
+                        tok.line,
+                        "raw `sleep` on a serving path — use `util::backoff::pause` \
+                         (or `cancellable_sleep` where shutdown must interrupt)"
+                            .to_string(),
+                    );
+                }
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::super::{run, Baseline, Finding, Repo};
@@ -1157,5 +1215,78 @@ pub fn wire_stats() -> Vec<(String, f64)> {
         let w = waived(&repo, "stats-parity");
         assert_eq!(w.len(), 1);
         assert!(w[0].message.contains("derived_metric"));
+    }
+
+    #[test]
+    fn stats_parity_catches_missing_resilience_counter() {
+        let coord = "\
+pub struct CoordinatorStats {
+    pub jobs_completed: u64,
+    pub retries_total: u64,
+    pub failovers_total: u64,
+}
+";
+        let daemon = "\
+pub fn wire_stats() -> Vec<(String, f64)> {
+    vec![
+        (\"jobs_completed\".to_string(), 1.0),
+        (\"retries_total\".to_string(), 2.0),
+    ]
+}
+";
+        let repo = Repo::from_sources(&[
+            ("rust/src/coordinator/mod.rs", coord),
+            ("rust/src/server/daemon.rs", daemon),
+        ]);
+        assert_eq!(
+            anchors(&repo, "stats-parity"),
+            vec![("rust/src/coordinator/mod.rs".to_string(), 4)]
+        );
+    }
+
+    #[test]
+    fn bounded_sleep_fires_in_serve_dirs_outside_tests() {
+        let src = "\
+use crate::util::backoff;
+pub fn tick(stop: &std::sync::atomic::AtomicBool) {
+    std::thread::sleep(std::time::Duration::from_millis(2));
+    backoff::pause(std::time::Duration::from_millis(2));
+    backoff::cancellable_sleep(std::time::Duration::from_millis(2), stop);
+}
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn pacing_in_tests_is_fine() {
+        std::thread::sleep(std::time::Duration::from_millis(1));
+    }
+}
+";
+        let repo = Repo::from_sources(&[
+            ("rust/src/server/fx.rs", src),
+            // Same code outside the serving dirs (report/, util/): clean.
+            ("rust/src/report/fx.rs", src),
+            ("rust/src/util/fx.rs", src),
+        ]);
+        // Only the literal `sleep` ident fires — `backoff::pause` and
+        // `cancellable_sleep` are different identifiers.
+        assert_eq!(
+            anchors(&repo, "bounded-sleep"),
+            vec![("rust/src/server/fx.rs".to_string(), 3)]
+        );
+    }
+
+    #[test]
+    fn bounded_sleep_respects_waiver() {
+        let src = "\
+pub fn settle() {
+    // lint:allow(bounded-sleep) startup settle before the first tick
+    std::thread::sleep(std::time::Duration::from_millis(50));
+}
+";
+        let repo = Repo::from_sources(&[("rust/src/runtime/fx.rs", src)]);
+        assert!(anchors(&repo, "bounded-sleep").is_empty());
+        let w = waived(&repo, "bounded-sleep");
+        assert_eq!(w.len(), 1);
+        assert_eq!(w[0].line, 3);
     }
 }

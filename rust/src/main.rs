@@ -18,7 +18,7 @@ use std::time::{Duration, Instant};
 
 use versal_gemm::config::Config;
 use versal_gemm::coordinator::{
-    Admission, BackendChoice, Coordinator, CoordinatorOptions, CpuProfileChoice,
+    Admission, BackendChoice, Coordinator, CoordinatorOptions, CpuProfileChoice, FaultPlan,
 };
 use versal_gemm::dataset::Dataset;
 use versal_gemm::dse::Objective;
@@ -76,6 +76,17 @@ SUBCOMMANDS:
             [--cpu-profile generic|l2-small|l2-large|auto] packed-panel kernel
                                        blocking for cpu/sim (default: auto =
                                        probe L2 size once at startup)
+            [--job-deadline-ms N]      per-attempt execution deadline; jobs
+                                       run watchdog-supervised and time out
+                                       with a typed error (0/absent: none)
+            [--retry-budget N]         max retries per job on transient
+                                       failures (default: 3)
+            [--faults SPEC]            deterministic fault injection, e.g.
+                                       'err:p=0.2;hang:p=0.05,ms=500;seed:7'
+                                       (also via PALLAS_FAULTS; testing only)
+            [--timeout SECS]           client-side socket I/O timeout for
+                                       status/submit/drain/stop (default: 30,
+                                       0 = wait forever)
   validate  [--artifacts artifacts]            PJRT runtime vs reference GEMM
   sweep     --model qwen|llama|deit [--seqs 32,64,..] per-layer mapping sweep
   lint      [--format table|json] [--out report.json] [--baseline file]
@@ -296,6 +307,23 @@ fn coordinator_options(
         },
         backend: BackendChoice::parse(args.opt_or("backend", "auto"))?,
         cpu_profile: CpuProfileChoice::parse(args.opt_or("cpu-profile", "auto"))?,
+        job_deadline_ms: match args.opt_u64("job-deadline-ms", 0)? {
+            0 => None,
+            ms => Some(ms),
+        },
+        retry_budget: args.opt_u64("retry-budget", defaults.retry_budget as u64)? as u32,
+        faults: match args.opt("faults") {
+            Some(spec) => Some(FaultPlan::parse(spec)?),
+            None => FaultPlan::from_env()?,
+        },
+    })
+}
+
+/// Client-side socket I/O timeout (`--timeout SECS`; `0` waits forever).
+fn client_io_timeout(args: &Args) -> anyhow::Result<Option<Duration>> {
+    Ok(match args.opt_u64("timeout", 30)? {
+        0 => None,
+        s => Some(Duration::from_secs(s)),
     })
 }
 
@@ -322,6 +350,7 @@ fn serve_inline(args: &Args, cfg: Config, data_dir: PathBuf) -> anyhow::Result<(
     let artifacts = PathBuf::from(args.opt_or("artifacts", "artifacts"));
     let n_planners = args.opt_usize("planners", 2)?;
     let options = coordinator_options(args, None)?;
+    let fault_label = options.faults.as_ref().map(|p| p.label());
     let lab = Lab::prepare(cfg.clone(), data_dir)?;
     let mut coord =
         Coordinator::start_with(&cfg, lab.engine(), Some(artifacts), n_planners, options);
@@ -406,6 +435,18 @@ fn serve_inline(args: &Args, cfg: Config, data_dir: PathBuf) -> anyhow::Result<(
         stats.forest_compile_ms,
         stats.predict_rows_per_s,
         stats.simulated_energy_j
+    );
+    println!(
+        "resilience: {} retries / {} timeouts / {} failovers, \
+         {} breaker(s) not closed{}",
+        stats.retries_total,
+        stats.timeouts_total,
+        stats.failovers_total,
+        stats.breaker_state,
+        match &fault_label {
+            Some(l) => format!(", fault plan `{l}` injected {} faults", stats.faults_injected),
+            None => String::new(),
+        }
     );
     coord.shutdown();
     Ok(())
@@ -542,7 +583,7 @@ fn serve_stop(args: &Args) -> anyhow::Result<()> {
         }
         return Ok(());
     }
-    match Client::connect(&Endpoint::parse(&prev.socket)) {
+    match Client::connect_with(&Endpoint::parse(&prev.socket), client_io_timeout(args)?) {
         Ok(mut c) => {
             let _ = c.shutdown();
         }
@@ -583,7 +624,7 @@ fn serve_status(args: &Args) -> anyhow::Result<()> {
     if !alive {
         return Ok(());
     }
-    let mut c = Client::connect(&Endpoint::parse(&prev.socket))?;
+    let mut c = Client::connect_with(&Endpoint::parse(&prev.socket), client_io_timeout(args)?)?;
     let s = c.stats()?;
     println!("state {} (up {:.1}s), backend {}", s.state, s.uptime_s, s.backend);
     for (k, v) in &s.fields {
@@ -597,7 +638,8 @@ fn serve_submit(args: &Args) -> anyhow::Result<()> {
     let (_, endpoint) = serve_paths(args);
     let n_jobs = args.opt_usize("jobs", 24)?;
     let plan_only = args.flag("plan-only");
-    let mut client = Client::connect_retry(&endpoint, Duration::from_secs(10))?;
+    let mut client =
+        Client::connect_retry_with(&endpoint, Duration::from_secs(10), client_io_timeout(args)?)?;
     let specs = demo_job_specs(n_jobs, plan_only);
     let started = Instant::now();
     let results = client.submit_burst(&specs)?;
@@ -634,7 +676,7 @@ fn serve_submit(args: &Args) -> anyhow::Result<()> {
 
 fn serve_drain(args: &Args) -> anyhow::Result<()> {
     let (_, endpoint) = serve_paths(args);
-    let mut client = Client::connect(&endpoint)?;
+    let mut client = Client::connect_with(&endpoint, client_io_timeout(args)?)?;
     let s = client.drain()?;
     println!(
         "drained: state {} after {:.1}s — {:.0} completed / {:.0} failed, \

@@ -112,6 +112,45 @@ impl BackendChoice {
             BackendChoice::Sim => "sim",
         }
     }
+
+    /// The ordered tier list the resilient executor runs over. `Auto`
+    /// is the full capability chain — PJRT (only worth probing when an
+    /// artifacts directory is configured), then cpu, then sim — so a
+    /// tripped breaker demotes down it at runtime; an explicit choice
+    /// pins a single tier and never fails over.
+    pub fn capability_chain(&self, has_artifacts: bool) -> Vec<BackendChoice> {
+        match self {
+            BackendChoice::Auto if has_artifacts => {
+                vec![BackendChoice::Pjrt, BackendChoice::Cpu, BackendChoice::Sim]
+            }
+            BackendChoice::Auto => vec![BackendChoice::Cpu, BackendChoice::Sim],
+            concrete => vec![*concrete],
+        }
+    }
+}
+
+/// Build one *concrete* tier (`Auto` is a chain, not a tier — resolve
+/// it via [`BackendChoice::capability_chain`] first). This is the
+/// constructor the resilient executor and its watchdog worker share.
+pub fn make_single_backend(
+    tier: BackendChoice,
+    cpu_profile: CpuProfileChoice,
+    artifacts_dir: Option<&Path>,
+    sim: VersalSim,
+) -> Result<Box<dyn ExecBackend>> {
+    match tier {
+        BackendChoice::Cpu => Ok(Box::new(CpuBackend::new().with_profile(cpu_profile.resolve()))),
+        BackendChoice::Sim => Ok(Box::new(SimBackend::with_cpu(
+            CpuBackend::new().with_profile(cpu_profile.resolve()),
+            sim,
+        ))),
+        BackendChoice::Pjrt => {
+            let dir = artifacts_dir
+                .ok_or_else(|| anyhow!("backend `pjrt` requires an artifacts directory"))?;
+            Ok(Box::new(PjrtBackend::load(dir)?))
+        }
+        BackendChoice::Auto => bail!("`auto` is a capability chain, not a concrete tier"),
+    }
 }
 
 /// Build the backend a coordinator will execute on. `Auto` tries PJRT
@@ -127,27 +166,19 @@ pub fn make_backend(
     sim: VersalSim,
 ) -> Result<Box<dyn ExecBackend>> {
     match choice {
-        BackendChoice::Cpu => Ok(Box::new(CpuBackend::new().with_profile(cpu_profile.resolve()))),
-        BackendChoice::Sim => Ok(Box::new(SimBackend::with_cpu(
-            CpuBackend::new().with_profile(cpu_profile.resolve()),
-            sim,
-        ))),
-        BackendChoice::Pjrt => {
-            let dir = artifacts_dir
-                .ok_or_else(|| anyhow!("backend `pjrt` requires an artifacts directory"))?;
-            Ok(Box::new(PjrtBackend::load(dir)?))
-        }
         BackendChoice::Auto => {
-            if let Some(dir) = artifacts_dir {
-                match PjrtBackend::load(dir) {
-                    Ok(b) => return Ok(Box::new(b)),
+            if artifacts_dir.is_some() {
+                match make_single_backend(BackendChoice::Pjrt, cpu_profile, artifacts_dir, sim.clone())
+                {
+                    Ok(b) => return Ok(b),
                     Err(e) => {
                         eprintln!("exec backend: PJRT unavailable ({e}); falling back to cpu")
                     }
                 }
             }
-            Ok(Box::new(CpuBackend::new().with_profile(cpu_profile.resolve())))
+            make_single_backend(BackendChoice::Cpu, cpu_profile, artifacts_dir, sim)
         }
+        concrete => make_single_backend(concrete, cpu_profile, artifacts_dir, sim),
     }
 }
 
@@ -552,6 +583,38 @@ mod tests {
         assert_eq!(BackendChoice::parse("sim").unwrap(), BackendChoice::Sim);
         assert!(BackendChoice::parse("tpu").is_err());
         assert_eq!(BackendChoice::default().label(), "auto");
+    }
+
+    #[test]
+    fn capability_chain_orders_tiers_and_pins_explicit_choices() {
+        assert_eq!(
+            BackendChoice::Auto.capability_chain(true),
+            vec![BackendChoice::Pjrt, BackendChoice::Cpu, BackendChoice::Sim]
+        );
+        assert_eq!(
+            BackendChoice::Auto.capability_chain(false),
+            vec![BackendChoice::Cpu, BackendChoice::Sim]
+        );
+        for concrete in [BackendChoice::Pjrt, BackendChoice::Cpu, BackendChoice::Sim] {
+            assert_eq!(concrete.capability_chain(true), vec![concrete]);
+            assert_eq!(concrete.capability_chain(false), vec![concrete]);
+        }
+        let cfg = Config::default();
+        assert!(make_single_backend(
+            BackendChoice::Auto,
+            CpuProfileChoice::Generic,
+            None,
+            VersalSim::new(&cfg)
+        )
+        .is_err());
+        let b = make_single_backend(
+            BackendChoice::Sim,
+            CpuProfileChoice::Generic,
+            None,
+            VersalSim::new(&cfg),
+        )
+        .unwrap();
+        assert_eq!(b.name(), "sim");
     }
 
     #[test]

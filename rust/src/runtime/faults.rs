@@ -1,0 +1,485 @@
+//! Deterministic fault injection for the execution path (DESIGN.md
+//! §10): the harness that lets the chaos suite *prove* the resilient
+//! executor's guarantees instead of asserting them by inspection.
+//!
+//! A [`FaultPlan`] is parsed from `--faults <spec>` (or the
+//! `PALLAS_FAULTS` env var) with a tiny semicolon grammar, e.g.
+//!
+//! ```text
+//! err:p=0.2;hang:p=0.05,ms=500;slow:p=0.1,x=8;seed:7
+//! ```
+//!
+//! and compiled into a [`FaultInjector`] holding one seeded RNG. Each
+//! backend call draws once *per clause* — whether or not the clause
+//! triggers or even applies to the executing backend — so the
+//! injection schedule is a pure function of `(spec, seed, call index)`
+//! and replays bit-identically across runs, backends, and retry
+//! interleavings. [`FaultyBackend`] is a decorator over any
+//! [`ExecBackend`]: production code paths never check a "chaos mode"
+//! flag; with no plan configured the decorator is simply absent.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::runtime::backend::ExecBackend;
+use crate::tiling::Tiling;
+use crate::util::backoff;
+use crate::util::lock_unpoisoned;
+use crate::util::rng::Rng;
+use crate::versal::Measurement;
+use crate::workloads::Gemm;
+
+/// Marker embedded in injected transient errors; the resilient
+/// executor's classifier treats anything non-permanent as retryable.
+pub const TRANSIENT_MARKER: &str = "injected transient fault";
+
+/// Marker embedded in injected permanent errors; classified permanent,
+/// so it trips the backend's circuit breaker immediately.
+pub const PERMANENT_MARKER: &str = "injected permanent fault";
+
+/// Hard ceiling on an injected hang: the harness exists to exercise
+/// deadlines, not to wedge CI forever when a spec typo says `ms=1e9`.
+const HANG_CAP_MS: u64 = 10_000;
+
+/// Hang duration when a `hang` clause omits `ms=`.
+const DEFAULT_HANG_MS: u64 = 200;
+
+/// Injector seed when the spec has no `seed:` clause. A constant (not
+/// entropy) so that omitting the clause still replays bit-identically.
+const DEFAULT_SEED: u64 = 0xFA_0175;
+
+/// What a triggered clause does to the backend call.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Fail with [`TRANSIENT_MARKER`] (retryable).
+    Err,
+    /// Fail with [`PERMANENT_MARKER`] (trips the breaker).
+    Perm,
+    /// Sleep `ms` before executing — a bounded hang, for deadline tests.
+    Hang,
+    /// Stretch the call's latency by `x` (execute, then idle `(x-1)·t`).
+    Slow,
+}
+
+impl FaultKind {
+    fn parse(text: &str) -> Result<FaultKind> {
+        match text {
+            "err" => Ok(FaultKind::Err),
+            "perm" => Ok(FaultKind::Perm),
+            "hang" => Ok(FaultKind::Hang),
+            "slow" => Ok(FaultKind::Slow),
+            other => bail!("unknown fault kind `{other}` (err|perm|hang|slow|seed)"),
+        }
+    }
+
+    fn label(&self) -> &'static str {
+        match self {
+            FaultKind::Err => "err",
+            FaultKind::Perm => "perm",
+            FaultKind::Hang => "hang",
+            FaultKind::Slow => "slow",
+        }
+    }
+}
+
+/// One `kind:p=..,..` clause of a fault spec.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultClause {
+    pub kind: FaultKind,
+    /// Trigger probability per backend call, in `[0, 1]`.
+    pub p: f64,
+    /// Hang duration (ms); meaningful for [`FaultKind::Hang`].
+    pub ms: u64,
+    /// Latency multiplier (≥ 1); meaningful for [`FaultKind::Slow`].
+    pub x: f64,
+    /// Restrict the clause to one backend tier (`backend=cpu`); `None`
+    /// applies to every tier. The RNG draw happens either way, so the
+    /// filter never perturbs the schedule of later clauses.
+    pub backend: Option<String>,
+}
+
+/// A parsed `--faults` spec: an ordered clause list plus the RNG seed.
+/// The first triggered clause that applies to the executing backend
+/// wins; clause order in the spec is therefore a priority order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    pub clauses: Vec<FaultClause>,
+    pub seed: u64,
+}
+
+impl FaultPlan {
+    /// Parse a spec like `err:p=0.2;hang:p=0.05,ms=500;slow:p=0.1,x=8`.
+    /// An optional `seed:N` clause pins the injector seed (default: a
+    /// fixed constant, so replays are deterministic either way).
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut clauses = Vec::new();
+        let mut seed = DEFAULT_SEED;
+        for raw in spec.split(';') {
+            let clause = raw.trim();
+            if clause.is_empty() {
+                continue;
+            }
+            let (head, params) = match clause.split_once(':') {
+                Some((h, p)) => (h.trim(), p.trim()),
+                None => bail!("fault clause `{clause}` missing `:` (want kind:p=..)"),
+            };
+            if head == "seed" {
+                seed = params
+                    .parse::<u64>()
+                    .map_err(|_| anyhow::anyhow!("bad fault seed `{params}`"))?;
+                continue;
+            }
+            let kind = FaultKind::parse(head)?;
+            let mut p = None;
+            let mut ms = DEFAULT_HANG_MS;
+            let mut x = 1.0f64;
+            let mut backend = None;
+            for param in params.split(',') {
+                let param = param.trim();
+                if param.is_empty() {
+                    continue;
+                }
+                let (key, value) = match param.split_once('=') {
+                    Some((k, v)) => (k.trim(), v.trim()),
+                    None => bail!("fault param `{param}` in `{clause}` missing `=`"),
+                };
+                match key {
+                    "p" => {
+                        let v: f64 = value
+                            .parse()
+                            .map_err(|_| anyhow::anyhow!("bad probability `{value}`"))?;
+                        if !(0.0..=1.0).contains(&v) {
+                            bail!("fault probability {v} outside [0, 1] in `{clause}`");
+                        }
+                        p = Some(v);
+                    }
+                    "ms" => {
+                        let v: u64 = value
+                            .parse()
+                            .map_err(|_| anyhow::anyhow!("bad hang duration `{value}`"))?;
+                        ms = v.min(HANG_CAP_MS);
+                    }
+                    "x" => {
+                        let v: f64 = value
+                            .parse()
+                            .map_err(|_| anyhow::anyhow!("bad slow factor `{value}`"))?;
+                        if v < 1.0 {
+                            bail!("slow factor {v} < 1 in `{clause}`");
+                        }
+                        x = v;
+                    }
+                    "backend" => backend = Some(value.to_string()),
+                    other => bail!("unknown fault param `{other}` in `{clause}`"),
+                }
+            }
+            let p = match p {
+                Some(p) => p,
+                None => bail!("fault clause `{clause}` missing p=<probability>"),
+            };
+            clauses.push(FaultClause {
+                kind,
+                p,
+                ms,
+                x,
+                backend,
+            });
+        }
+        if clauses.is_empty() {
+            bail!("fault spec `{spec}` has no clauses");
+        }
+        Ok(FaultPlan { clauses, seed })
+    }
+
+    /// Plan from the `PALLAS_FAULTS` environment variable, if set and
+    /// non-empty. A malformed spec is an error, not a silent no-op —
+    /// chaos the operator asked for must not quietly disable itself.
+    pub fn from_env() -> Result<Option<FaultPlan>> {
+        match std::env::var("PALLAS_FAULTS") {
+            Ok(spec) if !spec.trim().is_empty() => FaultPlan::parse(&spec).map(Some),
+            _ => Ok(None),
+        }
+    }
+
+    /// Canonical re-rendering of the spec, for the serve summary.
+    pub fn label(&self) -> String {
+        let mut parts: Vec<String> = self
+            .clauses
+            .iter()
+            .map(|c| {
+                let mut s = format!("{}:p={}", c.kind.label(), c.p);
+                if c.kind == FaultKind::Hang {
+                    s.push_str(&format!(",ms={}", c.ms));
+                }
+                if c.kind == FaultKind::Slow {
+                    s.push_str(&format!(",x={}", c.x));
+                }
+                if let Some(b) = &c.backend {
+                    s.push_str(&format!(",backend={b}"));
+                }
+                s
+            })
+            .collect();
+        parts.push(format!("seed:{}", self.seed));
+        parts.join(";")
+    }
+}
+
+/// What the injector decided for one backend call.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultDecision {
+    Fail { permanent: bool },
+    Hang { ms: u64 },
+    Slow { x: f64 },
+}
+
+/// The seeded decision engine. `Send + Sync` (one mutex-guarded RNG)
+/// so a single injector can be shared between the executor thread and
+/// the watchdog worker — one global call counter, one schedule.
+pub struct FaultInjector {
+    plan: FaultPlan,
+    rng: Mutex<Rng>,
+    injected: AtomicU64,
+}
+
+impl FaultInjector {
+    pub fn new(plan: FaultPlan) -> FaultInjector {
+        let rng = Mutex::new(Rng::new(plan.seed));
+        FaultInjector {
+            plan,
+            rng,
+            injected: AtomicU64::new(0),
+        }
+    }
+
+    /// Decide the fate of one backend call. Every clause consumes
+    /// exactly one RNG draw regardless of whether it triggers or
+    /// applies to `backend`, so the schedule depends only on the call
+    /// index — never on which tier happens to be executing.
+    pub fn decide(&self, backend: &str) -> Option<FaultDecision> {
+        let mut rng = lock_unpoisoned(&self.rng);
+        let mut chosen = None;
+        for clause in &self.plan.clauses {
+            let hit = rng.bool(clause.p);
+            let applies = match clause.backend.as_deref() {
+                Some(b) => b == backend,
+                None => true,
+            };
+            if hit && applies && chosen.is_none() {
+                chosen = Some(match clause.kind {
+                    FaultKind::Err => FaultDecision::Fail { permanent: false },
+                    FaultKind::Perm => FaultDecision::Fail { permanent: true },
+                    FaultKind::Hang => FaultDecision::Hang { ms: clause.ms },
+                    FaultKind::Slow => FaultDecision::Slow { x: clause.x },
+                });
+            }
+        }
+        if chosen.is_some() {
+            self.injected.fetch_add(1, Ordering::SeqCst);
+        }
+        chosen
+    }
+
+    /// Total faults actually injected (triggered *and* applicable).
+    pub fn injected(&self) -> u64 {
+        self.injected.load(Ordering::SeqCst)
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+}
+
+/// Decorator injecting the plan's faults around any [`ExecBackend`].
+/// Identity (`name`, hints, profiles, measurements) passes through
+/// untouched — stats stay honest about which tier really executed.
+pub struct FaultyBackend {
+    inner: Box<dyn ExecBackend>,
+    injector: Arc<FaultInjector>,
+}
+
+impl FaultyBackend {
+    pub fn wrap(inner: Box<dyn ExecBackend>, injector: Arc<FaultInjector>) -> FaultyBackend {
+        FaultyBackend { inner, injector }
+    }
+}
+
+impl ExecBackend for FaultyBackend {
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn supports(&self, g: &Gemm) -> bool {
+        self.inner.supports(g)
+    }
+
+    fn gemm(&self, a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Result<Vec<f32>> {
+        match self.injector.decide(self.inner.name()) {
+            Some(FaultDecision::Fail { permanent: false }) => {
+                bail!("{TRANSIENT_MARKER}: {m}x{n}x{k} on `{}`", self.inner.name())
+            }
+            Some(FaultDecision::Fail { permanent: true }) => {
+                bail!("{PERMANENT_MARKER}: {m}x{n}x{k} on `{}`", self.inner.name())
+            }
+            Some(FaultDecision::Hang { ms }) => {
+                backoff::pause(Duration::from_millis(ms));
+                self.inner.gemm(a, b, m, n, k)
+            }
+            Some(FaultDecision::Slow { x }) => {
+                let started = Instant::now();
+                let c = self.inner.gemm(a, b, m, n, k)?;
+                backoff::pause(started.elapsed().mul_f64((x - 1.0).max(0.0)));
+                Ok(c)
+            }
+            None => self.inner.gemm(a, b, m, n, k),
+        }
+    }
+
+    fn variant_hint(&self, m: usize, n: usize, k: usize) -> Option<usize> {
+        self.inner.variant_hint(m, n, k)
+    }
+
+    fn kernel_profile(&self) -> Option<&'static str> {
+        self.inner.kernel_profile()
+    }
+
+    fn board_measurement(&self, g: &Gemm, t: &Tiling) -> Option<Measurement> {
+        self.inner.board_measurement(g, t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::backend::CpuBackend;
+    use crate::runtime::{matmul_ref, max_abs_diff};
+
+    #[test]
+    fn parses_the_issue_example_spec() {
+        let plan = FaultPlan::parse("err:p=0.2;hang:p=0.05,ms=500;slow:p=0.1,x=8").unwrap();
+        assert_eq!(plan.clauses.len(), 3);
+        assert_eq!(plan.seed, DEFAULT_SEED);
+        assert_eq!(
+            plan.clauses[0],
+            FaultClause {
+                kind: FaultKind::Err,
+                p: 0.2,
+                ms: DEFAULT_HANG_MS,
+                x: 1.0,
+                backend: None,
+            }
+        );
+        assert_eq!(plan.clauses[1].kind, FaultKind::Hang);
+        assert_eq!(plan.clauses[1].ms, 500);
+        assert_eq!(plan.clauses[2].kind, FaultKind::Slow);
+        assert_eq!(plan.clauses[2].x, 8.0);
+    }
+
+    #[test]
+    fn parses_seed_backend_filter_and_perm() {
+        let plan = FaultPlan::parse("perm:p=1,backend=cpu;seed:42").unwrap();
+        assert_eq!(plan.seed, 42);
+        assert_eq!(plan.clauses[0].kind, FaultKind::Perm);
+        assert_eq!(plan.clauses[0].backend.as_deref(), Some("cpu"));
+        assert!(plan.label().contains("seed:42"));
+        assert!(plan.label().contains("perm:p=1,backend=cpu"));
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        for bad in [
+            "",
+            "nope:p=0.5",
+            "err",
+            "err:p=1.5",
+            "err:q=0.5",
+            "slow:p=0.5,x=0.5",
+            "seed:banana",
+            "err:p=abc",
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "`{bad}` should not parse");
+        }
+    }
+
+    #[test]
+    fn hang_durations_are_capped() {
+        let plan = FaultPlan::parse("hang:p=1,ms=999999999").unwrap();
+        assert_eq!(plan.clauses[0].ms, HANG_CAP_MS);
+    }
+
+    #[test]
+    fn same_seed_replays_identical_schedule() {
+        let spec = "err:p=0.3;hang:p=0.1,ms=50;slow:p=0.2,x=4;seed:9";
+        let a = FaultInjector::new(FaultPlan::parse(spec).unwrap());
+        let b = FaultInjector::new(FaultPlan::parse(spec).unwrap());
+        let schedule_a: Vec<_> = (0..300).map(|_| a.decide("cpu")).collect();
+        let schedule_b: Vec<_> = (0..300).map(|_| b.decide("cpu")).collect();
+        assert_eq!(schedule_a, schedule_b);
+        assert_eq!(a.injected(), b.injected());
+        assert!(a.injected() > 0, "p=0.3 over 300 calls must trigger");
+        // A different seed produces a different schedule.
+        let c = FaultInjector::new(
+            FaultPlan::parse("err:p=0.3;hang:p=0.1,ms=50;slow:p=0.2,x=4;seed:10").unwrap(),
+        );
+        let schedule_c: Vec<_> = (0..300).map(|_| c.decide("cpu")).collect();
+        assert_ne!(schedule_a, schedule_c);
+    }
+
+    #[test]
+    fn backend_filter_gates_the_decision_not_the_draw() {
+        // Same seed: the cpu-only clause fires for cpu calls but never
+        // for sim calls, and the draw sequence is identical either way.
+        let spec = "err:p=0.5,backend=cpu;seed:3";
+        let on_cpu = FaultInjector::new(FaultPlan::parse(spec).unwrap());
+        let on_sim = FaultInjector::new(FaultPlan::parse(spec).unwrap());
+        let cpu_hits = (0..200).filter(|_| on_cpu.decide("cpu").is_some()).count();
+        let sim_hits = (0..200).filter(|_| on_sim.decide("sim").is_some()).count();
+        assert!(cpu_hits > 0);
+        assert_eq!(sim_hits, 0);
+    }
+
+    #[test]
+    fn faulty_backend_injects_and_passes_through() {
+        let (m, n, k) = (16, 16, 16);
+        let a = vec![1.0f32; m * k];
+        let b = vec![2.0f32; k * n];
+        // p=1 transient: every call fails with the transient marker.
+        let always = FaultyBackend::wrap(
+            Box::new(CpuBackend::new()),
+            Arc::new(FaultInjector::new(FaultPlan::parse("err:p=1").unwrap())),
+        );
+        let err = always.gemm(&a, &b, m, n, k).unwrap_err().to_string();
+        assert!(err.contains(TRANSIENT_MARKER), "{err}");
+        assert_eq!(always.name(), "cpu", "identity passes through");
+        // p=0: numerics are untouched.
+        let never = FaultyBackend::wrap(
+            Box::new(CpuBackend::new()),
+            Arc::new(FaultInjector::new(FaultPlan::parse("err:p=0").unwrap())),
+        );
+        let got = never.gemm(&a, &b, m, n, k).unwrap();
+        assert!(max_abs_diff(&got, &matmul_ref(&a, &b, m, n, k)) == 0.0);
+        assert_eq!(never.injector.injected(), 0);
+    }
+
+    #[test]
+    fn permanent_faults_carry_the_permanent_marker() {
+        let faulty = FaultyBackend::wrap(
+            Box::new(CpuBackend::new()),
+            Arc::new(FaultInjector::new(FaultPlan::parse("perm:p=1").unwrap())),
+        );
+        let err = faulty
+            .gemm(&[0.0; 4], &[0.0; 4], 2, 2, 2)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains(PERMANENT_MARKER), "{err}");
+    }
+
+    #[test]
+    fn from_env_rejects_malformed_and_accepts_absent() {
+        // No env var set in the test process: absent is Ok(None).
+        std::env::remove_var("PALLAS_FAULTS");
+        assert!(FaultPlan::from_env().unwrap().is_none());
+    }
+}

@@ -17,7 +17,9 @@
 //! jobs even when no artifacts exist.
 
 pub mod backend;
+pub mod faults;
 pub mod microkernel;
+pub mod resilient;
 
 use anyhow::{anyhow, bail, Context, Result};
 use std::path::{Path, PathBuf};

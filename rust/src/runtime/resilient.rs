@@ -1,0 +1,1037 @@
+//! Resilient execution: deadlines, retry/backoff, and circuit-breaker
+//! backend failover (DESIGN.md §10).
+//!
+//! [`ResilientExec`] wraps the capability chain of execution tiers
+//! (`pjrt → cpu → sim` under `auto`; a single tier under an explicit
+//! `--backend`) and gives every executed job:
+//!
+//! * **a deadline** — when a job (or `CoordinatorOptions`) carries
+//!   `deadline_ms`, the backend call runs on a watchdog-supervised
+//!   worker thread and the caller waits with `recv_timeout`; a hung
+//!   backend yields a typed `deadline exceeded` error and a respawned
+//!   worker instead of a wedged executor;
+//! * **retries** — transient failures retry with decorrelated-jitter
+//!   exponential backoff up to `retry_budget`, and the backoff sleep is
+//!   cancellation-aware so shutdown never waits on a retrying job;
+//! * **failover** — each tier carries a circuit breaker
+//!   (Closed → Open after K consecutive failures or one permanent
+//!   failure → HalfOpen probe after a cooldown); while a breaker is
+//!   open, jobs demote to the next live tier, and a successful probe
+//!   promotes straight back because selection always prefers the
+//!   highest tier that admits.
+//!
+//! With no deadline and no fault plan the chain is pass-through: the
+//! preferred tier executes inline on the executor thread through
+//! exactly the PR-8 code path — no worker hop, no operand clones, and
+//! bit-identical numerics.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::AtomicBool;
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::runtime::backend::{make_single_backend, BackendChoice, ExecBackend};
+use crate::runtime::faults::{FaultInjector, FaultPlan, FaultyBackend, PERMANENT_MARKER};
+use crate::runtime::microkernel::CpuProfileChoice;
+use crate::tiling::Tiling;
+use crate::util::backoff;
+use crate::util::rng::Rng;
+use crate::versal::{Measurement, VersalSim};
+use crate::workloads::Gemm;
+
+/// Marker in errors produced by a deadline expiry; kept transient by
+/// [`classify`] (the next attempt may land on a healthy tier).
+pub const TIMEOUT_MARKER: &str = "deadline exceeded";
+
+/// Marker in errors from a tier whose backend failed to construct.
+/// Such a tier is demoted permanently (dead) without consuming the
+/// job's retry budget — the runtime analogue of the old startup probe.
+const BUILD_FAILED_MARKER: &str = "backend build failed";
+
+/// First backoff delay; successive delays random-walk toward the cap.
+const BACKOFF_BASE: Duration = Duration::from_millis(10);
+
+/// Ceiling on a single retry backoff sleep.
+const BACKOFF_CAP: Duration = Duration::from_millis(250);
+
+/// Retry/deadline/breaker policy. Defaults are the serving defaults:
+/// no deadline (pure pass-through), three retries, breaker trips after
+/// three consecutive failures and probes again after eight selection
+/// passes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResilientOptions {
+    /// Default per-attempt deadline applied to jobs without their own.
+    /// `None` disables supervision entirely (inline execution).
+    pub job_deadline_ms: Option<u64>,
+    /// Max retries per job (attempts = retries + 1).
+    pub retry_budget: u32,
+    /// Consecutive transient failures that open a tier's breaker.
+    pub breaker_threshold: u32,
+    /// Selection passes an open breaker waits before half-opening.
+    pub breaker_cooldown: u64,
+    /// Fault-injection plan; `None` in production.
+    pub faults: Option<FaultPlan>,
+}
+
+impl Default for ResilientOptions {
+    fn default() -> ResilientOptions {
+        ResilientOptions {
+            job_deadline_ms: None,
+            retry_budget: 3,
+            breaker_threshold: 3,
+            breaker_cooldown: 8,
+            faults: None,
+        }
+    }
+}
+
+/// Transient errors are retried (possibly on another tier); permanent
+/// errors trip the tier's breaker immediately and are never retried on
+/// the same tier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorClass {
+    Transient,
+    Permanent,
+}
+
+/// Substring taxonomy over backend error text. Permanent: injected
+/// permanent faults, backend construction failures, artifact/PJRT
+/// load problems, and shape/capability mismatches no retry can fix.
+/// Everything else — injected transients, deadline expiries, worker
+/// panics, I/O blips — is transient.
+pub fn classify(error: &str) -> ErrorClass {
+    const PERMANENT: [&str; 7] = [
+        PERMANENT_MARKER,
+        BUILD_FAILED_MARKER,
+        "artifact",
+        "PJRT",
+        "unsupported",
+        "does not support",
+        "shapes do not match",
+    ];
+    if PERMANENT.iter().any(|m| error.contains(m)) {
+        ErrorClass::Permanent
+    } else {
+        ErrorClass::Transient
+    }
+}
+
+/// Per-tier circuit breaker state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerState {
+    Closed,
+    Open,
+    HalfOpen,
+}
+
+/// The Closed → Open → HalfOpen machine guarding one tier. Cooldown is
+/// counted in selection passes, not wall time, so tests and CI replay
+/// deterministically.
+#[derive(Debug, Clone)]
+struct Breaker {
+    state: BreakerState,
+    consecutive: u32,
+    cooldown_left: u64,
+    threshold: u32,
+    cooldown: u64,
+}
+
+impl Breaker {
+    fn new(threshold: u32, cooldown: u64) -> Breaker {
+        Breaker {
+            state: BreakerState::Closed,
+            consecutive: 0,
+            cooldown_left: 0,
+            threshold: threshold.max(1),
+            cooldown: cooldown.max(1),
+        }
+    }
+
+    /// Whether the tier may execute now. Called once per selection
+    /// pass; an open breaker ticks its cooldown here and half-opens
+    /// (admitting one probe) when it reaches zero.
+    fn admits(&mut self) -> bool {
+        match self.state {
+            BreakerState::Closed | BreakerState::HalfOpen => true,
+            BreakerState::Open => {
+                self.cooldown_left = self.cooldown_left.saturating_sub(1);
+                if self.cooldown_left == 0 {
+                    self.state = BreakerState::HalfOpen;
+                    true
+                } else {
+                    false
+                }
+            }
+        }
+    }
+
+    fn record_success(&mut self) {
+        self.state = BreakerState::Closed;
+        self.consecutive = 0;
+    }
+
+    /// Record a failed attempt; returns `true` when this failure newly
+    /// opened the breaker. A permanent failure or a failed HalfOpen
+    /// probe trips immediately; transients trip on the Kth consecutive.
+    fn record_failure(&mut self, class: ErrorClass) -> bool {
+        self.consecutive = self.consecutive.saturating_add(1);
+        let trip = class == ErrorClass::Permanent
+            || self.state == BreakerState::HalfOpen
+            || self.consecutive >= self.threshold;
+        if trip && self.state != BreakerState::Open {
+            self.state = BreakerState::Open;
+            self.cooldown_left = self.cooldown;
+            return true;
+        }
+        if trip {
+            // Already open (forced probe while cooling): restart cooldown.
+            self.cooldown_left = self.cooldown;
+        }
+        false
+    }
+}
+
+/// One rung of the capability chain.
+struct Tier {
+    choice: BackendChoice,
+    breaker: Breaker,
+    /// Build failure text; a dead tier is permanently demoted.
+    dead: Option<String>,
+    /// Inline backend instance, built lazily on the executor thread.
+    backend: Option<Box<dyn ExecBackend>>,
+}
+
+/// Monotonic resilience counters, surfaced into `CoordinatorStats`.
+/// `breaker_state` is the number of live tiers whose breaker is not
+/// Closed — 0 reads "healthy".
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ResilienceCounters {
+    pub retries_total: u64,
+    pub timeouts_total: u64,
+    pub failovers_total: u64,
+    pub faults_injected: u64,
+    pub breaker_state: u64,
+}
+
+/// One execution request, borrowed from the job.
+pub struct ExecRequest<'a> {
+    pub a: &'a [f32],
+    pub b: &'a [f32],
+    pub g: Gemm,
+    /// Selected mapping, for the sim tier's board measurement stamp.
+    pub tiling: Option<Tiling>,
+    /// Per-job deadline override; falls back to the options default.
+    pub deadline_ms: Option<u64>,
+}
+
+/// What one job's execution produced, success or not.
+pub struct ExecReport {
+    pub result: Result<Vec<f32>, String>,
+    pub exec_time: Duration,
+    pub measurement: Option<Measurement>,
+    /// The tier that produced the final outcome (`None` only when no
+    /// tier could be constructed at all).
+    pub backend_used: Option<&'static str>,
+    pub kernel_profile: Option<&'static str>,
+    pub retries: u32,
+    pub timed_out: bool,
+}
+
+/// Everything the watchdog worker needs to build backends inside
+/// itself; all `Send + Clone`, unlike the backends it constructs.
+#[derive(Clone)]
+struct WorkerCfg {
+    cpu_profile: CpuProfileChoice,
+    artifacts_dir: Option<PathBuf>,
+    sim: VersalSim,
+    injector: Option<Arc<FaultInjector>>,
+}
+
+struct SupRequest {
+    seq: u64,
+    tier: BackendChoice,
+    a: Vec<f32>,
+    b: Vec<f32>,
+    g: Gemm,
+    tiling: Option<Tiling>,
+}
+
+struct SupResponse {
+    seq: u64,
+    outcome: Result<(Vec<f32>, Option<Measurement>), String>,
+    exec_time: Duration,
+    name: &'static str,
+    kernel_profile: Option<&'static str>,
+}
+
+/// Caller-side handle to the watchdog worker. Dropping it disconnects
+/// both channels; a hung worker notices once its backend call resolves
+/// and exits instead of publishing a stale result.
+struct Supervisor {
+    tx: Sender<SupRequest>,
+    rx: Receiver<SupResponse>,
+    next_seq: u64,
+}
+
+impl Supervisor {
+    fn spawn(cfg: WorkerCfg) -> Result<Supervisor, String> {
+        let (tx, req_rx) = mpsc::channel::<SupRequest>();
+        let (resp_tx, rx) = mpsc::channel::<SupResponse>();
+        std::thread::Builder::new()
+            .name("exec-watchdog".to_string())
+            .spawn(move || supervisor_worker(cfg, req_rx, resp_tx))
+            .map_err(|e| format!("failed to spawn watchdog worker: {e}"))?;
+        Ok(Supervisor {
+            tx,
+            rx,
+            next_seq: 0,
+        })
+    }
+}
+
+/// The worker loop: build (and cache) backends per tier inside this
+/// thread, execute requests, and report back. Panics in a backend are
+/// caught and surfaced as transient errors so the watchdog survives.
+fn supervisor_worker(cfg: WorkerCfg, rx: Receiver<SupRequest>, tx: Sender<SupResponse>) {
+    let mut cache: Vec<(BackendChoice, Box<dyn ExecBackend>)> = Vec::new();
+    while let Ok(req) = rx.recv() {
+        let seq = req.seq;
+        let resp = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            serve_request(&cfg, &mut cache, req)
+        }))
+        .unwrap_or_else(|_| SupResponse {
+            seq,
+            outcome: Err("backend panicked inside the watchdog worker".to_string()),
+            exec_time: Duration::ZERO,
+            name: "?",
+            kernel_profile: None,
+        });
+        if tx.send(resp).is_err() {
+            return; // supervisor gone (timeout or shutdown)
+        }
+    }
+}
+
+fn serve_request(
+    cfg: &WorkerCfg,
+    cache: &mut Vec<(BackendChoice, Box<dyn ExecBackend>)>,
+    req: SupRequest,
+) -> SupResponse {
+    let label = req.tier.label();
+    if !cache.iter().any(|(c, _)| *c == req.tier) {
+        match build_backend(req.tier, cfg.cpu_profile, cfg.artifacts_dir.as_deref(), &cfg.sim, &cfg.injector)
+        {
+            Ok(b) => cache.push((req.tier, b)),
+            Err(e) => {
+                return SupResponse {
+                    seq: req.seq,
+                    outcome: Err(e),
+                    exec_time: Duration::ZERO,
+                    name: label,
+                    kernel_profile: None,
+                }
+            }
+        }
+    }
+    let Some((_, b)) = cache.iter().find(|(c, _)| *c == req.tier) else {
+        return SupResponse {
+            seq: req.seq,
+            outcome: Err(format!("{BUILD_FAILED_MARKER} (`{label}`): missing from cache")),
+            exec_time: Duration::ZERO,
+            name: label,
+            kernel_profile: None,
+        };
+    };
+    let (outcome, exec_time) = run_attempt(b.as_ref(), &req.a, &req.b, req.g, req.tiling.as_ref());
+    SupResponse {
+        seq: req.seq,
+        outcome,
+        exec_time,
+        name: b.name(),
+        kernel_profile: b.kernel_profile(),
+    }
+}
+
+/// One backend call: capability check, GEMM, optional board stamp.
+/// `exec_time` covers the GEMM only, matching the inline path.
+fn run_attempt(
+    b: &dyn ExecBackend,
+    a: &[f32],
+    bm: &[f32],
+    g: Gemm,
+    tiling: Option<&Tiling>,
+) -> (Result<(Vec<f32>, Option<Measurement>), String>, Duration) {
+    if !b.supports(&g) {
+        let msg = format!("backend `{}` does not support {}x{}x{}", b.name(), g.m, g.n, g.k);
+        return (Err(msg), Duration::ZERO);
+    }
+    let started = Instant::now();
+    match b.gemm(a, bm, g.m, g.n, g.k) {
+        Ok(c) => {
+            let exec_time = started.elapsed();
+            let measurement = tiling.and_then(|t| b.board_measurement(&g, t));
+            (Ok((c, measurement)), exec_time)
+        }
+        Err(e) => (Err(format!("{e:#}")), started.elapsed()),
+    }
+}
+
+/// Construct (and, under a fault plan, wrap) one concrete tier.
+fn build_backend(
+    tier: BackendChoice,
+    cpu_profile: CpuProfileChoice,
+    artifacts_dir: Option<&Path>,
+    sim: &VersalSim,
+    injector: &Option<Arc<FaultInjector>>,
+) -> Result<Box<dyn ExecBackend>, String> {
+    let built = make_single_backend(tier, cpu_profile, artifacts_dir, sim.clone())
+        .map_err(|e| format!("{BUILD_FAILED_MARKER} (`{}`): {e:#}", tier.label()))?;
+    Ok(match injector {
+        Some(inj) => Box::new(FaultyBackend::wrap(built, Arc::clone(inj))),
+        None => built,
+    })
+}
+
+struct Attempt {
+    outcome: Result<(Vec<f32>, Option<Measurement>), String>,
+    exec_time: Duration,
+    name: &'static str,
+    kernel_profile: Option<&'static str>,
+    timed_out: bool,
+}
+
+/// The resilient execution chain. Owned by the coordinator's executor
+/// thread (deliberately not `Send`, like the backends it holds).
+pub struct ResilientExec {
+    tiers: Vec<Tier>,
+    opts: ResilientOptions,
+    cfg: WorkerCfg,
+    supervisor: Option<Supervisor>,
+    cancel: Arc<AtomicBool>,
+    rng: Rng,
+    retries_total: u64,
+    timeouts_total: u64,
+    failovers_total: u64,
+}
+
+impl ResilientExec {
+    pub fn new(
+        choice: BackendChoice,
+        cpu_profile: CpuProfileChoice,
+        artifacts_dir: Option<&Path>,
+        sim: VersalSim,
+        opts: ResilientOptions,
+    ) -> ResilientExec {
+        let injector = opts
+            .faults
+            .clone()
+            .map(|plan| Arc::new(FaultInjector::new(plan)));
+        let tiers = choice
+            .capability_chain(artifacts_dir.is_some())
+            .into_iter()
+            .map(|c| Tier {
+                choice: c,
+                breaker: Breaker::new(opts.breaker_threshold, opts.breaker_cooldown),
+                dead: None,
+                backend: None,
+            })
+            .collect();
+        let seed = opts.faults.as_ref().map(|p| p.seed).unwrap_or(0x5EED);
+        ResilientExec {
+            tiers,
+            cfg: WorkerCfg {
+                cpu_profile,
+                artifacts_dir: artifacts_dir.map(Path::to_path_buf),
+                sim,
+                injector,
+            },
+            supervisor: None,
+            cancel: Arc::new(AtomicBool::new(false)),
+            rng: Rng::new(seed ^ 0xBAC0FF),
+            retries_total: 0,
+            timeouts_total: 0,
+            failovers_total: 0,
+            opts,
+        }
+    }
+
+    /// Flag that aborts in-flight retry backoffs; the coordinator sets
+    /// it on shutdown so a retrying job never delays teardown.
+    pub fn cancel_handle(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.cancel)
+    }
+
+    /// Share an external cancellation flag (the coordinator's shutdown
+    /// flag) instead of the internal default.
+    pub fn with_cancel(mut self, cancel: Arc<AtomicBool>) -> ResilientExec {
+        self.cancel = cancel;
+        self
+    }
+
+    /// Preferred live tier's backend name, or `none (<reason>)` when
+    /// the whole chain failed to construct.
+    pub fn backend_name(&mut self) -> String {
+        for ti in 0..self.tiers.len() {
+            if self.ensure_built(ti).is_ok() {
+                if let Some(b) = self.tiers[ti].backend.as_ref() {
+                    return b.name().to_string();
+                }
+            }
+        }
+        let why = self
+            .tiers
+            .iter()
+            .find_map(|t| t.dead.clone())
+            .unwrap_or_else(|| "no tiers configured".to_string());
+        format!("none ({why})")
+    }
+
+    /// Kernel profile of the preferred live tier, if it has one.
+    pub fn kernel_profile(&mut self) -> Option<&'static str> {
+        for ti in 0..self.tiers.len() {
+            if self.ensure_built(ti).is_ok() {
+                return self.tiers[ti].backend.as_ref().and_then(|b| b.kernel_profile());
+            }
+        }
+        None
+    }
+
+    /// Variant hint from the preferred live tier (batch grouping).
+    pub fn variant_hint(&mut self, m: usize, n: usize, k: usize) -> Option<usize> {
+        for ti in 0..self.tiers.len() {
+            if self.ensure_built(ti).is_ok() {
+                return self.tiers[ti]
+                    .backend
+                    .as_ref()
+                    .and_then(|b| b.variant_hint(m, n, k));
+            }
+        }
+        None
+    }
+
+    /// Canonical fault-spec label, when chaos is configured.
+    pub fn fault_label(&self) -> Option<String> {
+        self.cfg.injector.as_ref().map(|i| i.plan().label())
+    }
+
+    pub fn counters(&self) -> ResilienceCounters {
+        ResilienceCounters {
+            retries_total: self.retries_total,
+            timeouts_total: self.timeouts_total,
+            failovers_total: self.failovers_total,
+            faults_injected: self.cfg.injector.as_ref().map(|i| i.injected()).unwrap_or(0),
+            breaker_state: self
+                .tiers
+                .iter()
+                .filter(|t| t.dead.is_none() && t.breaker.state != BreakerState::Closed)
+                .count() as u64,
+        }
+    }
+
+    /// Execute one job through the chain: select a tier, attempt
+    /// (inline or supervised), classify, retry/failover until success
+    /// or the retry budget is spent.
+    pub fn execute(&mut self, req: &ExecRequest<'_>) -> ExecReport {
+        let deadline_ms = req.deadline_ms.or(self.opts.job_deadline_ms);
+        let mut retries: u32 = 0;
+        let mut timed_out = false;
+        let mut prev_delay = BACKOFF_BASE;
+        let mut last_err: Option<(String, &'static str)> = None;
+        loop {
+            let Some(ti) = self.select_tier() else {
+                let why = match &last_err {
+                    Some((e, _)) => e.clone(),
+                    None => self
+                        .tiers
+                        .iter()
+                        .find_map(|t| t.dead.clone())
+                        .unwrap_or_else(|| "no tiers configured".to_string()),
+                };
+                return ExecReport {
+                    result: Err(format!("no execution backend: {why}")),
+                    exec_time: Duration::ZERO,
+                    measurement: None,
+                    backend_used: last_err.as_ref().map(|(_, n)| *n),
+                    kernel_profile: None,
+                    retries,
+                    timed_out,
+                };
+            };
+            let attempt = match deadline_ms {
+                None => self.inline_attempt(ti, req),
+                Some(ms) => self.supervised_attempt(ti, req, Duration::from_millis(ms.max(1))),
+            };
+            timed_out |= attempt.timed_out;
+            match attempt.outcome {
+                Ok((c, measurement)) => {
+                    self.tiers[ti].breaker.record_success();
+                    return ExecReport {
+                        result: Ok(c),
+                        exec_time: attempt.exec_time,
+                        measurement,
+                        backend_used: Some(attempt.name),
+                        kernel_profile: attempt.kernel_profile,
+                        retries,
+                        timed_out,
+                    };
+                }
+                Err(e) => {
+                    if e.contains(BUILD_FAILED_MARKER) {
+                        // The tier never came up: demote it for good and
+                        // move down the chain without spending the
+                        // job's retry budget (the runtime analogue of
+                        // the old startup probe's auto-fallback).
+                        eprintln!("exec backend: tier `{}` unavailable; demoting ({e})", attempt.name);
+                        self.tiers[ti].dead = Some(e.clone());
+                        last_err = Some((e, attempt.name));
+                        continue;
+                    }
+                    let class = classify(&e);
+                    let tripped = self.tiers[ti].breaker.record_failure(class);
+                    if tripped && self.live_alternative(ti) {
+                        self.failovers_total += 1;
+                    }
+                    last_err = Some((e.clone(), attempt.name));
+                    // A permanent error with nowhere to fail over is a
+                    // dead end: retrying the same tier cannot succeed.
+                    let dead_end =
+                        class == ErrorClass::Permanent && !self.live_alternative(ti);
+                    if dead_end || retries >= self.opts.retry_budget {
+                        return ExecReport {
+                            result: Err(format!("execution failed after {retries} retries: {e}")),
+                            exec_time: Duration::ZERO,
+                            measurement: None,
+                            backend_used: Some(attempt.name),
+                            kernel_profile: attempt.kernel_profile,
+                            retries,
+                            timed_out,
+                        };
+                    }
+                    retries += 1;
+                    self.retries_total += 1;
+                    // Back off before retrying a transient; permanent
+                    // failures fail over immediately and a timed-out
+                    // attempt already burned its deadline.
+                    if class == ErrorClass::Transient && !attempt.timed_out {
+                        prev_delay = backoff::decorrelated_jitter(
+                            &mut self.rng,
+                            prev_delay,
+                            BACKOFF_BASE,
+                            BACKOFF_CAP,
+                        );
+                        if !backoff::cancellable_sleep(prev_delay, &self.cancel) {
+                            return ExecReport {
+                                result: Err(format!(
+                                    "cancelled during retry backoff after {retries} retries: {e}"
+                                )),
+                                exec_time: Duration::ZERO,
+                                measurement: None,
+                                backend_used: Some(attempt.name),
+                                kernel_profile: attempt.kernel_profile,
+                                retries,
+                                timed_out,
+                            };
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Highest live tier whose breaker admits. Every live tier's
+    /// breaker ticks its cooldown each pass. If nothing admits (all
+    /// breakers cooling), force-probe the highest live tier rather
+    /// than starve the job.
+    fn select_tier(&mut self) -> Option<usize> {
+        let mut chosen = None;
+        for (i, t) in self.tiers.iter_mut().enumerate() {
+            if t.dead.is_some() {
+                continue;
+            }
+            let admits = t.breaker.admits();
+            if admits && chosen.is_none() {
+                chosen = Some(i);
+            }
+        }
+        chosen.or_else(|| self.tiers.iter().position(|t| t.dead.is_none()))
+    }
+
+    /// Is there another live tier to fail over to?
+    fn live_alternative(&self, ti: usize) -> bool {
+        self.tiers
+            .iter()
+            .enumerate()
+            .any(|(i, t)| i != ti && t.dead.is_none())
+    }
+
+    fn ensure_built(&mut self, ti: usize) -> Result<(), String> {
+        if let Some(dead) = &self.tiers[ti].dead {
+            return Err(dead.clone());
+        }
+        if self.tiers[ti].backend.is_some() {
+            return Ok(());
+        }
+        match build_backend(
+            self.tiers[ti].choice,
+            self.cfg.cpu_profile,
+            self.cfg.artifacts_dir.as_deref(),
+            &self.cfg.sim,
+            &self.cfg.injector,
+        ) {
+            Ok(b) => {
+                self.tiers[ti].backend = Some(b);
+                Ok(())
+            }
+            Err(e) => {
+                self.tiers[ti].dead = Some(e.clone());
+                Err(e)
+            }
+        }
+    }
+
+    /// Inline execution on the executor thread — the pass-through path.
+    fn inline_attempt(&mut self, ti: usize, req: &ExecRequest<'_>) -> Attempt {
+        let label = self.tiers[ti].choice.label();
+        if let Err(e) = self.ensure_built(ti) {
+            return Attempt {
+                outcome: Err(e),
+                exec_time: Duration::ZERO,
+                name: label,
+                kernel_profile: None,
+                timed_out: false,
+            };
+        }
+        let Some(b) = self.tiers[ti].backend.as_ref() else {
+            return Attempt {
+                outcome: Err(format!("{BUILD_FAILED_MARKER} (`{label}`): backend missing")),
+                exec_time: Duration::ZERO,
+                name: label,
+                kernel_profile: None,
+                timed_out: false,
+            };
+        };
+        let (outcome, exec_time) = run_attempt(b.as_ref(), req.a, req.b, req.g, req.tiling.as_ref());
+        Attempt {
+            outcome,
+            exec_time,
+            name: b.name(),
+            kernel_profile: b.kernel_profile(),
+            timed_out: false,
+        }
+    }
+
+    /// Deadline-supervised execution: ship the attempt to the watchdog
+    /// worker and wait at most `deadline`. On expiry the supervisor is
+    /// dropped (the hung worker exits once its call resolves — injected
+    /// hangs are bounded) and respawned lazily on the next attempt.
+    fn supervised_attempt(&mut self, ti: usize, req: &ExecRequest<'_>, deadline: Duration) -> Attempt {
+        let tier = self.tiers[ti].choice;
+        let label = tier.label();
+        let fail = |msg: String, timed_out: bool| Attempt {
+            outcome: Err(msg),
+            exec_time: Duration::ZERO,
+            name: label,
+            kernel_profile: None,
+            timed_out,
+        };
+        let mut sup = match self.supervisor.take() {
+            Some(s) => s,
+            None => match Supervisor::spawn(self.cfg.clone()) {
+                Ok(s) => s,
+                Err(e) => return fail(e, false),
+            },
+        };
+        sup.next_seq += 1;
+        let seq = sup.next_seq;
+        let request = SupRequest {
+            seq,
+            tier,
+            a: req.a.to_vec(),
+            b: req.b.to_vec(),
+            g: req.g,
+            tiling: req.tiling,
+        };
+        if sup.tx.send(request).is_err() {
+            return fail("watchdog worker exited; will respawn".to_string(), false);
+        }
+        let deadline_at = Instant::now() + deadline;
+        loop {
+            let left = deadline_at.saturating_duration_since(Instant::now());
+            match sup.rx.recv_timeout(left) {
+                Ok(resp) if resp.seq == seq => {
+                    self.supervisor = Some(sup);
+                    return Attempt {
+                        outcome: resp.outcome,
+                        exec_time: resp.exec_time,
+                        name: resp.name,
+                        kernel_profile: resp.kernel_profile,
+                        timed_out: false,
+                    };
+                }
+                Ok(_stale) => continue,
+                Err(RecvTimeoutError::Timeout) => {
+                    // Drop the supervisor: its channels disconnect, the
+                    // wedged worker exits when its call finally
+                    // resolves, and the next attempt gets a fresh one.
+                    self.timeouts_total += 1;
+                    return fail(
+                        format!(
+                            "{TIMEOUT_MARKER}: `{label}` attempt exceeded its {}ms deadline",
+                            deadline.as_millis()
+                        ),
+                        true,
+                    );
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    return fail("watchdog worker exited; will respawn".to_string(), false);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::runtime::backend::CpuBackend;
+    use crate::runtime::faults::TRANSIENT_MARKER;
+    use crate::runtime::{matmul_ref, max_abs_diff};
+    use crate::util::rng::Rng as TestRng;
+    use crate::versal::BufferPlacement;
+
+    fn sim() -> VersalSim {
+        VersalSim::new(&Config::default())
+    }
+
+    fn exec_with(choice: BackendChoice, opts: ResilientOptions) -> ResilientExec {
+        ResilientExec::new(choice, CpuProfileChoice::Generic, None, sim(), opts)
+    }
+
+    fn operands(m: usize, n: usize, k: usize) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = TestRng::new(23);
+        let a = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let b = (0..k * n).map(|_| rng.normal() as f32).collect();
+        (a, b)
+    }
+
+    fn request<'x>(a: &'x [f32], b: &'x [f32], g: Gemm) -> ExecRequest<'x> {
+        ExecRequest {
+            a,
+            b,
+            g,
+            tiling: None,
+            deadline_ms: None,
+        }
+    }
+
+    fn faults(spec: &str) -> Option<FaultPlan> {
+        Some(FaultPlan::parse(spec).unwrap())
+    }
+
+    #[test]
+    fn classify_separates_transient_from_permanent() {
+        assert_eq!(classify("injected transient fault: 8x8x8"), ErrorClass::Transient);
+        assert_eq!(classify("deadline exceeded: `cpu` attempt"), ErrorClass::Transient);
+        assert_eq!(classify("connection reset by peer"), ErrorClass::Transient);
+        assert_eq!(classify("injected permanent fault: 8x8x8"), ErrorClass::Permanent);
+        assert_eq!(classify("backend build failed (`pjrt`): x"), ErrorClass::Permanent);
+        assert_eq!(
+            classify("backend `pjrt` requires an artifacts directory"),
+            ErrorClass::Permanent
+        );
+        assert_eq!(classify("operand shapes do not match 4x4x4"), ErrorClass::Permanent);
+    }
+
+    #[test]
+    fn breaker_trips_cools_probes_and_recovers() {
+        let mut b = Breaker::new(3, 4);
+        assert!(b.admits());
+        assert!(!b.record_failure(ErrorClass::Transient));
+        assert!(!b.record_failure(ErrorClass::Transient));
+        assert!(b.record_failure(ErrorClass::Transient), "third strike trips");
+        assert_eq!(b.state, BreakerState::Open);
+        // Cooldown: three denied passes, then the fourth half-opens.
+        assert!(!b.admits());
+        assert!(!b.admits());
+        assert!(!b.admits());
+        assert!(b.admits());
+        assert_eq!(b.state, BreakerState::HalfOpen);
+        // A failed probe re-trips instantly; a success recovers.
+        assert!(b.record_failure(ErrorClass::Transient));
+        assert_eq!(b.state, BreakerState::Open);
+        for _ in 0..4 {
+            b.admits();
+        }
+        assert_eq!(b.state, BreakerState::HalfOpen);
+        b.record_success();
+        assert_eq!(b.state, BreakerState::Closed);
+        // Permanent failures trip from Closed in one shot.
+        let mut p = Breaker::new(3, 4);
+        assert!(p.record_failure(ErrorClass::Permanent));
+        assert_eq!(p.state, BreakerState::Open);
+    }
+
+    #[test]
+    fn passthrough_is_bit_identical_to_the_bare_backend() {
+        let (m, n, k) = (48, 40, 56);
+        let (a, b) = operands(m, n, k);
+        let mut exec = exec_with(BackendChoice::Cpu, ResilientOptions::default());
+        let report = exec.execute(&request(&a, &b, Gemm::new(m, n, k)));
+        let got = report.result.expect("cpu path cannot fail");
+        let bare = CpuBackend::new().gemm(&a, &b, m, n, k).unwrap();
+        assert_eq!(got, bare, "inline pass-through must be bit-identical");
+        assert_eq!(report.retries, 0);
+        assert_eq!(report.backend_used, Some("cpu"));
+        assert_eq!(report.kernel_profile, Some("generic"));
+        assert!(!report.timed_out);
+        assert_eq!(exec.counters(), ResilienceCounters::default());
+    }
+
+    #[test]
+    fn transient_exhaustion_reports_last_error_and_retry_count() {
+        let (m, n, k) = (8, 8, 8);
+        let (a, b) = operands(m, n, k);
+        let mut exec = exec_with(
+            BackendChoice::Cpu,
+            ResilientOptions {
+                retry_budget: 2,
+                faults: faults("err:p=1;seed:11"),
+                ..ResilientOptions::default()
+            },
+        );
+        let report = exec.execute(&request(&a, &b, Gemm::new(m, n, k)));
+        let err = report.result.unwrap_err();
+        assert!(err.contains("after 2 retries"), "{err}");
+        assert!(err.contains(TRANSIENT_MARKER), "{err}");
+        assert_eq!(report.retries, 2);
+        assert_eq!(report.backend_used, Some("cpu"));
+        let c = exec.counters();
+        assert_eq!(c.retries_total, 2);
+        assert_eq!(c.faults_injected, 3, "three attempts, all injected");
+    }
+
+    #[test]
+    fn permanent_failure_trips_breaker_and_fails_over_to_sim() {
+        let (m, n, k) = (16, 16, 16);
+        let (a, b) = operands(m, n, k);
+        // Auto chain without artifacts: [cpu, sim]; every cpu call
+        // fails permanently, so the first job must complete on sim.
+        let mut exec = exec_with(
+            BackendChoice::Auto,
+            ResilientOptions {
+                faults: faults("perm:p=1,backend=cpu;seed:12"),
+                ..ResilientOptions::default()
+            },
+        );
+        let report = exec.execute(&request(&a, &b, Gemm::new(m, n, k)));
+        let got = report.result.expect("sim tier must absorb the job");
+        assert!(max_abs_diff(&got, &matmul_ref(&a, &b, m, n, k)) < 1e-3);
+        assert_eq!(report.backend_used, Some("sim"));
+        assert_eq!(report.retries, 1, "one failover retry");
+        let c = exec.counters();
+        assert!(c.failovers_total >= 1, "breaker trip with a live lower tier");
+        assert_eq!(c.breaker_state, 1, "cpu breaker open");
+        // Subsequent jobs go straight to sim while cpu cools down.
+        let next = exec.execute(&request(&a, &b, Gemm::new(m, n, k)));
+        assert!(next.result.is_ok());
+        assert_eq!(next.backend_used, Some("sim"));
+        assert_eq!(next.retries, 0);
+    }
+
+    #[test]
+    fn deadline_times_out_a_hung_backend_quickly() {
+        let started = Instant::now();
+        let (m, n, k) = (8, 8, 8);
+        let (a, b) = operands(m, n, k);
+        let mut exec = exec_with(
+            BackendChoice::Cpu,
+            ResilientOptions {
+                retry_budget: 1,
+                faults: faults("hang:p=1,ms=600;seed:13"),
+                ..ResilientOptions::default()
+            },
+        );
+        let mut req = request(&a, &b, Gemm::new(m, n, k));
+        req.deadline_ms = Some(120);
+        let report = exec.execute(&req);
+        let err = report.result.unwrap_err();
+        assert!(err.contains(TIMEOUT_MARKER), "{err}");
+        assert!(report.timed_out);
+        assert_eq!(report.retries, 1);
+        assert!(exec.counters().timeouts_total >= 2, "both attempts expired");
+        assert!(
+            started.elapsed() < Duration::from_secs(2),
+            "deadline must bound the wait, took {:?}",
+            started.elapsed()
+        );
+    }
+
+    #[test]
+    fn supervised_mode_matches_inline_numerics_and_stamps() {
+        let (m, n, k) = (32, 24, 40);
+        let (a, b) = operands(m, n, k);
+        let g = Gemm::new(m, n, k);
+        let t = Tiling::new((2, 2, 2), (2, 2, 2));
+        let mut exec = exec_with(BackendChoice::Sim, ResilientOptions::default());
+        let mut req = request(&a, &b, g);
+        req.tiling = Some(t);
+        req.deadline_ms = Some(5_000);
+        let report = exec.execute(&req);
+        let got = report.result.expect("supervised sim path");
+        let bare = CpuBackend::new().gemm(&a, &b, m, n, k).unwrap();
+        assert_eq!(got, bare, "worker hop must not perturb numerics");
+        assert_eq!(report.backend_used, Some("sim"));
+        assert_eq!(report.kernel_profile, Some("generic"));
+        let expect_stamp = sim().evaluate(&g, &t, BufferPlacement::UramFirst).is_ok();
+        assert_eq!(report.measurement.is_some(), expect_stamp);
+        assert_eq!(exec.counters().timeouts_total, 0);
+    }
+
+    #[test]
+    fn same_spec_and_seed_replays_identical_outcomes() {
+        let spec = "err:p=0.4;slow:p=0.2,x=2;seed:21";
+        let run = || {
+            let (m, n, k) = (8, 8, 8);
+            let (a, b) = operands(m, n, k);
+            let mut exec = exec_with(
+                BackendChoice::Cpu,
+                ResilientOptions {
+                    faults: faults(spec),
+                    ..ResilientOptions::default()
+                },
+            );
+            (0..12)
+                .map(|_| {
+                    let r = exec.execute(&request(&a, &b, Gemm::new(m, n, k)));
+                    (r.result.is_ok(), r.retries)
+                })
+                .collect::<Vec<_>>()
+        };
+        let first = run();
+        let second = run();
+        assert_eq!(first, second, "schedule must replay bit-identically");
+        assert!(first.iter().any(|(_, retries)| *retries > 0), "p=0.4 must retry");
+    }
+
+    #[test]
+    fn dead_chain_reports_no_backend_with_reason() {
+        let cfg = Config::default();
+        let missing = Path::new("definitely/not/artifacts");
+        let mut exec = ResilientExec::new(
+            BackendChoice::Pjrt,
+            CpuProfileChoice::Generic,
+            Some(missing),
+            VersalSim::new(&cfg),
+            ResilientOptions::default(),
+        );
+        assert!(exec.backend_name().starts_with("none"), "{}", exec.backend_name());
+        let (m, n, k) = (4, 4, 4);
+        let (a, b) = operands(m, n, k);
+        let report = exec.execute(&request(&a, &b, Gemm::new(m, n, k)));
+        let err = report.result.unwrap_err();
+        assert!(err.contains("no execution backend"), "{err}");
+        assert_eq!(report.retries, 0, "dead tiers consume no retry budget");
+    }
+}

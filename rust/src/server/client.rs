@@ -11,32 +11,70 @@ use std::time::{Duration, Instant};
 
 use anyhow::Context;
 
+use crate::util::backoff;
+
 use super::protocol::{
     encode_frame, encode_submit, Frame, FrameReader, JobSpec, WireResult, WireStats,
 };
 use super::{Endpoint, NetStream};
 
+/// Default bound on any single blocking socket read/write. Generous
+/// enough for a full drain of a deep queue, small enough that a wedged
+/// daemon surfaces as a typed timeout instead of a hung CLI.
+pub const DEFAULT_IO_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// First connect-retry delay; doubles per attempt up to the cap.
+const CONNECT_RETRY_BASE: Duration = Duration::from_millis(25);
+const CONNECT_RETRY_CAP: Duration = Duration::from_millis(400);
+
 pub struct Client {
     stream: NetStream,
     reader: FrameReader,
+    /// Applied to every socket read; `None` blocks forever.
+    io_timeout: Option<Duration>,
 }
 
 impl Client {
     pub fn connect(ep: &Endpoint) -> anyhow::Result<Client> {
+        Client::connect_with(ep, Some(DEFAULT_IO_TIMEOUT))
+    }
+
+    /// Connect with an explicit per-operation I/O timeout (the
+    /// `--timeout` flag; `None` disables the bound).
+    pub fn connect_with(ep: &Endpoint, io_timeout: Option<Duration>) -> anyhow::Result<Client> {
         let stream = NetStream::connect(ep)
             .with_context(|| format!("connecting to daemon at {}", ep.label()))?;
+        stream
+            .set_read_timeout(io_timeout)
+            .context("setting socket read timeout")?;
+        stream
+            .set_write_timeout(io_timeout)
+            .context("setting socket write timeout")?;
         Ok(Client {
             stream,
             reader: FrameReader::new(),
+            io_timeout,
         })
     }
 
-    /// Connect, retrying until `timeout` — for `serve start` waiting on
-    /// a freshly spawned daemon to bind its socket.
+    /// Connect, retrying with capped exponential backoff until
+    /// `timeout` — for `serve start` waiting on a freshly spawned
+    /// daemon to bind its socket.
     pub fn connect_retry(ep: &Endpoint, timeout: Duration) -> anyhow::Result<Client> {
+        Client::connect_retry_with(ep, timeout, Some(DEFAULT_IO_TIMEOUT))
+    }
+
+    /// [`Self::connect_retry`] with an explicit per-operation I/O
+    /// timeout for the connected client.
+    pub fn connect_retry_with(
+        ep: &Endpoint,
+        timeout: Duration,
+        io_timeout: Option<Duration>,
+    ) -> anyhow::Result<Client> {
         let deadline = Instant::now() + timeout;
+        let mut delay = CONNECT_RETRY_BASE;
         loop {
-            match Client::connect(ep) {
+            match Client::connect_with(ep, io_timeout) {
                 Ok(c) => return Ok(c),
                 Err(e) => {
                     if Instant::now() >= deadline {
@@ -45,7 +83,8 @@ impl Client {
                             timeout.as_secs_f64()
                         )));
                     }
-                    std::thread::sleep(Duration::from_millis(50));
+                    backoff::pause(delay.min(deadline.saturating_duration_since(Instant::now())));
+                    delay = (delay * 2).min(CONNECT_RETRY_CAP);
                 }
             }
         }
@@ -63,7 +102,9 @@ impl Client {
         Ok(())
     }
 
-    /// Blocking read of the next frame; `None` on clean EOF.
+    /// Blocking read of the next frame; `None` on clean EOF. A read
+    /// that exceeds the I/O timeout fails with a typed timeout error
+    /// instead of hanging the CLI on a wedged daemon.
     pub fn recv_opt(&mut self) -> anyhow::Result<Option<Frame>> {
         let mut buf = [0u8; 16 << 10];
         loop {
@@ -82,6 +123,21 @@ impl Client {
                 }
                 Ok(n) => self.reader.push(&buf[..n]),
                 Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                // Unix sockets report an expired SO_RCVTIMEO as
+                // WouldBlock, TCP as TimedOut; both mean the same here.
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    let bound = self
+                        .io_timeout
+                        .map(|d| format!("{:.1}s", d.as_secs_f64()))
+                        .unwrap_or_else(|| "?".to_string());
+                    anyhow::bail!(
+                        "timed out waiting for the daemon (no frame within {bound}; \
+                         raise --timeout for long drains)"
+                    );
+                }
                 Err(e) => return Err(e.into()),
             }
         }

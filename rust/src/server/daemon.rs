@@ -41,6 +41,8 @@ use crate::config::Config;
 use crate::coordinator::{Admission, Coordinator, CoordinatorOptions};
 use crate::dse::DseEngine;
 
+use crate::util::backoff;
+
 use super::protocol::{encode_frame, Frame, FrameReader, JobSpec, WireResult, WireStats};
 use super::state::{self, StateFile};
 use super::{Endpoint, Listener, NetStream};
@@ -236,7 +238,7 @@ impl Daemon {
                 state::terminate(prev.pid);
                 let deadline = Instant::now() + Duration::from_secs(5);
                 while state::pid_alive(prev.pid) && Instant::now() < deadline {
-                    std::thread::sleep(Duration::from_millis(20));
+                    backoff::pause(Duration::from_millis(20));
                 }
                 anyhow::ensure!(
                     !state::pid_alive(prev.pid),
@@ -315,7 +317,7 @@ impl Daemon {
                 .retain(|c| !c.dead || !c.pending_submits.is_empty());
             self.maybe_stop();
             if self.state != DaemonState::Stopped {
-                std::thread::sleep(self.opts.tick);
+                backoff::pause(self.opts.tick);
             }
         }
 
@@ -678,6 +680,11 @@ impl Daemon {
             ("gate_rows_skipped", s.gate_rows_skipped as f64),
             ("gate_skip_rate", s.gate_skip_rate),
             ("dse_pool_threads", s.dse_pool_threads as f64),
+            ("retries_total", s.retries_total as f64),
+            ("timeouts_total", s.timeouts_total as f64),
+            ("failovers_total", s.failovers_total as f64),
+            ("faults_injected", s.faults_injected as f64),
+            ("breaker_state", s.breaker_state as f64),
             ("results_dropped", self.results_dropped as f64),
             ("connections", self.conns.iter().filter(|c| !c.dead).count() as f64),
         ];

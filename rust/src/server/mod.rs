@@ -118,6 +118,23 @@ impl NetStream {
             NetStream::Tcp(s) => s.set_nonblocking(nb),
         }
     }
+
+    /// Bound blocking reads; `None` restores blocking-forever. A read
+    /// that exceeds the bound fails with `WouldBlock`/`TimedOut`.
+    pub fn set_read_timeout(&self, d: Option<std::time::Duration>) -> std::io::Result<()> {
+        match self {
+            NetStream::Unix(s) => s.set_read_timeout(d),
+            NetStream::Tcp(s) => s.set_read_timeout(d),
+        }
+    }
+
+    /// Bound blocking writes, symmetric with [`Self::set_read_timeout`].
+    pub fn set_write_timeout(&self, d: Option<std::time::Duration>) -> std::io::Result<()> {
+        match self {
+            NetStream::Unix(s) => s.set_write_timeout(d),
+            NetStream::Tcp(s) => s.set_write_timeout(d),
+        }
+    }
 }
 
 impl Read for NetStream {

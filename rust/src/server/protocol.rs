@@ -40,9 +40,10 @@ use crate::workloads::Gemm;
 
 /// Current wire-protocol revision (the version byte of every frame).
 /// v2 added the `backend` descriptor string to STATS/DRAINED payloads;
-/// the bump makes a v1 peer fail with `BadVersion` instead of
-/// misparsing the reshaped payload.
-pub const PROTOCOL_VERSION: u8 = 2;
+/// v3 extends RESULT with the resilience triple (`retries`,
+/// `timed_out`, `backend_used`). Each bump makes an older peer fail
+/// with `BadVersion` instead of misparsing the reshaped payload.
+pub const PROTOCOL_VERSION: u8 = 3;
 
 /// Hard ceiling on one frame's payload (256 MiB) — large enough for a
 /// 2048x2048 FP32 operand pair with headroom, small enough that a
@@ -149,6 +150,7 @@ impl JobSpec {
             a: self.a,
             b: self.b,
             validate: self.validate,
+            deadline_ms: None,
         }
     }
 }
@@ -174,6 +176,12 @@ pub struct WireResult {
     pub tiling: Option<String>,
     pub n_aie: u32,
     pub error: Option<String>,
+    /// Attempts beyond the first the resilient executor spent (v3).
+    pub retries: u32,
+    /// Whether any attempt hit its per-job deadline (v3).
+    pub timed_out: bool,
+    /// Execution tier that produced the final outcome (v3).
+    pub backend_used: Option<String>,
 }
 
 impl WireResult {
@@ -199,6 +207,9 @@ impl WireResult {
             tiling: r.plan.map(|p| p.tiling.label()),
             n_aie: r.plan.map(|p| p.tiling.n_aie() as u32).unwrap_or(0),
             error: r.error.clone(),
+            retries: r.retries,
+            timed_out: r.timed_out,
+            backend_used: r.backend_used.map(str::to_string),
         }
     }
 
@@ -221,6 +232,9 @@ impl WireResult {
             tiling: None,
             n_aie: 0,
             error: Some(why.to_string()),
+            retries: 0,
+            timed_out: false,
+            backend_used: None,
         }
     }
 }
@@ -408,6 +422,9 @@ fn result_payload(r: &WireResult) -> Vec<u8> {
     if r.coalesced {
         flags |= 2;
     }
+    if r.timed_out {
+        flags |= 4;
+    }
     put_u8(&mut p, flags);
     put_u64(&mut p, r.plan_time_us);
     put_opt_u64(&mut p, r.exec_time_us);
@@ -418,6 +435,8 @@ fn result_payload(r: &WireResult) -> Vec<u8> {
     put_opt_string(&mut p, r.tiling.as_deref());
     put_u32(&mut p, r.n_aie);
     put_opt_string(&mut p, r.error.as_deref());
+    put_u32(&mut p, r.retries);
+    put_opt_string(&mut p, r.backend_used.as_deref());
     p
 }
 
@@ -632,7 +651,7 @@ fn decode_result(payload: &[u8]) -> Result<WireResult, ProtocolError> {
     let n = s.u64()?;
     let k = s.u64()?;
     let flags = s.u8()?;
-    if flags & !0b11 != 0 {
+    if flags & !0b111 != 0 {
         return Err(ProtocolError::BadPayload {
             what: "unknown result flag bits",
         });
@@ -646,6 +665,8 @@ fn decode_result(payload: &[u8]) -> Result<WireResult, ProtocolError> {
     let tiling = s.opt_string()?;
     let n_aie = s.u32()?;
     let error = s.opt_string()?;
+    let retries = s.u32()?;
+    let backend_used = s.opt_string()?;
     s.finish()?;
     Ok(WireResult {
         id,
@@ -663,6 +684,9 @@ fn decode_result(payload: &[u8]) -> Result<WireResult, ProtocolError> {
         tiling,
         n_aie,
         error,
+        retries,
+        timed_out: flags & 4 != 0,
+        backend_used,
     })
 }
 
@@ -813,6 +837,9 @@ mod tests {
             tiling: Some("P=4x4x2 B=2x2x1".to_string()),
             n_aie: 32,
             error: None,
+            retries: 2,
+            timed_out: true,
+            backend_used: Some("cpu".to_string()),
         }
     }
 

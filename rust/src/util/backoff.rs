@@ -1,0 +1,129 @@
+//! Sanctioned sleep and backoff primitives for the serving stack.
+//!
+//! The `bounded-sleep` lint rule (DESIGN.md §5) bans literal `sleep`
+//! calls in `server/`, `coordinator/`, and `runtime/` non-test code:
+//! an ad-hoc sleep on a serve-critical path is how drains wedge,
+//! deadlines silently stretch, and retry storms synchronize. Every
+//! wait in those trees routes through this module instead — `util/` is
+//! outside the rule's scope by design, so the policy (slicing,
+//! cancellation, jitter) lives in exactly one place:
+//!
+//! * [`pause`] — a plain bounded sleep, for tick loops and injected
+//!   fault latency;
+//! * [`cancellable_sleep`] — a sliced sleep that returns early when
+//!   the cancellation flag flips, so a retry backoff never outlives a
+//!   shutdown request;
+//! * [`decorrelated_jitter`] — the backoff schedule used by the
+//!   resilient executor and the daemon client's connect loop.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Duration;
+
+use crate::util::rng::Rng;
+
+/// Slice width for [`cancellable_sleep`]: long waits are chopped into
+/// slices this wide, so cancellation is observed within ~one slice.
+const SLICE: Duration = Duration::from_millis(10);
+
+/// A plain bounded sleep. The single sanctioned wrapper around
+/// `std::thread::sleep` for serve-path code.
+pub fn pause(d: Duration) {
+    if !d.is_zero() {
+        std::thread::sleep(d);
+    }
+}
+
+/// Sleep for `d`, waking early if `cancel` flips true. Returns `true`
+/// when the full duration elapsed, `false` when cancelled.
+pub fn cancellable_sleep(d: Duration, cancel: &AtomicBool) -> bool {
+    let mut left = d;
+    while !left.is_zero() {
+        if cancel.load(Ordering::SeqCst) {
+            return false;
+        }
+        let step = left.min(SLICE);
+        std::thread::sleep(step);
+        left = left.saturating_sub(step);
+    }
+    !cancel.load(Ordering::SeqCst)
+}
+
+/// Decorrelated-jitter exponential backoff:
+/// `next = min(cap, uniform(base, prev * 3))`. Successive delays
+/// random-walk upward toward `cap` while staying desynchronized across
+/// callers — under correlated failures (a tier flapping, a daemon
+/// restarting) retriers do not stampede in lockstep the way plain
+/// doubling does.
+pub fn decorrelated_jitter(rng: &mut Rng, prev: Duration, base: Duration, cap: Duration) -> Duration {
+    let lo = base.as_secs_f64();
+    let hi = (prev.max(base).as_secs_f64() * 3.0).max(lo);
+    let next = rng.range_f64(lo, hi).min(cap.as_secs_f64());
+    Duration::from_secs_f64(next)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicBool;
+    use std::sync::Arc;
+    use std::time::Instant;
+
+    #[test]
+    fn jitter_stays_within_base_and_cap() {
+        let mut rng = Rng::new(7);
+        let base = Duration::from_millis(10);
+        let cap = Duration::from_millis(250);
+        let mut prev = base;
+        for _ in 0..200 {
+            prev = decorrelated_jitter(&mut rng, prev, base, cap);
+            assert!(prev >= base, "delay {prev:?} under base");
+            assert!(prev <= cap, "delay {prev:?} over cap");
+        }
+    }
+
+    #[test]
+    fn jitter_is_deterministic_per_seed() {
+        let run = |seed| {
+            let mut rng = Rng::new(seed);
+            let mut prev = Duration::from_millis(10);
+            (0..50)
+                .map(|_| {
+                    prev = decorrelated_jitter(
+                        &mut rng,
+                        prev,
+                        Duration::from_millis(10),
+                        Duration::from_millis(250),
+                    );
+                    prev
+                })
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(3), run(3));
+        assert_ne!(run(3), run(4));
+    }
+
+    #[test]
+    fn cancellable_sleep_completes_when_uncancelled() {
+        let cancel = AtomicBool::new(false);
+        assert!(cancellable_sleep(Duration::from_millis(25), &cancel));
+    }
+
+    #[test]
+    fn cancellable_sleep_aborts_quickly_on_cancel() {
+        let cancel = Arc::new(AtomicBool::new(false));
+        let flag = Arc::clone(&cancel);
+        let t = std::thread::spawn(move || {
+            pause(Duration::from_millis(30));
+            flag.store(true, Ordering::SeqCst);
+        });
+        let started = Instant::now();
+        let completed = cancellable_sleep(Duration::from_secs(30), &cancel);
+        t.join().unwrap();
+        assert!(!completed);
+        assert!(
+            started.elapsed() < Duration::from_secs(2),
+            "cancellation took {:?}",
+            started.elapsed()
+        );
+    }
+}

@@ -4,6 +4,7 @@
 //! All hand-rolled: the offline crate set has no serde facade, clap,
 //! rand, or proptest (see DESIGN.md §7 on vendored dependencies).
 
+pub mod backoff;
 pub mod bench;
 pub mod cli;
 pub mod csv;

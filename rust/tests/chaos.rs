@@ -1,0 +1,342 @@
+//! Chaos suite (ISSUE 9): seeded fault schedules through the resilient
+//! executor. The fault injector is deterministic, so these are real
+//! tests of the coordinator's guarantees under failure — exactly-once
+//! completion, honest accounting, deadline kills, breaker failover —
+//! not flaky approximations of them.
+
+use std::sync::OnceLock;
+use std::time::{Duration, Instant};
+
+use versal_gemm::config::Config;
+use versal_gemm::coordinator::{
+    BackendChoice, Coordinator, CoordinatorOptions, CpuProfileChoice, FaultPlan, GemmJob,
+};
+use versal_gemm::dataset::Dataset;
+use versal_gemm::dse::{DseEngine, Objective};
+use versal_gemm::features::FeatureSet;
+use versal_gemm::models::Predictors;
+use versal_gemm::server::client::Client;
+use versal_gemm::server::daemon::{Daemon, DaemonOptions, DaemonSummary};
+use versal_gemm::server::protocol::JobSpec;
+use versal_gemm::server::Endpoint;
+use versal_gemm::util::forall;
+use versal_gemm::util::rng::Rng;
+use versal_gemm::workloads::{training_workloads, Gemm};
+
+/// One shared reduced dataset + model for every test (the offline phase
+/// is the expensive part; chaos happens at execution time).
+fn lab() -> &'static (Config, DseEngine) {
+    static LAB: OnceLock<(Config, DseEngine)> = OnceLock::new();
+    LAB.get_or_init(|| {
+        let mut cfg = Config::default();
+        cfg.dataset.top_k = 8;
+        cfg.dataset.bottom_k = 6;
+        cfg.dataset.random_k = 20;
+        cfg.train.n_trees = 40;
+        cfg.train.learning_rate = 0.25;
+        let wl: Vec<_> = training_workloads().into_iter().take(3).collect();
+        let ds = Dataset::generate(&cfg, &wl);
+        let engine =
+            DseEngine::new(Predictors::train(&ds, &cfg, FeatureSet::SetIAndII), &cfg.board);
+        (cfg, engine)
+    })
+}
+
+/// A data job with deterministic operands over a small shape alphabet
+/// (execution is where faults land, so every job carries operands).
+fn data_job(rng: &mut Rng, id: u64, g: Gemm) -> GemmJob {
+    let a: Vec<f32> = (0..g.m * g.k).map(|_| rng.normal() as f32).collect();
+    let b: Vec<f32> = (0..g.k * g.n).map(|_| rng.normal() as f32).collect();
+    GemmJob::with_data(id, g, Objective::Throughput, a, b)
+}
+
+fn data_jobs(rng: &mut Rng, n: usize) -> Vec<GemmJob> {
+    let shapes = [Gemm::new(64, 64, 64), Gemm::new(128, 128, 64)];
+    (0..n as u64)
+        .map(|i| data_job(rng, i, shapes[rng.below(shapes.len())]))
+        .collect()
+}
+
+fn chaos_opts(spec: &str, retry_budget: u32) -> CoordinatorOptions {
+    CoordinatorOptions {
+        backend: BackendChoice::Auto, // no artifacts: the cpu -> sim chain
+        cpu_profile: CpuProfileChoice::Generic,
+        retry_budget,
+        faults: Some(FaultPlan::parse(spec).expect("valid fault spec")),
+        ..CoordinatorOptions::default()
+    }
+}
+
+#[test]
+fn property_fault_schedules_preserve_exactly_once_accounting() {
+    let (cfg, eng) = lab();
+    forall(
+        0xFA57,
+        4,
+        |r| {
+            let n = r.range_usize(4, 10);
+            let seed = r.below(1000) as u64;
+            (data_jobs(r, n), format!("err:p=0.3;slow:p=0.1,x=2;seed:{seed}"))
+        },
+        |(jobs, spec)| {
+            let n = jobs.len();
+            let mut coord =
+                Coordinator::start_with(cfg, eng.clone(), None, 2, chaos_opts(spec, 4));
+            let results = coord.run_batch(jobs.clone());
+            let stats = coord.stats();
+            coord.shutdown();
+
+            // Exactly one result per submitted id, in id order.
+            assert_eq!(results.len(), n, "lost or duplicated jobs");
+            let ids: Vec<u64> = results.iter().map(|r| r.id).collect();
+            assert_eq!(ids, (0..n as u64).collect::<Vec<u64>>());
+
+            // completed + failed partitions the submitted set.
+            assert_eq!(
+                stats.jobs_completed + stats.jobs_failed,
+                n as u64,
+                "accounting leak under faults: {stats:?}"
+            );
+
+            // Energy iff success: a failed execution must not book an
+            // energy draw, a successful one always does (data jobs).
+            for r in &results {
+                let ok = r.error.is_none();
+                assert_eq!(r.energy_j.is_some(), ok, "job {}: energy/success disagree", r.id);
+                assert_eq!(r.exec_time.is_some(), ok);
+                assert!(r.backend_used.is_some(), "job {} hides its executor", r.id);
+            }
+        },
+    );
+}
+
+#[test]
+fn same_spec_and_seed_replays_an_identical_outcome_sequence() {
+    let (cfg, eng) = lab();
+    // Single planner + single executor: the backend-call order is the
+    // job order, so the injected schedule — and therefore every retry
+    // count, error string, and failover — must replay bit-identically.
+    let run = || {
+        let mut rng = Rng::new(0xD1CE);
+        let jobs = data_jobs(&mut rng, 8);
+        let mut coord = Coordinator::start_with(
+            cfg,
+            eng.clone(),
+            None,
+            1,
+            chaos_opts("err:p=0.4;seed:11", 2),
+        );
+        let results = coord.run_batch(jobs);
+        let stats = coord.stats();
+        coord.shutdown();
+        let outcomes: Vec<(u64, Option<String>, u32, Option<&'static str>, bool)> = results
+            .into_iter()
+            .map(|r| (r.id, r.error, r.retries, r.backend_used, r.timed_out))
+            .collect();
+        (outcomes, stats.retries_total, stats.faults_injected, stats.failovers_total)
+    };
+    let first = run();
+    let second = run();
+    assert_eq!(first, second, "same spec+seed diverged across runs");
+    assert!(first.2 > 0, "p=0.4 over 8 jobs must inject at least once");
+}
+
+#[test]
+fn hang_faults_are_killed_by_the_deadline() {
+    let (cfg, eng) = lab();
+    let mut opts = chaos_opts("hang:p=1,ms=1500;seed:1", 1);
+    opts.job_deadline_ms = Some(150);
+    let mut coord = Coordinator::start_with(cfg, eng.clone(), None, 1, opts);
+    // Warm the plan first: plan-only jobs never touch the backend, so
+    // the timed window below measures the deadline machinery alone, not
+    // a cold DSE exploration.
+    let g = Gemm::new(64, 64, 64);
+    let warm = coord.run_batch(vec![GemmJob::plan_only(100, g, Objective::Throughput)]);
+    assert!(warm[0].error.is_none(), "warm plan failed: {:?}", warm[0].error);
+    let started = Instant::now();
+    let mut rng = Rng::new(3);
+    let results = coord.run_batch(vec![data_job(&mut rng, 0, g)]);
+    let stats = coord.stats();
+    coord.shutdown();
+
+    // Every attempt hangs 1500ms against a 150ms deadline: the watchdog
+    // kills both attempts and the job fails fast — well inside the
+    // injected hang duration, and with no sleep of our own.
+    assert!(
+        started.elapsed() < Duration::from_secs(2),
+        "deadline did not bound the hang: {:?}",
+        started.elapsed()
+    );
+    let r = &results[0];
+    assert!(r.timed_out, "timeout not recorded");
+    let err = r.error.as_deref().expect("hung job must fail");
+    assert!(err.contains("deadline exceeded"), "untyped timeout: {err}");
+    assert!(err.contains("after 1 retries"), "retry count missing: {err}");
+    assert_eq!(r.retries, 1);
+    assert!(r.energy_j.is_none(), "timed-out job booked energy");
+    assert_eq!(stats.timeouts_total, 2, "both attempts expired");
+    assert_eq!(stats.jobs_failed, 1);
+}
+
+#[test]
+fn permanent_cpu_fault_trips_the_breaker_and_fails_over_to_sim() {
+    let (cfg, eng) = lab();
+    // Every cpu call fails permanently; sim is untouched. The first job
+    // trips the cpu breaker and fails over inside its own retry loop;
+    // the rest of the burst routes straight to the demoted tier.
+    let mut coord = Coordinator::start_with(
+        cfg,
+        eng.clone(),
+        None,
+        2,
+        chaos_opts("perm:p=1,backend=cpu;seed:2", 3),
+    );
+    let mut rng = Rng::new(9);
+    let results = coord.run_batch(data_jobs(&mut rng, 6));
+    let stats = coord.stats();
+    coord.shutdown();
+
+    for r in &results {
+        assert!(r.error.is_none(), "job {} failed: {:?}", r.id, r.error);
+        // backend_used is the honest executor, not the tier we started on.
+        assert_eq!(r.backend_used, Some("sim"), "job {}", r.id);
+        assert!(r.energy_j.is_some());
+    }
+    assert_eq!(stats.jobs_completed, 6);
+    assert_eq!(stats.jobs_failed, 0);
+    assert!(stats.failovers_total >= 1, "breaker trip never failed over: {stats:?}");
+    assert!(stats.faults_injected >= 1);
+    assert!(stats.breaker_state >= 1, "cpu breaker should not be Closed");
+}
+
+#[test]
+fn no_faults_is_passthrough_with_zero_resilience_counters() {
+    let (cfg, eng) = lab();
+    let opts = CoordinatorOptions {
+        backend: BackendChoice::Cpu,
+        cpu_profile: CpuProfileChoice::Generic,
+        ..CoordinatorOptions::default()
+    };
+    let mut coord = Coordinator::start_with(cfg, eng.clone(), None, 2, opts);
+    let mut rng = Rng::new(17);
+    let results = coord.run_batch(data_jobs(&mut rng, 5));
+    let stats = coord.stats();
+    coord.shutdown();
+
+    for r in &results {
+        assert!(r.error.is_none(), "job {} failed: {:?}", r.id, r.error);
+        assert_eq!(r.retries, 0);
+        assert!(!r.timed_out);
+        assert_eq!(r.backend_used, Some("cpu"));
+    }
+    assert_eq!(stats.jobs_completed, 5);
+    assert_eq!(stats.retries_total, 0);
+    assert_eq!(stats.timeouts_total, 0);
+    assert_eq!(stats.failovers_total, 0);
+    assert_eq!(stats.faults_injected, 0);
+    assert_eq!(stats.breaker_state, 0);
+}
+
+// ---------------------------------------------------------------------------
+// Daemon under chaos
+// ---------------------------------------------------------------------------
+
+fn test_dir(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("versal-gemm-chaos-{}-{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn spawn_daemon(opts: DaemonOptions) -> std::thread::JoinHandle<anyhow::Result<DaemonSummary>> {
+    let (cfg, engine) = lab();
+    let daemon = Daemon::start(cfg, engine.clone(), opts).expect("daemon start");
+    std::thread::spawn(move || daemon.run())
+}
+
+/// Small data-job specs for the socket path (operands inline).
+fn data_specs(n: usize) -> Vec<JobSpec> {
+    let mut rng = Rng::new(0x5EA);
+    (0..n as u64)
+        .map(|id| {
+            let g = Gemm::new(64, 64, 64);
+            let a: Vec<f32> = (0..g.m * g.k).map(|_| rng.normal() as f32).collect();
+            let b: Vec<f32> = (0..g.k * g.n).map(|_| rng.normal() as f32).collect();
+            JobSpec {
+                id,
+                m: g.m,
+                n: g.n,
+                k: g.k,
+                objective: Objective::Throughput,
+                validate: false,
+                a: Some(a),
+                b: Some(b),
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn daemon_survives_a_fault_burst_then_drains_and_persists() {
+    let dir = test_dir("burst");
+    let mut opts = DaemonOptions::new(Endpoint::Unix(dir.join("daemon.sock")), dir.clone());
+    opts.coordinator = CoordinatorOptions {
+        cache_path: Some(dir.join("plan-cache.json")),
+        backend: BackendChoice::Auto,
+        cpu_profile: CpuProfileChoice::Generic,
+        retry_budget: 5,
+        job_deadline_ms: Some(10_000),
+        faults: Some(FaultPlan::parse("err:p=0.5;slow:p=0.2,x=2;seed:13").expect("spec")),
+        ..CoordinatorOptions::default()
+    };
+    opts.n_planners = 2;
+    let handle = spawn_daemon(opts);
+    let mut client = Client::connect_retry(
+        &Endpoint::Unix(dir.join("daemon.sock")),
+        Duration::from_secs(30),
+    )
+    .expect("connect");
+
+    // A 12-job burst under a 50% transient fault rate: every job gets
+    // exactly one RESULT frame, and the wire carries the resilience
+    // triple for each (honest executor even on failure).
+    let n = 12usize;
+    let wire = client.submit_burst(&data_specs(n)).expect("burst under faults");
+    assert_eq!(wire.len(), n);
+    let ids: Vec<u64> = wire.iter().map(|r| r.id).collect();
+    assert_eq!(ids, (0..n as u64).collect::<Vec<u64>>());
+    let (ok, failed): (Vec<_>, Vec<_>) = wire.iter().partition(|r| r.ok());
+    assert_eq!(ok.len() + failed.len(), n);
+    for r in &wire {
+        assert!(r.backend_used.is_some(), "job {} hides its executor", r.id);
+        if !r.ok() {
+            let err = r.error.as_deref().unwrap_or("");
+            assert!(err.contains("retries"), "failure lost its retry count: {err}");
+        }
+    }
+
+    // The injector fired and the counters reached the wire.
+    let stats = client.stats().expect("stats");
+    assert!(stats.get("faults_injected").unwrap_or(0.0) > 0.0, "no faults injected");
+    assert!(stats.get("retries_total").is_some());
+    assert!(stats.get("timeouts_total").is_some());
+    assert!(stats.get("failovers_total").is_some());
+    assert!(stats.get("breaker_state").is_some());
+    assert_eq!(
+        stats.get("jobs_completed").unwrap_or(-1.0) + stats.get("jobs_failed").unwrap_or(-1.0),
+        n as f64,
+        "accounting leak under faults"
+    );
+
+    // Drain still closes admission and persists the plan cache.
+    let drained = client.drain().expect("drain");
+    assert_eq!(drained.state, "draining");
+    assert_eq!(drained.get("jobs_pending"), Some(0.0));
+    assert!(dir.join("plan-cache.json").exists(), "drain did not persist the cache");
+
+    client.shutdown().expect("shutdown");
+    let summary = handle.join().unwrap().expect("daemon run");
+    assert_eq!(summary.jobs_submitted, n as u64);
+    assert_eq!(summary.jobs_completed + summary.jobs_failed, n as u64);
+    let _ = std::fs::remove_dir_all(&dir);
+}
