@@ -1,117 +1,163 @@
-//! END-TO-END driver (DESIGN.md §8): serve the GEMM working set of a
-//! real small-transformer inference trace through the full stack.
+//! END-TO-END driver (DESIGN.md §8, §11): serve a small transformer's
+//! forward passes as whole-model **graph jobs** through the full stack
+//! — socket daemon, wire protocol v4, coordinator DAG planner, and the
+//! executor's residency arena.
 //!
-//! All three layers compose here:
-//! * L1/L2 — the AOT-compiled Pallas tiled-GEMM artifacts (`make
-//!   artifacts`) execute every job's actual numerics via PJRT (the
-//!   coordinator's `auto` backend falls back to the blocked CPU GEMM
-//!   when no artifacts exist, so the driver runs in every checkout);
-//! * L3 — the coordinator plans each job with the ML-driven DSE (cached
-//!   per shape/objective), batches execution, validates results against
-//!   the Rust reference, and accounts per-job executed energy plus
-//!   simulated-VCK190 energy for the selected mappings.
+//! Each forward pass is ONE job: a DAG of the block's GEMMs chained
+//! across layers (`GemmGraph::transformer`). The daemon plans the DAG
+//! with one DSE per distinct shape (identical layers share plans),
+//! executes it in topo order with intermediates resident in the
+//! executor-owned arena — activations never round-trip through this
+//! client — and streams back graph-level rollups: energy, average
+//! power, GFLOPS/W, and critical-path vs summed latency.
 //!
 //! The trace is Qwen2.5-0.5B-shaped (hidden 896, FFN 4864): one prefill
-//! pass (batched sequence) and a run of decode steps — exactly the
-//! workloads the paper's G1/G4/G9 come from. Results are recorded in
-//! EXPERIMENTS.md.
+//! pass (batched sequence, throughput objective) and a run of decode
+//! steps (energy objective — the paper's edge scenario). Results are
+//! recorded in EXPERIMENTS.md.
 //!
 //! Run with: `make artifacts && cargo run --release --example serve_llm`
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use versal_gemm::config::Config;
-use versal_gemm::coordinator::{Coordinator, GemmJob};
+use versal_gemm::coordinator::GraphInput;
 use versal_gemm::dse::Objective;
 use versal_gemm::report::Lab;
+use versal_gemm::server::client::Client;
+use versal_gemm::server::daemon::{Daemon, DaemonOptions};
+use versal_gemm::server::protocol::{GraphSpec, WireGraphResult};
+use versal_gemm::server::Endpoint;
 use versal_gemm::util::rng::Rng;
-use versal_gemm::workloads::Gemm;
+use versal_gemm::workloads::graph::GemmGraph;
+use versal_gemm::workloads::models::qwen25_05b;
 
-/// The per-layer GEMMs of a Qwen2.5-0.5B-like transformer block.
-fn block_gemms(seq: usize) -> Vec<(&'static str, Gemm)> {
-    let hidden = 896;
-    let ffn = 4864;
-    vec![
-        ("qkv_proj", Gemm::new(seq, 3 * hidden / 2, hidden)), // fused qkv (GQA)
-        ("attn_out", Gemm::new(seq, hidden, hidden)),
-        ("ffn_gate_up", Gemm::new(seq, 2 * ffn / 2, hidden)),
-        ("ffn_down", Gemm::new(seq, hidden, ffn / 2)),
-    ]
+/// Transformer layers per forward pass. Two is enough to prove the
+/// plan-sharing claim (layer 1's shapes repeat layer 0's exactly) while
+/// keeping the CPU-backend matmuls affordable.
+const N_LAYERS: usize = 2;
+const DECODE_STEPS: usize = 8;
+
+/// Build one forward pass as a wire graph spec: the layered DAG plus a
+/// deterministic external buffer for every client-fed operand slot.
+fn forward_pass(id: u64, seq: usize, objective: Objective, rng: &mut Rng) -> GraphSpec {
+    let graph = GemmGraph::transformer(&qwen25_05b(), seq, N_LAYERS);
+    let mut inputs = Vec::new();
+    for (idx, slot) in graph.external_slots() {
+        let data: Vec<f32> = (0..graph.slot_elems(idx, slot))
+            .map(|_| rng.normal() as f32 * 0.1)
+            .collect();
+        inputs.push(GraphInput::new(&graph.nodes[idx].name, slot, data));
+    }
+    let mut spec = GraphSpec::from_graph(id, &graph, objective, inputs);
+    spec.validate = true;
+    spec
+}
+
+fn print_pass(name: &str, r: &WireGraphResult, wall: Duration) {
+    println!(
+        "{:<10} {:>5} nodes {:>9.1} {:>10} {:>9.2} {:>9.2} {:>9.3} {:>9.2} {:>10}",
+        name,
+        r.n_nodes,
+        r.plan_time_us as f64 / 1e3,
+        format!(
+            "{}{}",
+            r.plans_shared,
+            if r.graph_cache_hit { "+dag" } else { "" }
+        ),
+        r.exec_sum_us.unwrap_or(0) as f64 / 1e3,
+        r.exec_critical_us.unwrap_or(0) as f64 / 1e3,
+        r.energy_j.unwrap_or(0.0),
+        r.gflops_per_w.unwrap_or(0.0),
+        format!("{:.2}s", wall.as_secs_f64()),
+    );
 }
 
 fn main() -> anyhow::Result<()> {
     let cfg = Config::default();
     let lab = Lab::prepare(cfg.clone(), "data".into())?;
-    let mut coord = Coordinator::start(&cfg, lab.engine(), Some("artifacts".into()), 2);
+
+    // Boot the real daemon on a Unix socket and talk to it exactly the
+    // way an external client would — no in-process shortcuts.
+    let state_dir = std::env::temp_dir().join(format!("serve-llm-{}", std::process::id()));
+    std::fs::create_dir_all(&state_dir)?;
+    let endpoint = Endpoint::Unix(state_dir.join("daemon.sock"));
+    let mut opts = DaemonOptions::new(endpoint.clone(), state_dir.clone());
+    opts.artifacts = Some("artifacts".into());
+    let daemon = Daemon::start(&cfg, lab.engine(), opts)?;
+    let handle = std::thread::spawn(move || daemon.run());
+    let mut client = Client::connect_retry(&endpoint, Duration::from_secs(30))?;
+
+    println!(
+        "== serve_llm: {} forward passes as graph jobs (Qwen2.5-0.5B-shaped, {} layers) ==",
+        1 + DECODE_STEPS,
+        N_LAYERS
+    );
+    println!(
+        "{:<10} {:>11} {:>9} {:>10} {:>9} {:>9} {:>9} {:>9} {:>10}",
+        "pass", "", "plan ms", "shared", "sum ms", "crit ms", "J", "GFLOPS/W", "wall"
+    );
 
     let mut rng = Rng::new(0x57EE1);
-    let mut jobs = Vec::new();
-    let mut id = 0u64;
-    let mut push = |name: &str, g: Gemm, objective: Objective, jobs: &mut Vec<(String, GemmJob)>, rng: &mut Rng| {
-        let a: Vec<f32> = (0..g.m * g.k).map(|_| rng.normal() as f32 * 0.1).collect();
-        let b: Vec<f32> = (0..g.k * g.n).map(|_| rng.normal() as f32 * 0.1).collect();
-        let mut job = GemmJob::with_data(id, g, objective, a, b);
-        job.validate = true;
-        jobs.push((name.to_string(), job));
-        id += 1;
-    };
+    let mut energy_total = 0.0;
+    let mut prefill_energy = 0.0;
 
-    // Prefill (seq = 64, throughput objective) + 8 decode steps
-    // (seq = 32 batch of token positions, energy objective: the paper's
-    // edge scenario).
-    for (name, g) in block_gemms(64) {
-        push(&format!("prefill/{name}"), g, Objective::Throughput, &mut jobs, &mut rng);
-    }
-    for step in 0..8 {
-        for (name, g) in block_gemms(32) {
-            push(
-                &format!("decode{step}/{name}"),
-                g,
-                Objective::EnergyEfficiency,
-                &mut jobs,
-                &mut rng,
+    // Prefill: seq = 64, throughput objective.
+    let started = Instant::now();
+    client.submit_graph(&forward_pass(0, 64, Objective::Throughput, &mut rng))?;
+    let r = client.next_graph_result()?;
+    anyhow::ensure!(r.ok(), "prefill failed: {:?}", r.error);
+    anyhow::ensure!(r.plans_shared > 0, "identical layers did not share a plan");
+    print_pass("prefill", &r, started.elapsed());
+    energy_total += r.energy_j.unwrap_or(0.0);
+    prefill_energy += r.energy_j.unwrap_or(0.0);
+
+    // Decode: seq = 32 batch of token positions, energy objective.
+    for step in 0..DECODE_STEPS {
+        let started = Instant::now();
+        let id = 1 + step as u64;
+        client.submit_graph(&forward_pass(id, 32, Objective::EnergyEfficiency, &mut rng))?;
+        let r = client.next_graph_result()?;
+        anyhow::ensure!(r.ok(), "decode{step} failed: {:?}", r.error);
+        if step > 0 {
+            anyhow::ensure!(
+                r.graph_cache_hit,
+                "repeat decode DAG missed the graph-level plan cache"
             );
         }
+        print_pass(&format!("decode{step}"), &r, started.elapsed());
+        energy_total += r.energy_j.unwrap_or(0.0);
     }
 
-    println!("== serve_llm: {} GEMM jobs (Qwen2.5-0.5B-shaped) ==", jobs.len());
-    let names: Vec<String> = jobs.iter().map(|(n, _)| n.clone()).collect();
-    let started = Instant::now();
-    let results = coord.run_batch(jobs.into_iter().map(|(_, j)| j).collect());
-    let wall = started.elapsed();
-
-    let mut total_flops = 0.0;
-    let mut validated = 0usize;
-    println!(
-        "{:<22} {:>16} {:>10} {:>10} {:>12} {:>10}",
-        "job", "gemm", "plan ms", "exec ms", "GFLOP/s", "max err"
-    );
-    for r in &results {
-        anyhow::ensure!(r.error.is_none(), "job {} failed: {:?}", names[r.id as usize], r.error);
-        let exec = r.exec_time.expect("executed");
-        let err = r.validation_err.expect("validated");
-        anyhow::ensure!(err < 1e-2, "numerics drift on {}: {err}", names[r.id as usize]);
-        validated += 1;
-        total_flops += r.gemm.flops();
-        println!(
-            "{:<22} {:>16} {:>10.2} {:>10.2} {:>12.2} {:>10.2e}",
-            names[r.id as usize],
-            r.gemm.label(),
-            r.plan_time.as_secs_f64() * 1e3,
-            exec.as_secs_f64() * 1e3,
-            r.executed_gflops().unwrap(),
-            err
-        );
-    }
-
-    let stats = coord.stats();
+    let stats = client.stats()?;
     println!("\n== summary ==");
-    println!("jobs served:            {} ({} validated against reference)", results.len(), validated);
-    println!("wall clock:             {:.2} s", wall.as_secs_f64());
-    println!("aggregate exec rate:    {:.2} GFLOP/s (PJRT CPU, interpret-mode Pallas)", total_flops / stats.exec_time_s / 1e9);
-    println!("DSE cache:              {} hits / {} misses", stats.cache_hits, stats.cache_misses);
-    println!("simulated VCK190 cost:  {:.3} J across selected mappings", stats.simulated_energy_j);
-    let per_tok = stats.simulated_energy_j / 8.0;
-    println!("  -> {:.3} J per decode step (energy-optimal mappings)", per_tok);
+    println!(
+        "graph jobs served:      {:.0} ({:.0} nodes executed; backend {})",
+        stats.get("graph_jobs").unwrap_or(0.0),
+        stats.get("graph_nodes_executed").unwrap_or(0.0),
+        stats.backend
+    );
+    println!(
+        "plan sharing:           {:.0} node plans shared across identical layers, \
+         {:.0} DSE runs total",
+        stats.get("plans_shared").unwrap_or(0.0),
+        stats.get("cache_misses").unwrap_or(0.0)
+    );
+    println!(
+        "peak resident:          {:.1} KiB of intermediates held daemon-side \
+         (zero client round-trips)",
+        stats.get("resident_bytes_peak").unwrap_or(0.0) / 1024.0
+    );
+    println!(
+        "executed energy:        {energy_total:.3} J total — {prefill_energy:.3} J prefill, \
+         {:.3} J per decode step",
+        (energy_total - prefill_energy) / DECODE_STEPS as f64
+    );
+
+    client.shutdown()?;
+    handle
+        .join()
+        .map_err(|_| anyhow::anyhow!("daemon thread panicked"))??;
+    let _ = std::fs::remove_dir_all(&state_dir);
     Ok(())
 }

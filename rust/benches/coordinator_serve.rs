@@ -13,7 +13,7 @@
 //! dataset/model and report-only timing/coalescing numbers (shared
 //! runners are too noisy to hard-gate ratios; the full bench asserts).
 use versal_gemm::config::Config;
-use versal_gemm::coordinator::{Coordinator, CoordinatorOptions, GemmJob};
+use versal_gemm::coordinator::{Coordinator, CoordinatorOptions, GemmJob, GraphInput, GraphJob};
 use versal_gemm::dataset::Dataset;
 use versal_gemm::dse::Objective;
 use versal_gemm::features::FeatureSet;
@@ -22,6 +22,9 @@ use versal_gemm::report::Lab;
 use versal_gemm::server::safe_rate;
 use versal_gemm::util::bench::once;
 use versal_gemm::util::json::{num, obj, s};
+use versal_gemm::util::rng::Rng;
+use versal_gemm::workloads::graph::GemmGraph;
+use versal_gemm::workloads::models::qwen25_05b;
 use versal_gemm::workloads::{training_workloads, Gemm};
 
 fn main() -> anyhow::Result<()> {
@@ -194,6 +197,59 @@ fn main() -> anyhow::Result<()> {
             "burst wall {burst_wall:.3}s not ~1 cold plan ({lead_s:.3}s)"
         );
     }
+    // ---- graph jobs: whole-model DAG serving (ISSUE 10) -----------------
+    // A 2-layer Qwen2.5-0.5B forward pass (seq 32) submitted as ONE
+    // graph job per pass: layer 1's shapes repeat layer 0's, so plan
+    // dedup must cover the repeats with a single DSE each, and repeat
+    // passes must hit the graph-level plan cache wholesale.
+    println!("\n== bench: graph jobs (qwen2.5-0.5b, 2 layers, seq 32) ==");
+    let graph = GemmGraph::transformer(&qwen25_05b(), 32, 2);
+    let mut rng = Rng::new(0x6A9);
+    let passes = 4u64;
+    let gb = coord.stats();
+    let graph_started = std::time::Instant::now();
+    let mut graph_results = Vec::new();
+    for pass in 0..passes {
+        let inputs: Vec<GraphInput> = graph
+            .external_slots()
+            .into_iter()
+            .map(|(idx, slot)| {
+                let data: Vec<f32> = (0..graph.slot_elems(idx, slot))
+                    .map(|_| rng.range_f64(-0.5, 0.5) as f32)
+                    .collect();
+                GraphInput::new(&graph.nodes[idx].name, slot, data)
+            })
+            .collect();
+        let job =
+            GraphJob::with_inputs(2000 + pass, graph.clone(), Objective::EnergyEfficiency, inputs);
+        graph_results.push(coord.run_graph(job));
+    }
+    let graph_wall = graph_started.elapsed().as_secs_f64();
+    let ga = coord.stats();
+    for r in &graph_results {
+        assert!(r.error.is_none(), "graph pass {} failed: {:?}", r.id, r.error);
+    }
+    let graph_nodes = ga.graph_nodes_executed - gb.graph_nodes_executed;
+    let shared = ga.plans_shared - gb.plans_shared;
+    // Acceptance (both modes — structural, not timing-noise-sensitive):
+    // repeated same-shape layers shared plans, and every repeat pass
+    // resolved from the whole-DAG cache without a single key lookup.
+    assert!(shared > 0, "identical transformer layers did not share plans");
+    assert!(
+        graph_results[1..].iter().all(|r| r.graph_cache_hit),
+        "repeat DAGs missed the graph-level plan cache"
+    );
+    let graph_energy: f64 = graph_results.iter().filter_map(|r| r.energy_j).sum();
+    println!(
+        "{passes} forward passes as graph jobs: {graph_nodes} nodes executed, \
+         {shared} node plans shared, {} DSE runs, peak resident {} KiB, {graph_energy:.3} J; \
+         {:.2} graphs/s, {:.1} nodes/s",
+        ga.cache_misses - gb.cache_misses,
+        ga.resident_bytes_peak / 1024,
+        safe_rate(passes as f64, graph_wall),
+        safe_rate(graph_nodes as f64, graph_wall)
+    );
+
     // Perf record (ROADMAP "missing perf record"): persist the smoke
     // numbers so CI runs leave a diffable snapshot at the repo root.
     if smoke {
@@ -227,6 +283,14 @@ fn main() -> anyhow::Result<()> {
             ("executed_energy_j", num(final_stats.executed_energy_j)),
             ("executed_gflops_per_w", num(final_stats.executed_gflops_per_w)),
             ("simulated_energy_j", num(final_stats.simulated_energy_j)),
+            // Graph-job serving (ISSUE 10): whole-DAG throughput plus
+            // the plan-dedup and residency counters the tentpole adds.
+            ("graph_jobs", num(final_stats.graph_jobs as f64)),
+            ("graph_jobs_per_s", num(safe_rate(passes as f64, graph_wall))),
+            ("graph_nodes_per_s", num(safe_rate(graph_nodes as f64, graph_wall))),
+            ("plans_shared", num(final_stats.plans_shared as f64)),
+            ("resident_bytes_peak", num(final_stats.resident_bytes_peak as f64)),
+            ("graph_energy_j", num(graph_energy)),
         ]);
         std::fs::write("BENCH_serve.json", snapshot.to_string_pretty())?;
         println!("\nwrote BENCH_serve.json ({total_jobs} jobs in {wall:.2}s)");

@@ -156,6 +156,14 @@ impl ShardedPlanCache {
         }
     }
 
+    /// Look up a plan WITHOUT touching recency or the hit/miss counters
+    /// — the graph planner's poll while it waits on another planner's
+    /// in-flight exploration, where counting a hit/miss per poll would
+    /// corrupt the stats.
+    pub fn peek(&self, key: &PlanKey) -> Option<Plan> {
+        lock_unpoisoned(self.shard(key)).map.get(key).map(|e| e.plan)
+    }
+
     /// Insert (or refresh) a plan, evicting the shard's least-recently
     /// -used entry when the shard is at capacity.
     pub fn insert(&self, key: PlanKey, plan: Plan) {
@@ -251,6 +259,82 @@ impl ShardedPlanCache {
             .map_err(|e| anyhow::anyhow!("reading plan cache {}: {e}", path.display()))?;
         let json = Json::parse(&text).map_err(|e| anyhow::anyhow!("plan cache: {e}"))?;
         Ok(ShardedPlanCache::from_json(&json, n_shards, capacity))
+    }
+}
+
+/// Graph-level plan cache: one entry per whole DAG
+/// ([`crate::workloads::graph::GemmGraph::dag_hash`] keyed), holding the
+/// per-node plans in node order. A hit skips the per-node key walk and
+/// every single-flight interaction — a repeated forward pass plans in
+/// one lookup. Bounded FIFO eviction (graphs are few and coarse; LRU
+/// precision buys nothing here).
+#[derive(Debug)]
+pub struct GraphPlanCache {
+    inner: Mutex<GraphCacheState>,
+    capacity: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+#[derive(Debug, Default)]
+struct GraphCacheState {
+    map: HashMap<u64, Vec<Plan>>,
+    /// Insertion order for FIFO eviction.
+    order: Vec<u64>,
+}
+
+impl GraphPlanCache {
+    pub fn new(capacity: usize) -> GraphPlanCache {
+        GraphPlanCache {
+            inner: Mutex::new(GraphCacheState::default()),
+            capacity: capacity.max(1),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Per-node plans for a previously planned DAG, in node order.
+    pub fn get(&self, dag_hash: u64) -> Option<Vec<Plan>> {
+        let inner = lock_unpoisoned(&self.inner);
+        match inner.map.get(&dag_hash) {
+            Some(plans) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(plans.clone())
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    pub fn insert(&self, dag_hash: u64, plans: Vec<Plan>) {
+        let mut inner = lock_unpoisoned(&self.inner);
+        if !inner.map.contains_key(&dag_hash) && inner.map.len() >= self.capacity {
+            if !inner.order.is_empty() {
+                let victim = inner.order.remove(0);
+                inner.map.remove(&victim);
+            }
+        }
+        if inner.map.insert(dag_hash, plans).is_none() {
+            inner.order.push(dag_hash);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        lock_unpoisoned(&self.inner).map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
     }
 }
 
@@ -406,6 +490,49 @@ mod tests {
         assert_eq!((s.hits, s.misses, s.evictions, s.entries), (1, 1, 0, 1));
         // Objectives key separately.
         assert_eq!(cache.get(&key(128, Objective::EnergyEfficiency)), None);
+    }
+
+    #[test]
+    fn peek_does_not_touch_counters_or_recency() {
+        let cache = ShardedPlanCache::new(1, 2);
+        let (ka, kb, kc) = (
+            key(32, Objective::Throughput),
+            key(64, Objective::Throughput),
+            key(96, Objective::Throughput),
+        );
+        assert_eq!(cache.peek(&ka), None);
+        cache.insert(ka, plan(1));
+        cache.insert(kb, plan(2));
+        // Peek A many times: counters stay untouched AND A gains no
+        // recency — it is still the LRU victim when C arrives.
+        for _ in 0..10 {
+            assert!(cache.peek(&ka).is_some());
+        }
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses), (0, 0), "peek moved the counters");
+        cache.insert(kc, plan(3));
+        assert!(cache.peek(&ka).is_none(), "peek bumped recency");
+        assert!(cache.peek(&kb).is_some() && cache.peek(&kc).is_some());
+    }
+
+    #[test]
+    fn graph_cache_roundtrip_and_fifo_eviction() {
+        let cache = GraphPlanCache::new(2);
+        assert!(cache.get(1).is_none());
+        cache.insert(1, vec![plan(1), plan(2)]);
+        cache.insert(2, vec![plan(3)]);
+        let got = cache.get(1).expect("hit");
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].tiling.p_m, 1);
+        assert_eq!((cache.hits(), cache.misses()), (1, 1));
+        // Refresh of an existing key evicts nothing.
+        cache.insert(1, vec![plan(9)]);
+        assert_eq!(cache.len(), 2);
+        // Third distinct key evicts the oldest (FIFO: key 1).
+        cache.insert(3, vec![plan(4)]);
+        assert_eq!(cache.len(), 2);
+        assert!(cache.get(1).is_none(), "FIFO victim survived");
+        assert!(cache.get(2).is_some() && cache.get(3).is_some());
     }
 
     #[test]

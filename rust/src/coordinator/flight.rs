@@ -121,6 +121,21 @@ impl FlightTable {
         }
     }
 
+    /// Claim the key without a job to park — the graph planner's entry
+    /// point: one claim covers every same-shape node of the graph, and
+    /// regular jobs submitted meanwhile park on it as usual. Returns
+    /// `false` when the key is already in flight elsewhere.
+    pub fn try_claim(&self, key: PlanKey) -> bool {
+        let mut slots = lock_unpoisoned(&self.slots);
+        match slots.entry(key) {
+            std::collections::hash_map::Entry::Occupied(_) => false,
+            std::collections::hash_map::Entry::Vacant(v) => {
+                v.insert(Vec::new());
+                true
+            }
+        }
+    }
+
     /// Remove the key's flight, returning every job parked on it. Called
     /// exactly once per claim — by the planner after it resolves the plan
     /// (publish or fail), or by `submit` when the planner pool is gone.
@@ -265,6 +280,24 @@ mod tests {
             ClaimOutcome::Claimed(_)
         ));
         assert!(table.resolve(&k).is_empty());
+    }
+
+    #[test]
+    fn try_claim_respects_existing_flights_and_parks_later_jobs() {
+        let table = FlightTable::new();
+        let k = key_of(&job(0, 128));
+        // Jobless claim (graph planner) wins a free key exactly once.
+        assert!(table.try_claim(k));
+        assert!(!table.try_claim(k), "double-claimed an in-flight key");
+        // A regular submit meanwhile parks on the graph's claim.
+        assert!(matches!(table.claim_or_park(k, job(1, 128)), ClaimOutcome::Parked));
+        let parked = table.resolve(&k);
+        assert_eq!(parked.len(), 1);
+        // Resolved: claimable again; and try_claim loses to a job claim.
+        let _ = table.claim_or_park(k, job(2, 128));
+        assert!(!table.try_claim(k));
+        let _ = table.resolve(&k);
+        assert!(table.try_claim(k));
     }
 
     #[test]

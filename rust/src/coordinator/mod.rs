@@ -62,19 +62,20 @@
 pub mod cache;
 pub mod flight;
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, SendError, Sender};
 use std::sync::{Arc, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
-use crate::config::Config;
-use crate::coordinator::cache::{PlanKey, ShardedPlanCache};
+use crate::config::{BoardConfig, Config};
+use crate::coordinator::cache::{GraphPlanCache, PlanKey, ShardedPlanCache};
 pub use crate::coordinator::flight::Admission;
 use crate::coordinator::flight::{ClaimOutcome, FlightTable, ParkedJob, QueueGauge};
 use crate::dse::{DseEngine, DsePool, Objective};
 use crate::models::Prediction;
+use crate::runtime::arena::OperandArena;
 pub use crate::runtime::backend::BackendChoice;
 pub use crate::runtime::faults::FaultPlan;
 pub use crate::runtime::microkernel::CpuProfileChoice;
@@ -86,6 +87,7 @@ use crate::util::rng::fnv1a;
 use crate::versal::reconfig::ReconfigModel;
 use crate::versal::telemetry::BeamSession;
 use crate::versal::{BufferPlacement, Measurement, VersalSim};
+use crate::workloads::graph::{operand_shape_error, GemmGraph, OperandSource, Slot};
 use crate::workloads::Gemm;
 
 /// One GEMM request. Data-less jobs are "plan-only" (mapping + predicted
@@ -216,6 +218,155 @@ impl JobResult {
     }
 }
 
+/// One client-shipped buffer for a graph job: the external operand of
+/// the named node's A or B slot.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GraphInput {
+    pub node: String,
+    pub slot: Slot,
+    pub data: Vec<f32>,
+}
+
+impl GraphInput {
+    pub fn new(node: &str, slot: Slot, data: Vec<f32>) -> GraphInput {
+        GraphInput {
+            node: node.to_string(),
+            slot,
+            data,
+        }
+    }
+}
+
+/// A whole-model request: a DAG of GEMMs served as one job. Planning
+/// deduplicates same-shape nodes (one DSE covers every identical
+/// layer), and execution keeps intermediates resident in the executor's
+/// operand arena — edges never round-trip through the client.
+///
+/// An empty `inputs` list makes the graph plan-only; a data graph must
+/// ship exactly one buffer per external slot
+/// ([`GemmGraph::external_slots`]).
+#[derive(Debug, Clone)]
+pub struct GraphJob {
+    pub id: u64,
+    pub graph: GemmGraph,
+    pub objective: Objective,
+    pub inputs: Vec<GraphInput>,
+    /// Validate every node's output against the reference GEMM.
+    pub validate: bool,
+    /// Keep node outputs in the result (in-process callers only; the
+    /// wire path never ships intermediates back). Kept buffers stay in
+    /// the arena until the graph finishes, so residency peaks higher.
+    pub keep_outputs: bool,
+    /// Per-attempt execution deadline (ms) applied to every node.
+    pub deadline_ms: Option<u64>,
+}
+
+impl GraphJob {
+    pub fn plan_only(id: u64, graph: GemmGraph, objective: Objective) -> GraphJob {
+        GraphJob {
+            id,
+            graph,
+            objective,
+            inputs: Vec::new(),
+            validate: false,
+            keep_outputs: false,
+            deadline_ms: None,
+        }
+    }
+
+    pub fn with_inputs(
+        id: u64,
+        graph: GemmGraph,
+        objective: Objective,
+        inputs: Vec<GraphInput>,
+    ) -> GraphJob {
+        GraphJob {
+            id,
+            graph,
+            objective,
+            inputs,
+            validate: false,
+            keep_outputs: false,
+            deadline_ms: None,
+        }
+    }
+}
+
+/// One node's slice of a completed graph job.
+#[derive(Debug, Clone)]
+pub struct GraphNodeResult {
+    pub name: String,
+    pub gemm: Gemm,
+    pub plan: Option<Plan>,
+    /// True when this node reused another same-shape node's plan instead
+    /// of resolving its own (the intra-graph dedup win).
+    pub shared_plan: bool,
+    pub exec_time: Option<Duration>,
+    pub energy_j: Option<f64>,
+    /// max|c - c_ref| when the job requested validation.
+    pub validation_err: Option<f32>,
+    pub error: Option<String>,
+    /// The node's output, only when the job asked to keep outputs.
+    pub c: Option<Vec<f32>>,
+}
+
+/// Completed graph job: per-node outcomes plus graph-level rollups —
+/// total energy, efficiency, and the critical-path vs summed latency
+/// split that tells how much node-level parallelism the DAG left on the
+/// table.
+#[derive(Debug, Clone)]
+pub struct GraphResult {
+    pub id: u64,
+    pub n_nodes: usize,
+    pub objective: Objective,
+    pub plan_time: Duration,
+    /// The whole DAG resolved from one graph-level cache entry.
+    pub graph_cache_hit: bool,
+    /// Nodes that reused another same-shape node's plan.
+    pub plans_shared: u64,
+    /// Sum of node execution times (serial cost on one backend).
+    pub exec_time_sum: Option<Duration>,
+    /// Longest dependency chain's execution time — what a node-parallel
+    /// executor could achieve for this DAG.
+    pub exec_time_critical: Option<Duration>,
+    /// Total energy drawn by executed nodes (J).
+    pub energy_j: Option<f64>,
+    /// `energy_j / exec_time_sum` (W).
+    pub avg_power_w: Option<f64>,
+    /// Executed energy efficiency across the graph (GFLOPS/W).
+    pub gflops_per_w: Option<f64>,
+    /// Total FLOPs of the graph's nodes.
+    pub flops: f64,
+    /// High-water mark of intermediates resident in the operand arena.
+    pub resident_bytes_peak: u64,
+    pub nodes: Vec<GraphNodeResult>,
+    pub error: Option<String>,
+}
+
+impl GraphResult {
+    /// A result for a graph that never produced plans (refused at
+    /// submit, lost by a dying pipeline).
+    fn errored(id: u64, n_nodes: usize, objective: Objective, why: &str) -> GraphResult {
+        GraphResult {
+            id,
+            n_nodes,
+            objective,
+            plan_time: Duration::default(),
+            graph_cache_hit: false,
+            plans_shared: 0,
+            exec_time_sum: None,
+            exec_time_critical: None,
+            energy_j: None,
+            avg_power_w: None,
+            gflops_per_w: None,
+            flops: 0.0,
+            resident_bytes_peak: 0,
+            nodes: Vec::new(),
+            error: Some(why.to_string()),
+        }
+    }
+}
+
 /// Aggregate service counters.
 ///
 /// `jobs_completed` and `jobs_failed` are bumped at *result
@@ -307,6 +458,19 @@ pub struct CoordinatorStats {
     pub faults_injected: u64,
     /// Live tiers whose circuit breaker is not Closed (0 = healthy).
     pub breaker_state: u64,
+    /// Graph jobs finalized (completed or failed). A graph counts once
+    /// in `jobs_completed`/`jobs_failed`, not once per node.
+    pub graph_jobs: u64,
+    /// Graph nodes that executed on a backend. `executed_jobs` does not
+    /// count these — the per-node throughput/energy aggregates
+    /// (`executed_flops`, `exec_time_s`, `executed_energy_j`) do.
+    pub graph_nodes_executed: u64,
+    /// Same-shape graph nodes that reused another node's plan: repeated
+    /// layers covered by one DSE / plan-cache entry instead of their own.
+    pub plans_shared: u64,
+    /// High-water mark of graph intermediates resident in the executor's
+    /// operand arena (bytes), across all graphs served.
+    pub resident_bytes_peak: u64,
 }
 
 impl CoordinatorStats {
@@ -412,18 +576,49 @@ struct PlannedJob {
     result: JobResult,
 }
 
+/// A planned graph headed to the executor: the validated topological
+/// order, per-node consumer refcounts for the operand arena, and the
+/// result skeleton (plans filled in, execution fields pending).
+struct PlannedGraph {
+    job: GraphJob,
+    order: Vec<usize>,
+    consumers: Vec<usize>,
+    result: GraphResult,
+}
+
+/// What the planner pool dequeues: single jobs and whole graphs share
+/// one channel so submission order is preserved across both kinds.
+enum PlannerMsg {
+    Job(GemmJob),
+    Graph(Box<GraphJob>),
+}
+
 enum ExecMsg {
     Job(Box<PlannedJob>),
+    Graph(Box<PlannedGraph>),
 }
+
+/// Graph-level plan-cache entries kept (whole-DAG keyed, FIFO-bounded).
+const GRAPH_CACHE_CAPACITY: usize = 256;
+
+/// How long a graph planner waits on another job's in-flight exploration
+/// before running its own (bounded so a single-planner pool can never
+/// deadlock on a leader queued behind the graph; the duplicate DSE is
+/// wasted work, not wrong work — cache inserts are idempotent).
+const GRAPH_PLAN_WAIT: Duration = Duration::from_secs(2);
 
 /// The serving coordinator.
 pub struct Coordinator {
-    job_tx: Option<Sender<GemmJob>>,
+    job_tx: Option<Sender<PlannerMsg>>,
     result_rx: Receiver<JobResult>,
+    graph_result_rx: Receiver<GraphResult>,
     planners: Vec<std::thread::JoinHandle<()>>,
     executor: Option<std::thread::JoinHandle<()>>,
     stats: Arc<Mutex<CoordinatorStats>>,
     cache: Arc<ShardedPlanCache>,
+    /// Whole-DAG plan cache: one hit resolves every node of a repeated
+    /// graph without touching the per-key cache.
+    graph_cache: Arc<GraphPlanCache>,
     /// Shared with the planner pool; `stats()` reads the predictor
     /// bundle's forest compile/throughput counters from here.
     dse: Arc<DseEngine>,
@@ -448,7 +643,11 @@ pub struct Coordinator {
     /// reject); drained ahead of channel results so every submit yields
     /// a result.
     rejected: VecDeque<JobResult>,
+    /// Graph jobs refused at submit time, drained ahead of channel
+    /// results so every `submit_graph` yields a result.
+    rejected_graphs: VecDeque<GraphResult>,
     pending: u64,
+    pending_graphs: u64,
     /// Drain mode (`begin_drain`): admission is closed — new submits are
     /// refused — while in-flight jobs run to completion. The serving
     /// daemon's ready → draining transition maps onto this flag.
@@ -497,9 +696,10 @@ impl Coordinator {
             }
         }
 
-        let (job_tx, job_rx) = channel::<GemmJob>();
+        let (job_tx, job_rx) = channel::<PlannerMsg>();
         let (exec_tx, exec_rx) = channel::<ExecMsg>();
         let (result_tx, result_rx) = channel::<JobResult>();
+        let (graph_result_tx, graph_result_rx) = channel::<GraphResult>();
         let job_rx = Arc::new(Mutex::new(job_rx));
         let stats = Arc::new(Mutex::new(CoordinatorStats::default()));
         let plan_lat = Arc::new(Mutex::new(PlanLatencies::default()));
@@ -529,6 +729,7 @@ impl Coordinator {
         let flight = Arc::new(FlightTable::new());
         let gauge = Arc::new(QueueGauge::new(options.max_queue_depth, options.admission));
         let cancel = Arc::new(AtomicBool::new(false));
+        let graph_cache = Arc::new(GraphPlanCache::new(GRAPH_CACHE_CAPACITY));
 
         // --- planner pool -------------------------------------------------
         let mut planners = Vec::new();
@@ -536,10 +737,12 @@ impl Coordinator {
             let job_rx = Arc::clone(&job_rx);
             let exec_tx = exec_tx.clone();
             let result_tx = result_tx.clone();
+            let graph_result_tx = graph_result_tx.clone();
             let ctx = PlannerCtx {
                 dse: Arc::clone(&dse),
                 sim: Arc::clone(&sim),
                 cache: Arc::clone(&cache),
+                graph_cache: Arc::clone(&graph_cache),
                 stats: Arc::clone(&stats),
                 plan_lat: Arc::clone(&plan_lat),
                 flight: Arc::clone(&flight),
@@ -547,45 +750,36 @@ impl Coordinator {
                 cancel: Arc::clone(&cancel),
             };
             planners.push(std::thread::spawn(move || loop {
-                let job = {
+                let msg = {
                     let guard = lock_unpoisoned(&job_rx);
                     guard.recv()
                 };
-                let job = match job {
-                    Ok(j) => j,
+                let msg = match msg {
+                    Ok(m) => m,
                     Err(_) => break, // all senders dropped: shutdown
                 };
-                // One resolution serves the dequeued job AND every job
-                // parked on its flight (coalesced plans / errors). Each
-                // job's admission slot is held until its result is
-                // finalized — here for plan-only/failed jobs, in the
-                // executor for data jobs — so `max_queue_depth` bounds
-                // queued operand buffers too, not just unplanned jobs.
-                for mut planned in plan_and_flush(&ctx, job) {
-                    let (has_a, has_b) =
-                        (planned.job.a.is_some(), planned.job.b.is_some());
-                    // A job carrying exactly one operand can never
-                    // execute; surface the defect instead of silently
-                    // downgrading it to plan-only.
-                    if has_a != has_b && planned.result.error.is_none() {
-                        planned.result.error = Some(
-                            "missing operand: data jobs need both A and B".to_string(),
-                        );
-                    }
-                    let has_data = has_a && has_b;
-                    if has_data && planned.result.error.is_none() {
-                        if let Err(SendError(ExecMsg::Job(mut planned))) =
-                            exec_tx.send(ExecMsg::Job(Box::new(planned)))
-                        {
-                            planned.result.error = Some("executor unavailable".to_string());
-                            finalize_result(&ctx.stats, &planned.result);
-                            ctx.gauge.release(1);
-                            let _ = result_tx.send(planned.result);
+                match msg {
+                    // One resolution serves the dequeued job AND every
+                    // job parked on its flight (coalesced plans /
+                    // errors). Each job's admission slot is held until
+                    // its result is finalized — in `route_planned` for
+                    // plan-only/failed jobs, in the executor for data
+                    // jobs — so `max_queue_depth` bounds queued operand
+                    // buffers too, not just unplanned jobs.
+                    PlannerMsg::Job(job) => {
+                        for planned in plan_and_flush(&ctx, job) {
+                            route_planned(&ctx, &exec_tx, &result_tx, planned);
                         }
-                    } else {
-                        finalize_result(&ctx.stats, &planned.result);
-                        ctx.gauge.release(1);
-                        let _ = result_tx.send(planned.result);
+                    }
+                    // Graphs resolve every unique (gemm, objective) key
+                    // once; regular jobs that parked on a key the graph
+                    // explored flush here too.
+                    PlannerMsg::Graph(gjob) => {
+                        let (planned, flushed) = plan_graph(&ctx, *gjob);
+                        for pj in flushed {
+                            route_planned(&ctx, &exec_tx, &result_tx, pj);
+                        }
+                        route_graph(&ctx, &exec_tx, &graph_result_tx, planned);
                     }
                 }
             }));
@@ -638,16 +832,47 @@ impl Coordinator {
             let session = BeamSession::default();
             // Dynamic batching: drain whatever is queued, group by
             // mapping, then by the artifact variant the backend picks.
+            // Graphs collect separately — their nodes already carry a
+            // topological order this thread must respect.
             let mut queue: Vec<Box<PlannedJob>> = Vec::new();
+            let mut graphs: Vec<Box<PlannedGraph>> = Vec::new();
             loop {
-                if queue.is_empty() {
+                if queue.is_empty() && graphs.is_empty() {
                     match exec_rx.recv() {
                         Ok(ExecMsg::Job(j)) => queue.push(j),
+                        Ok(ExecMsg::Graph(g)) => graphs.push(g),
                         Err(_) => break, // planners gone: shutdown
                     }
                 }
-                while let Ok(ExecMsg::Job(j)) = exec_rx.try_recv() {
-                    queue.push(j);
+                while let Ok(msg) = exec_rx.try_recv() {
+                    match msg {
+                        ExecMsg::Job(j) => queue.push(j),
+                        ExecMsg::Graph(g) => graphs.push(g),
+                    }
+                }
+                for mut pg in graphs.drain(..) {
+                    execute_graph(
+                        &mut resilient,
+                        &exec_sim,
+                        &session,
+                        &exec_stats,
+                        &reconfig,
+                        &board,
+                        &mut current_mapping,
+                        &mut pg,
+                    );
+                    {
+                        let c = resilient.counters();
+                        let mut s = lock_unpoisoned(&exec_stats);
+                        s.retries_total = c.retries_total;
+                        s.timeouts_total = c.timeouts_total;
+                        s.failovers_total = c.failovers_total;
+                        s.faults_injected = c.faults_injected;
+                        s.breaker_state = c.breaker_state;
+                    }
+                    finalize_graph(&exec_stats, &pg.result);
+                    exec_gauge.release(1);
+                    let _ = graph_result_tx.send(pg.result);
                 }
                 // Reconfiguration-aware batching: order the drained batch
                 // so jobs sharing a VCK190 mapping run back-to-back (free
@@ -704,10 +929,12 @@ impl Coordinator {
         Coordinator {
             job_tx: Some(job_tx),
             result_rx,
+            graph_result_rx,
             planners,
             executor: Some(executor),
             stats,
             cache,
+            graph_cache,
             dse,
             plan_lat,
             flight,
@@ -717,7 +944,9 @@ impl Coordinator {
             kernel_profile,
             cache_path: options.cache_path,
             rejected: VecDeque::new(),
+            rejected_graphs: VecDeque::new(),
             pending: 0,
+            pending_graphs: 0,
             draining: false,
         }
     }
@@ -754,6 +983,18 @@ impl Coordinator {
             self.refuse(job, "coordinator already shut down");
             return;
         };
+        // Shape-check present operands against the GEMM *before*
+        // admission or planning (the same validator the graph path runs
+        // on external inputs): a k-mismatched buffer is a typed error at
+        // submit, not an execute-time surprise after a wasted DSE.
+        if let Some(why) = operand_shape_error(
+            &job.gemm,
+            job.a.as_ref().map(Vec::len),
+            job.b.as_ref().map(Vec::len),
+        ) {
+            self.refuse(job, &why);
+            return;
+        }
         if !self.gauge.admit() {
             lock_unpoisoned(&self.stats).rejected_jobs += 1;
             self.refuse(
@@ -769,7 +1010,7 @@ impl Coordinator {
         match self.flight.claim_or_park(key, job) {
             ClaimOutcome::Parked => {}
             ClaimOutcome::Claimed(job) => {
-                if let Err(SendError(job)) = tx.send(job) {
+                if let Err(SendError(PlannerMsg::Job(job))) = tx.send(PlannerMsg::Job(job)) {
                     // Planner pool gone: release the claim and refuse the
                     // job plus anything that parked on it meanwhile.
                     let parked = self.flight.resolve(&key);
@@ -779,6 +1020,114 @@ impl Coordinator {
                         self.refuse(pj.job, "planner pool unavailable");
                     }
                 }
+            }
+        }
+    }
+
+    /// Enqueue a whole-model graph job. Validation — DAG structure,
+    /// edge shapes, external-input coverage and sizes — happens here, so
+    /// a malformed graph is a typed [`GraphResult::error`] before any
+    /// planning. Like `submit`, this never panics and every call yields
+    /// exactly one result via `next_graph_result`.
+    ///
+    /// A graph holds one admission slot (its nodes travel together), and
+    /// its repeated same-shape nodes resolve from a single DSE.
+    pub fn submit_graph(&mut self, job: GraphJob) {
+        self.pending_graphs += 1;
+        if self.draining {
+            self.refuse_graph(job, "coordinator draining: admission closed");
+            return;
+        }
+        let Some(tx) = self.job_tx.clone() else {
+            self.refuse_graph(job, "coordinator already shut down");
+            return;
+        };
+        if let Err(why) = job.graph.validate() {
+            self.refuse_graph(job, &why);
+            return;
+        }
+        if let Some(why) = graph_inputs_error(&job) {
+            self.refuse_graph(job, &why);
+            return;
+        }
+        if !self.gauge.admit() {
+            lock_unpoisoned(&self.stats).rejected_jobs += 1;
+            let why = format!(
+                "admission queue full ({} jobs, policy=reject)",
+                self.gauge.limit()
+            );
+            self.refuse_graph(job, &why);
+            return;
+        }
+        if let Err(SendError(msg)) = tx.send(PlannerMsg::Graph(Box::new(job))) {
+            self.gauge.release(1);
+            if let PlannerMsg::Graph(job) = msg {
+                self.refuse_graph(*job, "planner pool unavailable");
+            }
+        }
+    }
+
+    /// Queue an error result for a graph that never reached a planner.
+    fn refuse_graph(&mut self, job: GraphJob, why: &str) {
+        let r = GraphResult::errored(job.id, job.graph.len(), job.objective, why);
+        finalize_graph(&self.stats, &r);
+        self.rejected_graphs.push_back(r);
+    }
+
+    /// Wait for the next completed graph job.
+    pub fn next_graph_result(&mut self) -> Option<GraphResult> {
+        if self.pending_graphs == 0 {
+            return None;
+        }
+        if let Some(r) = self.rejected_graphs.pop_front() {
+            self.pending_graphs -= 1;
+            return Some(r);
+        }
+        match self.graph_result_rx.recv() {
+            Ok(r) => {
+                self.pending_graphs -= 1;
+                Some(r)
+            }
+            Err(_) => None,
+        }
+    }
+
+    /// Nonblocking counterpart of `next_graph_result` for the daemon's
+    /// tick loop.
+    pub fn try_next_graph_result(&mut self) -> Option<GraphResult> {
+        if self.pending_graphs == 0 {
+            return None;
+        }
+        if let Some(r) = self.rejected_graphs.pop_front() {
+            self.pending_graphs -= 1;
+            return Some(r);
+        }
+        match self.graph_result_rx.try_recv() {
+            Ok(r) => {
+                self.pending_graphs -= 1;
+                Some(r)
+            }
+            Err(_) => None,
+        }
+    }
+
+    /// Submit one graph and wait for its result. Never loses the job: a
+    /// pipeline that dies mid-graph synthesizes an error result.
+    pub fn run_graph(&mut self, job: GraphJob) -> GraphResult {
+        let (id, n, objective) = (job.id, job.graph.len(), job.objective);
+        self.submit_graph(job);
+        match self.next_graph_result() {
+            Some(r) => r,
+            None => {
+                self.pending_graphs = self.pending_graphs.saturating_sub(1);
+                let r = GraphResult::errored(
+                    id,
+                    n,
+                    objective,
+                    "result lost: coordinator pipeline closed",
+                );
+                finalize_graph(&self.stats, &r);
+                r
             }
         }
     }
@@ -843,9 +1192,10 @@ impl Coordinator {
         self.draining
     }
 
-    /// Results still owed to callers (submitted minus delivered).
+    /// Results still owed to callers (submitted minus delivered),
+    /// single jobs and graph jobs together.
     pub fn pending(&self) -> u64 {
-        self.pending
+        self.pending + self.pending_graphs
     }
 
     /// Whether one more admitted job would fit without blocking.
@@ -972,6 +1322,11 @@ impl Coordinator {
         &self.cache
     }
 
+    /// Direct view of the graph-level plan cache.
+    pub fn graph_plan_cache(&self) -> &GraphPlanCache {
+        &self.graph_cache
+    }
+
     /// Shutdown: drains the pipeline promptly, then persists the plan
     /// cache when a path was configured. The cancellation flag makes
     /// in-flight explorations abort (their jobs — and every waiter
@@ -1015,6 +1370,7 @@ struct PlannerCtx {
     dse: Arc<DseEngine>,
     sim: Arc<VersalSim>,
     cache: Arc<ShardedPlanCache>,
+    graph_cache: Arc<GraphPlanCache>,
     stats: Arc<Mutex<CoordinatorStats>>,
     plan_lat: Arc<Mutex<PlanLatencies>>,
     flight: Arc<FlightTable>,
@@ -1076,6 +1432,103 @@ fn finalize_result(stats: &Mutex<CoordinatorStats>, r: &JobResult) {
     }
 }
 
+/// Graph counterpart of [`finalize_result`]: one graph job counts once
+/// in `jobs_completed`/`jobs_failed` (not per node), bumps `graph_jobs`,
+/// rolls the nodes' simulated energy up, and advances the sticky
+/// residency high-water mark.
+fn finalize_graph(stats: &Mutex<CoordinatorStats>, r: &GraphResult) {
+    let mut s = lock_unpoisoned(stats);
+    s.graph_jobs += 1;
+    if r.error.is_some() {
+        s.jobs_failed += 1;
+    } else {
+        s.jobs_completed += 1;
+        for nr in &r.nodes {
+            if let Some(p) = nr.plan {
+                s.simulated_energy_j += p.simulated.latency_s * p.simulated.power_w;
+            }
+        }
+    }
+    s.resident_bytes_peak = s.resident_bytes_peak.max(r.resident_bytes_peak);
+}
+
+/// Run one cold exploration for `key` and publish the winning plan to
+/// the cache. The single-job path and the graph path both land here, so
+/// `cache_misses`, gate accounting, and the cancel check live in exactly
+/// one place.
+fn explore_plan(ctx: &PlannerCtx, gemm: &Gemm, objective: Objective, key: PlanKey) -> PlanOutcome {
+    if ctx.cancel.load(Ordering::SeqCst) {
+        return PlanOutcome::Failed("coordinator shutting down".to_string());
+    }
+    lock_unpoisoned(&ctx.stats).cache_misses += 1;
+    match ctx.dse.explore_with_cancel(gemm, &ctx.cancel) {
+        Err(e) => PlanOutcome::Failed(e.to_string()),
+        Ok(r) => {
+            // Gate accounting: how much stage-2 forest work the
+            // resource gate skipped for this cold exploration.
+            {
+                let mut s = lock_unpoisoned(&ctx.stats);
+                s.gate_rows_total += r.n_candidates as u64;
+                s.gate_rows_skipped += r.n_gated as u64;
+            }
+            // Walk the ranked list until a design actually builds
+            // (absorbs resource-model error, like re-running
+            // codegen). `ranked_top` partially selects the 64
+            // retry candidates instead of sorting all feasible.
+            let built = r.ranked_top(objective, 64).into_iter().find_map(|c| {
+                ctx.sim
+                    .evaluate(gemm, &c.tiling, BufferPlacement::UramFirst)
+                    .ok()
+                    .map(|m| Plan {
+                        tiling: c.tiling,
+                        predicted: c.prediction,
+                        simulated: m,
+                    })
+            });
+            match built {
+                None => PlanOutcome::Failed("no buildable design".to_string()),
+                Some(plan) => {
+                    ctx.cache.insert(key, plan);
+                    PlanOutcome::Cold(plan)
+                }
+            }
+        }
+    }
+}
+
+/// Publish/fail: release the flight on `key` and complete every parked
+/// waiter from one resolution. A warm resolution serves waiters as
+/// cache hits; a cold or failed one coalesces them (they shared the
+/// single exploration — and its error, if any). Only the claim holder
+/// may call this.
+fn flush_waiters(ctx: &PlannerCtx, key: &PlanKey, outcome: &PlanOutcome) -> Vec<PlannedJob> {
+    let parked: Vec<ParkedJob> = ctx.flight.resolve(key);
+    if parked.is_empty() {
+        return Vec::new();
+    }
+    let warm = matches!(outcome, PlanOutcome::Hit(_));
+    {
+        let mut s = lock_unpoisoned(&ctx.stats);
+        if warm {
+            s.cache_hits += parked.len() as u64;
+        } else {
+            s.coalesced_plans += parked.len() as u64;
+        }
+    }
+    let mut out = Vec::with_capacity(parked.len());
+    let mut lat = lock_unpoisoned(&ctx.plan_lat);
+    for pj in parked {
+        let waited = pj.since.elapsed();
+        lat.push(waited.as_secs_f64() * 1e3);
+        let result = outcome.to_result(&pj.job, waited, !warm);
+        out.push(PlannedJob {
+            job: pj.job,
+            result,
+        });
+    }
+    out
+}
+
 /// Resolve one dequeued job's plan and flush every waiter parked on its
 /// flight from that single resolution (single-flight publish/fail).
 fn plan_and_flush(ctx: &PlannerCtx, job: GemmJob) -> Vec<PlannedJob> {
@@ -1083,45 +1536,7 @@ fn plan_and_flush(ctx: &PlannerCtx, job: GemmJob) -> Vec<PlannedJob> {
     let key = PlanKey::new(job.gemm, job.objective);
     let outcome = match ctx.cache.get(&key) {
         Some(p) => PlanOutcome::Hit(p),
-        None if ctx.cancel.load(Ordering::SeqCst) => {
-            PlanOutcome::Failed("coordinator shutting down".to_string())
-        }
-        None => {
-            lock_unpoisoned(&ctx.stats).cache_misses += 1;
-            match ctx.dse.explore_with_cancel(&job.gemm, &ctx.cancel) {
-                Err(e) => PlanOutcome::Failed(e.to_string()),
-                Ok(r) => {
-                    // Gate accounting: how much stage-2 forest work the
-                    // resource gate skipped for this cold exploration.
-                    {
-                        let mut s = lock_unpoisoned(&ctx.stats);
-                        s.gate_rows_total += r.n_candidates as u64;
-                        s.gate_rows_skipped += r.n_gated as u64;
-                    }
-                    // Walk the ranked list until a design actually builds
-                    // (absorbs resource-model error, like re-running
-                    // codegen). `ranked_top` partially selects the 64
-                    // retry candidates instead of sorting all feasible.
-                    let built = r.ranked_top(job.objective, 64).into_iter().find_map(|c| {
-                        ctx.sim
-                            .evaluate(&job.gemm, &c.tiling, BufferPlacement::UramFirst)
-                            .ok()
-                            .map(|m| Plan {
-                                tiling: c.tiling,
-                                predicted: c.prediction,
-                                simulated: m,
-                            })
-                    });
-                    match built {
-                        None => PlanOutcome::Failed("no buildable design".to_string()),
-                        Some(plan) => {
-                            ctx.cache.insert(key, plan);
-                            PlanOutcome::Cold(plan)
-                        }
-                    }
-                }
-            }
-        }
+        None => explore_plan(ctx, &job.gemm, job.objective, key),
     };
     if matches!(outcome, PlanOutcome::Hit(_)) {
         lock_unpoisoned(&ctx.stats).cache_hits += 1;
@@ -1130,42 +1545,402 @@ fn plan_and_flush(ctx: &PlannerCtx, job: GemmJob) -> Vec<PlannedJob> {
     lock_unpoisoned(&ctx.plan_lat).push(plan_time.as_secs_f64() * 1e3);
     let result = outcome.to_result(&job, plan_time, false);
     let mut out = vec![PlannedJob { job, result }];
-
-    // Publish/fail: release the flight and complete every parked waiter
-    // from this one resolution. A warm resolution serves waiters as
-    // cache hits; a cold or failed one coalesces them (they shared the
-    // single exploration — and its error, if any).
-    let parked: Vec<ParkedJob> = ctx.flight.resolve(&key);
-    if !parked.is_empty() {
-        let warm = matches!(outcome, PlanOutcome::Hit(_));
-        {
-            let mut s = lock_unpoisoned(&ctx.stats);
-            if warm {
-                s.cache_hits += parked.len() as u64;
-            } else {
-                s.coalesced_plans += parked.len() as u64;
-            }
-        }
-        let mut lat = lock_unpoisoned(&ctx.plan_lat);
-        for pj in parked {
-            let waited = pj.since.elapsed();
-            lat.push(waited.as_secs_f64() * 1e3);
-            let result = outcome.to_result(&pj.job, waited, !warm);
-            out.push(PlannedJob {
-                job: pj.job,
-                result,
-            });
-        }
-    }
+    out.extend(flush_waiters(ctx, &key, &outcome));
     out
 }
 
-/// Run one planned data job through the execution backend and attach
-/// energy accounting: the plan's component power
+/// Send one planned job onward: to the executor when it carries data
+/// and planned cleanly, straight to the result channel otherwise. The
+/// admission slot is released wherever the result is finalized.
+fn route_planned(
+    ctx: &PlannerCtx,
+    exec_tx: &Sender<ExecMsg>,
+    result_tx: &Sender<JobResult>,
+    mut planned: PlannedJob,
+) {
+    let (has_a, has_b) = (planned.job.a.is_some(), planned.job.b.is_some());
+    // A job carrying exactly one operand can never execute; surface the
+    // defect instead of silently downgrading it to plan-only.
+    if has_a != has_b && planned.result.error.is_none() {
+        planned.result.error = Some("missing operand: data jobs need both A and B".to_string());
+    }
+    let has_data = has_a && has_b;
+    if has_data && planned.result.error.is_none() {
+        if let Err(SendError(ExecMsg::Job(mut planned))) =
+            exec_tx.send(ExecMsg::Job(Box::new(planned)))
+        {
+            planned.result.error = Some("executor unavailable".to_string());
+            finalize_result(&ctx.stats, &planned.result);
+            ctx.gauge.release(1);
+            let _ = result_tx.send(planned.result);
+        }
+    } else {
+        finalize_result(&ctx.stats, &planned.result);
+        ctx.gauge.release(1);
+        let _ = result_tx.send(planned.result);
+    }
+}
+
+/// Send one planned graph onward: to the executor when it carries
+/// inputs and planned cleanly, straight to the graph-result channel
+/// otherwise (plan-only graphs and planning failures).
+fn route_graph(
+    ctx: &PlannerCtx,
+    exec_tx: &Sender<ExecMsg>,
+    graph_result_tx: &Sender<GraphResult>,
+    planned: PlannedGraph,
+) {
+    let has_inputs = !planned.job.inputs.is_empty();
+    if has_inputs && planned.result.error.is_none() {
+        if let Err(SendError(ExecMsg::Graph(mut pg))) =
+            exec_tx.send(ExecMsg::Graph(Box::new(planned)))
+        {
+            pg.result.error = Some("executor unavailable".to_string());
+            finalize_graph(&ctx.stats, &pg.result);
+            ctx.gauge.release(1);
+            let _ = graph_result_tx.send(pg.result);
+        }
+    } else {
+        finalize_graph(&ctx.stats, &planned.result);
+        ctx.gauge.release(1);
+        let _ = graph_result_tx.send(planned.result);
+    }
+}
+
+/// Resolve one unique graph key to a plan. Order of preference: warm
+/// cache hit; claim the flight and explore (flushing any regular jobs
+/// that parked on the claim meanwhile); wait bounded for another job's
+/// in-flight exploration to publish. On wait expiry the graph runs its
+/// own exploration *without* owning the claim — a duplicate DSE beats
+/// deadlocking a single-planner pool whose leader is queued behind this
+/// very graph.
+fn resolve_graph_key(
+    ctx: &PlannerCtx,
+    gemm: &Gemm,
+    objective: Objective,
+    key: PlanKey,
+    flushed: &mut Vec<PlannedJob>,
+) -> Result<Plan, String> {
+    if let Some(p) = ctx.cache.get(&key) {
+        lock_unpoisoned(&ctx.stats).cache_hits += 1;
+        return Ok(p);
+    }
+    let outcome_plan = |outcome: PlanOutcome| match outcome {
+        PlanOutcome::Hit(p) | PlanOutcome::Cold(p) => Ok(p),
+        PlanOutcome::Failed(e) => Err(e),
+    };
+    if ctx.flight.try_claim(key) {
+        let outcome = explore_plan(ctx, gemm, objective, key);
+        flushed.extend(flush_waiters(ctx, &key, &outcome));
+        return outcome_plan(outcome);
+    }
+    let waited = Instant::now();
+    loop {
+        if let Some(p) = ctx.cache.peek(&key) {
+            lock_unpoisoned(&ctx.stats).coalesced_plans += 1;
+            return Ok(p);
+        }
+        if ctx.cancel.load(Ordering::SeqCst) {
+            return Err("coordinator shutting down".to_string());
+        }
+        if ctx.flight.try_claim(key) {
+            // The leader resolved without publishing a plan (it failed):
+            // take over the key and explore fresh.
+            let outcome = explore_plan(ctx, gemm, objective, key);
+            flushed.extend(flush_waiters(ctx, &key, &outcome));
+            return outcome_plan(outcome);
+        }
+        if waited.elapsed() > GRAPH_PLAN_WAIT {
+            // Never resolve the flight here — this planner does not own
+            // the claim, and stealing it would strand the real leader's
+            // parked waiters.
+            return outcome_plan(explore_plan(ctx, gemm, objective, key));
+        }
+        crate::util::backoff::pause(Duration::from_millis(1));
+    }
+}
+
+/// Plan a whole graph: try the graph-level cache first, else resolve
+/// each unique `(gemm, objective)` key exactly once — in first-occurrence
+/// node order — and fan the plan out to every same-shape node. Returns
+/// the planned graph plus any regular jobs flushed off flights the graph
+/// claimed.
+fn plan_graph(ctx: &PlannerCtx, job: GraphJob) -> (PlannedGraph, Vec<PlannedJob>) {
+    let started = Instant::now();
+    let mut flushed = Vec::new();
+    let n = job.graph.len();
+    let objective = job.objective;
+    // Submit already validated; failure here means a malformed graph
+    // slipped past it — surface the error rather than trusting it.
+    let (order, consumers) = match (job.graph.validate(), job.graph.consumer_counts()) {
+        (Ok(o), Ok(c)) => (o, c),
+        (Err(e), _) | (_, Err(e)) => {
+            let result = GraphResult::errored(job.id, n, objective, &e);
+            let planned = PlannedGraph {
+                job,
+                order: Vec::new(),
+                consumers: Vec::new(),
+                result,
+            };
+            return (planned, flushed);
+        }
+    };
+    let dag = job.graph.dag_hash(cache::objective_tag(objective));
+    // Same-shape nodes share one PlanKey: collect unique keys in
+    // first-occurrence order so one DSE (and one single-flight claim)
+    // covers every identical layer deterministically.
+    let mut uniq: Vec<(PlanKey, Vec<usize>)> = Vec::new();
+    for (i, node) in job.graph.nodes.iter().enumerate() {
+        let key = PlanKey::new(node.gemm, objective);
+        match uniq.iter_mut().find(|(k, _)| *k == key) {
+            Some((_, members)) => members.push(i),
+            None => uniq.push((key, vec![i])),
+        }
+    }
+    let shared = (n - uniq.len()) as u64;
+    let mut shared_flag = vec![false; n];
+    for (_, members) in &uniq {
+        for &i in members.iter().skip(1) {
+            shared_flag[i] = true;
+        }
+    }
+    let mut plans: Vec<Option<Plan>> = vec![None; n];
+    let mut graph_cache_hit = false;
+    if let Some(cached) = ctx.graph_cache.get(dag) {
+        if cached.len() == n {
+            for (i, p) in cached.into_iter().enumerate() {
+                plans[i] = Some(p);
+            }
+            graph_cache_hit = true;
+        }
+    }
+    let mut error: Option<String> = None;
+    if !graph_cache_hit {
+        for (key, members) in &uniq {
+            let node = &job.graph.nodes[members[0]];
+            match resolve_graph_key(ctx, &node.gemm, objective, *key, &mut flushed) {
+                Ok(plan) => {
+                    for &i in members {
+                        plans[i] = Some(plan);
+                    }
+                }
+                Err(e) => {
+                    error = Some(format!("node `{}`: {e}", node.name));
+                    break;
+                }
+            }
+        }
+        if error.is_none() {
+            if let Some(full) = plans.iter().copied().collect::<Option<Vec<Plan>>>() {
+                ctx.graph_cache.insert(dag, full);
+            }
+        }
+    }
+    if error.is_none() {
+        lock_unpoisoned(&ctx.stats).plans_shared += shared;
+    }
+    let plan_time = started.elapsed();
+    lock_unpoisoned(&ctx.plan_lat).push(plan_time.as_secs_f64() * 1e3);
+    let nodes = job
+        .graph
+        .nodes
+        .iter()
+        .enumerate()
+        .map(|(i, nd)| GraphNodeResult {
+            name: nd.name.clone(),
+            gemm: nd.gemm,
+            plan: plans[i],
+            shared_plan: shared_flag[i],
+            exec_time: None,
+            energy_j: None,
+            validation_err: None,
+            error: None,
+            c: None,
+        })
+        .collect();
+    let result = GraphResult {
+        id: job.id,
+        n_nodes: n,
+        objective,
+        plan_time,
+        graph_cache_hit,
+        plans_shared: if error.is_none() { shared } else { 0 },
+        exec_time_sum: None,
+        exec_time_critical: None,
+        energy_j: None,
+        avg_power_w: None,
+        gflops_per_w: None,
+        flops: job.graph.flops(),
+        resident_bytes_peak: 0,
+        nodes,
+        error,
+    };
+    let planned = PlannedGraph {
+        job,
+        order,
+        consumers,
+        result,
+    };
+    (planned, flushed)
+}
+
+/// Validate a data graph's client inputs against its external slots:
+/// unknown nodes, edge-fed slots, duplicates, shape mismatches (the
+/// shared [`operand_shape_error`] validator) and missing coverage are
+/// all typed submit-time errors. An empty input list is plan-only.
+fn graph_inputs_error(job: &GraphJob) -> Option<String> {
+    if job.inputs.is_empty() {
+        return None;
+    }
+    let mut covered: HashSet<(usize, Slot)> = HashSet::new();
+    for inp in &job.inputs {
+        let Some(i) = job.graph.index_of(&inp.node) else {
+            return Some(format!("input for unknown node `{}`", inp.node));
+        };
+        let node = &job.graph.nodes[i];
+        if !matches!(node.source(inp.slot), OperandSource::External) {
+            return Some(format!(
+                "node `{}` operand {} is fed by an edge, not a client input",
+                inp.node,
+                inp.slot.label()
+            ));
+        }
+        if !covered.insert((i, inp.slot)) {
+            return Some(format!(
+                "duplicate input for node `{}` operand {}",
+                inp.node,
+                inp.slot.label()
+            ));
+        }
+        let (a_len, b_len) = match inp.slot {
+            Slot::A => (Some(inp.data.len()), None),
+            Slot::B => (None, Some(inp.data.len())),
+        };
+        if let Some(why) = operand_shape_error(&node.gemm, a_len, b_len) {
+            return Some(format!("node `{}`: {why}", inp.node));
+        }
+    }
+    for (i, slot) in job.graph.external_slots() {
+        if !covered.contains(&(i, slot)) {
+            return Some(format!(
+                "node `{}` missing external operand {}",
+                job.graph.nodes[i].name,
+                slot.label()
+            ));
+        }
+    }
+    None
+}
+
+/// The outcome of one backend GEMM execution, shared by the single-job
+/// and graph-node paths.
+struct NodeExec {
+    outcome: Result<Vec<f32>, String>,
+    /// Board latency under `sim`, host wall-clock otherwise.
+    exec_time: Duration,
+    energy_j: Option<f64>,
+    avg_power_w: Option<f64>,
+    gflops_per_w: Option<f64>,
+    retries: u32,
+    timed_out: bool,
+    backend_used: Option<&'static str>,
+}
+
+/// Run one GEMM through the execution backend and attach energy
+/// accounting: the plan's component power
 /// ([`VersalSim::power_breakdown`]) — or, for the `sim` backend, the
 /// simulated measurement's power — integrated over the execution window
 /// through a synthesized BEAM trace, so `energy_j ≈ avg_power_w *
-/// exec_time` by construction.
+/// exec_time` by construction. On success the shared throughput/energy
+/// aggregates are bumped; `executed_jobs` vs `graph_nodes_executed`
+/// stays with the caller.
+fn execute_gemm(
+    resilient: &mut ResilientExec,
+    sim: &VersalSim,
+    session: &BeamSession,
+    stats: &Mutex<CoordinatorStats>,
+    a: &[f32],
+    b: &[f32],
+    g: Gemm,
+    plan: Option<Plan>,
+    deadline_ms: Option<u64>,
+) -> NodeExec {
+    let report = resilient.execute(&ExecRequest {
+        a,
+        b,
+        g,
+        tiling: plan.map(|p| p.tiling),
+        deadline_ms,
+    });
+    let (retries, timed_out, backend_used) =
+        (report.retries, report.timed_out, report.backend_used);
+    match report.result {
+        Err(e) => NodeExec {
+            outcome: Err(e),
+            exec_time: Duration::default(),
+            energy_j: None,
+            avg_power_w: None,
+            gflops_per_w: None,
+            retries,
+            timed_out,
+            backend_used,
+        },
+        Ok(c) => {
+            // Host wall-clock of the winning attempt's GEMM; the sim
+            // backend's board measurement (stamped by the tier that
+            // executed, supervised or inline) overrides it.
+            let host_elapsed = report.exec_time;
+            let board_m = report.measurement;
+            let elapsed = board_m
+                .map(|m| Duration::from_secs_f64(m.latency_s))
+                .unwrap_or(host_elapsed);
+            let exec_s = elapsed.as_secs_f64();
+            let mut energy_j = None;
+            let mut avg_power_w = None;
+            let mut gflops_per_w = None;
+            if let Some(plan) = plan {
+                if exec_s > 0.0 {
+                    let steady_w = board_m.map(|m| m.power_w).unwrap_or_else(|| {
+                        sim.power_breakdown(&g, &plan.tiling, &plan.simulated).total()
+                    });
+                    let key = fnv1a(&plan.tiling.to_bytes(&g));
+                    let trace = session.execution_trace(steady_w, exec_s, key);
+                    let e = trace.energy_j();
+                    if e.is_finite() && e > 0.0 {
+                        energy_j = Some(e);
+                        avg_power_w = Some(e / exec_s);
+                        gflops_per_w = Some(g.flops() / 1e9 / e);
+                    }
+                }
+            }
+            let mut s = lock_unpoisoned(stats);
+            s.executed_flops += g.flops();
+            s.exec_time_s += exec_s;
+            if report.kernel_profile.is_some() {
+                // Host-side microkernel throughput: the sim backend
+                // stamps board latency into exec_time, so the packed-
+                // panel GFLOPS figure needs the host wall-clock.
+                s.cpu_gemm_flops += g.flops();
+                s.cpu_gemm_time_s += host_elapsed.as_secs_f64();
+            }
+            s.executed_energy_j += energy_j.unwrap_or(0.0);
+            drop(s);
+            NodeExec {
+                outcome: Ok(c),
+                exec_time: elapsed,
+                energy_j,
+                avg_power_w,
+                gflops_per_w,
+                retries,
+                timed_out,
+                backend_used,
+            }
+        }
+    }
+}
+
+/// Run one planned data job through [`execute_gemm`] and fold the
+/// outcome into its `JobResult`.
 fn execute_job(
     resilient: &mut ResilientExec,
     sim: &VersalSim,
@@ -1186,67 +1961,197 @@ fn execute_job(
         }
     };
     let g = job.gemm;
+    // Defense in depth: submit shape-checks operands, but a mismatched
+    // buffer must never reach the backend.
     if a.len() != g.m * g.k || b.len() != g.k * g.n {
         planned.result.error = Some("operand size mismatch".into());
         return;
     }
-    let report = resilient.execute(&ExecRequest {
+    let exec = execute_gemm(
+        resilient,
+        sim,
+        session,
+        stats,
         a,
         b,
         g,
-        tiling: planned.result.plan.map(|p| p.tiling),
-        deadline_ms: job.deadline_ms,
-    });
-    planned.result.retries = report.retries;
-    planned.result.timed_out = report.timed_out;
-    planned.result.backend_used = report.backend_used;
-    match report.result {
+        planned.result.plan,
+        job.deadline_ms,
+    );
+    planned.result.retries = exec.retries;
+    planned.result.timed_out = exec.timed_out;
+    planned.result.backend_used = exec.backend_used;
+    match exec.outcome {
         Err(e) => planned.result.error = Some(e),
         Ok(c) => {
-            // Host wall-clock of the winning attempt's GEMM; the sim
-            // backend's board measurement (stamped by the tier that
-            // executed, supervised or inline) overrides it below.
-            let host_elapsed = report.exec_time;
-            let board_m = report.measurement;
-            let elapsed = board_m
-                .map(|m| Duration::from_secs_f64(m.latency_s))
-                .unwrap_or(host_elapsed);
-            planned.result.exec_time = Some(elapsed);
+            planned.result.exec_time = Some(exec.exec_time);
             if job.validate {
                 let want = matmul_ref(a, b, g.m, g.n, g.k);
                 planned.result.validation_err = Some(max_abs_diff(&c, &want));
             }
             planned.result.c = Some(c);
-            let exec_s = elapsed.as_secs_f64();
-            if let Some(plan) = planned.result.plan {
-                if exec_s > 0.0 {
-                    let steady_w = board_m.map(|m| m.power_w).unwrap_or_else(|| {
-                        sim.power_breakdown(&g, &plan.tiling, &plan.simulated).total()
-                    });
-                    let key = fnv1a(&plan.tiling.to_bytes(&g));
-                    let trace = session.execution_trace(steady_w, exec_s, key);
-                    let energy_j = trace.energy_j();
-                    if energy_j.is_finite() && energy_j > 0.0 {
-                        planned.result.energy_j = Some(energy_j);
-                        planned.result.avg_power_w = Some(energy_j / exec_s);
-                        planned.result.gflops_per_w = Some(g.flops() / 1e9 / energy_j);
+            planned.result.energy_j = exec.energy_j;
+            planned.result.avg_power_w = exec.avg_power_w;
+            planned.result.gflops_per_w = exec.gflops_per_w;
+            lock_unpoisoned(stats).executed_jobs += 1;
+        }
+    }
+}
+
+/// Execute a planned graph's nodes in topological order on the backend
+/// this thread owns. Intermediates live in an [`OperandArena`]:
+/// published with their downstream refcount when a node completes,
+/// freed the moment the last consumer has read them — no client
+/// round-trips. Per-node energy rolls up into graph totals, and the
+/// critical-path latency is tracked alongside the serial sum.
+#[allow(clippy::too_many_arguments)]
+fn execute_graph(
+    resilient: &mut ResilientExec,
+    sim: &VersalSim,
+    session: &BeamSession,
+    stats: &Mutex<CoordinatorStats>,
+    reconfig: &ReconfigModel,
+    board: &BoardConfig,
+    current_mapping: &mut Option<Tiling>,
+    planned: &mut PlannedGraph,
+) {
+    let n = planned.job.graph.len();
+    if planned.job.inputs.is_empty() {
+        return; // plan-only graph (the router keeps these off this path)
+    }
+    let mut ext: HashMap<(usize, Slot), &[f32]> = HashMap::new();
+    for inp in &planned.job.inputs {
+        if let Some(i) = planned.job.graph.index_of(&inp.node) {
+            ext.insert((i, inp.slot), inp.data.as_slice());
+        }
+    }
+    let keep = usize::from(planned.job.keep_outputs);
+    let mut arena = OperandArena::new(n);
+    // Completion time of each node along its longest dependency chain.
+    let mut done: Vec<Option<Duration>> = vec![None; n];
+    let mut exec_sum = Duration::default();
+    let mut energy_total = 0.0f64;
+    let mut flops_executed = 0.0f64;
+    let mut executed_nodes = 0u64;
+    let mut first_err: Option<String> = None;
+    let order = planned.order.clone();
+    for &idx in &order {
+        let node = &planned.job.graph.nodes[idx];
+        let g = node.gemm;
+        let (a_src, b_src) = (node.a.clone(), node.b.clone());
+        let resolve_idx = |src: &OperandSource| match src {
+            OperandSource::External => None,
+            OperandSource::Node(name) => planned.job.graph.index_of(name),
+        };
+        let (a_dep, b_dep) = (resolve_idx(&a_src), resolve_idx(&b_src));
+        let a_buf: Option<&[f32]> = match a_dep {
+            Some(d) => arena.get(d),
+            None => ext.get(&(idx, Slot::A)).copied(),
+        };
+        let b_buf: Option<&[f32]> = match b_dep {
+            Some(d) => arena.get(d),
+            None => ext.get(&(idx, Slot::B)).copied(),
+        };
+        match (a_buf, b_buf) {
+            (Some(a), Some(b)) => {
+                // Account the simulated board-side mapping switch,
+                // per node: a graph whose layers share a plan pays the
+                // reconfiguration once.
+                if let Some(plan) = planned.result.nodes[idx].plan {
+                    if *current_mapping != Some(plan.tiling) {
+                        let cost =
+                            reconfig.switch_time(current_mapping.as_ref(), &plan.tiling, board);
+                        let mut s = lock_unpoisoned(stats);
+                        s.reconfigs += 1;
+                        s.simulated_reconfig_s += cost;
+                        drop(s);
+                        *current_mapping = Some(plan.tiling);
+                    }
+                }
+                let exec = execute_gemm(
+                    resilient,
+                    sim,
+                    session,
+                    stats,
+                    a,
+                    b,
+                    g,
+                    planned.result.nodes[idx].plan,
+                    planned.job.deadline_ms,
+                );
+                let validation_err = match (&exec.outcome, planned.job.validate) {
+                    (Ok(c), true) => {
+                        let want = matmul_ref(a, b, g.m, g.n, g.k);
+                        Some(max_abs_diff(c, &want))
+                    }
+                    _ => None,
+                };
+                let nr = &mut planned.result.nodes[idx];
+                nr.validation_err = validation_err;
+                match exec.outcome {
+                    Err(e) => {
+                        first_err
+                            .get_or_insert_with(|| format!("node `{}` failed: {e}", nr.name));
+                        nr.error = Some(e);
+                    }
+                    Ok(c) => {
+                        nr.exec_time = Some(exec.exec_time);
+                        nr.energy_j = exec.energy_j;
+                        exec_sum += exec.exec_time;
+                        energy_total += exec.energy_j.unwrap_or(0.0);
+                        flops_executed += g.flops();
+                        executed_nodes += 1;
+                        let dep_done = [a_dep, b_dep]
+                            .into_iter()
+                            .flatten()
+                            .filter_map(|d| done[d])
+                            .max()
+                            .unwrap_or_default();
+                        done[idx] = Some(dep_done + exec.exec_time);
+                        // Park the output with its downstream refcount
+                        // (+1 keeps it resident for an in-process caller
+                        // that asked for outputs back).
+                        arena.publish(idx, c, planned.consumers[idx] + keep);
                     }
                 }
             }
-            let mut s = lock_unpoisoned(stats);
-            s.executed_jobs += 1;
-            s.executed_flops += g.flops();
-            s.exec_time_s += exec_s;
-            if report.kernel_profile.is_some() {
-                // Host-side microkernel throughput: the sim backend
-                // stamps board latency into exec_time, so the packed-
-                // panel GFLOPS figure needs the host wall-clock.
-                s.cpu_gemm_flops += g.flops();
-                s.cpu_gemm_time_s += host_elapsed.as_secs_f64();
+            _ => {
+                let missing = if a_buf.is_none() { &a_src } else { &b_src };
+                let why = match missing {
+                    OperandSource::Node(name) => format!("upstream node `{name}` failed"),
+                    OperandSource::External => "missing external operand".to_string(),
+                };
+                let nr = &mut planned.result.nodes[idx];
+                first_err.get_or_insert_with(|| format!("node `{}`: {why}", nr.name));
+                nr.error = Some(why);
             }
-            s.executed_energy_j += planned.result.energy_j.unwrap_or(0.0);
+        }
+        // This node is done reading its upstream slots — successful or
+        // not, check its refcounts in so the arena can free eagerly.
+        for d in [a_dep, b_dep].into_iter().flatten() {
+            arena.consume(d);
         }
     }
+    if planned.job.keep_outputs {
+        for i in 0..n {
+            planned.result.nodes[i].c = arena.take(i);
+        }
+    }
+    let r = &mut planned.result;
+    r.exec_time_sum = Some(exec_sum);
+    r.exec_time_critical = done.iter().flatten().max().copied();
+    if energy_total > 0.0 {
+        r.energy_j = Some(energy_total);
+        if exec_sum.as_secs_f64() > 0.0 {
+            r.avg_power_w = Some(energy_total / exec_sum.as_secs_f64());
+        }
+        r.gflops_per_w = Some(flops_executed / 1e9 / energy_total);
+    }
+    r.resident_bytes_peak = arena.peak_bytes();
+    if r.error.is_none() {
+        r.error = first_err;
+    }
+    lock_unpoisoned(stats).graph_nodes_executed += executed_nodes;
 }
 
 #[cfg(test)]
@@ -1819,5 +2724,192 @@ mod tests {
         assert_eq!(r1[0].plan.unwrap().tiling, r2[0].plan.unwrap().tiling);
         assert_eq!(second.stats().cache_hits, 1);
         let _ = std::fs::remove_dir_all(dir);
+    }
+
+    /// Deterministic pseudo-random operand data (no RNG dependency).
+    fn fill(len: usize, salt: u32) -> Vec<f32> {
+        (0..len)
+            .map(|i| ((i as u32).wrapping_mul(2654435761).wrapping_add(salt) % 17) as f32 * 0.125 - 1.0)
+            .collect()
+    }
+
+    #[test]
+    fn graph_job_shares_plans_and_matches_individual_jobs() {
+        // Four identical-shape nodes chained A <- prev (the 8x16 output
+        // feeds the next node's 8x16 A operand): exactly one DSE must
+        // cover all four layers, intermediates stay in the arena, and
+        // every node output must be bit-identical to running the same
+        // chain as individual jobs.
+        let cfg = quick_cfg();
+        let mut coord = coordinator(&cfg);
+        let g = Gemm::new(8, 16, 16);
+        let mut graph = GemmGraph::new().push(
+            "n0",
+            g,
+            OperandSource::External,
+            OperandSource::External,
+        );
+        for i in 1..4usize {
+            graph = graph.push(
+                &format!("n{i}"),
+                g,
+                OperandSource::Node(format!("n{}", i - 1)),
+                OperandSource::External,
+            );
+        }
+        let a0 = fill(g.m * g.k, 1);
+        let bs: Vec<Vec<f32>> = (0..4).map(|i| fill(g.k * g.n, 100 + i)).collect();
+        let mut inputs = vec![GraphInput::new("n0", Slot::A, a0.clone())];
+        for (i, b) in bs.iter().enumerate() {
+            inputs.push(GraphInput::new(&format!("n{i}"), Slot::B, b.clone()));
+        }
+        let mut job = GraphJob::with_inputs(1, graph, Objective::Throughput, inputs);
+        job.keep_outputs = true;
+        let r = coord.run_graph(job);
+        assert!(r.error.is_none(), "graph failed: {:?}", r.error);
+        assert_eq!(r.n_nodes, 4);
+        assert_eq!(r.plans_shared, 3, "repeated layers did not share a plan");
+        assert!(!r.graph_cache_hit);
+        // One DSE for four same-shape layers; per-node accounting split
+        // from single-job accounting.
+        let s = coord.stats();
+        assert_eq!(s.cache_misses, 1, "shared-shape graph ran extra DSEs");
+        assert_eq!(s.plans_shared, 3);
+        assert_eq!(s.graph_nodes_executed, 4);
+        assert_eq!(s.graph_jobs, 1);
+        assert_eq!(s.executed_jobs, 0);
+        assert_eq!(s.jobs_completed, 1, "a graph counts once, not per node");
+        assert!(s.resident_bytes_peak > 0, "no intermediates went resident");
+        // All nodes share the leader's tiling; later nodes are marked.
+        let t0 = r.nodes[0].plan.expect("plan").tiling;
+        assert!(r.nodes.iter().all(|nr| nr.plan.expect("plan").tiling == t0));
+        assert!(!r.nodes[0].shared_plan && r.nodes[1..].iter().all(|nr| nr.shared_plan));
+        // Graph rollups: energy is the sum of node energies; a pure
+        // chain's critical path equals (<=, with rounding) the sum.
+        let sum = r.exec_time_sum.expect("sum latency");
+        let crit = r.exec_time_critical.expect("critical path");
+        assert!(crit <= sum);
+        let e = r.energy_j.expect("graph energy");
+        let node_e: f64 = r.nodes.iter().map(|nr| nr.energy_j.unwrap_or(0.0)).sum();
+        assert!((e - node_e).abs() <= 1e-9 * e.max(1.0), "{e} != {node_e}");
+        assert!(r.avg_power_w.expect("avg power") > 0.0);
+        assert!(r.gflops_per_w.expect("efficiency") > 0.0);
+        // Bit-exact equivalence against the chain run as single jobs.
+        let mut prev = a0;
+        for (i, nr) in r.nodes.iter().enumerate() {
+            let jr = coord.run_batch(vec![GemmJob::with_data(
+                100 + i as u64,
+                g,
+                Objective::Throughput,
+                prev.clone(),
+                bs[i].clone(),
+            )]);
+            assert!(jr[0].error.is_none(), "single job {i}: {:?}", jr[0].error);
+            let want = jr[0].c.clone().expect("single-job output");
+            let got = nr.c.clone().expect("kept graph output");
+            assert_eq!(got, want, "node {i} output differs from single job");
+            prev = want;
+        }
+    }
+
+    #[test]
+    fn plan_only_graph_plans_all_nodes_and_repeat_hits_graph_cache() {
+        let cfg = quick_cfg();
+        let mut coord = coordinator(&cfg);
+        let graph = GemmGraph::ncf(64);
+        let r1 = coord.run_graph(GraphJob::plan_only(1, graph.clone(), Objective::EnergyEfficiency));
+        assert!(r1.error.is_none(), "{:?}", r1.error);
+        assert!(!r1.graph_cache_hit);
+        assert_eq!(r1.plans_shared, 0, "ncf funnel has no repeated shapes");
+        assert!(r1
+            .nodes
+            .iter()
+            .all(|nr| nr.plan.is_some() && nr.exec_time.is_none() && nr.c.is_none()));
+        assert_eq!(coord.stats().cache_misses, 3);
+        // The same DAG again resolves from one graph-level cache entry:
+        // no per-key lookups, no DSE.
+        let r2 = coord.run_graph(GraphJob::plan_only(2, graph, Objective::EnergyEfficiency));
+        assert!(r2.graph_cache_hit, "repeat DAG missed the graph cache");
+        assert_eq!(coord.stats().cache_misses, 3);
+        assert_eq!(coord.graph_plan_cache().hits(), 1);
+        for (n1, n2) in r1.nodes.iter().zip(&r2.nodes) {
+            assert_eq!(n1.plan.expect("p1").tiling, n2.plan.expect("p2").tiling);
+        }
+    }
+
+    #[test]
+    fn invalid_graphs_are_refused_at_submit() {
+        let cfg = quick_cfg();
+        let mut coord = coordinator(&cfg);
+        let g = Gemm::new(8, 8, 8);
+        // Cycle: typed error, no planning.
+        let cyc = GemmGraph::new()
+            .push("a", g, OperandSource::Node("b".into()), OperandSource::External)
+            .push("b", g, OperandSource::Node("a".into()), OperandSource::External);
+        let r = coord.run_graph(GraphJob::plan_only(1, cyc, Objective::Throughput));
+        assert!(r.error.as_deref().unwrap_or("").contains("cycle"), "{:?}", r.error);
+        // Data graph missing an external operand.
+        let chain = GemmGraph::new().push(
+            "n0",
+            g,
+            OperandSource::External,
+            OperandSource::External,
+        );
+        let job = GraphJob::with_inputs(
+            2,
+            chain.clone(),
+            Objective::Throughput,
+            vec![GraphInput::new("n0", Slot::A, vec![0.0; 64])],
+        );
+        let r = coord.run_graph(job);
+        assert!(
+            r.error.as_deref().unwrap_or("").contains("missing external operand"),
+            "{:?}",
+            r.error
+        );
+        // Wrong-size input: the shared shape validator fires per node.
+        let job = GraphJob::with_inputs(
+            3,
+            chain,
+            Objective::Throughput,
+            vec![
+                GraphInput::new("n0", Slot::A, vec![0.0; 63]),
+                GraphInput::new("n0", Slot::B, vec![0.0; 64]),
+            ],
+        );
+        let r = coord.run_graph(job);
+        assert!(r.error.as_deref().unwrap_or("").contains("elements"), "{:?}", r.error);
+        let s = coord.stats();
+        assert_eq!(s.cache_misses, 0, "a refused graph reached the planner");
+        assert_eq!(s.jobs_failed, 3);
+        assert_eq!(s.graph_jobs, 3);
+    }
+
+    #[test]
+    fn shape_mismatched_data_job_is_refused_before_planning() {
+        // Satellite regression: a data job whose operands are present
+        // but k-mismatched used to plan (a wasted DSE) and only fail at
+        // execute time with a generic "operand size mismatch".
+        let cfg = quick_cfg();
+        let mut coord = coordinator(&cfg);
+        let g = Gemm::new(64, 96, 64);
+        let job = GemmJob::with_data(
+            5,
+            g,
+            Objective::Throughput,
+            vec![1f32; 64 * 48], // sized for k=48, not 64
+            vec![1f32; 64 * 96],
+        );
+        let results = coord.run_batch(vec![job]);
+        assert_eq!(results.len(), 1);
+        let err = results[0].error.as_deref().unwrap_or("");
+        assert!(
+            err.contains("operand A") && err.contains("elements"),
+            "untyped error: {err}"
+        );
+        assert!(results[0].exec_time.is_none());
+        let s = coord.stats();
+        assert_eq!(s.cache_misses, 0, "shape-mismatched job reached the planner");
+        assert_eq!(s.jobs_failed, 1);
     }
 }

@@ -1189,6 +1189,51 @@ mod tests {
         );
     }
 
+    /// Known-bad graph-protocol fixture: `SUBMIT_GRAPH` frames encode
+    /// and round-trip in a test, but `decode_frame` is missing the
+    /// `K_SUBMIT_GRAPH` arm — exactly the one-sided wire bug the v4
+    /// graph kinds could reintroduce. The rule must anchor it on the
+    /// constant's declaration line.
+    #[test]
+    fn wire_exhaustiveness_catches_missing_submit_graph_decode() {
+        let src = "\
+pub const K_SUBMIT_GRAPH: u8 = 10;
+pub const K_GRAPH_RESULT: u8 = 11;
+pub enum Frame { SubmitGraph(u32), GraphResult(u32) }
+pub fn encode_frame(f: &Frame) -> u8 {
+    match f {
+        Frame::SubmitGraph(_) => K_SUBMIT_GRAPH,
+        Frame::GraphResult(_) => K_GRAPH_RESULT,
+    }
+}
+pub fn decode_frame(k: u8) -> Option<Frame> {
+    match k {
+        K_GRAPH_RESULT => Some(Frame::GraphResult(0)),
+        _ => None,
+    }
+}
+#[cfg(test)]
+mod tests {
+    use super::*;
+    #[test]
+    fn roundtrip_graph_kinds() {
+        let s = Frame::SubmitGraph(1);
+        assert!(decode_frame(encode_frame(&s)).is_none());
+        let r = Frame::GraphResult(1);
+        assert!(decode_frame(encode_frame(&r)).is_some());
+    }
+}
+";
+        let repo = Repo::from_sources(&[("rust/src/server/protocol.rs", src)]);
+        // Exactly one finding: K_SUBMIT_GRAPH never decoded (line 1).
+        // Both variants are exercised by the test span, and both kinds
+        // are encoded, so nothing else may fire.
+        assert_eq!(
+            anchors(&repo, "wire-exhaustiveness"),
+            vec![("rust/src/server/protocol.rs".to_string(), 1)]
+        );
+    }
+
     #[test]
     fn stats_parity_fires_and_respects_waiver() {
         let coord = "\

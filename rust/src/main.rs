@@ -55,9 +55,15 @@ SUBCOMMANDS:
     serve stop     graceful shutdown (drain, persist cache, exit)
     serve status   PID + live stats of the running daemon
     serve submit   push --jobs N demo jobs through the socket client
+    serve submit-graph  submit one whole-model forward pass as a single
+                   graph job (a DAG of GEMMs; plans are shared across
+                   identical layers, intermediates stay daemon-resident)
     serve drain    close admission, finish in-flight, persist the cache
   serve options:
             [--jobs N] [--plan-only] [--artifacts artifacts] [--data-dir data]
+            [--model qwen|llama|deit|bert] [--layers N] [--seq M]
+                                       graph-job shape (submit-graph only;
+                                       defaults: qwen, 2 layers, seq 32)
             [--state-dir DIR]          daemon state/log/socket dir
                                        (default: .versal-gemm)
             [--socket path|tcp://host:port] daemon endpoint
@@ -261,10 +267,11 @@ fn cmd_serve(args: &Args, cfg: Config, data_dir: PathBuf) -> anyhow::Result<()> 
         Some("stop") => serve_stop(args),
         Some("status") => serve_status(args),
         Some("submit") => serve_submit(args),
+        Some("submit-graph") => serve_submit_graph(args),
         Some("drain") => serve_drain(args),
         Some(other) => anyhow::bail!(
-            "unknown serve action `{other}` (start|run|stop|status|submit|drain, \
-             or no action for the in-process demo stream)"
+            "unknown serve action `{other}` (start|run|stop|status|submit|\
+             submit-graph|drain, or no action for the in-process demo stream)"
         ),
     }
 }
@@ -671,6 +678,78 @@ fn serve_submit(args: &Args) -> anyhow::Result<()> {
         100.0 * s.get("cache_hit_rate").unwrap_or(0.0)
     );
     anyhow::ensure!(ok == results.len(), "{} jobs failed", results.len() - ok);
+    Ok(())
+}
+
+/// Submit one whole-model forward pass as a single graph job over the
+/// socket: the daemon plans the DAG (one DSE shared across identical
+/// layers), executes it in topo order with intermediates resident in
+/// the executor's arena, and streams back graph-level rollups only.
+fn serve_submit_graph(args: &Args) -> anyhow::Result<()> {
+    use versal_gemm::coordinator::GraphInput;
+    use versal_gemm::server::protocol::GraphSpec;
+    use versal_gemm::workloads::graph::GemmGraph;
+    use versal_gemm::workloads::models::{bert_base, deit_base, llama3_1b, qwen25_05b};
+
+    let (_, endpoint) = serve_paths(args);
+    let model = args.opt_or("model", "qwen");
+    let spec = match model {
+        "qwen" => qwen25_05b(),
+        "llama" => llama3_1b(),
+        "deit" => deit_base(),
+        "bert" => bert_base(),
+        other => anyhow::bail!("unknown --model `{other}` (qwen|llama|deit|bert)"),
+    };
+    let layers = args.opt_usize("layers", 2)?.max(1);
+    let seq = args.opt_usize("seq", 32)?.max(1);
+    let objective = Objective::parse(args.opt_or("objective", "throughput"))?;
+    let plan_only = args.flag("plan-only");
+    let graph = GemmGraph::transformer(&spec, seq, layers);
+
+    let mut inputs = Vec::new();
+    if !plan_only {
+        let mut rng = Rng::new(0xDA6);
+        for (idx, slot) in graph.external_slots() {
+            let data: Vec<f32> = (0..graph.slot_elems(idx, slot))
+                .map(|_| rng.range_f64(-0.5, 0.5) as f32)
+                .collect();
+            inputs.push(GraphInput::new(&graph.nodes[idx].name, slot, data));
+        }
+    }
+    let wire_spec = GraphSpec::from_graph(1, &graph, objective, inputs);
+
+    let mut client =
+        Client::connect_retry_with(&endpoint, Duration::from_secs(10), client_io_timeout(args)?)?;
+    let started = Instant::now();
+    client.submit_graph(&wire_spec)?;
+    let r = client.next_graph_result()?;
+    let wall = started.elapsed();
+    if let Some(e) = &r.error {
+        anyhow::bail!("graph job failed: {e}");
+    }
+    let s = client.stats()?;
+    println!(
+        "graph `{}` x{layers} layers (seq {seq}): {} nodes in {:.2}s over {}\n\
+         plan {:.1} ms ({} plans shared{}), exec sum {:.1} ms / critical path {:.1} ms\n\
+         energy {:.3} J, avg power {:.1} W, {:.2} GFLOPS/W, peak resident {} KiB\n\
+         daemon lifetime: {:.0} graph jobs, {:.0} graph nodes executed, {:.0} plans shared",
+        model,
+        r.n_nodes,
+        wall.as_secs_f64(),
+        endpoint.label(),
+        r.plan_time_us as f64 / 1e3,
+        r.plans_shared,
+        if r.graph_cache_hit { ", whole-DAG cache hit" } else { "" },
+        r.exec_sum_us.unwrap_or(0) as f64 / 1e3,
+        r.exec_critical_us.unwrap_or(0) as f64 / 1e3,
+        r.energy_j.unwrap_or(0.0),
+        r.avg_power_w.unwrap_or(0.0),
+        r.gflops_per_w.unwrap_or(0.0),
+        r.resident_bytes_peak / 1024,
+        s.get("graph_jobs").unwrap_or(0.0),
+        s.get("graph_nodes_executed").unwrap_or(0.0),
+        s.get("plans_shared").unwrap_or(0.0),
+    );
     Ok(())
 }
 

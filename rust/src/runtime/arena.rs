@@ -1,0 +1,145 @@
+//! Executor-owned operand arena for graph jobs: node outputs stay
+//! resident on the daemon side, refcounted by their downstream
+//! consumers, and are freed the moment the last consumer has read them
+//! — intermediates never round-trip through the client (DESIGN.md §11).
+//!
+//! The arena is deliberately simple: one optional slot per graph node,
+//! indexed by node index, plus live/peak byte accounting the
+//! coordinator surfaces as `resident_bytes_peak`. It is owned by the
+//! single executor thread, so no interior locking is needed.
+
+/// One resident node output.
+struct ArenaSlot {
+    data: Vec<f32>,
+    /// Reads left before the buffer is dropped.
+    consumers_left: usize,
+}
+
+/// Refcounted residency arena for one graph job's intermediates.
+#[derive(Default)]
+pub struct OperandArena {
+    slots: Vec<Option<ArenaSlot>>,
+    live_bytes: u64,
+    peak_bytes: u64,
+}
+
+impl OperandArena {
+    /// An arena with one (empty) slot per graph node.
+    pub fn new(n_nodes: usize) -> OperandArena {
+        let mut slots = Vec::with_capacity(n_nodes);
+        slots.resize_with(n_nodes, || None);
+        OperandArena {
+            slots,
+            live_bytes: 0,
+            peak_bytes: 0,
+        }
+    }
+
+    /// Park a node's output with its consumer refcount. A zero count
+    /// drops the buffer immediately (dead-end node nobody reads).
+    pub fn publish(&mut self, idx: usize, data: Vec<f32>, consumers: usize) {
+        if idx >= self.slots.len() || consumers == 0 {
+            return;
+        }
+        self.live_bytes += 4 * data.len() as u64;
+        self.peak_bytes = self.peak_bytes.max(self.live_bytes);
+        self.slots[idx] = Some(ArenaSlot {
+            data,
+            consumers_left: consumers,
+        });
+    }
+
+    /// Borrow a resident output (does not consume a refcount).
+    pub fn get(&self, idx: usize) -> Option<&[f32]> {
+        self.slots
+            .get(idx)
+            .and_then(|s| s.as_ref())
+            .map(|s| s.data.as_slice())
+    }
+
+    /// Record that one consumer has finished reading `idx`; the buffer
+    /// is freed when the last consumer checks in.
+    pub fn consume(&mut self, idx: usize) {
+        let Some(slot) = self.slots.get_mut(idx).and_then(|s| s.as_mut()) else {
+            return;
+        };
+        slot.consumers_left = slot.consumers_left.saturating_sub(1);
+        if slot.consumers_left == 0 {
+            let freed = 4 * slot.data.len() as u64;
+            self.slots[idx] = None;
+            self.live_bytes = self.live_bytes.saturating_sub(freed);
+        }
+    }
+
+    /// Remove and return a resident buffer regardless of refcount (used
+    /// to hand kept outputs back to an in-process caller).
+    pub fn take(&mut self, idx: usize) -> Option<Vec<f32>> {
+        let slot = self.slots.get_mut(idx)?.take()?;
+        self.live_bytes = self.live_bytes.saturating_sub(4 * slot.data.len() as u64);
+        Some(slot.data)
+    }
+
+    /// Bytes currently resident.
+    pub fn live_bytes(&self) -> u64 {
+        self.live_bytes
+    }
+
+    /// High-water mark of resident bytes over the arena's lifetime.
+    pub fn peak_bytes(&self) -> u64 {
+        self.peak_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn diamond_refcount_frees_at_last_consumer() {
+        // root output read by two consumers (a diamond's fan-out).
+        let mut arena = OperandArena::new(4);
+        arena.publish(0, vec![1.0; 64], 2);
+        assert_eq!(arena.live_bytes(), 256);
+        assert!(arena.get(0).is_some());
+        arena.consume(0);
+        // First consumer done: still resident for the second.
+        assert!(arena.get(0).is_some(), "freed before last consumer");
+        assert_eq!(arena.live_bytes(), 256);
+        arena.consume(0);
+        // Last consumer done: freed.
+        assert!(arena.get(0).is_none(), "not freed at last consumer");
+        assert_eq!(arena.live_bytes(), 0);
+        assert_eq!(arena.peak_bytes(), 256);
+    }
+
+    #[test]
+    fn peak_tracks_concurrent_residency() {
+        let mut arena = OperandArena::new(3);
+        arena.publish(0, vec![0.0; 16], 1);
+        arena.publish(1, vec![0.0; 32], 1);
+        assert_eq!(arena.peak_bytes(), 4 * 48);
+        arena.consume(0);
+        arena.consume(1);
+        arena.publish(2, vec![0.0; 8], 1);
+        // Peak is sticky even after frees.
+        assert_eq!(arena.live_bytes(), 32);
+        assert_eq!(arena.peak_bytes(), 4 * 48);
+    }
+
+    #[test]
+    fn zero_consumer_publish_is_dropped_and_take_clears() {
+        let mut arena = OperandArena::new(2);
+        arena.publish(0, vec![0.0; 8], 0);
+        assert!(arena.get(0).is_none());
+        assert_eq!(arena.live_bytes(), 0);
+        arena.publish(1, vec![3.0; 4], 5);
+        assert_eq!(arena.take(1), Some(vec![3.0; 4]));
+        assert!(arena.get(1).is_none());
+        assert_eq!(arena.live_bytes(), 0);
+        // Out-of-range and double-take are no-ops, never panics.
+        assert_eq!(arena.take(1), None);
+        arena.consume(7);
+        arena.publish(9, vec![0.0; 4], 1);
+        assert_eq!(arena.take(9), None);
+    }
+}

@@ -16,6 +16,7 @@
 //! and a simulator-stamped variant, so the coordinator executes data
 //! jobs even when no artifacts exist.
 
+pub mod arena;
 pub mod backend;
 pub mod faults;
 pub mod microkernel;

@@ -14,7 +14,8 @@ use anyhow::Context;
 use crate::util::backoff;
 
 use super::protocol::{
-    encode_frame, encode_submit, Frame, FrameReader, JobSpec, WireResult, WireStats,
+    encode_frame, encode_submit, encode_submit_graph, Frame, FrameReader, GraphSpec, JobSpec,
+    WireGraphResult, WireResult, WireStats,
 };
 use super::{Endpoint, NetStream};
 
@@ -102,6 +103,13 @@ impl Client {
         Ok(())
     }
 
+    /// Submit one whole-model graph job (encoded straight from the
+    /// borrowed spec, so input buffers are not cloned).
+    pub fn submit_graph(&mut self, spec: &GraphSpec) -> anyhow::Result<()> {
+        self.stream.write_all(&encode_submit_graph(spec))?;
+        Ok(())
+    }
+
     /// Blocking read of the next frame; `None` on clean EOF. A read
     /// that exceeds the I/O timeout fails with a typed timeout error
     /// instead of hanging the CLI on a wedged daemon.
@@ -158,6 +166,20 @@ impl Client {
                     anyhow::bail!("daemon error (job {job_id}): {message}")
                 }
                 _ => continue, // stray Stats/Drained/Ack from earlier requests
+            }
+        }
+    }
+
+    /// Next graph result, skipping unrelated frames (per-job Result
+    /// frames included); daemon-reported protocol errors become `Err`.
+    pub fn next_graph_result(&mut self) -> anyhow::Result<WireGraphResult> {
+        loop {
+            match self.recv()? {
+                Frame::GraphResult(r) => return Ok(r),
+                Frame::Error { job_id, message } => {
+                    anyhow::bail!("daemon error (job {job_id}): {message}")
+                }
+                _ => continue,
             }
         }
     }

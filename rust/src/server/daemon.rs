@@ -43,7 +43,9 @@ use crate::dse::DseEngine;
 
 use crate::util::backoff;
 
-use super::protocol::{encode_frame, Frame, FrameReader, JobSpec, WireResult, WireStats};
+use super::protocol::{
+    encode_frame, Frame, FrameReader, GraphSpec, JobSpec, WireGraphResult, WireResult, WireStats,
+};
 use super::state::{self, StateFile};
 use super::{Endpoint, Listener, NetStream};
 
@@ -174,6 +176,8 @@ struct Conn {
     out_pos: usize,
     /// Decoded SUBMITs not yet handed to the coordinator.
     pending_submits: VecDeque<JobSpec>,
+    /// Decoded SUBMIT_GRAPHs not yet handed to the coordinator.
+    pending_graphs: VecDeque<GraphSpec>,
     /// Owed a `Drained` frame when the drain completes.
     drain_waiter: bool,
     /// Owed an `Ack` just before the daemon stops.
@@ -201,6 +205,10 @@ pub struct Daemon {
     logger: Logger,
     conns: Vec<Conn>,
     routes: HashMap<u64, Route>,
+    /// Separate routing map for graph jobs: graph ids and job ids share
+    /// the same daemon-global counter but come back on different
+    /// result streams.
+    graph_routes: HashMap<u64, Route>,
     next_job_id: u64,
     next_conn_id: u64,
     state: DaemonState,
@@ -284,6 +292,7 @@ impl Daemon {
             logger,
             conns: Vec::new(),
             routes: HashMap::new(),
+            graph_routes: HashMap::new(),
             next_job_id: 0,
             next_conn_id: 0,
             state: DaemonState::Ready,
@@ -314,7 +323,7 @@ impl Daemon {
             // Keep a dead conn around while it still has decoded submits
             // (deferred by backpressure) so its jobs are not lost.
             self.conns
-                .retain(|c| !c.dead || !c.pending_submits.is_empty());
+                .retain(|c| !c.dead || !c.pending_submits.is_empty() || !c.pending_graphs.is_empty());
             self.maybe_stop();
             if self.state != DaemonState::Stopped {
                 backoff::pause(self.opts.tick);
@@ -327,6 +336,9 @@ impl Daemon {
         self.coord.shutdown();
         while self.coord.try_next_result().is_some() {
             self.results_dropped += 1; // no client left to route these to
+        }
+        while self.coord.try_next_graph_result().is_some() {
+            self.results_dropped += 1;
         }
         if let Endpoint::Unix(path) = &self.opts.endpoint {
             let _ = std::fs::remove_file(path);
@@ -380,6 +392,7 @@ impl Daemon {
                         outbox: VecDeque::new(),
                         out_pos: 0,
                         pending_submits: VecDeque::new(),
+                        pending_graphs: VecDeque::new(),
                         drain_waiter: false,
                         stop_waiter: false,
                         closing: false,
@@ -407,7 +420,8 @@ impl Daemon {
             }
             // Backpressure: a client that has outrun the coordinator
             // keeps its bytes in the kernel buffer until we catch up.
-            if conn.pending_submits.len() >= MAX_PENDING_SUBMITS {
+            // Graph submissions count against the same budget.
+            if conn.pending_submits.len() + conn.pending_graphs.len() >= MAX_PENDING_SUBMITS {
                 continue;
             }
             loop {
@@ -488,9 +502,22 @@ impl Daemon {
                     self.conns[idx].stop_waiter = true;
                 }
             }
+            Frame::SubmitGraph(spec) => {
+                if self.state == DaemonState::Ready {
+                    self.conns[idx].pending_graphs.push_back(spec);
+                } else {
+                    let wire = WireGraphResult::refused(
+                        spec.id,
+                        spec.nodes.len() as u64,
+                        "daemon draining: admission closed",
+                    );
+                    self.conns[idx].send(&Frame::GraphResult(wire));
+                }
+            }
             // Server-to-client kinds arriving at the server: protocol
             // violation; tell the client and hang up.
-            Frame::Result(_) | Frame::Stats(_) | Frame::Drained(_) | Frame::Ack => {
+            Frame::Result(_) | Frame::Stats(_) | Frame::Drained(_) | Frame::Ack
+            | Frame::GraphResult(_) => {
                 self.conns[idx].send(&Frame::Error {
                     job_id: 0,
                     message: "protocol violation: server-only frame kind".to_string(),
@@ -528,6 +555,20 @@ impl Daemon {
                 self.jobs_submitted += 1;
                 self.coord.submit(spec.into_job(gid));
             }
+            while !conn.pending_graphs.is_empty() {
+                if self.coord.admission() == Admission::Block && !self.coord.queue_room() {
+                    return;
+                }
+                let Some(spec) = conn.pending_graphs.pop_front() else {
+                    break;
+                };
+                let gid = self.next_job_id;
+                self.next_job_id += 1;
+                let route = Route { conn_id: conn.id, client_id: spec.id };
+                self.graph_routes.insert(gid, route);
+                self.jobs_submitted += 1;
+                self.coord.submit_graph(spec.into_job(gid));
+            }
         }
     }
 
@@ -546,6 +587,21 @@ impl Daemon {
                 .find(|c| c.id == route.conn_id && !c.dead)
             {
                 Some(conn) => conn.send(&Frame::Result(wire)),
+                None => self.results_dropped += 1,
+            }
+        }
+        while let Some(r) = self.coord.try_next_graph_result() {
+            let Some(route) = self.graph_routes.remove(&r.id) else {
+                self.results_dropped += 1;
+                continue;
+            };
+            let wire = WireGraphResult::from_result(route.client_id, &r);
+            match self
+                .conns
+                .iter_mut()
+                .find(|c| c.id == route.conn_id && !c.dead)
+            {
+                Some(conn) => conn.send(&Frame::GraphResult(wire)),
                 None => self.results_dropped += 1,
             }
         }
@@ -569,6 +625,14 @@ impl Daemon {
                     "daemon draining: admission closed",
                 );
                 conn.send(&Frame::Result(wire));
+            }
+            while let Some(spec) = conn.pending_graphs.pop_front() {
+                let wire = WireGraphResult::refused(
+                    spec.id,
+                    spec.nodes.len() as u64,
+                    "daemon draining: admission closed",
+                );
+                conn.send(&Frame::GraphResult(wire));
             }
         }
     }
@@ -685,6 +749,10 @@ impl Daemon {
             ("failovers_total", s.failovers_total as f64),
             ("faults_injected", s.faults_injected as f64),
             ("breaker_state", s.breaker_state as f64),
+            ("graph_jobs", s.graph_jobs as f64),
+            ("graph_nodes_executed", s.graph_nodes_executed as f64),
+            ("plans_shared", s.plans_shared as f64),
+            ("resident_bytes_peak", s.resident_bytes_peak as f64),
             ("results_dropped", self.results_dropped as f64),
             ("connections", self.conns.iter().filter(|c| !c.dead).count() as f64),
         ];

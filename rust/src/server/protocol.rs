@@ -34,16 +34,19 @@
 
 use std::fmt;
 
-use crate::coordinator::{GemmJob, JobResult};
+use crate::coordinator::{GemmJob, GraphInput, GraphJob, GraphResult, JobResult};
 use crate::dse::Objective;
+use crate::workloads::graph::{GemmGraph, OperandSource, Slot};
 use crate::workloads::Gemm;
 
 /// Current wire-protocol revision (the version byte of every frame).
 /// v2 added the `backend` descriptor string to STATS/DRAINED payloads;
 /// v3 extends RESULT with the resilience triple (`retries`,
-/// `timed_out`, `backend_used`). Each bump makes an older peer fail
-/// with `BadVersion` instead of misparsing the reshaped payload.
-pub const PROTOCOL_VERSION: u8 = 3;
+/// `timed_out`, `backend_used`); v4 adds the graph-job pair
+/// SUBMIT_GRAPH/GRAPH_RESULT (a whole DAG of GEMMs as one job). Each
+/// bump makes an older peer fail with `BadVersion` instead of
+/// misparsing the reshaped payload.
+pub const PROTOCOL_VERSION: u8 = 4;
 
 /// Hard ceiling on one frame's payload (256 MiB) — large enough for a
 /// 2048x2048 FP32 operand pair with headroom, small enough that a
@@ -56,6 +59,10 @@ pub const HEADER_LEN: usize = 6;
 /// Sanity bound on counted collections inside payloads (stats entries).
 const MAX_STATS_FIELDS: usize = 4096;
 
+/// Sanity bound on one graph submission's node count (and, at two
+/// external slots per node, half its input-buffer count).
+pub const MAX_GRAPH_NODES: usize = 4096;
+
 pub const K_SUBMIT: u8 = 1;
 pub const K_RESULT: u8 = 2;
 pub const K_STATS_REQ: u8 = 3;
@@ -65,6 +72,8 @@ pub const K_DRAINED: u8 = 6;
 pub const K_SHUTDOWN: u8 = 7;
 pub const K_ACK: u8 = 8;
 pub const K_ERROR: u8 = 9;
+pub const K_SUBMIT_GRAPH: u8 = 10;
+pub const K_GRAPH_RESULT: u8 = 11;
 
 /// Codec failure. Recoverable at the connection level (close + report),
 /// never via panic.
@@ -239,6 +248,172 @@ impl WireResult {
     }
 }
 
+/// One graph node as it travels the wire. `a_src`/`b_src` name the
+/// upstream node whose output feeds that slot; `None` marks a
+/// client-provided (external) operand.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GraphNodeSpec {
+    pub name: String,
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    pub a_src: Option<String>,
+    pub b_src: Option<String>,
+}
+
+/// One whole-model request as it travels the wire: a DAG of GEMMs
+/// submitted as a single job (v4). The client-side analogue of
+/// [`GraphJob`]; intermediates stay resident on the daemon side and
+/// never appear on the wire.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GraphSpec {
+    pub id: u64,
+    pub objective: Objective,
+    /// Validate every node's output against the reference GEMM.
+    pub validate: bool,
+    pub nodes: Vec<GraphNodeSpec>,
+    /// External operand buffers, one per external slot for a data
+    /// graph; empty for plan-only submissions.
+    pub inputs: Vec<GraphInput>,
+}
+
+impl GraphSpec {
+    /// Project a workload graph onto the wire under the client's id.
+    pub fn from_graph(
+        id: u64,
+        graph: &GemmGraph,
+        objective: Objective,
+        inputs: Vec<GraphInput>,
+    ) -> GraphSpec {
+        let nodes = graph
+            .nodes
+            .iter()
+            .map(|node| {
+                let src = |s: &OperandSource| match s {
+                    OperandSource::External => None,
+                    OperandSource::Node(name) => Some(name.clone()),
+                };
+                GraphNodeSpec {
+                    name: node.name.clone(),
+                    m: node.gemm.m,
+                    n: node.gemm.n,
+                    k: node.gemm.k,
+                    a_src: src(&node.a),
+                    b_src: src(&node.b),
+                }
+            })
+            .collect();
+        GraphSpec {
+            id,
+            objective,
+            validate: false,
+            nodes,
+            inputs,
+        }
+    }
+
+    /// Rebuild the workload graph this spec describes.
+    pub fn graph(&self) -> GemmGraph {
+        let mut graph = GemmGraph::new();
+        for node in &self.nodes {
+            let src = |s: &Option<String>| match s {
+                None => OperandSource::External,
+                Some(name) => OperandSource::Node(name.clone()),
+            };
+            graph = graph.push(
+                &node.name,
+                Gemm::new(node.m, node.n, node.k),
+                src(&node.a_src),
+                src(&node.b_src),
+            );
+        }
+        graph
+    }
+
+    /// Convert into a coordinator job under a (possibly rewritten) id.
+    /// Outputs are never kept: the wire path streams back metrics only.
+    pub fn into_job(self, id: u64) -> GraphJob {
+        let graph = self.graph();
+        GraphJob {
+            id,
+            graph,
+            objective: self.objective,
+            inputs: self.inputs,
+            validate: self.validate,
+            keep_outputs: false,
+            deadline_ms: None,
+        }
+    }
+}
+
+/// One completed graph job as it travels the wire: [`GraphResult`]'s
+/// rollups without per-node buffers — energy, efficiency, plan-sharing
+/// and residency accounting stream back; intermediates never do.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireGraphResult {
+    pub id: u64,
+    pub n_nodes: u64,
+    pub plan_time_us: u64,
+    /// Summed node execution time.
+    pub exec_sum_us: Option<u64>,
+    /// Critical-path execution time through the DAG.
+    pub exec_critical_us: Option<u64>,
+    pub energy_j: Option<f64>,
+    pub avg_power_w: Option<f64>,
+    pub gflops_per_w: Option<f64>,
+    /// Nodes that reused another same-shape node's plan.
+    pub plans_shared: u64,
+    /// High-water mark of arena-resident intermediate bytes.
+    pub resident_bytes_peak: u64,
+    /// Whole-DAG plan-cache hit (no per-key lookups at all).
+    pub graph_cache_hit: bool,
+    pub error: Option<String>,
+}
+
+impl WireGraphResult {
+    pub fn ok(&self) -> bool {
+        self.error.is_none()
+    }
+
+    /// Project a coordinator graph result onto the wire under the
+    /// client's id.
+    pub fn from_result(client_id: u64, r: &GraphResult) -> WireGraphResult {
+        WireGraphResult {
+            id: client_id,
+            n_nodes: r.n_nodes as u64,
+            plan_time_us: r.plan_time.as_micros() as u64,
+            exec_sum_us: r.exec_time_sum.map(|d| d.as_micros() as u64),
+            exec_critical_us: r.exec_time_critical.map(|d| d.as_micros() as u64),
+            energy_j: r.energy_j,
+            avg_power_w: r.avg_power_w,
+            gflops_per_w: r.gflops_per_w,
+            plans_shared: r.plans_shared,
+            resident_bytes_peak: r.resident_bytes_peak,
+            graph_cache_hit: r.graph_cache_hit,
+            error: r.error.clone(),
+        }
+    }
+
+    /// A daemon-side refusal (admission closed while draining): the
+    /// graph never reached the coordinator.
+    pub fn refused(id: u64, n_nodes: u64, why: &str) -> WireGraphResult {
+        WireGraphResult {
+            id,
+            n_nodes,
+            plan_time_us: 0,
+            exec_sum_us: None,
+            exec_critical_us: None,
+            energy_j: None,
+            avg_power_w: None,
+            gflops_per_w: None,
+            plans_shared: 0,
+            resident_bytes_peak: 0,
+            graph_cache_hit: false,
+            error: Some(why.to_string()),
+        }
+    }
+}
+
 /// Daemon/service counters as they travel the wire: a self-describing
 /// list of named values plus the daemon's lifecycle state, so stats can
 /// grow fields without a protocol revision.
@@ -288,6 +463,10 @@ pub enum Frame {
     /// Daemon → client: protocol-level failure. `job_id` is 0 when the
     /// error is not attributable to a specific submission.
     Error { job_id: u64, message: String },
+    /// Client → daemon: submit one whole-model graph job (v4).
+    SubmitGraph(GraphSpec),
+    /// Daemon → client: one completed graph job (v4).
+    GraphResult(WireGraphResult),
 }
 
 // ---------------------------------------------------------------------------
@@ -372,6 +551,13 @@ fn objective_byte(o: Objective) -> u8 {
     }
 }
 
+fn slot_byte(s: Slot) -> u8 {
+    match s {
+        Slot::A => 0,
+        Slot::B => 1,
+    }
+}
+
 fn frame_bytes(kind: u8, payload: Vec<u8>) -> Vec<u8> {
     debug_assert!(payload.len() <= MAX_FRAME_LEN);
     let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
@@ -440,6 +626,54 @@ fn result_payload(r: &WireResult) -> Vec<u8> {
     p
 }
 
+fn submit_graph_payload(spec: &GraphSpec) -> Vec<u8> {
+    let mut p = Vec::new();
+    put_u64(&mut p, spec.id);
+    put_u8(&mut p, objective_byte(spec.objective));
+    let mut flags = 0u8;
+    if spec.validate {
+        flags |= 1;
+    }
+    put_u8(&mut p, flags);
+    put_u32(&mut p, spec.nodes.len() as u32);
+    for node in &spec.nodes {
+        put_string(&mut p, &node.name);
+        put_u64(&mut p, node.m as u64);
+        put_u64(&mut p, node.n as u64);
+        put_u64(&mut p, node.k as u64);
+        put_opt_string(&mut p, node.a_src.as_deref());
+        put_opt_string(&mut p, node.b_src.as_deref());
+    }
+    put_u32(&mut p, spec.inputs.len() as u32);
+    for input in &spec.inputs {
+        put_string(&mut p, &input.node);
+        put_u8(&mut p, slot_byte(input.slot));
+        put_f32_vec(&mut p, &input.data);
+    }
+    p
+}
+
+fn graph_result_payload(r: &WireGraphResult) -> Vec<u8> {
+    let mut p = Vec::new();
+    put_u64(&mut p, r.id);
+    put_u64(&mut p, r.n_nodes);
+    let mut flags = 0u8;
+    if r.graph_cache_hit {
+        flags |= 1;
+    }
+    put_u8(&mut p, flags);
+    put_u64(&mut p, r.plan_time_us);
+    put_opt_u64(&mut p, r.exec_sum_us);
+    put_opt_u64(&mut p, r.exec_critical_us);
+    put_opt_f64(&mut p, r.energy_j);
+    put_opt_f64(&mut p, r.avg_power_w);
+    put_opt_f64(&mut p, r.gflops_per_w);
+    put_u64(&mut p, r.plans_shared);
+    put_u64(&mut p, r.resident_bytes_peak);
+    put_opt_string(&mut p, r.error.as_deref());
+    p
+}
+
 fn stats_payload(s: &WireStats) -> Vec<u8> {
     let mut p = Vec::new();
     put_string(&mut p, &s.state);
@@ -470,6 +704,8 @@ pub fn encode_frame(frame: &Frame) -> Vec<u8> {
             put_string(&mut p, message);
             frame_bytes(K_ERROR, p)
         }
+        Frame::SubmitGraph(spec) => frame_bytes(K_SUBMIT_GRAPH, submit_graph_payload(spec)),
+        Frame::GraphResult(r) => frame_bytes(K_GRAPH_RESULT, graph_result_payload(r)),
     }
 }
 
@@ -477,6 +713,12 @@ pub fn encode_frame(frame: &Frame) -> Vec<u8> {
 /// operand buffers into a [`Frame`] first).
 pub fn encode_submit(spec: &JobSpec) -> Vec<u8> {
     frame_bytes(K_SUBMIT, submit_payload(spec))
+}
+
+/// Encode a SUBMIT_GRAPH frame directly from a borrowed spec (avoids
+/// cloning every input buffer into a [`Frame`] first).
+pub fn encode_submit_graph(spec: &GraphSpec) -> Vec<u8> {
+    frame_bytes(K_SUBMIT_GRAPH, submit_graph_payload(spec))
 }
 
 // ---------------------------------------------------------------------------
@@ -606,6 +848,16 @@ impl<'a> Scan<'a> {
         }
     }
 
+    fn slot(&mut self) -> Result<Slot, ProtocolError> {
+        match self.u8()? {
+            0 => Ok(Slot::A),
+            1 => Ok(Slot::B),
+            _ => Err(ProtocolError::BadPayload {
+                what: "invalid operand slot discriminant",
+            }),
+        }
+    }
+
     /// Payloads describe their exact extent; leftovers mean corruption.
     fn finish(self) -> Result<(), ProtocolError> {
         if self.b.is_empty() {
@@ -690,6 +942,98 @@ fn decode_result(payload: &[u8]) -> Result<WireResult, ProtocolError> {
     })
 }
 
+fn decode_submit_graph(payload: &[u8]) -> Result<GraphSpec, ProtocolError> {
+    let mut s = Scan::new(payload);
+    let id = s.u64()?;
+    let objective = s.objective()?;
+    let flags = s.u8()?;
+    if flags & !0b1 != 0 {
+        return Err(ProtocolError::BadPayload {
+            what: "unknown submit-graph flag bits",
+        });
+    }
+    let n_nodes = s.u32()? as usize;
+    if n_nodes > MAX_GRAPH_NODES {
+        return Err(ProtocolError::BadPayload {
+            what: "graph node count out of range",
+        });
+    }
+    let mut nodes = Vec::with_capacity(n_nodes.min(256));
+    for _ in 0..n_nodes {
+        let name = s.string()?;
+        let m = s.u64()? as usize;
+        let n = s.u64()? as usize;
+        let k = s.u64()? as usize;
+        let a_src = s.opt_string()?;
+        let b_src = s.opt_string()?;
+        nodes.push(GraphNodeSpec {
+            name,
+            m,
+            n,
+            k,
+            a_src,
+            b_src,
+        });
+    }
+    let n_inputs = s.u32()? as usize;
+    if n_inputs > 2 * MAX_GRAPH_NODES {
+        return Err(ProtocolError::BadPayload {
+            what: "graph input count out of range",
+        });
+    }
+    let mut inputs = Vec::with_capacity(n_inputs.min(256));
+    for _ in 0..n_inputs {
+        let node = s.string()?;
+        let slot = s.slot()?;
+        let data = s.f32_vec()?;
+        inputs.push(GraphInput { node, slot, data });
+    }
+    s.finish()?;
+    Ok(GraphSpec {
+        id,
+        objective,
+        validate: flags & 1 != 0,
+        nodes,
+        inputs,
+    })
+}
+
+fn decode_graph_result(payload: &[u8]) -> Result<WireGraphResult, ProtocolError> {
+    let mut s = Scan::new(payload);
+    let id = s.u64()?;
+    let n_nodes = s.u64()?;
+    let flags = s.u8()?;
+    if flags & !0b1 != 0 {
+        return Err(ProtocolError::BadPayload {
+            what: "unknown graph-result flag bits",
+        });
+    }
+    let plan_time_us = s.u64()?;
+    let exec_sum_us = s.opt_u64()?;
+    let exec_critical_us = s.opt_u64()?;
+    let energy_j = s.opt_f64()?;
+    let avg_power_w = s.opt_f64()?;
+    let gflops_per_w = s.opt_f64()?;
+    let plans_shared = s.u64()?;
+    let resident_bytes_peak = s.u64()?;
+    let error = s.opt_string()?;
+    s.finish()?;
+    Ok(WireGraphResult {
+        id,
+        n_nodes,
+        plan_time_us,
+        exec_sum_us,
+        exec_critical_us,
+        energy_j,
+        avg_power_w,
+        gflops_per_w,
+        plans_shared,
+        resident_bytes_peak,
+        graph_cache_hit: flags & 1 != 0,
+        error,
+    })
+}
+
 fn decode_stats(payload: &[u8]) -> Result<WireStats, ProtocolError> {
     let mut s = Scan::new(payload);
     let state = s.string()?;
@@ -731,6 +1075,8 @@ pub fn decode_frame(kind: u8, payload: &[u8]) -> Result<Frame, ProtocolError> {
     match kind {
         K_SUBMIT => Ok(Frame::Submit(decode_submit(payload)?)),
         K_RESULT => Ok(Frame::Result(decode_result(payload)?)),
+        K_SUBMIT_GRAPH => Ok(Frame::SubmitGraph(decode_submit_graph(payload)?)),
+        K_GRAPH_RESULT => Ok(Frame::GraphResult(decode_graph_result(payload)?)),
         K_STATS => Ok(Frame::Stats(decode_stats(payload)?)),
         K_DRAINED => Ok(Frame::Drained(decode_stats(payload)?)),
         K_STATS_REQ | K_DRAIN | K_SHUTDOWN | K_ACK => decode_empty(kind, payload),
@@ -843,6 +1189,47 @@ mod tests {
         }
     }
 
+    fn sample_graph_spec(id: u64, with_data: bool) -> GraphSpec {
+        let g = Gemm::new(8, 16, 16);
+        let graph = GemmGraph::new()
+            .push("n0", g, OperandSource::External, OperandSource::External)
+            .push(
+                "n1",
+                g,
+                OperandSource::Node("n0".to_string()),
+                OperandSource::External,
+            );
+        let inputs = if with_data {
+            vec![
+                GraphInput::new("n0", Slot::A, (0..8 * 16).map(|i| i as f32).collect()),
+                GraphInput::new("n0", Slot::B, vec![0.5; 16 * 16]),
+                GraphInput::new("n1", Slot::B, vec![-1.0; 16 * 16]),
+            ]
+        } else {
+            Vec::new()
+        };
+        let mut spec = GraphSpec::from_graph(id, &graph, Objective::Throughput, inputs);
+        spec.validate = with_data;
+        spec
+    }
+
+    fn sample_graph_result(id: u64) -> WireGraphResult {
+        WireGraphResult {
+            id,
+            n_nodes: 2,
+            plan_time_us: 4321,
+            exec_sum_us: Some(900),
+            exec_critical_us: Some(880),
+            energy_j: Some(0.125),
+            avg_power_w: Some(28.0),
+            gflops_per_w: None,
+            plans_shared: 1,
+            resident_bytes_peak: 512,
+            graph_cache_hit: true,
+            error: None,
+        }
+    }
+
     fn sample_stats() -> WireStats {
         WireStats {
             state: "ready".to_string(),
@@ -880,6 +1267,9 @@ mod tests {
                 job_id: 3,
                 message: "queue full".to_string(),
             },
+            Frame::SubmitGraph(sample_graph_spec(9, true)),
+            Frame::SubmitGraph(sample_graph_spec(10, false)),
+            Frame::GraphResult(sample_graph_result(9)),
         ];
         for f in &frames {
             assert_eq!(&roundtrip(f), f, "frame {f:?} did not round-trip");
@@ -1037,6 +1427,66 @@ mod tests {
         }
         // The consumed prefix must not grow without bound.
         assert!(rd.buf.len() < COMPACT_AT + bytes.len());
+    }
+
+    #[test]
+    fn malformed_graph_payloads_error_without_panic() {
+        // Node count beyond the sanity bound is refused before any
+        // per-node allocation.
+        let mut p = Vec::new();
+        put_u64(&mut p, 1);
+        put_u8(&mut p, 0); // objective
+        put_u8(&mut p, 0); // flags
+        put_u32(&mut p, (MAX_GRAPH_NODES + 1) as u32);
+        assert!(matches!(
+            decode_frame(K_SUBMIT_GRAPH, &p),
+            Err(ProtocolError::BadPayload { .. })
+        ));
+        // Invalid slot discriminant in an input.
+        let mut p = Vec::new();
+        put_u64(&mut p, 1);
+        put_u8(&mut p, 0);
+        put_u8(&mut p, 0);
+        put_u32(&mut p, 0); // no nodes
+        put_u32(&mut p, 1); // one input
+        put_string(&mut p, "n0");
+        put_u8(&mut p, 7); // slot: invalid
+        assert!(matches!(
+            decode_frame(K_SUBMIT_GRAPH, &p),
+            Err(ProtocolError::BadPayload { .. })
+        ));
+        // Truncated mid-node.
+        let full = encode_frame(&Frame::SubmitGraph(sample_graph_spec(2, true)));
+        let payload = &full[HEADER_LEN..full.len() - 5];
+        assert!(decode_frame(K_SUBMIT_GRAPH, payload).is_err());
+        // Unknown flag bits in a graph result.
+        let mut p = Vec::new();
+        put_u64(&mut p, 1);
+        put_u64(&mut p, 2);
+        put_u8(&mut p, 0b10);
+        assert!(matches!(
+            decode_frame(K_GRAPH_RESULT, &p),
+            Err(ProtocolError::BadPayload { .. })
+        ));
+    }
+
+    #[test]
+    fn graph_spec_job_conversion_preserves_structure() {
+        let spec = sample_graph_spec(3, true);
+        let job = spec.clone().into_job(42);
+        assert_eq!(job.id, 42);
+        assert_eq!(job.graph.len(), 2);
+        assert_eq!(job.graph.nodes[0].gemm, Gemm::new(8, 16, 16));
+        assert_eq!(job.graph.nodes[1].a, OperandSource::Node("n0".to_string()));
+        assert_eq!(job.graph.nodes[1].b, OperandSource::External);
+        assert!(job.validate);
+        assert!(!job.keep_outputs);
+        assert_eq!(job.inputs.len(), 3);
+        // The rebuilt graph validates (topo order + edge shapes intact).
+        assert!(job.graph.validate().is_ok());
+        // from_graph/graph() are inverses on the node structure.
+        let back = GraphSpec::from_graph(3, &job.graph, spec.objective, Vec::new());
+        assert_eq!(back.nodes, spec.nodes);
     }
 
     #[test]

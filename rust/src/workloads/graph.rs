@@ -1,0 +1,498 @@
+//! Model graphs as first-class workloads: named GEMM nodes wired into
+//! a DAG (DESIGN.md §11).
+//!
+//! A [`GemmGraph`] is the unit the serving stack calls a *graph job*:
+//! each node is one GEMM whose A/B operands come either from the client
+//! ([`OperandSource::External`]) or from the output of an upstream node
+//! ([`OperandSource::Node`]). Validation is total and deterministic —
+//! duplicate names, unknown edge targets, shape-incompatible edges and
+//! cycles all surface as typed errors, and the topological order used
+//! for execution is a deterministic Kahn sweep (lowest node index
+//! first), so the same graph always plans and executes identically.
+//!
+//! The module also owns the two shape validators the coordinator reuses
+//! for single jobs ([`operand_shape_error`]) and for edges
+//! ([`edge_shape_error`]), and constructors that lift the structural
+//! model zoo ([`TransformerSpec::block_gemms`], [`SwinStage`],
+//! [`ncf_gemms`]) into graphs whose intermediates flow node-to-node.
+
+use std::collections::{BTreeSet, HashMap};
+
+use crate::util::rng::fnv1a;
+use crate::workloads::Gemm;
+
+use super::models::{ncf_gemms, SwinStage, TransformerSpec};
+
+/// Where one operand of a graph node comes from.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum OperandSource {
+    /// Client-provided buffer, shipped with the job.
+    External,
+    /// The C output of the named upstream node.
+    Node(String),
+}
+
+/// Which operand of `C = A @ B` a source feeds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Slot {
+    A,
+    B,
+}
+
+impl Slot {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Slot::A => "A",
+            Slot::B => "B",
+        }
+    }
+}
+
+/// One named GEMM in a graph.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GraphNode {
+    pub name: String,
+    pub gemm: Gemm,
+    pub a: OperandSource,
+    pub b: OperandSource,
+}
+
+impl GraphNode {
+    pub fn source(&self, slot: Slot) -> &OperandSource {
+        match slot {
+            Slot::A => &self.a,
+            Slot::B => &self.b,
+        }
+    }
+}
+
+/// A DAG of named GEMMs — the payload of a graph job.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct GemmGraph {
+    pub nodes: Vec<GraphNode>,
+}
+
+/// The expected element count of one operand buffer.
+fn slot_len(g: &Gemm, slot: Slot) -> usize {
+    match slot {
+        Slot::A => g.m * g.k,
+        Slot::B => g.k * g.n,
+    }
+}
+
+/// Shared operand-size validator: a present buffer whose length does not
+/// match the GEMM's A (`m*k`) / B (`k*n`) extent is a shape error. Used
+/// by the graph path for external inputs and by `Coordinator::submit`
+/// for plain [`crate::coordinator::GemmJob`]s, so both reject
+/// k-mismatched operands *before* any planning happens.
+pub fn operand_shape_error(g: &Gemm, a_len: Option<usize>, b_len: Option<usize>) -> Option<String> {
+    if let Some(len) = a_len {
+        if len != slot_len(g, Slot::A) {
+            return Some(format!(
+                "operand A has {len} elements but GEMM {} needs {} ({}x{})",
+                g.label(),
+                g.m * g.k,
+                g.m,
+                g.k
+            ));
+        }
+    }
+    if let Some(len) = b_len {
+        if len != slot_len(g, Slot::B) {
+            return Some(format!(
+                "operand B has {len} elements but GEMM {} needs {} ({}x{})",
+                g.label(),
+                g.k * g.n,
+                g.k,
+                g.n
+            ));
+        }
+    }
+    None
+}
+
+/// Edge-shape validator: the producer's `m x n` output must match the
+/// consumer slot's expected extent (`m x k` for A, `k x n` for B).
+pub fn edge_shape_error(producer: &Gemm, consumer: &Gemm, slot: Slot) -> Option<String> {
+    let (want_rows, want_cols) = match slot {
+        Slot::A => (consumer.m, consumer.k),
+        Slot::B => (consumer.k, consumer.n),
+    };
+    if producer.m != want_rows || producer.n != want_cols {
+        return Some(format!(
+            "edge feeds {}x{} output into slot {} expecting {}x{}",
+            producer.m,
+            producer.n,
+            slot.label(),
+            want_rows,
+            want_cols
+        ));
+    }
+    None
+}
+
+impl GemmGraph {
+    pub fn new() -> GemmGraph {
+        GemmGraph::default()
+    }
+
+    /// Append a node (builder style).
+    pub fn push(
+        mut self,
+        name: &str,
+        gemm: Gemm,
+        a: OperandSource,
+        b: OperandSource,
+    ) -> GemmGraph {
+        self.nodes.push(GraphNode {
+            name: name.to_string(),
+            gemm,
+            a,
+            b,
+        });
+        self
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.nodes.iter().position(|n| n.name == name)
+    }
+
+    /// Total floating-point operations across all nodes.
+    pub fn flops(&self) -> f64 {
+        self.nodes.iter().map(|n| n.gemm.flops()).sum()
+    }
+
+    /// Resolve one operand source to the producing node's index.
+    fn resolve(
+        &self,
+        by_name: &HashMap<&str, usize>,
+        idx: usize,
+        slot: Slot,
+    ) -> Result<Option<usize>, String> {
+        let node = &self.nodes[idx];
+        match node.source(slot) {
+            OperandSource::External => Ok(None),
+            OperandSource::Node(src) => match by_name.get(src.as_str()) {
+                Some(&p) => Ok(Some(p)),
+                None => Err(format!(
+                    "node `{}` reads {} from unknown node `{src}`",
+                    node.name,
+                    slot.label()
+                )),
+            },
+        }
+    }
+
+    /// Per-node edge dependencies `(producer_idx, slot)` in (A, B) order.
+    fn deps(&self) -> Result<Vec<Vec<(usize, Slot)>>, String> {
+        let mut by_name: HashMap<&str, usize> = HashMap::new();
+        for (i, node) in self.nodes.iter().enumerate() {
+            if by_name.insert(node.name.as_str(), i).is_some() {
+                return Err(format!("duplicate node name `{}`", node.name));
+            }
+        }
+        let mut deps = Vec::with_capacity(self.nodes.len());
+        for (i, node) in self.nodes.iter().enumerate() {
+            let mut d = Vec::new();
+            for slot in [Slot::A, Slot::B] {
+                if let Some(p) = self.resolve(&by_name, i, slot)? {
+                    if let Some(why) = edge_shape_error(&self.nodes[p].gemm, &node.gemm, slot) {
+                        return Err(format!(
+                            "node `{}` <- `{}`: {why}",
+                            node.name, self.nodes[p].name
+                        ));
+                    }
+                    d.push((p, slot));
+                }
+            }
+            deps.push(d);
+        }
+        Ok(deps)
+    }
+
+    /// Validate the DAG and return its deterministic topological order
+    /// (Kahn's algorithm, always releasing the lowest-index ready node
+    /// first). Errors: empty graph, duplicate names, unknown edge
+    /// targets, shape-incompatible edges, cycles.
+    pub fn validate(&self) -> Result<Vec<usize>, String> {
+        if self.nodes.is_empty() {
+            return Err("graph has no nodes".to_string());
+        }
+        let deps = self.deps()?;
+        let mut indegree: Vec<usize> = deps.iter().map(Vec::len).collect();
+        let mut consumers: Vec<Vec<usize>> = vec![Vec::new(); self.nodes.len()];
+        for (i, d) in deps.iter().enumerate() {
+            for &(p, _) in d {
+                consumers[p].push(i);
+            }
+        }
+        let mut ready: BTreeSet<usize> = indegree
+            .iter()
+            .enumerate()
+            .filter(|(_, &d)| d == 0)
+            .map(|(i, _)| i)
+            .collect();
+        let mut order = Vec::with_capacity(self.nodes.len());
+        while let Some(&i) = ready.iter().next() {
+            ready.remove(&i);
+            order.push(i);
+            for &c in &consumers[i] {
+                indegree[c] -= 1;
+                if indegree[c] == 0 {
+                    ready.insert(c);
+                }
+            }
+        }
+        if order.len() < self.nodes.len() {
+            let stuck: Vec<&str> = (0..self.nodes.len())
+                .filter(|i| !order.contains(i))
+                .map(|i| self.nodes[i].name.as_str())
+                .collect();
+            return Err(format!("cycle detected among nodes: {}", stuck.join(", ")));
+        }
+        Ok(order)
+    }
+
+    /// How many downstream operand slots consume each node's output —
+    /// the refcounts the executor's operand arena frees against.
+    pub fn consumer_counts(&self) -> Result<Vec<usize>, String> {
+        let deps = self.deps()?;
+        let mut counts = vec![0usize; self.nodes.len()];
+        for d in &deps {
+            for &(p, _) in d {
+                counts[p] += 1;
+            }
+        }
+        Ok(counts)
+    }
+
+    /// All external operand slots in deterministic (node, A-then-B)
+    /// order — the buffers a client must ship with a data graph job.
+    pub fn external_slots(&self) -> Vec<(usize, Slot)> {
+        let mut out = Vec::new();
+        for (i, node) in self.nodes.iter().enumerate() {
+            for slot in [Slot::A, Slot::B] {
+                if *node.source(slot) == OperandSource::External {
+                    out.push((i, slot));
+                }
+            }
+        }
+        out
+    }
+
+    /// Expected element count of one node's operand buffer.
+    pub fn slot_elems(&self, idx: usize, slot: Slot) -> usize {
+        slot_len(&self.nodes[idx].gemm, slot)
+    }
+
+    /// Structural hash of the whole DAG (names, shapes, wiring) plus the
+    /// planning objective — the key of the graph-level plan cache.
+    pub fn dag_hash(&self, objective_tag: u8) -> u64 {
+        let mut bytes = Vec::with_capacity(self.nodes.len() * 48 + 2);
+        bytes.push(objective_tag);
+        bytes.extend_from_slice(&(self.nodes.len() as u64).to_le_bytes());
+        for node in &self.nodes {
+            bytes.extend_from_slice(&(node.name.len() as u64).to_le_bytes());
+            bytes.extend_from_slice(node.name.as_bytes());
+            for d in [node.gemm.m, node.gemm.n, node.gemm.k] {
+                bytes.extend_from_slice(&(d as u64).to_le_bytes());
+            }
+            for slot in [Slot::A, Slot::B] {
+                match node.source(slot) {
+                    OperandSource::External => bytes.push(0),
+                    OperandSource::Node(src) => {
+                        bytes.push(1);
+                        bytes.extend_from_slice(&(src.len() as u64).to_le_bytes());
+                        bytes.extend_from_slice(src.as_bytes());
+                    }
+                }
+            }
+        }
+        fnv1a(&bytes)
+    }
+
+    /// Lift a named chain into a graph: node `i` reads its A operand
+    /// from node `i-1` whenever the shapes agree exactly (producer
+    /// `m x n` equals consumer `m x k`); every other operand stays
+    /// external. This is the honest dataflow approximation for model
+    /// chains — activations flow layer to layer where the GEMM algebra
+    /// permits, weights and reshaped attention intermediates arrive from
+    /// the client.
+    pub fn from_chain(chain: &[(String, Gemm)]) -> GemmGraph {
+        let mut graph = GemmGraph::new();
+        for (i, (name, gemm)) in chain.iter().enumerate() {
+            let a = match i.checked_sub(1).map(|p| &chain[p]) {
+                Some((prev_name, prev)) if edge_shape_error(prev, gemm, Slot::A).is_none() => {
+                    OperandSource::Node(prev_name.clone())
+                }
+                _ => OperandSource::External,
+            };
+            graph = graph.push(name, *gemm, a, OperandSource::External);
+        }
+        graph
+    }
+
+    /// Graph of `n_layers` transformer blocks for `m` token rows: the
+    /// per-block GEMMs of [`TransformerSpec::block_gemms`], chained
+    /// within and across layers (node names are `L<i>.<gemm>`).
+    pub fn transformer(spec: &TransformerSpec, m: usize, n_layers: usize) -> GemmGraph {
+        let mut chain = Vec::new();
+        for layer in 0..n_layers.max(1) {
+            for (name, gemm) in spec.block_gemms(m) {
+                chain.push((format!("L{layer}.{name}"), gemm));
+            }
+        }
+        GemmGraph::from_chain(&chain)
+    }
+
+    /// Graph of one Swin stage block (proj -> mlp intermediates chained).
+    pub fn swin(stage: &SwinStage) -> GemmGraph {
+        GemmGraph::from_chain(&stage.block_gemms())
+    }
+
+    /// Graph of the NCF MLP tower — a fully chained funnel.
+    pub fn ncf(batch: usize) -> GemmGraph {
+        GemmGraph::from_chain(&ncf_gemms(batch))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::models::{deit_base, qwen25_05b, swin_tiny_stages};
+
+    fn ext() -> OperandSource {
+        OperandSource::External
+    }
+
+    fn edge(name: &str) -> OperandSource {
+        OperandSource::Node(name.to_string())
+    }
+
+    #[test]
+    fn diamond_validates_with_deterministic_topo_order() {
+        // root -> (left, right) -> join: a classic diamond.
+        let g = GemmGraph::new()
+            .push("join", Gemm::new(8, 8, 8), edge("left"), edge("right"))
+            .push("left", Gemm::new(8, 8, 8), edge("root"), ext())
+            .push("right", Gemm::new(8, 8, 8), ext(), edge("root"))
+            .push("root", Gemm::new(8, 8, 8), ext(), ext());
+        let order = g.validate().expect("diamond is a DAG");
+        // Kahn with lowest-index-first release: root(3) first, then the
+        // ready set drains in index order (1=left, 2=right), then join.
+        assert_eq!(order, vec![3, 1, 2, 0]);
+        for _ in 0..10 {
+            assert_eq!(g.validate().expect("stable"), order);
+        }
+        // Refcounts: root feeds two slots, left/right one each.
+        assert_eq!(g.consumer_counts().expect("counts"), vec![0, 1, 1, 2]);
+    }
+
+    #[test]
+    fn cycle_is_rejected() {
+        let g = GemmGraph::new()
+            .push("a", Gemm::new(8, 8, 8), edge("b"), ext())
+            .push("b", Gemm::new(8, 8, 8), edge("a"), ext());
+        let err = g.validate().expect_err("cycle must fail");
+        assert!(err.contains("cycle"), "unexpected error: {err}");
+        assert!(err.contains('a') && err.contains('b'));
+        // Self-loop is the degenerate cycle.
+        let g = GemmGraph::new().push("x", Gemm::new(8, 8, 8), edge("x"), ext());
+        assert!(g.validate().expect_err("self loop").contains("cycle"));
+    }
+
+    #[test]
+    fn duplicate_and_unknown_names_are_typed_errors() {
+        let g = GemmGraph::new()
+            .push("a", Gemm::new(8, 8, 8), ext(), ext())
+            .push("a", Gemm::new(8, 8, 8), ext(), ext());
+        assert!(g.validate().expect_err("dup").contains("duplicate"));
+        let g = GemmGraph::new().push("a", Gemm::new(8, 8, 8), edge("ghost"), ext());
+        let err = g.validate().expect_err("unknown");
+        assert!(err.contains("unknown node `ghost`"), "got: {err}");
+    }
+
+    #[test]
+    fn edge_shape_mismatch_is_rejected() {
+        // Producer emits 8x8 but consumer's A slot needs 8x16 (k=16).
+        let g = GemmGraph::new()
+            .push("p", Gemm::new(8, 8, 8), ext(), ext())
+            .push("c", Gemm::new(8, 8, 16), edge("p"), ext());
+        let err = g.validate().expect_err("shape mismatch");
+        assert!(err.contains("8x8") && err.contains("8x16"), "got: {err}");
+        // Same producer into the B slot of a compatible consumer passes.
+        let g = GemmGraph::new()
+            .push("p", Gemm::new(8, 8, 8), ext(), ext())
+            .push("c", Gemm::new(4, 8, 8), ext(), edge("p"));
+        assert!(g.validate().is_ok());
+    }
+
+    #[test]
+    fn operand_shape_validator_catches_k_mismatch() {
+        let g = Gemm::new(4, 8, 16);
+        assert!(operand_shape_error(&g, Some(4 * 16), Some(16 * 8)).is_none());
+        // A sized for k=8 instead of 16: typed error naming the extent.
+        let err = operand_shape_error(&g, Some(4 * 8), Some(16 * 8)).expect("bad A");
+        assert!(err.contains("operand A") && err.contains("64"), "got: {err}");
+        let err = operand_shape_error(&g, Some(4 * 16), Some(8 * 8)).expect("bad B");
+        assert!(err.contains("operand B"), "got: {err}");
+        // Absent operands are not this validator's business.
+        assert!(operand_shape_error(&g, None, None).is_none());
+    }
+
+    #[test]
+    fn ncf_funnel_chains_every_layer() {
+        let g = GemmGraph::ncf(256);
+        assert_eq!(g.len(), 3);
+        let order = g.validate().expect("ncf chain");
+        assert_eq!(order, vec![0, 1, 2]);
+        // Every layer past the first consumes its predecessor's output.
+        assert!(g.nodes[1].a == edge("mlp_l1") && g.nodes[2].a == edge("mlp_l2"));
+        assert_eq!(g.external_slots().len(), 4); // l1's A + all three Bs
+    }
+
+    #[test]
+    fn transformer_graphs_chain_within_and_across_layers() {
+        // Gated (qwen): attn_out -> ffn_gate_up chains; ffn_down closes
+        // the residual stream into the next layer's qkv_proj.
+        let g = GemmGraph::transformer(&qwen25_05b(), 32, 2);
+        assert_eq!(g.len(), 8);
+        g.validate().expect("transformer graph is a DAG");
+        assert_eq!(g.nodes[2].a, edge("L0.attn_out"));
+        assert_eq!(g.nodes[4].a, edge("L0.ffn_down"));
+        // Non-gated (deit): ffn_up additionally feeds ffn_down directly.
+        let d = GemmGraph::transformer(&deit_base(), 197, 1);
+        assert_eq!(d.index_of("L0.ffn_down").map(|i| &d.nodes[i].a), Some(&edge("L0.ffn_up")));
+        // Repeated layers repeat shapes: that is what plan sharing keys on.
+        assert_eq!(g.nodes[0].gemm, g.nodes[4].gemm);
+    }
+
+    #[test]
+    fn swin_stage_graph_is_valid() {
+        for stage in swin_tiny_stages() {
+            let g = GemmGraph::swin(&stage);
+            assert_eq!(g.len(), 4);
+            g.validate().expect("swin stage");
+        }
+    }
+
+    #[test]
+    fn dag_hash_is_stable_and_structure_sensitive() {
+        let g = GemmGraph::ncf(256);
+        let h = g.dag_hash(0);
+        assert_eq!(h, GemmGraph::ncf(256).dag_hash(0));
+        assert_ne!(h, g.dag_hash(1), "objective must key the hash");
+        assert_ne!(h, GemmGraph::ncf(128).dag_hash(0), "shapes must key the hash");
+        let mut rewired = g.clone();
+        rewired.nodes[1].a = OperandSource::External;
+        assert_ne!(h, rewired.dag_hash(0), "wiring must key the hash");
+    }
+}

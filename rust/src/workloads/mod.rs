@@ -10,6 +10,7 @@
 //!   Table III).
 
 
+pub mod graph;
 pub mod models;
 /// One GEMM workload: `C[M,N] = A[M,K] @ B[K,N]`, FP32.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]

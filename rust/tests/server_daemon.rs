@@ -8,16 +8,18 @@ use std::sync::OnceLock;
 use std::time::{Duration, Instant};
 
 use versal_gemm::config::Config;
-use versal_gemm::coordinator::{Coordinator, CoordinatorOptions};
+use versal_gemm::coordinator::{Coordinator, CoordinatorOptions, GraphInput};
 use versal_gemm::dataset::Dataset;
 use versal_gemm::dse::{DseEngine, Objective};
 use versal_gemm::features::FeatureSet;
 use versal_gemm::models::Predictors;
 use versal_gemm::server::client::Client;
 use versal_gemm::server::daemon::{Daemon, DaemonOptions, DaemonSummary};
-use versal_gemm::server::protocol::JobSpec;
+use versal_gemm::server::protocol::{GraphSpec, JobSpec};
 use versal_gemm::server::state::StateFile;
 use versal_gemm::server::{demo_job_specs, demo_jobs, Endpoint};
+use versal_gemm::workloads::graph::GemmGraph;
+use versal_gemm::workloads::models::TransformerSpec;
 use versal_gemm::workloads::training_workloads;
 
 /// A PID beyond Linux's pid_max (2^22): guaranteed not alive.
@@ -147,6 +149,82 @@ fn lifecycle_submit_stats_drain_stop_and_warm_restart() {
     assert_eq!(stats.get("cache_misses"), Some(0.0));
     client.shutdown().expect("shutdown 2");
     handle.join().unwrap().expect("daemon run 2");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn graph_job_over_the_socket_shares_plans_end_to_end() {
+    // A 2-layer toy transformer forward pass submitted as ONE graph job
+    // over the wire (protocol v4): layer 1's shapes repeat layer 0's,
+    // so the daemon must plan each distinct shape once, share the plan
+    // across layers, execute the DAG with intermediates resident on its
+    // side, and stream back graph-level rollups only.
+    let tiny = TransformerSpec {
+        name: "tiny".into(),
+        hidden: 64,
+        ffn: 128,
+        n_heads: 4,
+        n_kv_heads: 4,
+        n_layers: 2,
+        vocab: 0,
+        gated_ffn: false,
+    };
+    let graph = GemmGraph::transformer(&tiny, 8, 2);
+    let n_nodes = graph.len() as u64;
+    let inputs: Vec<GraphInput> = graph
+        .external_slots()
+        .into_iter()
+        .map(|(idx, slot)| {
+            let data: Vec<f32> = (0..graph.slot_elems(idx, slot))
+                .map(|i| ((i % 13) as f32 - 6.0) * 0.05)
+                .collect();
+            GraphInput::new(&graph.nodes[idx].name, slot, data)
+        })
+        .collect();
+    let mut spec = GraphSpec::from_graph(1, &graph, Objective::Throughput, inputs);
+    spec.validate = true;
+
+    let dir = test_dir("graph");
+    let handle = spawn_daemon(daemon_opts(&dir, false));
+    let mut client = connect(&dir);
+    client.submit_graph(&spec).expect("submit graph");
+    let r = client.next_graph_result().expect("graph result");
+    assert!(r.ok(), "graph job failed over the wire: {:?}", r.error);
+    assert_eq!(r.id, 1, "client id not echoed");
+    assert_eq!(r.n_nodes, n_nodes);
+    // The dedup win: layer 1's four shapes reuse layer 0's plans.
+    assert!(r.plans_shared >= 4, "plans_shared = {}", r.plans_shared);
+    assert!(!r.graph_cache_hit, "first DAG cannot hit the graph cache");
+    assert!(r.exec_sum_us.unwrap_or(0) > 0, "no execution time reported");
+    assert!(
+        r.exec_critical_us.unwrap_or(0) <= r.exec_sum_us.unwrap_or(0),
+        "critical path exceeds summed latency"
+    );
+    assert!(r.energy_j.unwrap_or(0.0) > 0.0, "no executed energy");
+    assert!(r.resident_bytes_peak > 0, "no intermediates went resident");
+
+    // Daemon-side accounting over the wire (acceptance: exactly one DSE
+    // per distinct shape, every node executed daemon-side).
+    let stats = client.stats().expect("stats");
+    assert_eq!(stats.get("graph_jobs"), Some(1.0));
+    assert_eq!(stats.get("graph_nodes_executed"), Some(n_nodes as f64));
+    assert_eq!(stats.get("plans_shared"), Some(r.plans_shared as f64));
+    assert_eq!(stats.get("cache_misses"), Some(4.0), "{:?}", stats.fields);
+    assert!(stats.get("resident_bytes_peak").unwrap_or(0.0) > 0.0);
+
+    // Graphs arriving after drain are refused with a typed result.
+    client.drain().expect("drain");
+    client.submit_graph(&spec).expect("send refused graph");
+    let refused = client.next_graph_result().expect("refusal");
+    assert_eq!(refused.id, 1);
+    let why = refused.error.expect("refusal carries an error");
+    assert!(why.contains("draining"), "unexpected refusal: {why}");
+
+    client.shutdown().expect("shutdown");
+    let summary = handle.join().unwrap().expect("daemon run");
+    assert_eq!(summary.jobs_submitted, 1, "a graph counts as one submission");
+    assert_eq!(summary.jobs_completed, 1, "a graph counts once, not per node");
+    assert_eq!(summary.jobs_failed, 0);
     let _ = std::fs::remove_dir_all(&dir);
 }
 
